@@ -1,0 +1,4 @@
+# Make `pytest python/tests/ -q` work from the repo root: the test-suite
+# imports the build-time `compile` package relative to python/.
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

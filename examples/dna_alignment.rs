@@ -1,0 +1,81 @@
+//! DNA short-read alignment on DRIM — the paper's first motivating
+//! workload (§1: "X(N)OR- or addition operations ... such as DNA
+//! alignment").
+//!
+//! ```sh
+//! cargo run --release --example dna_alignment -- [--genome 200000] [--reads 32]
+//! ```
+//!
+//! Generates a synthetic genome, plants mutated reads, and scans every
+//! read against every window with in-memory XNOR, reporting recall and the
+//! simulated in-DRAM cost vs the CPU roofline.
+
+use drim::apps::dna;
+use drim::coordinator::{DrimService, ServiceConfig};
+use drim::isa::program::BulkOp;
+use drim::platforms::by_name;
+use drim::util::cli::Args;
+use drim::util::rng::Rng;
+use drim::util::stats::fmt_rate;
+
+fn main() {
+    let args = Args::from_env();
+    let genome_len = args.usize("genome", 50_000);
+    let n_reads = args.usize("reads", 16);
+    let read_len = args.usize("read-len", 24);
+    let mutations = args.usize("mutations", 2);
+
+    let mut rng = Rng::new(args.u64("seed", 0xD7A));
+    let service = DrimService::new(ServiceConfig::default());
+
+    println!("genome: {genome_len} bases, {n_reads} reads × {read_len} bases, {mutations} mutations each\n");
+    let mut genome = dna::random_genome(genome_len, &mut rng);
+
+    // plant reads at random positions, then mutate copies of them
+    let mut truth = Vec::new();
+    let mut reads = Vec::new();
+    for _ in 0..n_reads {
+        let pos = rng.below((genome_len - read_len) as u64) as usize;
+        let read = dna::random_genome(read_len, &mut rng);
+        genome.replace_range(pos..pos + read.len(), &read);
+        // mutated copy (what the sequencer "produced")
+        let mut mutated: Vec<char> = read.chars().collect();
+        for _ in 0..mutations {
+            let i = rng.below(read_len as u64) as usize;
+            mutated[i] = dna::BASES[rng.below(4) as usize];
+        }
+        truth.push(pos);
+        reads.push(mutated.into_iter().collect::<String>());
+    }
+
+    let min_match = read_len - mutations;
+    let mut found = 0;
+    let t0 = std::time::Instant::now();
+    for (read, &pos) in reads.iter().zip(&truth) {
+        let hits = dna::align(&service, &genome, read, min_match);
+        if hits.iter().any(|h| h.position == pos) {
+            found += 1;
+        }
+    }
+    let wall = t0.elapsed();
+
+    let snap = service.metrics.snapshot();
+    println!("recall: {found}/{n_reads} planted reads recovered");
+    println!("host wall time: {wall:?}");
+    println!("\nin-DRAM cost (simulated):");
+    println!("{}", snap.report());
+
+    // paper framing: the same scan on the CPU roofline
+    let cpu = by_name("CPU").unwrap();
+    let cpu_rate = cpu.throughput_bits_per_sec(BulkOp::Xnor2, snap.result_bits.max(1));
+    let cpu_ns = snap.result_bits as f64 / cpu_rate * 1e9;
+    println!(
+        "\nXNOR phase: DRIM simulated {} vs CPU roofline {} ({}bit/s) → {:.0}x",
+        drim::util::stats::fmt_ns(snap.sim_ns as f64),
+        drim::util::stats::fmt_ns(cpu_ns),
+        fmt_rate(cpu_rate),
+        cpu_ns / snap.sim_ns.max(1) as f64
+    );
+    assert_eq!(found, n_reads, "all planted reads must be recovered");
+    println!("\ndna_alignment OK");
+}

@@ -1,0 +1,142 @@
+//! END-TO-END DRIVER (DESIGN.md experiment E2E): the full system — router,
+//! batcher, worker banks, functional sub-array simulation, metrics — under
+//! a realistic mixed workload, with results golden-checked against the
+//! AOT-lowered JAX kernels through the PJRT runtime when artifacts exist.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_serve
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use drim::coordinator::{
+    BatchPolicy, BulkRequest, DrimService, Payload, ServiceConfig,
+};
+use drim::isa::program::BulkOp;
+use drim::runtime::{golden, Runtime};
+use drim::util::bitrow::BitRow;
+use drim::util::cli::Args;
+use drim::util::rng::Rng;
+use drim::util::stats::{fmt_ns, percentile};
+
+fn main() {
+    let args = Args::from_env();
+    let n_requests = args.usize("requests", 200);
+    let seed = args.u64("seed", 0xE2E);
+
+    let cfg = ServiceConfig {
+        policy: BatchPolicy::Coalesce,
+        ..ServiceConfig::default()
+    };
+    println!(
+        "device: {} banks × {} sub-arrays × {} bit-lines, {} workers, {:?} batching\n",
+        cfg.geometry.banks,
+        cfg.geometry.subarrays_per_bank,
+        cfg.geometry.cols,
+        cfg.workers,
+        cfg.policy
+    );
+    let service = DrimService::new(cfg);
+    let mut rng = Rng::new(seed);
+
+    // mixed workload: 50% xnor2 (the headline op), 20% xor2, 15% not,
+    // 10% and2, 5% add32; sizes log-uniform 4 Kb..4 Mb
+    let mut inputs: Vec<(BulkOp, Vec<BitRow>)> = Vec::new();
+    let mut adds: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    let mut order: Vec<(bool, usize)> = Vec::new(); // (is_add, idx)
+    for _ in 0..n_requests {
+        let dice = rng.below(100);
+        let bits = 1usize << (12 + rng.below(11) as usize);
+        if dice < 95 {
+            let op = match dice {
+                0..=49 => BulkOp::Xnor2,
+                50..=69 => BulkOp::Xor2,
+                70..=84 => BulkOp::Not,
+                _ => BulkOp::And2,
+            };
+            let ops: Vec<BitRow> = (0..op.arity())
+                .map(|_| BitRow::random(bits, &mut rng))
+                .collect();
+            order.push((false, inputs.len()));
+            inputs.push((op, ops));
+        } else {
+            let n = bits / 32;
+            let a: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let b: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            order.push((true, adds.len()));
+            adds.push((a, b));
+        }
+    }
+
+    // fire everything (the router coalesces), then collect
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for (is_add, idx) in &order {
+        let req = if *is_add {
+            let (a, b) = &adds[*idx];
+            BulkRequest::add32(a.clone(), b.clone())
+        } else {
+            let (op, ops) = &inputs[*idx];
+            BulkRequest::bitwise(*op, ops.clone())
+        };
+        pending.push(service.submit(req));
+    }
+    let mut latencies = Vec::new();
+    let mut responses = Vec::new();
+    for p in pending {
+        let r = p.recv().expect("response");
+        latencies.push(r.sim_latency_ns);
+        responses.push(r);
+    }
+    let wall = t0.elapsed();
+
+    // verify every result on the host; golden-check a sample via PJRT
+    let mut rt = Runtime::load_default()
+        .map_err(|e| eprintln!("(PJRT golden checks skipped — {e})"))
+        .ok();
+    let mut golden_checked = 0usize;
+    for (i, (is_add, idx)) in order.iter().enumerate() {
+        match (&responses[i].result, is_add) {
+            (Payload::U32(got), true) => {
+                let (a, b) = &adds[*idx];
+                for e in 0..a.len() {
+                    assert_eq!(got[e], a[e].wrapping_add(b[e]), "add req {i}");
+                }
+            }
+            (Payload::Bits(got), false) => {
+                let (op, ops) = &inputs[*idx];
+                let mut want = BitRow::zeros(got.len());
+                match op {
+                    BulkOp::Xnor2 => want.apply2(&ops[0], &ops[1], |x, y| !(x ^ y)),
+                    BulkOp::Xor2 => want.apply2(&ops[0], &ops[1], |x, y| x ^ y),
+                    BulkOp::And2 => want.apply2(&ops[0], &ops[1], |x, y| x & y),
+                    BulkOp::Not => want.not_from(&ops[0]),
+                    _ => unreachable!(),
+                }
+                assert_eq!(*got, want, "bitwise req {i}");
+                if let Some(rt) = rt.as_mut() {
+                    if i % 25 == 0 {
+                        let refs: Vec<&BitRow> = ops.iter().collect();
+                        golden::verify_bulk(rt, op.name(), &refs, got)
+                            .expect("golden check failed");
+                        golden_checked += 1;
+                    }
+                }
+            }
+            _ => panic!("payload kind mismatch"),
+        }
+    }
+
+    let snap = service.metrics.snapshot();
+    println!("--- results ---");
+    println!("{} requests completed in {wall:?} (host)", n_requests);
+    println!("all host-verified; {golden_checked} golden-checked via PJRT");
+    println!("\n{}", snap.report());
+    println!(
+        "\nsimulated latency: p50 {}  p95 {}  p99 {}",
+        fmt_ns(percentile(&mut latencies, 50.0)),
+        fmt_ns(percentile(&mut latencies, 95.0)),
+        fmt_ns(percentile(&mut latencies, 99.0)),
+    );
+    println!("\ne2e_serve OK");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: five minutes with the DRIM service.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the three things a user does: run a bulk bit-wise op, run an
+//! element-wise add, and read the cost model (simulated DRAM latency and
+//! energy) off the response.
+
+use drim::coordinator::{BulkRequest, DrimService, Payload, ServiceConfig};
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn main() {
+    // a full-size DRIM device: 8 banks × 64 sub-arrays × 512 rows × 8 Kb
+    let service = DrimService::new(ServiceConfig::default());
+    let mut rng = Rng::new(42);
+
+    // --- 1. bulk XNOR over a million bits --------------------------------
+    let bits = 1 << 20;
+    let a = BitRow::random(bits, &mut rng);
+    let b = BitRow::random(bits, &mut rng);
+    let resp = service.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![a.clone(), b.clone()]));
+    let xnor = match &resp.result {
+        Payload::Bits(r) => r,
+        _ => unreachable!(),
+    };
+    // spot-check against the host
+    assert_eq!(xnor.get(12345), a.get(12345) == b.get(12345));
+    println!(
+        "XNOR2 over {bits} bits: {} AAPs, {:.2} µs simulated, {:.2} µJ DRAM energy",
+        resp.stats.aaps,
+        resp.sim_latency_ns / 1e3,
+        resp.stats.energy_pj / 1e6
+    );
+
+    // --- 2. element-wise 32-bit addition ---------------------------------
+    let n = 100_000;
+    let x: Vec<u32> = (0..n as u32).collect();
+    let y: Vec<u32> = (0..n as u32).map(|v| v * 7).collect();
+    let resp = service.run(BulkRequest::add32(x, y));
+    let sums = match &resp.result {
+        Payload::U32(v) => v,
+        _ => unreachable!(),
+    };
+    assert_eq!(sums[1000], 1000 * 8);
+    println!(
+        "ADD32 over {n} elements: {} AAPs, {:.2} µs simulated",
+        resp.stats.aaps,
+        resp.sim_latency_ns / 1e3
+    );
+
+    // --- 3. service metrics ----------------------------------------------
+    println!("\n{}", service.metrics.snapshot().report());
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,95 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + write a manifest.
+
+HLO text (NOT ``lowered.compiler_ir('hlo')`` protos, NOT ``.serialize()``) is
+the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which the Rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Run from ``python/`` as ``python -m compile.aot --out-dir ../artifacts``
+(the Makefile does).  Python never runs again after this: the Rust binary
+loads the artifacts through PJRT and is self-contained.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import params as P
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_str(s) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def artifact_table():
+    """name → (fn, example_arg_specs, output_spec_strings)."""
+    table = {}
+    for op in model.bitwise.OPS:
+        fn, specs = model.make_bulk(op)
+        table[f"bulk_{op}"] = (fn, specs)
+    table["bitplane_add"] = (model.bitplane_add_fn, model.BITPLANE_ADD_SPECS)
+    table["mc_variation"] = (model.mc_variation, model.MC_SPECS)
+    table["transient"] = (model.transient_waveforms, model.TRANSIENT_SPECS)
+    return table
+
+
+def lower_all(out_dir: str, only=None) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = [
+        "# DRIM AOT artifact manifest — parsed by rust/src/runtime/manifest.rs",
+        "# name <tab> file <tab> in=<specs> <tab> out=<specs> <tab> sha256=<hash>",
+        f"# vdd={P.VDD} cp_ratio={P.CP_RATIO} cb_ratio={P.CB_RATIO} "
+        f"noise_lin={P.NOISE_LIN} noise_quad={P.NOISE_QUAD} "
+        f"trials={P.MC_TRIALS} "
+        f"transient_steps={P.TRANSIENT_STEPS} dt_ns={P.DT_NS}",
+    ]
+    names = []
+    for name, (fn, specs) in sorted(artifact_table().items()):
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        outs = jax.eval_shape(fn, *specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        in_s = ",".join(_spec_str(s) for s in specs)
+        out_s = ",".join(_spec_str(s) for s in outs)
+        manifest_lines.append(
+            f"{name}\t{fname}\tin={in_s}\tout={out_s}\tsha256={digest}"
+        )
+        names.append(name)
+        print(f"  {name:18s} -> {fname} ({len(text) / 1024:.0f} KiB)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return names
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    names = lower_all(args.out_dir, set(args.only) if args.only else None)
+    print(f"wrote {len(names)} artifacts + manifest to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

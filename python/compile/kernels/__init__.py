@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from . import bitwise, dra_analog, ref, transient  # noqa: F401

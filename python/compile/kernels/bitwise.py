@@ -1,0 +1,132 @@
+"""L1 Pallas kernels: bulk bit-wise ops over packed int32 lanes.
+
+This is the compute hot-spot of the paper expressed for the TPU-style memory
+hierarchy (DESIGN.md §Hardware-Adaptation): a DRAM row maps onto a
+VMEM-resident tile of packed int32 lanes, sub-array-level parallelism maps
+onto the Pallas grid.  Every kernel is lowered with ``interpret=True`` so the
+resulting HLO runs on the CPU PJRT client that the Rust runtime embeds
+(real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot execute).
+
+Kernels:
+  * ``bulk(op)``         — elementwise 1/2/3-operand bit-ops on (R, L) i32
+  * ``bitplane_add``     — ripple-carry adder over bit-planes: the paper's
+                           Sum = XOR2∘XOR2 (DRA), Carry = MAJ3 (TRA) schedule
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# --------------------------------------------------------------------------
+# elementwise bulk ops
+# --------------------------------------------------------------------------
+
+#: op name → (arity, lane function).  The lane functions mirror ref.py and,
+#: on the Rust side, ``subarray``'s digital charge-sharing model.
+OPS = {
+    "xnor2": (2, lambda a, b: ~(a ^ b)),
+    "xor2": (2, lambda a, b: a ^ b),
+    "and2": (2, lambda a, b: a & b),
+    "or2": (2, lambda a, b: a | b),
+    "nand2": (2, lambda a, b: ~(a & b)),
+    "nor2": (2, lambda a, b: ~(a | b)),
+    "not1": (1, lambda a: ~a),
+    "maj3": (3, lambda a, b, c: (a & b) | (a & c) | (b & c)),
+    "min3": (3, lambda a, b, c: ~((a & b) | (a & c) | (b & c))),
+}
+
+
+def _elementwise_kernel(fn, *refs):
+    *in_refs, o_ref = refs
+    o_ref[...] = fn(*(r[...] for r in in_refs))
+
+
+def _row_block(rows, lanes):
+    """Block over full lanes, tiling the row axis — the VMEM-friendly shape
+    ((sub-)array rows stream through the on-chip buffer row-block at a
+    time, all bit-lines of a row in parallel)."""
+    block_rows = min(rows, 64)
+    if rows % block_rows != 0:  # odd shapes (tests): single block
+        block_rows = rows
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    return grid, spec
+
+
+def bulk(op: str):
+    """Return a jit-able ``f(*operands) -> result`` for a named bulk op.
+
+    Operands are int32 arrays of identical shape ``(rows, lanes)``; every
+    int32 packs 32 bit-lines.
+    """
+    arity, fn = OPS[op]
+
+    def run(*operands):
+        assert len(operands) == arity, (op, arity, len(operands))
+        a = operands[0]
+        rows, lanes = a.shape
+        grid, spec = _row_block(rows, lanes)
+        return pl.pallas_call(
+            functools.partial(_elementwise_kernel, fn),
+            grid=grid,
+            in_specs=[spec] * arity,
+            out_specs=spec,
+            out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            interpret=True,
+        )(*operands)
+
+    run.__name__ = f"bulk_{op}"
+    return run
+
+
+# --------------------------------------------------------------------------
+# bit-plane ripple-carry adder
+# --------------------------------------------------------------------------
+
+
+def _add_kernel(a_ref, b_ref, cin_ref, sum_ref, cout_ref):
+    """DRIM's in-memory adder schedule over one block of packed words.
+
+    Bit-plane i of the sum needs two DRA XOR2s (a⊕b, then ⊕carry) and the
+    next carry needs one TRA MAJ3 — exactly the AAP sequence of Table 2,
+    executed here per 32-bit-packed lane.  The carry ripples across planes
+    (rows), all lanes in parallel, matching the row-parallel / bit-serial
+    split of the DRAM array.
+    """
+    bits = a_ref.shape[0]
+    carry = cin_ref[...]
+
+    def body(i, carry):
+        ai = a_ref[i, :]
+        bi = b_ref[i, :]
+        axb = ai ^ bi                      # DRA #1
+        sum_ref[i, :] = axb ^ carry        # DRA #2
+        return (ai & bi) | (carry & axb)   # TRA (MAJ3, factored form)
+
+    carry = jax.lax.fori_loop(0, bits, body, carry)
+    cout_ref[...] = carry
+
+
+def bitplane_add(a_planes, b_planes, carry_in=None):
+    """``(sum_planes, carry_out)`` for bit-plane-major packed operands.
+
+    ``a_planes``/``b_planes``: int32[BITS, WORDS], LSB plane first.
+    """
+    bits, words = a_planes.shape
+    if carry_in is None:
+        carry_in = jnp.zeros((words,), jnp.int32)
+    plane_spec = pl.BlockSpec((bits, words), lambda: (0, 0))
+    word_spec = pl.BlockSpec((words,), lambda: (0,))
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(),
+        in_specs=[plane_spec, plane_spec, word_spec],
+        out_specs=[plane_spec, word_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bits, words), jnp.int32),
+            jax.ShapeDtypeStruct((words,), jnp.int32),
+        ],
+        interpret=True,
+    )(a_planes, b_planes, carry_in)

@@ -1,0 +1,65 @@
+"""L1 Pallas kernels: behavioural sense-amplification under process variation.
+
+These kernels evaluate the *analog* step of DRIM's DRA and Ambit's TRA for a
+(trials × cases) tile of independently-varied circuit instances — the
+Monte-Carlo engine behind Table 3.  Each matrix element is one bit-line's
+sense amplification: fully lane-parallel, no cross-lane reduction, mirroring
+the physical independence of bit-lines in the array (DESIGN.md
+§Hardware-Adaptation).
+
+The circuit model (levels, margins, noise lumping) is documented in
+``params.py``; the pure-jnp specification lives in ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import params as P
+
+
+def _dra_kernel(qi, qj, ci, cj, cp, vsl, vsh, vn, xnor_o, xor_o):
+    v = (qi[...] + qj[...] + cp[...] * (P.VDD / 2.0)) / (
+        ci[...] + cj[...] + cp[...]
+    ) + vn[...]
+    nor_out = (v < vsl[...]).astype(jnp.float32)   # low-Vs inverter → NOR2
+    nand_out = (v < vsh[...]).astype(jnp.float32)  # high-Vs inverter → NAND2
+    xor = nand_out * (1.0 - nor_out)               # CMOS AND gate
+    xor_o[...] = xor                               # BL̄  (Eq. 1)
+    xnor_o[...] = 1.0 - xor                        # BL
+
+
+def dra_sense(qi, qj, ci, cj, cp, vsl, vsh, vnoise):
+    """Pallas evaluation of the reconfigurable SA. All inputs f32[T, C]."""
+    shape = qi.shape
+    spec = pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    out = jax.ShapeDtypeStruct(shape, jnp.float32)
+    return pl.pallas_call(
+        _dra_kernel,
+        grid=(),
+        in_specs=[spec] * 8,
+        out_specs=[spec, spec],
+        out_shape=[out, out],
+        interpret=True,
+    )(qi, qj, ci, cj, cp, vsl, vsh, vnoise)
+
+
+def _tra_kernel(q1, q2, q3, c1, c2, c3, cb, vsa, vn, maj_o):
+    v = (q1[...] + q2[...] + q3[...] + cb[...] * (P.VDD / 2.0)) / (
+        c1[...] + c2[...] + c3[...] + cb[...]
+    ) + vn[...]
+    maj_o[...] = (v > vsa[...]).astype(jnp.float32)
+
+
+def tra_sense(q1, q2, q3, c1, c2, c3, cb, vsa, vnoise):
+    """Pallas evaluation of Ambit's TRA on a conventional SA. f32[T, C]."""
+    shape = q1.shape
+    spec = pl.BlockSpec(shape, lambda: (0,) * len(shape))
+    return pl.pallas_call(
+        _tra_kernel,
+        grid=(),
+        in_specs=[spec] * 9,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        interpret=True,
+    )(q1, q2, q3, c1, c2, c3, cb, vsa, vnoise)

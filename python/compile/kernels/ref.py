@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+Each function here is the *specification*: the Pallas kernels in
+``bitwise.py`` and ``dra_analog.py`` must match these bit-for-bit
+(``test_kernel.py`` / ``test_analog.py`` assert it), and the Rust functional
+simulator is validated against the AOT-lowered versions of the same graphs.
+"""
+
+import jax.numpy as jnp
+
+from .. import params as P
+
+# --------------------------------------------------------------------------
+# Bulk bit-wise ops over packed int32 words (one lane = 32 bit-lines)
+# --------------------------------------------------------------------------
+
+
+def xnor2(a, b):
+    return ~(a ^ b)
+
+
+def xor2(a, b):
+    return a ^ b
+
+
+def and2(a, b):
+    return a & b
+
+
+def or2(a, b):
+    return a | b
+
+
+def nand2(a, b):
+    return ~(a & b)
+
+
+def nor2(a, b):
+    return ~(a | b)
+
+
+def not1(a):
+    return ~a
+
+
+def maj3(a, b, c):
+    """Bit-wise 3-input majority — the TRA primitive (carry of a full adder)."""
+    return (a & b) | (a & c) | (b & c)
+
+
+def min3(a, b, c):
+    return ~maj3(a, b, c)
+
+
+def bitplane_add(a_planes, b_planes, carry_in=None):
+    """Ripple-carry addition over bit-planes (paper §3.1 In-Memory Adder).
+
+    ``a_planes[i]``/``b_planes[i]`` hold bit ``i`` (LSB first) of many
+    elements, packed 32 per int32 word.  Per plane: ``sum = a ^ b ^ c`` (two
+    back-to-back DRA XOR2s) and ``c' = MAJ3(a, b, c)`` (one TRA).  Returns
+    ``(sum_planes, carry_out_plane)``.
+    """
+    bits = a_planes.shape[0]
+    c = jnp.zeros_like(a_planes[0]) if carry_in is None else carry_in
+    sums = []
+    for i in range(bits):
+        ai, bi = a_planes[i], b_planes[i]
+        sums.append(ai ^ bi ^ c)
+        c = maj3(ai, bi, c)
+    return jnp.stack(sums), c
+
+
+# --------------------------------------------------------------------------
+# Analog sense amplification (behavioural; see params.py for the circuit)
+# --------------------------------------------------------------------------
+
+
+def dra_sense(qi, qj, ci, cj, cp, vsl, vsh, vnoise):
+    """Reconfigurable-SA evaluation of the DRA charge-sharing state.
+
+    All arguments broadcast elementwise (trials × cases in the MC sweep).
+      qi/qj  — cell charges (C·V, unit-capacitor units × volts)
+      ci/cj  — cell capacitances (unit-capacitor units)
+      cp     — sense-node parasitic capacitance (precharged to Vdd/2)
+      vsl/vsh— low-/high-Vs inverter switching thresholds
+      vnoise — additive sense-node noise (volts)
+    Returns (xnor_bl, xor_blbar) as float 0/1 arrays.
+    """
+    v = (qi + qj + cp * (P.VDD / 2.0)) / (ci + cj + cp) + vnoise
+    nor_out = (v < vsl).astype(jnp.float32)   # low-Vs inverter: NOR2
+    nand_out = (v < vsh).astype(jnp.float32)  # high-Vs inverter: NAND2
+    xor_out = nand_out * (1.0 - nor_out)      # AND(NAND, OR)  → XOR2 on BL̄
+    return 1.0 - xor_out, xor_out             # XNOR2 on BL, XOR2 on BL̄
+
+
+def tra_sense(q1, q2, q3, c1, c2, c3, cb, vsa, vnoise):
+    """Conventional-SA evaluation of Ambit's triple-row activation.
+
+    The bit-line (capacitance ``cb``, precharged to Vdd/2) shares charge
+    with three cells; the SA resolves against threshold ``vsa`` → MAJ3.
+    """
+    v = (q1 + q2 + q3 + cb * (P.VDD / 2.0)) / (c1 + c2 + c3 + cb) + vnoise
+    return (v > vsa).astype(jnp.float32)
+
+
+def dra_ideal_levels():
+    """Ideal DRA sense-node voltages for n = 0, 1, 2 cells storing '1'."""
+    c = 2.0 + P.CP_RATIO
+    return [(n * P.VDD + P.CP_RATIO * P.VDD / 2.0) / c for n in range(3)]
+
+
+def tra_ideal_levels():
+    """Ideal TRA bit-line voltages for n = 0..3 cells storing '1'."""
+    c = 3.0 + P.CB_RATIO
+    return [(n * P.VDD + P.CB_RATIO * P.VDD / 2.0) / c for n in range(4)]

@@ -1,0 +1,103 @@
+"""Fig. 6 transient model: DRA waveforms through P.S. → C.S.S. → S.A.S.
+
+Behavioural replacement for the paper's Cadence Spectre transient simulation
+(substitution ledger in DESIGN.md): a forward-Euler RC network integrated
+with ``lax.scan``.  State per input case:
+
+    v_bl    — sense-node / bit-line voltage (what Fig. 6 plots as BL)
+    v_blb   — complement bit-line
+    v_ci    — voltage across Di's cell capacitor (Vcap-Di)
+    v_cj    — voltage across Dj's cell capacitor (Vcap-Dj)
+
+Phases (params.py):
+  P.S.   : BL/BL̄ held at Vdd/2 by the precharge unit; cells hold their data.
+  C.S.S. : WLx1+WLx2 raised — cells and sense node relax toward the common
+           charge-sharing voltage (charge-conserving RC exchange).
+  S.A.S. : En_x/En_C raised — the reconfigurable SA regenerates BL to the
+           XNOR2 rail (Vdd when Di⊙Dj=1, GND otherwise), BL̄ to the XOR2
+           rail, and the open word-lines restore the cells to BL's value —
+           this is the write-back visible in Fig. 6.
+
+The per-step update is a small closed-form dataflow, so it stays at L2
+(pure jnp inside ``lax.scan``); the per-element analog *decision* model it
+shares with the MC kernels lives in L1 (``dra_analog.py``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .. import params as P
+
+
+def _share_target(v_ci, v_cj, v_node):
+    """Charge-conserving equilibrium of {Ci, Cj, Cp} connected together."""
+    csum = 2.0 + P.CP_RATIO
+    return (v_ci + v_cj + P.CP_RATIO * v_node) / csum
+
+
+def _xnor_rail(di, dj):
+    """Ideal SA decision: the rail BL regenerates to during S.A.S."""
+    same = jnp.equal(di > 0.5, dj > 0.5)
+    return jnp.where(same, P.VDD, 0.0)
+
+
+def waveforms(cases):
+    """Integrate the DRA transient for a batch of input cases.
+
+    ``cases``: f32[N, 2] of (Di, Dj) logic values (0.0 / 1.0).
+    Returns f32[N, TRANSIENT_STEPS, 4]: (BL, BL̄, Vcap-Di, Vcap-Dj) per step.
+    """
+    n = cases.shape[0]
+    di, dj = cases[:, 0], cases[:, 1]
+    p_end, s_end = P.transient_phase_bounds()
+
+    rail = _xnor_rail(di, dj)
+
+    state0 = {
+        "v_bl": jnp.full((n,), P.VDD / 2.0),
+        "v_blb": jnp.full((n,), P.VDD / 2.0),
+        "v_ci": di * P.VDD,
+        "v_cj": dj * P.VDD,
+    }
+
+    a_share = P.DT_NS / P.TAU_SHARE_NS
+    a_sense = P.DT_NS / P.TAU_SENSE_NS
+    a_cell = P.DT_NS / P.TAU_CELL_NS
+
+    def step(state, t):
+        in_share = jnp.logical_and(t >= p_end, t < s_end)
+        in_sense = t >= s_end
+
+        veq = _share_target(state["v_ci"], state["v_cj"], state["v_bl"])
+
+        # C.S.S.: everything relaxes toward the charge-sharing equilibrium.
+        bl_share = state["v_bl"] + a_share * (veq - state["v_bl"])
+        ci_share = state["v_ci"] + a_share * (veq - state["v_ci"])
+        cj_share = state["v_cj"] + a_share * (veq - state["v_cj"])
+
+        # S.A.S.: BL regenerates to the XNOR rail, BL̄ to its complement,
+        # cells restore through the (still-open) access transistors.
+        bl_sense = state["v_bl"] + a_sense * (rail - state["v_bl"])
+        blb_sense = state["v_blb"] + a_sense * ((P.VDD - rail) - state["v_blb"])
+        ci_sense = state["v_ci"] + a_cell * (state["v_bl"] - state["v_ci"])
+        cj_sense = state["v_cj"] + a_cell * (state["v_bl"] - state["v_cj"])
+
+        new = {
+            "v_bl": jnp.where(
+                in_sense, bl_sense, jnp.where(in_share, bl_share, state["v_bl"])
+            ),
+            "v_blb": jnp.where(in_sense, blb_sense, state["v_blb"]),
+            "v_ci": jnp.where(
+                in_sense, ci_sense, jnp.where(in_share, ci_share, state["v_ci"])
+            ),
+            "v_cj": jnp.where(
+                in_sense, cj_sense, jnp.where(in_share, cj_share, state["v_cj"])
+            ),
+        }
+        out = jnp.stack(
+            [new["v_bl"], new["v_blb"], new["v_ci"], new["v_cj"]], axis=-1
+        )
+        return new, out
+
+    _, traj = jax.lax.scan(step, state0, jnp.arange(P.TRANSIENT_STEPS))
+    return jnp.transpose(traj, (1, 0, 2))  # → [N, T, 4]

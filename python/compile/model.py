@@ -1,0 +1,158 @@
+"""L2: the jax compute graphs that get AOT-lowered to artifacts/*.hlo.txt.
+
+Three families, each calling the L1 Pallas kernels:
+
+  * ``bulk_<op>``        — golden bulk bit-wise ops, used by the Rust side to
+                           verify in-DRAM results and as the CPU-roofline
+                           compute payload (Fig. 8 baselines).
+  * ``mc_variation``     — one Monte-Carlo batch of Table 3: samples the
+                           varied circuit instances, evaluates DRA and TRA
+                           through the L1 sense kernels, counts errors.
+  * ``transient_waveforms`` — Fig. 6 trajectory generator.
+
+Everything here must stay shape-static (AOT) and jit-able.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .kernels import bitwise, dra_analog, ref, transient
+
+# --------------------------------------------------------------------------
+# bulk bit-wise golden ops
+# --------------------------------------------------------------------------
+
+BULK_SHAPE = (P.BITWISE_ROWS, P.BITWISE_LANES)
+ADD_SHAPE = (P.ADD_BITS, P.ADD_WORDS)
+
+
+def make_bulk(op: str):
+    """(fn, example_args) for a named elementwise bulk op at artifact shape."""
+    arity, _ = bitwise.OPS[op]
+    run = bitwise.bulk(op)
+
+    def fn(*operands):
+        return (run(*operands),)
+
+    spec = jax.ShapeDtypeStruct(BULK_SHAPE, jnp.int32)
+    return fn, (spec,) * arity
+
+
+def bitplane_add_fn(a_planes, b_planes, carry_in):
+    s, c = bitwise.bitplane_add(a_planes, b_planes, carry_in)
+    return (s, c)
+
+
+BITPLANE_ADD_SPECS = (
+    jax.ShapeDtypeStruct(ADD_SHAPE, jnp.int32),
+    jax.ShapeDtypeStruct(ADD_SHAPE, jnp.int32),
+    jax.ShapeDtypeStruct((P.ADD_WORDS,), jnp.int32),
+)
+
+# --------------------------------------------------------------------------
+# Table 3 Monte-Carlo
+# --------------------------------------------------------------------------
+
+
+def _trunc_normal(key, shape, rel_bound):
+    """Gaussian with σ = rel_bound/3, truncated at the ±rel_bound spec
+    corner (samples outside the corner are clamped, as fab binning would)."""
+    sigma = rel_bound * P.SIGMA_FRACTION
+    x = jax.random.normal(key, shape) * sigma
+    return jnp.clip(x, -rel_bound, rel_bound)
+
+
+def mc_variation(key, variation):
+    """One full Table-3 cell: error percentages under ±``variation``.
+
+    ``key``: uint32[2] PRNG key data.  ``variation``: f32 scalar, e.g. 0.10
+    for ±10 %.  Returns (dra_errors, tra_errors, dra_evals, tra_evals) as
+    int32 scalars over MC_TRIALS trials × all input cases.
+    """
+    key = jax.random.wrap_key_data(key.astype(jnp.uint32), impl="threefry2x32")
+    t = P.MC_TRIALS
+
+    # Enumerate input cases: DRA (Di,Dj), TRA (Di,Dj,Dk).
+    dra_in = jnp.array([[0, 0], [0, 1], [1, 0], [1, 1]], jnp.float32)
+    tra_in = jnp.array(
+        [[(n >> 2) & 1, (n >> 1) & 1, n & 1] for n in range(P.TRA_CASES)],
+        jnp.float32,
+    )
+
+    ks = jax.random.split(key, 12)
+
+    # --- DRA instances: trials × 4 cases --------------------------------
+    shape_d = (t, P.DRA_CASES)
+    ci = 1.0 + _trunc_normal(ks[0], shape_d, variation)
+    cj = 1.0 + _trunc_normal(ks[1], shape_d, variation)
+    cp = P.CP_RATIO * (1.0 + _trunc_normal(ks[2], shape_d, variation))
+    vsl = P.VS_LOW * (1.0 + _trunc_normal(ks[3], shape_d, variation))
+    vsh = P.VS_HIGH * (1.0 + _trunc_normal(ks[4], shape_d, variation))
+    vn = jax.random.normal(ks[5], shape_d) * P.noise_sigma(variation)
+
+    di = jnp.broadcast_to(dra_in[:, 0], shape_d)
+    dj = jnp.broadcast_to(dra_in[:, 1], shape_d)
+    xnor, _ = dra_analog.dra_sense(
+        ci * di * P.VDD, cj * dj * P.VDD, ci, cj, cp, vsl, vsh, vn
+    )
+    want = 1.0 - jnp.abs(di - dj)  # XNOR truth
+    dra_errors = jnp.sum((xnor != want).astype(jnp.int32))
+
+    # --- TRA instances: trials × 8 cases --------------------------------
+    shape_t = (t, P.TRA_CASES)
+    c1 = 1.0 + _trunc_normal(ks[6], shape_t, variation)
+    c2 = 1.0 + _trunc_normal(ks[7], shape_t, variation)
+    c3 = 1.0 + _trunc_normal(ks[8], shape_t, variation)
+    cb = P.CB_RATIO * (1.0 + _trunc_normal(ks[9], shape_t, variation))
+    vsa = P.VSA * (1.0 + _trunc_normal(ks[10], shape_t, variation))
+    vnt = jax.random.normal(ks[11], shape_t) * P.noise_sigma(variation)
+
+    e1 = jnp.broadcast_to(tra_in[:, 0], shape_t)
+    e2 = jnp.broadcast_to(tra_in[:, 1], shape_t)
+    e3 = jnp.broadcast_to(tra_in[:, 2], shape_t)
+    maj = dra_analog.tra_sense(
+        c1 * e1 * P.VDD, c2 * e2 * P.VDD, c3 * e3 * P.VDD,
+        c1, c2, c3, cb, vsa, vnt,
+    )
+    want_maj = ((e1 + e2 + e3) >= 2.0).astype(jnp.float32)
+    tra_errors = jnp.sum((maj != want_maj).astype(jnp.int32))
+
+    return (
+        dra_errors,
+        tra_errors,
+        jnp.int32(t * P.DRA_CASES),
+        jnp.int32(t * P.TRA_CASES),
+    )
+
+
+MC_SPECS = (
+    jax.ShapeDtypeStruct((2,), jnp.uint32),
+    jax.ShapeDtypeStruct((), jnp.float32),
+)
+
+# --------------------------------------------------------------------------
+# Fig. 6 transient
+# --------------------------------------------------------------------------
+
+
+def transient_waveforms(cases):
+    return (transient.waveforms(cases),)
+
+
+TRANSIENT_SPECS = (jax.ShapeDtypeStruct((4, 2), jnp.float32),)
+
+# --------------------------------------------------------------------------
+# reference (non-pallas) twins used by pytest to cross-check the kernels
+# --------------------------------------------------------------------------
+
+
+def mc_variation_ref(key, variation):
+    """Same as ``mc_variation`` but through the pure-jnp ref sense models —
+    used by tests to prove the Pallas kernels don't change the statistics."""
+    import unittest.mock as _mock
+
+    with _mock.patch.object(
+        dra_analog, "dra_sense", ref.dra_sense
+    ), _mock.patch.object(dra_analog, "tra_sense", ref.tra_sense):
+        return mc_variation(key, variation)

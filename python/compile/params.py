@@ -1,0 +1,83 @@
+"""Shared physical / architectural constants for the DRIM analog models.
+
+These constants are mirrored on the Rust side in ``rust/src/analog/params.rs``
+(cross-checked by the ``it_runtime_golden`` integration test): the JAX/Pallas
+artifacts and the Rust behavioural models must agree on the circuit they
+simulate.
+
+Circuit model (paper §3.1, Fig. 4/5):
+
+* DRA isolates the two selected cell capacitors onto the sense node of the
+  reconfigurable SA (``En_C=1``, ``En_M=0``).  Ideal shared voltage is
+  ``V = n·Vdd / C`` with ``C = 2`` unit capacitors (n = number of cells
+  storing '1'), i.e. levels {0, Vdd/2, Vdd}.
+* A *parasitic* capacitance ``CP_RATIO`` (in unit-cell-capacitor units,
+  precharged to Vdd/2) loads the sense node; with ``CP_RATIO = 0.6`` the
+  realized levels are {0.138, 0.600, 1.062} V at Vdd = 1.2 V, which leaves a
+  worst-case margin of ~0.16 V against the shifted inverter thresholds at
+  Vdd/4 and 3·Vdd/4 — the margin geometry that drives Table 3.
+* TRA shares three cells onto the full bit-line (``CB_RATIO = 3`` unit
+  capacitors precharged to Vdd/2, per Ambit's Cb/Cc ratio), giving levels
+  {0.3, 0.5, 0.7, 0.9} V against the SA threshold Vdd/2 — a 0.1 V margin,
+  smaller than DRA's, hence TRA's strictly higher error rate.
+* Process variation "±X%" is modelled as (a) relative Gaussian variation of
+  every capacitor and inverter/SA switching threshold with σ = X/3
+  (the customary 3σ = bound mapping), and (b) an additive sense-node noise
+  term ``noise_sigma(X)`` lumping the Fig. 7 noise sources (WL-BL coupling
+  C_wbl, BL-substrate C_s, BL-BL cross-talk C_cross) plus SA offset, which
+  scale with the same technology variation (see the inline note at
+  NOISE_LIN/NOISE_QUAD for the quadratic term's physical origin).
+"""
+
+# ---- supply / thresholds -------------------------------------------------
+VDD = 1.2                 # volts (45 nm NCSU PDK class)
+VS_LOW = VDD / 4.0        # low-Vs inverter switching threshold (NOR2 detector)
+VS_HIGH = 3.0 * VDD / 4.0 # high-Vs inverter switching threshold (NAND2 detector)
+VSA = VDD / 2.0           # conventional SA switching threshold (TRA / read)
+
+# ---- capacitor network (unit = one DRAM cell capacitor, ~20 fF) ----------
+CP_RATIO = 0.6   # DRA sense-node parasitic, in cell-capacitor units
+CB_RATIO = 3.0   # TRA bit-line capacitance, in cell-capacitor units
+
+# ---- variation model -----------------------------------------------------
+SIGMA_FRACTION = 1.0 / 3.0     # "±X%" → relative Gaussian σ = X/3
+# Additive sense-node noise σ(X) = (NOISE_LIN + NOISE_QUAD·X)·X volts at
+# variation ±X.  The quadratic term models the interaction of the Fig. 7
+# coupling capacitances (C_wbl, C_s, C_cross) with device variation: both the
+# coupled aggressor swing and the victim's susceptibility scale with the
+# variation corner, so their product grows ~quadratically.  Calibrated
+# against Table 3 (see EXPERIMENTS.md §Table3).
+NOISE_LIN = 0.05
+NOISE_QUAD = 2.5
+
+
+def noise_sigma(variation):
+    return (NOISE_LIN + NOISE_QUAD * variation) * variation
+
+# ---- Monte-Carlo configuration (Table 3) ---------------------------------
+MC_TRIALS = 10_000
+DRA_CASES = 4    # (Di,Dj) ∈ {00,01,10,11}
+TRA_CASES = 8    # (Di,Dj,Dk) ∈ {000..111}
+
+# ---- transient model (Fig. 6) --------------------------------------------
+DT_NS = 0.05              # Euler step
+T_PRECHARGE_NS = 10.0     # P.S.   : bit-line precharged, cells hold data
+T_SHARE_NS = 10.0         # C.S.S. : WLx1+WLx2 raised, charge sharing
+T_SENSE_NS = 40.0         # S.A.S. : enables raised, regenerative amplify
+TAU_SHARE_NS = 1.5        # RC constant of cell↔sense-node sharing
+TAU_SENSE_NS = 3.0        # regenerative SA time constant
+TAU_CELL_NS = 4.0         # cell restore through access transistor
+TRANSIENT_STEPS = int(round((T_PRECHARGE_NS + T_SHARE_NS + T_SENSE_NS) / DT_NS))
+
+# ---- AOT artifact shapes (static; the Rust runtime chunks to these) ------
+BITWISE_ROWS = 512        # i32 words
+BITWISE_LANES = 128       # → 512*128 = 65 536 words = 2 Mbit per operand
+ADD_BITS = 32             # bit-planes per operand
+ADD_WORDS = 2048          # packed i32 words per plane (65 536 elements)
+
+
+def transient_phase_bounds():
+    """(end of P.S., end of C.S.S.) as step indices."""
+    p = int(round(T_PRECHARGE_NS / DT_NS))
+    s = int(round((T_PRECHARGE_NS + T_SHARE_NS) / DT_NS))
+    return p, s

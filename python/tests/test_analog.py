@@ -1,0 +1,135 @@
+"""DRA/TRA analog sense kernels: Pallas vs ref, margin geometry, Table-3
+statistical properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model, params as P
+from compile.kernels import dra_analog, ref
+
+
+def test_dra_ideal_levels_margins():
+    """The circuit's margin geometry (DESIGN.md): DRA worst margin > TRA's."""
+    lv = ref.dra_ideal_levels()
+    assert lv[1] == pytest.approx(P.VDD / 2, abs=1e-9)  # midpoint preserved
+    dra_margins = [
+        abs(lv[0] - P.VS_LOW),
+        abs(lv[1] - P.VS_LOW),
+        abs(lv[1] - P.VS_HIGH),
+        abs(lv[2] - P.VS_HIGH),
+    ]
+    tv = ref.tra_ideal_levels()
+    tra_margins = [abs(v - P.VSA) for v in tv]
+    assert min(dra_margins) > min(tra_margins), (dra_margins, tra_margins)
+
+
+def test_dra_truth_table_noiseless():
+    """With no variation, the reconfigurable SA computes exact XNOR/XOR."""
+    di = np.array([[0.0, 0.0, 1.0, 1.0]], np.float32)
+    dj = np.array([[0.0, 1.0, 0.0, 1.0]], np.float32)
+    one = np.ones_like(di)
+    zero = np.zeros_like(di)
+    xnor, xor = dra_analog.dra_sense(
+        di * P.VDD, dj * P.VDD, one, one, P.CP_RATIO * one,
+        P.VS_LOW * one, P.VS_HIGH * one, zero,
+    )
+    np.testing.assert_array_equal(np.asarray(xnor), [[1, 0, 0, 1]])
+    np.testing.assert_array_equal(np.asarray(xor), [[0, 1, 1, 0]])
+
+
+def test_tra_truth_table_noiseless():
+    cases = [(n >> 2 & 1, n >> 1 & 1, n & 1) for n in range(8)]
+    e = np.array(cases, np.float32).T.reshape(3, 1, 8)
+    one = np.ones((1, 8), np.float32)
+    maj = dra_analog.tra_sense(
+        e[0, 0] * P.VDD * one, e[1, 0] * P.VDD * one, e[2, 0] * P.VDD * one,
+        one, one, one, P.CB_RATIO * one, P.VSA * one, np.zeros_like(one),
+    )
+    want = [[int(a + b + c >= 2) for a, b, c in cases]]
+    np.testing.assert_array_equal(np.asarray(maj), want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), trials=st.integers(1, 64))
+def test_pallas_sense_matches_ref(seed, trials):
+    """The Pallas kernels and the jnp oracle agree on arbitrary instances."""
+    rng = np.random.default_rng(seed)
+    s = (trials, 4)
+    f32 = lambda lo, hi: rng.uniform(lo, hi, size=s).astype(np.float32)
+    ci, cj = f32(0.7, 1.3), f32(0.7, 1.3)
+    di, dj = rng.integers(0, 2, size=s).astype(np.float32), rng.integers(
+        0, 2, size=s
+    ).astype(np.float32)
+    qi, qj = ci * di * P.VDD, cj * dj * P.VDD
+    cp = f32(0.3, 0.9)
+    vsl, vsh = f32(0.2, 0.4), f32(0.8, 1.0)
+    vn = f32(-0.2, 0.2)
+    got = dra_analog.dra_sense(qi, qj, ci, cj, cp, vsl, vsh, vn)
+    want = ref.dra_sense(*(jnp.asarray(x) for x in (qi, qj, ci, cj, cp, vsl, vsh, vn)))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+    cb, vsa = f32(2.0, 4.0), f32(0.5, 0.7)
+    dk = rng.integers(0, 2, size=s).astype(np.float32)
+    ck = f32(0.7, 1.3)
+    qk = ck * dk * P.VDD
+    got_t = dra_analog.tra_sense(qi, qj, qk, ci, cj, ck, cb, vsa, vn)
+    want_t = ref.tra_sense(
+        *(jnp.asarray(x) for x in (qi, qj, qk, ci, cj, ck, cb, vsa, vn))
+    )
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+
+
+# --------------------------------------------------------------------------
+# Table-3 statistics
+# --------------------------------------------------------------------------
+
+KEY = np.array([7, 9], np.uint32)
+
+
+def rates(variation):
+    d, t, nd, nt = model.mc_variation(KEY, jnp.float32(variation))
+    return float(d) / float(nd) * 100.0, float(t) / float(nt) * 100.0
+
+
+def test_mc_zero_variation_is_error_free():
+    d, t = rates(0.0)
+    assert d == 0.0 and t == 0.0
+
+
+def test_mc_dra_below_tra_at_all_levels():
+    """Paper Table 3: DRA is strictly more robust than TRA everywhere."""
+    for v in (0.05, 0.10, 0.15, 0.20, 0.30):
+        d, t = rates(v)
+        assert d <= t, (v, d, t)
+
+
+def test_mc_dra_clean_at_ten_percent():
+    """The headline reliability claim: DRA error ≈ 0 % at ±10 %."""
+    d, _ = rates(0.10)
+    assert d < 0.05
+
+
+def test_mc_tra_nonzero_at_ten_percent():
+    _, t = rates(0.10)
+    assert 0.02 < t < 1.5  # paper: 0.18 %
+
+
+def test_mc_monotone_in_variation():
+    seq = [rates(v) for v in (0.05, 0.10, 0.15, 0.20, 0.30)]
+    dra = [d for d, _ in seq]
+    tra = [t for _, t in seq]
+    assert dra == sorted(dra)
+    assert tra == sorted(tra)
+
+
+def test_mc_pallas_and_ref_paths_agree():
+    """Swapping the Pallas sense kernels for the jnp oracle must not change
+    the sampled statistics at all (same PRNG stream, same decisions)."""
+    for v in (0.10, 0.20):
+        a = model.mc_variation(KEY, jnp.float32(v))
+        b = model.mc_variation_ref(KEY, jnp.float32(v))
+        assert [int(x) for x in a] == [int(x) for x in b]

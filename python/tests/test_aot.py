@@ -1,0 +1,80 @@
+"""AOT pipeline: every artifact lowers to parseable HLO text with a correct
+manifest, and the lowered modules contain no dynamic shapes."""
+
+import os
+import re
+
+import pytest
+
+from compile import aot, model, params as P
+
+
+@pytest.fixture(scope="module")
+def out(tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("artifacts"))
+    names = aot.lower_all(d)
+    return d, names
+
+
+def test_all_artifacts_written(out):
+    d, names = out
+    assert len(names) == len(aot.artifact_table())
+    for n in names:
+        p = os.path.join(d, f"{n}.hlo.txt")
+        assert os.path.exists(p) and os.path.getsize(p) > 0
+
+
+def test_hlo_text_is_hlo(out):
+    d, names = out
+    for n in names:
+        with open(os.path.join(d, f"{n}.hlo.txt")) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), n
+        assert "ENTRY" in text, n
+        # 0.5.1-incompatible 64-bit ids never appear in text form, but
+        # guard against accidental proto dumps:
+        assert "\x00" not in text, n
+
+
+def test_manifest_lines_parse(out):
+    d, names = out
+    spec_re = re.compile(
+        r"^(\w+)\t([\w.]+)\tin=([\w\[\],]+)\tout=([\w\[\],]+)\tsha256=([0-9a-f]{16})$"
+    )
+    with open(os.path.join(d, "manifest.txt")) as f:
+        lines = [l for l in f.read().splitlines() if l and not l.startswith("#")]
+    assert len(lines) == len(names)
+    for line in lines:
+        m = spec_re.match(line)
+        assert m, line
+        assert m.group(1) in names
+
+
+def test_manifest_params_header(out):
+    """The Rust analog mirror reads its constants from this header line."""
+    d, _ = out
+    with open(os.path.join(d, "manifest.txt")) as f:
+        header = f.read().splitlines()[2]
+    for k, v in (
+        ("vdd", P.VDD),
+        ("cp_ratio", P.CP_RATIO),
+        ("cb_ratio", P.CB_RATIO),
+        ("noise_lin", P.NOISE_LIN),
+        ("noise_quad", P.NOISE_QUAD),
+        ("trials", P.MC_TRIALS),
+    ):
+        assert f"{k}={v}" in header, (k, header)
+
+
+def test_bulk_artifact_shapes_match_params(out):
+    d, _ = out
+    with open(os.path.join(d, "bulk_xnor2.hlo.txt")) as f:
+        text = f.read()
+    assert f"s32[{P.BITWISE_ROWS},{P.BITWISE_LANES}]" in text
+
+
+def test_mc_artifact_declares_scalar_inputs(out):
+    d, _ = out
+    with open(os.path.join(d, "mc_variation.hlo.txt")) as f:
+        text = f.read()
+    assert "u32[2]" in text and "f32[]" in text

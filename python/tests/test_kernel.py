@@ -1,0 +1,167 @@
+"""Pallas bulk-op kernels vs the pure-jnp oracle — the CORE L1 correctness
+signal.  Hypothesis sweeps shapes and operand patterns."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import bitwise, ref
+
+RNG = np.random.default_rng(0xD21)
+
+
+def rand_words(shape):
+    return RNG.integers(-(2**31), 2**31 - 1, size=shape, dtype=np.int32)
+
+
+REF = {
+    "xnor2": ref.xnor2,
+    "xor2": ref.xor2,
+    "and2": ref.and2,
+    "or2": ref.or2,
+    "nand2": ref.nand2,
+    "nor2": ref.nor2,
+    "not1": ref.not1,
+    "maj3": ref.maj3,
+    "min3": ref.min3,
+}
+
+
+@pytest.mark.parametrize("op", sorted(bitwise.OPS))
+def test_bulk_matches_ref_at_artifact_shape(op):
+    arity, _ = bitwise.OPS[op]
+    ops = [rand_words((512, 128)) for _ in range(arity)]
+    got = np.asarray(bitwise.bulk(op)(*ops))
+    want = np.asarray(REF[op](*(jnp.asarray(o) for o in ops)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 96),
+    lanes=st.sampled_from([1, 2, 8, 128]),
+    op=st.sampled_from(sorted(bitwise.OPS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bulk_matches_ref_any_shape(rows, lanes, op, seed):
+    rng = np.random.default_rng(seed)
+    arity, _ = bitwise.OPS[op]
+    ops = [
+        rng.integers(-(2**31), 2**31 - 1, size=(rows, lanes), dtype=np.int32)
+        for _ in range(arity)
+    ]
+    got = np.asarray(bitwise.bulk(op)(*ops))
+    want = np.asarray(REF[op](*(jnp.asarray(o) for o in ops)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bulk_truth_tables_exhaustive():
+    """Exhaustive 1-bit truth table for every op, checked against python ints."""
+    cases2 = [(0, 0), (0, 1), (1, 0), (1, 1)]
+    tt = {
+        "xnor2": lambda a, b: 1 - (a ^ b),
+        "xor2": lambda a, b: a ^ b,
+        "and2": lambda a, b: a & b,
+        "or2": lambda a, b: a | b,
+        "nand2": lambda a, b: 1 - (a & b),
+        "nor2": lambda a, b: 1 - (a | b),
+    }
+    for op, fn in tt.items():
+        a = np.array([[c[0] for c in cases2]], np.int32)
+        b = np.array([[c[1] for c in cases2]], np.int32)
+        got = np.asarray(bitwise.bulk(op)(a, b)) & 1
+        want = np.array([[fn(*c) for c in cases2]], np.int32)
+        np.testing.assert_array_equal(got, want, err_msg=op)
+    cases3 = [(i >> 2 & 1, i >> 1 & 1, i & 1) for i in range(8)]
+    a = np.array([[c[0] for c in cases3]], np.int32)
+    b = np.array([[c[1] for c in cases3]], np.int32)
+    c = np.array([[c[2] for c in cases3]], np.int32)
+    got = np.asarray(bitwise.bulk("maj3")(a, b, c)) & 1
+    want = np.array([[int(x + y + z >= 2) for x, y, z in cases3]], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# bit-plane adder
+# --------------------------------------------------------------------------
+
+
+def unpack_planes(planes):
+    """int32[BITS, W] bit-planes → uint64[W*32] element values."""
+    bits, w = planes.shape
+    u = planes.astype(np.uint32)
+    elems = np.zeros(w * 32, dtype=np.uint64)
+    for i in range(bits):
+        plane_bits = np.unpackbits(
+            u[i].view(np.uint8).reshape(w, 4)[:, ::-1], axis=1, bitorder="big"
+        ).reshape(-1)[::-1]  # little-endian bit order across the word
+        # simpler: bit j of word k = (u[i,k] >> j) & 1
+        for k in range(w):
+            word = int(u[i, k])
+            for j in range(32):
+                if (word >> j) & 1:
+                    elems[k * 32 + j] |= np.uint64(1 << i)
+    return elems
+
+
+def pack_planes(values, bits, w):
+    planes = np.zeros((bits, w), dtype=np.uint32)
+    for i in range(bits):
+        for k in range(w):
+            word = 0
+            for j in range(32):
+                if (int(values[k * 32 + j]) >> i) & 1:
+                    word |= 1 << j
+            planes[i, k] = word
+    return planes.astype(np.int32)
+
+
+@pytest.mark.parametrize("bits,w", [(4, 2), (8, 4), (16, 2)])
+def test_bitplane_add_matches_integer_add(bits, w):
+    rng = np.random.default_rng(bits * 100 + w)
+    av = rng.integers(0, 2**bits, size=w * 32).astype(np.uint64)
+    bv = rng.integers(0, 2**bits, size=w * 32).astype(np.uint64)
+    ap = pack_planes(av, bits, w)
+    bp = pack_planes(bv, bits, w)
+    s, cout = bitwise.bitplane_add(ap, bp)
+    sv = unpack_planes(np.asarray(s))
+    want = (av + bv) % (1 << bits)
+    want_c = ((av + bv) >> bits) & 1
+    np.testing.assert_array_equal(sv, want)
+    got_c = np.array(
+        [(int(np.asarray(cout).view(np.uint32)[k]) >> j) & 1 for k in range(w) for j in range(32)],
+        dtype=np.uint64,
+    )
+    np.testing.assert_array_equal(got_c, want_c)
+
+
+def test_bitplane_add_matches_ref_oracle():
+    rng = np.random.default_rng(42)
+    ap = rng.integers(-(2**31), 2**31 - 1, size=(32, 64), dtype=np.int32)
+    bp = rng.integers(-(2**31), 2**31 - 1, size=(32, 64), dtype=np.int32)
+    s, c = bitwise.bitplane_add(ap, bp)
+    rs, rc = ref.bitplane_add(jnp.asarray(ap), jnp.asarray(bp))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 32))
+def test_bitplane_add_carry_in_chains(seed, bits):
+    """Adding with carry_in=carry_out of a previous add == wider addition —
+    the invariant DRIM's multi-word adds rely on."""
+    rng = np.random.default_rng(seed)
+    w = 2
+    ap = rng.integers(-(2**31), 2**31 - 1, size=(bits, w), dtype=np.int32)
+    bp = rng.integers(-(2**31), 2**31 - 1, size=(bits, w), dtype=np.int32)
+    s1, c1 = bitwise.bitplane_add(ap, bp)
+    rs, rc = ref.bitplane_add(jnp.asarray(ap), jnp.asarray(bp))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(rc))
+    # chain: (a+b) + (a+b) with carry in
+    s2, c2 = bitwise.bitplane_add(np.asarray(s1), np.asarray(s1), np.asarray(c1))
+    rs2, rc2 = ref.bitplane_add(rs, rs, rc)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(rs2))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(rc2))

@@ -1,0 +1,68 @@
+"""Fig. 6 transient model: phase behaviour and end states."""
+
+import numpy as np
+import pytest
+
+from compile import model, params as P
+
+CASES = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], np.float32)
+
+
+@pytest.fixture(scope="module")
+def traj():
+    return np.asarray(model.transient_waveforms(CASES)[0])  # [4, T, 4]
+
+
+def test_shapes(traj):
+    assert traj.shape == (4, P.TRANSIENT_STEPS, 4)
+
+
+def test_precharge_state_holds(traj):
+    """During P.S. the bit-lines sit at Vdd/2 and cells hold their data."""
+    p_end, _ = P.transient_phase_bounds()
+    ps = traj[:, : p_end - 1, :]
+    np.testing.assert_allclose(ps[:, :, 0], P.VDD / 2, atol=1e-6)  # BL
+    np.testing.assert_allclose(ps[:, :, 1], P.VDD / 2, atol=1e-6)  # BL̄
+    for c, (di, dj) in enumerate(CASES):
+        np.testing.assert_allclose(ps[c, :, 2], di * P.VDD, atol=1e-6)
+        np.testing.assert_allclose(ps[c, :, 3], dj * P.VDD, atol=1e-6)
+
+
+def test_charge_sharing_moves_toward_equilibrium(traj):
+    """During C.S.S. the BL approaches n·Vdd/C (paper Eq. for V_i)."""
+    _, s_end = P.transient_phase_bounds()
+    csum = 2.0 + P.CP_RATIO
+    for c, (di, dj) in enumerate(CASES):
+        veq = (di * P.VDD + dj * P.VDD + P.CP_RATIO * P.VDD / 2) / csum
+        v_end_share = traj[c, s_end - 1, 0]
+        # moved at least 85 % of the way from Vdd/2 to the equilibrium
+        assert abs(v_end_share - veq) < 0.15 * abs(P.VDD / 2 - veq) + 1e-3, (
+            c, v_end_share, veq,
+        )
+
+
+def test_sense_amplification_reaches_xnor_rail(traj):
+    """Fig. 6's money shot: BL → Vdd for Di⊙Dj=1 (00/11), → GND for 01/10,
+    and the cell capacitors are overwritten with the result (write-back)."""
+    for c, (di, dj) in enumerate(CASES):
+        want = P.VDD if di == dj else 0.0
+        assert abs(traj[c, -1, 0] - want) < 0.01, (c, traj[c, -1, 0], want)
+        assert abs(traj[c, -1, 1] - (P.VDD - want)) < 0.01  # BL̄ complement
+        assert abs(traj[c, -1, 2] - want) < 0.05  # Vcap-Di restored
+        assert abs(traj[c, -1, 3] - want) < 0.05  # Vcap-Dj restored
+
+
+def test_rails_are_monotone_in_sense_phase(traj):
+    """After S.A.S. begins, BL moves monotonically to its rail."""
+    _, s_end = P.transient_phase_bounds()
+    for c, (di, dj) in enumerate(CASES):
+        bl = traj[c, s_end:, 0]
+        d = np.diff(bl)
+        if di == dj:
+            assert (d >= -1e-6).all()
+        else:
+            assert (d <= 1e-6).all()
+
+
+def test_voltages_bounded(traj):
+    assert (traj >= -1e-6).all() and (traj <= P.VDD + 1e-6).all()

@@ -1,0 +1,79 @@
+//! Fig. 6 regeneration: the DRA transient waveforms for all four input
+//! cases, dumped to CSV (plot-ready) and summarized; cross-checks the JAX
+//! artifact against the Rust mirror when artifacts are present.
+
+use drim::analog::params as P;
+use drim::analog::transient;
+use drim::runtime::Runtime;
+use drim::util::bench::Bencher;
+
+fn main() {
+    println!("=== Fig. 6: DRA transient (P.S. → C.S.S. → S.A.S.) ===\n");
+    let steps = P::transient_steps();
+    let cases = transient::all_cases();
+
+    // CSV for plotting
+    let path = "target/fig6_transient.csv";
+    let mut out = String::from(
+        "t_ns,bl_00,blb_00,ci_00,cj_00,bl_01,blb_01,ci_01,cj_01,\
+         bl_10,blb_10,ci_10,cj_10,bl_11,blb_11,ci_11,cj_11\n",
+    );
+    for t in 0..steps {
+        let mut row = vec![format!("{:.3}", t as f64 * P::DT_NS)];
+        for (_, _, w) in &cases {
+            for k in 0..4 {
+                row.push(format!("{:.5}", w[t][k]));
+            }
+        }
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(path, &out).expect("write csv");
+    println!("wrote {} steps × 4 cases to {path}\n", steps);
+
+    // phase summary (the paper's visual)
+    let (p_end, s_end) = (
+        (P::T_PRECHARGE_NS / P::DT_NS) as usize,
+        ((P::T_PRECHARGE_NS + P::T_SHARE_NS) / P::DT_NS) as usize,
+    );
+    println!("case   V(BL) @P.S.  @C.S.S.end  @S.A.S.end   XNOR");
+    for (di, dj, w) in &cases {
+        println!(
+            "Di={} Dj={}   {:.3} V     {:.3} V     {:.3} V      {}",
+            *di as u8,
+            *dj as u8,
+            w[p_end - 1][0],
+            w[s_end - 1][0],
+            w[steps - 1][0],
+            (w[steps - 1][0] > P::VDD / 2.0) as u8
+        );
+    }
+
+    // JAX cross-check
+    match Runtime::load_default() {
+        Ok(mut rt) => {
+            let flat = rt
+                .transient([[0., 0.], [0., 1.], [1., 0.], [1., 1.]])
+                .expect("transient artifact");
+            let mut max_err = 0.0f64;
+            for (ci, (_, _, w)) in cases.iter().enumerate() {
+                for (t, s) in w.iter().enumerate() {
+                    for k in 0..4 {
+                        let jax = flat[(ci * steps + t) * 4 + k] as f64;
+                        max_err = max_err.max((jax - s[k]).abs());
+                    }
+                }
+            }
+            println!("\nmax |jax - rust| over all 4×{steps}×4 samples: {max_err:.2e} V");
+            assert!(max_err < 2e-3, "transient mirrors diverged");
+        }
+        Err(e) => eprintln!("\n(JAX cross-check skipped — {e})"),
+    }
+
+    println!("\n=== integrator timing ===");
+    Bencher::default().run("rust transient, 4 cases", (4 * steps) as f64, || {
+        transient::all_cases()
+    });
+    println!("\nfig6 bench OK");
+}

@@ -1,0 +1,89 @@
+//! Fig. 8 regeneration: raw throughput of all 8 platforms × {NOT, XNOR2,
+//! ADD} × {2^27, 2^28, 2^29}-bit vectors, printed as the paper's series
+//! plus the headline speedup ratios. Also *executes* a scaled-down DRIM
+//! workload on the functional simulator to verify the model's command
+//! counts against real execution.
+
+use drim::coordinator::{BulkRequest, DrimService, Payload, ServiceConfig};
+use drim::isa::program::BulkOp;
+use drim::platforms::{all_platforms, by_name, FIG8_OPS};
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+use drim::util::stats::fmt_rate;
+use drim::util::table::Table;
+
+fn main() {
+    println!("=== Fig. 8: throughput of different platforms (result bits/s) ===\n");
+    for log2 in [27u32, 28, 29] {
+        let bits = 1u64 << log2;
+        println!("-- vector length 2^{log2} bits --");
+        let mut t = Table::new(&["platform", "NOT", "XNOR2", "ADD"]);
+        for p in all_platforms() {
+            t.row(&[
+                p.name().to_string(),
+                fmt_rate(p.throughput_bits_per_sec(BulkOp::Not, bits)),
+                fmt_rate(p.throughput_bits_per_sec(BulkOp::Xnor2, bits)),
+                fmt_rate(p.throughput_bits_per_sec(BulkOp::Add, bits)),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    let bits = 1u64 << 29;
+    let tp = |n: &str, op: BulkOp| by_name(n).unwrap().throughput_bits_per_sec(op, bits);
+    let avg = |a: &str, b: &str| {
+        FIG8_OPS
+            .iter()
+            .map(|&op| tp(a, op) / tp(b, op))
+            .sum::<f64>()
+            / FIG8_OPS.len() as f64
+    };
+    println!("headline ratios (measured | paper):");
+    println!("  DRIM-R/CPU avg      {:7.1}x | 71x", avg("DRIM-R", "CPU"));
+    println!("  DRIM-R/GPU avg      {:7.1}x | 8.4x", avg("DRIM-R", "GPU"));
+    println!("  HMC/CPU avg         {:7.1}x | ~25x", avg("HMC", "CPU"));
+    println!("  HMC/GPU avg         {:7.1}x | ~6.5x", avg("HMC", "GPU"));
+    println!(
+        "  DRIM-R/Ambit xnor   {:7.1}x | 2.3x",
+        tp("DRIM-R", BulkOp::Xnor2) / tp("Ambit", BulkOp::Xnor2)
+    );
+    println!(
+        "  DRIM-R/1T1C xnor    {:7.1}x | 1.9x",
+        tp("DRIM-R", BulkOp::Xnor2) / tp("DRISA-1T1C", BulkOp::Xnor2)
+    );
+    println!(
+        "  DRIM-R/3T1C xnor    {:7.1}x | 3.7x",
+        tp("DRIM-R", BulkOp::Xnor2) / tp("DRISA-3T1C", BulkOp::Xnor2)
+    );
+    println!("  DRIM-S/HMC avg      {:7.1}x | 13.5x", avg("DRIM-S", "HMC"));
+
+    // ---- model-vs-execution cross check --------------------------------
+    println!("\n=== functional-simulator cross-check (scaled workload) ===");
+    let service = DrimService::new(ServiceConfig::default());
+    let mut rng = Rng::new(1);
+    let payload_bits = 1usize << 22; // 4 Mbit — real execution, same math
+    for op in [BulkOp::Not, BulkOp::Xnor2] {
+        let operands: Vec<BitRow> = (0..op.arity())
+            .map(|_| BitRow::random(payload_bits, &mut rng))
+            .collect();
+        let resp = service.run(BulkRequest::bitwise(op, operands));
+        assert!(matches!(resp.result, Payload::Bits(_)));
+        let model = by_name("DRIM-R")
+            .unwrap()
+            .throughput_bits_per_sec(op, payload_bits as u64);
+        let sim = payload_bits as f64 / (resp.sim_latency_ns * 1e-9);
+        println!(
+            "  {:6}: simulated {}bit/s vs model {}bit/s (ratio {:.2})",
+            op.name(),
+            fmt_rate(sim),
+            fmt_rate(model),
+            sim / model
+        );
+        assert!(
+            (0.5..2.0).contains(&(sim / model)),
+            "simulated and modeled throughput diverge"
+        );
+    }
+    println!("\nfig8 bench OK");
+}

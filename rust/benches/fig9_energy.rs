@@ -1,0 +1,84 @@
+//! Fig. 9 regeneration: DRAM-side energy per KB for {copy, NOT, XNOR2,
+//! ADD} across DRIM, Ambit, DRISA-1T1C and the CPU/DDR4 path, with the
+//! paper's quoted ratios, plus an executed-energy cross-check from the
+//! controller's per-AAP accounting.
+
+use drim::controller::Controller;
+use drim::dram::command::RowId::*;
+use drim::dram::geometry::DramGeometry;
+use drim::energy::EnergyModel;
+use drim::isa::program::BulkOp;
+use drim::platforms::by_name;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+use drim::util::table::Table;
+
+fn main() {
+    println!("=== Fig. 9: energy per KB of result (nJ) ===\n");
+    let mut t = Table::new(&["platform", "copy", "NOT", "XNOR2", "ADD"]);
+    for name in ["CPU", "Ambit", "DRISA-1T1C", "DRIM-R"] {
+        let p = by_name(name).unwrap();
+        let cell = |op: BulkOp| {
+            p.energy_pj_per_kb(op)
+                .map(|e| format!("{:.1}", e / 1e3))
+                .unwrap_or("-".into())
+        };
+        t.row(&[
+            name.to_string(),
+            cell(BulkOp::Copy),
+            cell(BulkOp::Not),
+            cell(BulkOp::Xnor2),
+            cell(BulkOp::Add),
+        ]);
+    }
+    t.print();
+
+    let e = |n: &str, op: BulkOp| by_name(n).unwrap().energy_pj_per_kb(op).unwrap();
+    println!("\nratios (measured | paper):");
+    println!(
+        "  Ambit/DRIM xnor2      {:5.2}x | 2.4x",
+        e("Ambit", BulkOp::Xnor2) / e("DRIM-R", BulkOp::Xnor2)
+    );
+    println!(
+        "  DRISA-1T1C/DRIM xnor2 {:5.2}x | 1.6x",
+        e("DRISA-1T1C", BulkOp::Xnor2) / e("DRIM-R", BulkOp::Xnor2)
+    );
+    println!(
+        "  Ambit/DRIM add        {:5.2}x | ~2x",
+        e("Ambit", BulkOp::Add) / e("DRIM-R", BulkOp::Add)
+    );
+    println!(
+        "  DRISA-1T1C/DRIM add   {:5.2}x | 1.7x",
+        e("DRISA-1T1C", BulkOp::Add) / e("DRIM-R", BulkOp::Add)
+    );
+    println!(
+        "  CPU/DRIM add          {:5.1}x | 27x",
+        e("CPU", BulkOp::Add) / e("DRIM-R", BulkOp::Add)
+    );
+    let m = EnergyModel::default();
+    println!(
+        "  DDR4-copy/DRIM-copy   {:5.1}x | 69x",
+        m.ddr4_copy_pj(8192.0) / m.aap_pj(drim::dram::command::AapKind::Copy, 8192)
+    );
+
+    // ---- executed-energy cross-check -----------------------------------
+    println!("\n=== controller accounting cross-check ===");
+    let mut c = Controller::new(DramGeometry::default());
+    let mut rng = Rng::new(2);
+    let a = BitRow::random(8192, &mut rng);
+    let b = BitRow::random(8192, &mut rng);
+    c.write_row(0, 0, Data(0), &a);
+    c.write_row(0, 0, Data(1), &b);
+    let stats = c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(0), Data(1)], Data(2));
+    let model = e("DRIM-R", BulkOp::Xnor2);
+    println!(
+        "  executed XNOR2 on one 8Kb row: {:.1} nJ (model {:.1} nJ)",
+        stats.energy_pj / 1e3,
+        model / 1e3
+    );
+    assert!(
+        (stats.energy_pj - model).abs() / model < 1e-6,
+        "controller accounting and platform model must agree exactly"
+    );
+    println!("\nfig9 bench OK");
+}

@@ -1,0 +1,80 @@
+//! L3 hot-path micro-benchmarks: the simulator code the whole Fig. 8 sweep
+//! and the serving loop sit on. Used by the §Perf pass (EXPERIMENTS.md).
+//!
+//! Units: "ops" are bit-operations (bit-lines processed).
+
+use drim::controller::Controller;
+use drim::coordinator::{BulkRequest, DrimService, Payload, ServiceConfig};
+use drim::dram::command::{AapKind, RowId::*};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::subarray::SubArray;
+use drim::util::bench::{section, Bencher};
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(0xBE6C);
+
+    section("sub-array primitive (8 Kb row)");
+    let cols = 8192;
+    let mut sa = SubArray::new(cols);
+    sa.write_row(X(1), &BitRow::random(cols, &mut rng));
+    sa.write_row(X(2), &BitRow::random(cols, &mut rng));
+    sa.write_row(X(3), &BitRow::random(cols, &mut rng));
+    b.run("dra_aap (XNOR, 8192 bits)", cols as f64, || {
+        sa.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(0)])
+    });
+    b.run("tra_aap (MAJ3, 8192 bits)", cols as f64, || {
+        sa.execute_aap(AapKind::Tra, &[X(1), X(2), X(3)], &[Data(1)])
+    });
+    b.run("copy_aap (8192 bits)", cols as f64, || {
+        sa.execute_aap(AapKind::Copy, &[Data(1)], &[X(4)])
+    });
+
+    section("controller sequences (8 Kb row)");
+    let mut c = Controller::new(DramGeometry::default());
+    c.write_row(0, 0, Data(0), &BitRow::random(cols, &mut rng));
+    c.write_row(0, 0, Data(1), &BitRow::random(cols, &mut rng));
+    b.run("xnor2 program (3 AAPs)", cols as f64, || {
+        c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(0), Data(1)], Data(2))
+    });
+    let ar: Vec<_> = (0..32).map(|i| Data(10 + i as u16)).collect();
+    let br: Vec<_> = (0..32).map(|i| Data(50 + i as u16)).collect();
+    let sr: Vec<_> = (0..32).map(|i| Data(100 + i as u16)).collect();
+    for r in ar.iter().chain(&br) {
+        c.write_row(0, 0, *r, &BitRow::random(cols, &mut rng));
+    }
+    b.run("add_planes 32-bit (224 AAPs)", (cols * 32) as f64, || {
+        c.add_planes(0, 0, &ar, &br, &sr, Data(200))
+    });
+
+    section("service end-to-end (functional sim, wall time)");
+    let service = DrimService::new(ServiceConfig::default());
+    for bits in [1 << 16, 1 << 20, 1 << 23] {
+        let a = BitRow::random(bits, &mut rng);
+        let bb = BitRow::random(bits, &mut rng);
+        b.run(
+            &format!("service xnor2 {} bits", bits),
+            bits as f64,
+            || {
+                let resp = service.run(BulkRequest::bitwise(
+                    BulkOp::Xnor2,
+                    vec![a.clone(), bb.clone()],
+                ));
+                assert!(matches!(resp.result, Payload::Bits(_)));
+            },
+        );
+    }
+
+    section("analog engines");
+    b.run("montecarlo 10k trials ±20%", 120_000.0, || {
+        drim::analog::montecarlo::run_montecarlo(0.2, 10_000, 3)
+    });
+    b.run("transient 4 cases × 1200 steps", 4.0 * 1200.0, || {
+        drim::analog::transient::all_cases()
+    });
+
+    println!("\nhotpath bench OK");
+}

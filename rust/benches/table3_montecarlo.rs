@@ -1,0 +1,65 @@
+//! Table 3 regeneration: Monte-Carlo process-variation analysis at the
+//! paper's five corners, 10 000 trials, via BOTH engines — the Rust mirror
+//! and (when artifacts exist) the AOT-lowered JAX kernel through PJRT —
+//! printed side-by-side with the paper's numbers.
+
+use drim::analog::montecarlo::{run_montecarlo, TABLE3_CORNERS, TABLE3_PAPER};
+use drim::analog::params as P;
+use drim::runtime::Runtime;
+use drim::util::bench::Bencher;
+use drim::util::table::Table;
+
+fn main() {
+    println!("=== Table 3: process variation (10 000 trials/corner) ===\n");
+    let mut rt = Runtime::load_default()
+        .map_err(|e| eprintln!("(JAX column disabled — {e})"))
+        .ok();
+
+    let mut t = Table::new(&[
+        "variation",
+        "TRA paper",
+        "TRA rust",
+        "TRA jax",
+        "DRA paper",
+        "DRA rust",
+        "DRA jax",
+    ]);
+    for (i, &v) in TABLE3_CORNERS.iter().enumerate() {
+        let r = run_montecarlo(v, P::MC_TRIALS, 7 + i as u64);
+        let (jd, jt) = match rt.as_mut() {
+            Some(rt) => {
+                let (de, te, dn, tn) =
+                    rt.mc_variation([7, i as u32], v as f32).expect("mc artifact");
+                (
+                    format!("{:.2}", 100.0 * de as f64 / dn as f64),
+                    format!("{:.2}", 100.0 * te as f64 / tn as f64),
+                )
+            }
+            None => ("-".into(), "-".into()),
+        };
+        let (pd, pt) = TABLE3_PAPER[i];
+        t.row(&[
+            format!("±{:.0}%", v * 100.0),
+            format!("{pt}"),
+            format!("{:.2}", r.tra_pct()),
+            jt,
+            format!("{pd}"),
+            format!("{:.2}", r.dra_pct()),
+            jd,
+        ]);
+    }
+    t.print();
+
+    println!("\n=== engine timing ===");
+    let b = Bencher::default();
+    b.run("rust mirror, 10k trials, ±20%", (P::MC_TRIALS * 12) as f64, || {
+        run_montecarlo(0.20, P::MC_TRIALS, 11)
+    });
+    if let Some(rt) = rt.as_mut() {
+        let b = Bencher::quick();
+        b.run("jax artifact, 10k trials, ±20%", (P::MC_TRIALS * 12) as f64, || {
+            rt.mc_variation([3, 3], 0.20).unwrap()
+        });
+    }
+    println!("\ntable3 bench OK");
+}

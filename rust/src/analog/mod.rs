@@ -1,0 +1,20 @@
+//! Behavioural circuit models: the Rust mirror of the L1/L2 analog
+//! kernels (python/compile/kernels/{dra_analog,transient}.py).
+//!
+//! Two implementations of the same circuit exist on purpose:
+//! * the JAX/Pallas artifacts (AOT-lowered, executed through `runtime`) —
+//!   the *reference* used for Table 3 / Fig. 6;
+//! * this Rust mirror — used on paths where the PJRT runtime is not loaded
+//!   (fast benches, property tests), and cross-checked against the
+//!   artifacts in `it_runtime_golden`.
+//!
+//! Constants must match `python/compile/params.py`; `params::check_manifest`
+//! verifies that against the generated artifact manifest at runtime.
+
+pub mod model;
+pub mod montecarlo;
+pub mod params;
+pub mod transient;
+
+pub use model::{dra_sense, tra_sense};
+pub use montecarlo::{run_montecarlo, McResult};

@@ -1,0 +1,142 @@
+//! Scalar sense-amplification models — mirror of
+//! `python/compile/kernels/ref.py::{dra_sense, tra_sense}`.
+
+use super::params as P;
+
+/// One DRA instance: returns (XNOR on BL, XOR on BL̄) as booleans.
+///
+/// `qi`/`qj` cell charges, `ci`/`cj` cell capacitances, `cp` sense-node
+/// parasitic, `vsl`/`vsh` the shifted inverter thresholds, `vnoise`
+/// additive node noise.
+#[allow(clippy::too_many_arguments)]
+pub fn dra_sense(
+    qi: f64,
+    qj: f64,
+    ci: f64,
+    cj: f64,
+    cp: f64,
+    vsl: f64,
+    vsh: f64,
+    vnoise: f64,
+) -> (bool, bool) {
+    let v = (qi + qj + cp * (P::VDD / 2.0)) / (ci + cj + cp) + vnoise;
+    let nor_out = v < vsl; // low-Vs inverter: NOR2
+    let nand_out = v < vsh; // high-Vs inverter: NAND2
+    let xor = nand_out && !nor_out; // CMOS AND gate (Eq. 1)
+    (!xor, xor)
+}
+
+/// One TRA instance on the conventional SA: MAJ3 decision.
+#[allow(clippy::too_many_arguments)]
+pub fn tra_sense(
+    q: [f64; 3],
+    c: [f64; 3],
+    cb: f64,
+    vsa: f64,
+    vnoise: f64,
+) -> bool {
+    let v = (q[0] + q[1] + q[2] + cb * (P::VDD / 2.0))
+        / (c[0] + c[1] + c[2] + cb)
+        + vnoise;
+    v > vsa
+}
+
+/// Ideal DRA sense-node levels for n∈{0,1,2} cells storing '1'.
+pub fn dra_ideal_levels() -> [f64; 3] {
+    let c = 2.0 + P::CP_RATIO;
+    [0, 1, 2].map(|n| (n as f64 * P::VDD + P::CP_RATIO * P::VDD / 2.0) / c)
+}
+
+/// Ideal TRA bit-line levels for n∈{0..3}.
+pub fn tra_ideal_levels() -> [f64; 4] {
+    let c = 3.0 + P::CB_RATIO;
+    [0, 1, 2, 3].map(|n| (n as f64 * P::VDD + P::CB_RATIO * P::VDD / 2.0) / c)
+}
+
+/// Worst-case noise margin of each mechanism (drives Table 3's ordering).
+pub fn dra_worst_margin() -> f64 {
+    let lv = dra_ideal_levels();
+    [
+        (lv[0] - P::VS_LOW).abs(),
+        (lv[1] - P::VS_LOW).abs(),
+        (lv[1] - P::VS_HIGH).abs(),
+        (lv[2] - P::VS_HIGH).abs(),
+    ]
+    .into_iter()
+    .fold(f64::INFINITY, f64::min)
+}
+
+pub fn tra_worst_margin() -> f64 {
+    tra_ideal_levels()
+        .into_iter()
+        .map(|v| (v - P::VSA).abs())
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_dra_truth_table() {
+        for (di, dj) in [(0., 0.), (0., 1.), (1., 0.), (1., 1.)] {
+            let (xnor, xor) = dra_sense(
+                di * P::VDD,
+                dj * P::VDD,
+                1.0,
+                1.0,
+                P::CP_RATIO,
+                P::VS_LOW,
+                P::VS_HIGH,
+                0.0,
+            );
+            assert_eq!(xnor, di == dj);
+            assert_eq!(xor, di != dj);
+        }
+    }
+
+    #[test]
+    fn noiseless_tra_truth_table() {
+        for n in 0..8u8 {
+            let bits = [(n >> 2) & 1, (n >> 1) & 1, n & 1].map(f64::from);
+            let maj = tra_sense(
+                [bits[0] * P::VDD, bits[1] * P::VDD, bits[2] * P::VDD],
+                [1.0; 3],
+                P::CB_RATIO,
+                P::VSA,
+                0.0,
+            );
+            assert_eq!(maj, bits.iter().sum::<f64>() >= 2.0);
+        }
+    }
+
+    #[test]
+    fn level_midpoints_preserved() {
+        // single-'1' DRA level sits exactly at Vdd/2 (cp precharge)
+        assert!((dra_ideal_levels()[1] - P::VDD / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dra_margin_exceeds_tra_margin() {
+        // the paper's reliability claim in one inequality
+        assert!(dra_worst_margin() > tra_worst_margin());
+        // TRA margin is 0.1 V at Cb/Cc = 3 (Ambit operating point)
+        assert!((tra_worst_margin() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_flips_decisions() {
+        // push the node past the high threshold: XNOR(1,0) misreads as 1
+        let (xnor, _) = dra_sense(
+            P::VDD,
+            0.0,
+            1.0,
+            1.0,
+            P::CP_RATIO,
+            P::VS_LOW,
+            P::VS_HIGH,
+            0.5,
+        );
+        assert!(xnor, "large positive noise must flip the decision");
+    }
+}

@@ -1,0 +1,158 @@
+//! Monte-Carlo process-variation analysis (Table 3) — Rust mirror of
+//! `python/compile/model.py::mc_variation`.
+//!
+//! Same sampling model (truncated Gaussians at σ = bound/3 for component
+//! variation, additive node noise σ = noise_sigma(X)), different PRNG —
+//! the two implementations agree *statistically* (asserted within Monte-
+//! Carlo tolerance in `it_runtime_golden`), while both are exact for the
+//! zero-variation corner.
+
+use crate::util::rng::Rng;
+
+use super::model;
+use super::params as P;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct McResult {
+    pub dra_errors: u64,
+    pub dra_evals: u64,
+    pub tra_errors: u64,
+    pub tra_evals: u64,
+}
+
+impl McResult {
+    pub fn dra_pct(&self) -> f64 {
+        100.0 * self.dra_errors as f64 / self.dra_evals.max(1) as f64
+    }
+
+    pub fn tra_pct(&self) -> f64 {
+        100.0 * self.tra_errors as f64 / self.tra_evals.max(1) as f64
+    }
+}
+
+/// Run `trials` Monte-Carlo instances of every DRA input case (4) and TRA
+/// input case (8) at variation corner ±`variation`.
+pub fn run_montecarlo(variation: f64, trials: usize, seed: u64) -> McResult {
+    let mut rng = Rng::new(seed);
+    let sigma_n = P::noise_sigma(variation);
+    let mut res = McResult::default();
+
+    for _ in 0..trials {
+        // --- DRA: (Di,Dj) ∈ {00,01,10,11} -------------------------------
+        for case in 0..4u8 {
+            let di = f64::from(case >> 1);
+            let dj = f64::from(case & 1);
+            let ci = 1.0 + rng.trunc_gaussian(variation);
+            let cj = 1.0 + rng.trunc_gaussian(variation);
+            let cp = P::CP_RATIO * (1.0 + rng.trunc_gaussian(variation));
+            let vsl = P::VS_LOW * (1.0 + rng.trunc_gaussian(variation));
+            let vsh = P::VS_HIGH * (1.0 + rng.trunc_gaussian(variation));
+            let vn = rng.gaussian() * sigma_n;
+            let (xnor, _) = model::dra_sense(
+                ci * di * P::VDD,
+                cj * dj * P::VDD,
+                ci,
+                cj,
+                cp,
+                vsl,
+                vsh,
+                vn,
+            );
+            res.dra_evals += 1;
+            if xnor != (di == dj) {
+                res.dra_errors += 1;
+            }
+        }
+
+        // --- TRA: (D1,D2,D3) ∈ {000..111} --------------------------------
+        for case in 0..8u8 {
+            let d = [
+                f64::from((case >> 2) & 1),
+                f64::from((case >> 1) & 1),
+                f64::from(case & 1),
+            ];
+            let c = [
+                1.0 + rng.trunc_gaussian(variation),
+                1.0 + rng.trunc_gaussian(variation),
+                1.0 + rng.trunc_gaussian(variation),
+            ];
+            let cb = P::CB_RATIO * (1.0 + rng.trunc_gaussian(variation));
+            let vsa = P::VSA * (1.0 + rng.trunc_gaussian(variation));
+            let vn = rng.gaussian() * sigma_n;
+            let maj = model::tra_sense(
+                [c[0] * d[0] * P::VDD, c[1] * d[1] * P::VDD, c[2] * d[2] * P::VDD],
+                c,
+                cb,
+                vsa,
+                vn,
+            );
+            res.tra_evals += 1;
+            if maj != (d.iter().sum::<f64>() >= 2.0) {
+                res.tra_errors += 1;
+            }
+        }
+    }
+    res
+}
+
+/// The five variation corners of Table 3.
+pub const TABLE3_CORNERS: [f64; 5] = [0.05, 0.10, 0.15, 0.20, 0.30];
+
+/// Paper's Table 3 values (%, DRA/TRA) for side-by-side reporting.
+pub const TABLE3_PAPER: [(f64, f64); 5] = [
+    (0.00, 0.00),
+    (0.00, 0.18),
+    (1.2, 5.5),
+    (9.6, 17.1),
+    (16.4, 28.4),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_variation_is_error_free() {
+        let r = run_montecarlo(0.0, 2000, 1);
+        assert_eq!(r.dra_errors, 0);
+        assert_eq!(r.tra_errors, 0);
+    }
+
+    #[test]
+    fn dra_beats_tra_at_every_corner() {
+        for v in TABLE3_CORNERS {
+            let r = run_montecarlo(v, 4000, 7);
+            assert!(
+                r.dra_pct() <= r.tra_pct(),
+                "±{v}: DRA {:.2}% vs TRA {:.2}%",
+                r.dra_pct(),
+                r.tra_pct()
+            );
+        }
+    }
+
+    #[test]
+    fn dra_clean_at_ten_percent() {
+        let r = run_montecarlo(0.10, P::MC_TRIALS, 11);
+        assert!(r.dra_pct() < 0.05, "{:.3}%", r.dra_pct());
+    }
+
+    #[test]
+    fn error_rates_monotone_in_variation() {
+        let mut last = (0.0, 0.0);
+        for v in TABLE3_CORNERS {
+            let r = run_montecarlo(v, 6000, 13);
+            assert!(r.dra_pct() >= last.0 - 0.3, "DRA not monotone at ±{v}");
+            assert!(r.tra_pct() >= last.1 - 0.3, "TRA not monotone at ±{v}");
+            last = (r.dra_pct(), r.tra_pct());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run_montecarlo(0.2, 500, 42);
+        let b = run_montecarlo(0.2, 500, 42);
+        assert_eq!(a.dra_errors, b.dra_errors);
+        assert_eq!(a.tra_errors, b.tra_errors);
+    }
+}

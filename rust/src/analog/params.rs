@@ -1,0 +1,103 @@
+//! Physical constants — mirror of `python/compile/params.py` (see there for
+//! the derivation of each value and the margin geometry discussion).
+
+pub const VDD: f64 = 1.2;
+pub const VS_LOW: f64 = VDD / 4.0;
+pub const VS_HIGH: f64 = 3.0 * VDD / 4.0;
+pub const VSA: f64 = VDD / 2.0;
+
+pub const CP_RATIO: f64 = 0.6;
+pub const CB_RATIO: f64 = 3.0;
+
+pub const SIGMA_FRACTION: f64 = 1.0 / 3.0;
+pub const NOISE_LIN: f64 = 0.05;
+pub const NOISE_QUAD: f64 = 2.5;
+
+pub const MC_TRIALS: usize = 10_000;
+
+pub const DT_NS: f64 = 0.05;
+pub const T_PRECHARGE_NS: f64 = 10.0;
+pub const T_SHARE_NS: f64 = 10.0;
+pub const T_SENSE_NS: f64 = 40.0;
+pub const TAU_SHARE_NS: f64 = 1.5;
+pub const TAU_SENSE_NS: f64 = 3.0;
+pub const TAU_CELL_NS: f64 = 4.0;
+
+pub fn transient_steps() -> usize {
+    ((T_PRECHARGE_NS + T_SHARE_NS + T_SENSE_NS) / DT_NS).round() as usize
+}
+
+/// σ of the additive sense-node noise at variation corner ±`variation`.
+pub fn noise_sigma(variation: f64) -> f64 {
+    (NOISE_LIN + NOISE_QUAD * variation) * variation
+}
+
+/// Parse the `# vdd=... cp_ratio=...` header of artifacts/manifest.txt and
+/// confirm the Python constants match this mirror. Returns the mismatched
+/// keys (empty = consistent).
+pub fn check_manifest(manifest_text: &str) -> Vec<String> {
+    let mut mismatches = Vec::new();
+    let expect = [
+        ("vdd", VDD),
+        ("cp_ratio", CP_RATIO),
+        ("cb_ratio", CB_RATIO),
+        ("noise_lin", NOISE_LIN),
+        ("noise_quad", NOISE_QUAD),
+        ("trials", MC_TRIALS as f64),
+        ("transient_steps", transient_steps() as f64),
+        ("dt_ns", DT_NS),
+    ];
+    let header = manifest_text
+        .lines()
+        .find(|l| l.starts_with('#') && l.contains("vdd="))
+        .unwrap_or("");
+    for (key, want) in expect {
+        let found = header.split_whitespace().find_map(|tok| {
+            tok.strip_prefix(&format!("{key}="))
+                .and_then(|v| v.parse::<f64>().ok())
+        });
+        match found {
+            Some(v) if (v - want).abs() < 1e-9 => {}
+            Some(v) => mismatches.push(format!("{key}: rust={want} python={v}")),
+            None => mismatches.push(format!("{key}: missing from manifest")),
+        }
+    }
+    mismatches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_bracket_midlevel() {
+        assert!(VS_LOW < VDD / 2.0 && VDD / 2.0 < VS_HIGH);
+    }
+
+    #[test]
+    fn noise_grows_superlinearly() {
+        assert!(noise_sigma(0.30) > 2.0 * noise_sigma(0.15));
+        assert_eq!(noise_sigma(0.0), 0.0);
+    }
+
+    #[test]
+    fn manifest_check_detects_good_and_bad() {
+        let good = format!(
+            "# DRIM manifest\n# vdd={VDD} cp_ratio={CP_RATIO} cb_ratio={CB_RATIO} \
+             noise_lin={NOISE_LIN} noise_quad={NOISE_QUAD} trials={MC_TRIALS} \
+             transient_steps={} dt_ns={DT_NS}\n",
+            transient_steps()
+        );
+        assert!(check_manifest(&good).is_empty());
+        let bad = good.replace("vdd=1.2", "vdd=1.0");
+        assert_eq!(check_manifest(&bad).len(), 1);
+        assert!(check_manifest("")
+            .iter()
+            .all(|m| m.contains("missing")));
+    }
+
+    #[test]
+    fn steps_count() {
+        assert_eq!(transient_steps(), 1200);
+    }
+}

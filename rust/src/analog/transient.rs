@@ -1,0 +1,100 @@
+//! Fig. 6 transient waveforms — Rust mirror of
+//! `python/compile/kernels/transient.py` (same forward-Euler RC network,
+//! same constants). The JAX artifact is the reference; this mirror exists
+//! so benches and the CLI work without the PJRT runtime, and the two are
+//! compared point-wise in `it_runtime_golden` (they must agree to float
+//! tolerance since the integration scheme is identical).
+
+use super::params as P;
+
+/// Per-step sample: (BL, BL̄, Vcap-Di, Vcap-Dj).
+pub type Sample = [f64; 4];
+
+/// Integrate the DRA transient for one input case.
+pub fn waveform(di: bool, dj: bool) -> Vec<Sample> {
+    let steps = P::transient_steps();
+    let p_end = (P::T_PRECHARGE_NS / P::DT_NS).round() as usize;
+    let s_end = ((P::T_PRECHARGE_NS + P::T_SHARE_NS) / P::DT_NS).round() as usize;
+
+    let rail = if di == dj { P::VDD } else { 0.0 };
+    let a_share = P::DT_NS / P::TAU_SHARE_NS;
+    let a_sense = P::DT_NS / P::TAU_SENSE_NS;
+    let a_cell = P::DT_NS / P::TAU_CELL_NS;
+
+    let mut v_bl = P::VDD / 2.0;
+    let mut v_blb = P::VDD / 2.0;
+    let mut v_ci = if di { P::VDD } else { 0.0 };
+    let mut v_cj = if dj { P::VDD } else { 0.0 };
+
+    let csum = 2.0 + P::CP_RATIO;
+    let mut out = Vec::with_capacity(steps);
+    for t in 0..steps {
+        if t >= s_end {
+            // S.A.S.: regenerate BL to the XNOR rail, restore cells
+            let bl_prev = v_bl;
+            v_bl += a_sense * (rail - v_bl);
+            v_blb += a_sense * ((P::VDD - rail) - v_blb);
+            v_ci += a_cell * (bl_prev - v_ci);
+            v_cj += a_cell * (bl_prev - v_cj);
+        } else if t >= p_end {
+            // C.S.S.: relax toward the charge-sharing equilibrium
+            let veq = (v_ci + v_cj + P::CP_RATIO * v_bl) / csum;
+            v_bl += a_share * (veq - v_bl);
+            v_ci += a_share * (veq - v_ci);
+            v_cj += a_share * (veq - v_cj);
+        }
+        out.push([v_bl, v_blb, v_ci, v_cj]);
+    }
+    out
+}
+
+/// All four Fig. 6 input cases: 00, 01, 10, 11.
+pub fn all_cases() -> [(bool, bool, Vec<Sample>); 4] {
+    [(false, false), (false, true), (true, false), (true, true)]
+        .map(|(di, dj)| (di, dj, waveform(di, dj)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reaches_xnor_rail() {
+        for (di, dj, w) in all_cases() {
+            let last = w.last().unwrap();
+            let want = if di == dj { P::VDD } else { 0.0 };
+            assert!((last[0] - want).abs() < 0.01, "BL case {di}{dj}");
+            assert!((last[1] - (P::VDD - want)).abs() < 0.01, "BL̄");
+            assert!((last[2] - want).abs() < 0.05, "Vcap-Di restored");
+            assert!((last[3] - want).abs() < 0.05, "Vcap-Dj restored");
+        }
+    }
+
+    #[test]
+    fn precharge_phase_is_flat() {
+        let w = waveform(true, false);
+        let p_end = (P::T_PRECHARGE_NS / P::DT_NS) as usize;
+        for s in &w[..p_end - 1] {
+            assert!((s[0] - P::VDD / 2.0).abs() < 1e-12);
+            assert!((s[2] - P::VDD).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn charge_share_hits_paper_equation() {
+        // end of C.S.S.: V ≈ n·Vdd/C with the parasitic term (params.py)
+        let w = waveform(true, false); // n = 1
+        let s_end = ((P::T_PRECHARGE_NS + P::T_SHARE_NS) / P::DT_NS) as usize;
+        let veq = (P::VDD + P::CP_RATIO * P::VDD / 2.0) / (2.0 + P::CP_RATIO);
+        assert!(
+            (w[s_end - 1][0] - veq).abs() < 0.02,
+            "{} vs {veq}",
+            w[s_end - 1][0]
+        );
+    }
+
+    #[test]
+    fn sample_count_matches_params() {
+        assert_eq!(waveform(false, false).len(), P::transient_steps());
+    }
+}

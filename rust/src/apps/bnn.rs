@@ -1,0 +1,175 @@
+//! Binarized-neural-network inference on DRIM — the DNN acceleration
+//! use-case the paper inherits from DRISA [3] / Dracc [21]: a binary dense
+//! layer is exactly `popcount(XNOR(weights, activations))`, i.e. the
+//! paper's headline bulk operation.
+//!
+//! All XNOR compute runs in-memory through the service (one batched
+//! request per layer: every neuron's weight row against the broadcast
+//! activation vector); the popcount-and-threshold binarization is the
+//! cheap host-side reduction, as in the DRISA usage model.
+
+use crate::coordinator::{BulkRequest, DrimService, Payload};
+use crate::isa::program::BulkOp;
+use crate::util::bitrow::BitRow;
+use crate::util::rng::Rng;
+
+/// One binary dense layer: `out` neurons × `inp` binary inputs.
+#[derive(Clone, Debug)]
+pub struct BinaryLayer {
+    pub inp: usize,
+    pub out: usize,
+    /// weight matrix, one BitRow of `inp` bits per output neuron
+    pub weights: Vec<BitRow>,
+    /// activation threshold (neuron fires when matches ≥ threshold);
+    /// the canonical BNN sign() corresponds to `inp / 2`
+    pub threshold: usize,
+}
+
+impl BinaryLayer {
+    pub fn random(inp: usize, out: usize, rng: &mut Rng) -> Self {
+        BinaryLayer {
+            inp,
+            out,
+            weights: (0..out).map(|_| BitRow::random(inp, rng)).collect(),
+            threshold: inp / 2,
+        }
+    }
+
+    /// Forward pass for one binary input vector.
+    pub fn forward(&self, service: &DrimService, x: &BitRow) -> BitRow {
+        assert_eq!(x.len(), self.inp);
+        // batch all neurons into one request: weight rows concatenated vs
+        // the activation vector broadcast per neuron
+        let mut w_cat = BitRow::zeros(self.out * self.inp);
+        let mut x_cat = BitRow::zeros(self.out * self.inp);
+        for (j, w) in self.weights.iter().enumerate() {
+            w_cat.copy_bits_from(w, 0, j * self.inp, self.inp);
+            x_cat.copy_bits_from(x, 0, j * self.inp, self.inp);
+        }
+        let resp = service.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![w_cat, x_cat]));
+        let xnor = match resp.result {
+            Payload::Bits(b) => b,
+            _ => unreachable!(),
+        };
+        // binarize: popcount per neuron segment against the threshold
+        let mut y = BitRow::zeros(self.out);
+        let mut seg = BitRow::zeros(self.inp);
+        for j in 0..self.out {
+            seg.copy_bits_from(&xnor, j * self.inp, 0, self.inp);
+            y.set(j, seg.popcount() >= self.threshold);
+        }
+        y
+    }
+
+    /// Host reference (for tests).
+    pub fn forward_host(&self, x: &BitRow) -> BitRow {
+        let mut y = BitRow::zeros(self.out);
+        for (j, w) in self.weights.iter().enumerate() {
+            let matches = (0..self.inp).filter(|&i| w.get(i) == x.get(i)).count();
+            y.set(j, matches >= self.threshold);
+        }
+        y
+    }
+}
+
+/// A stack of binary layers (a BNN MLP).
+#[derive(Clone, Debug)]
+pub struct BinaryMlp {
+    pub layers: Vec<BinaryLayer>,
+}
+
+impl BinaryMlp {
+    pub fn random(dims: &[usize], rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2);
+        BinaryMlp {
+            layers: dims
+                .windows(2)
+                .map(|w| BinaryLayer::random(w[0], w[1], rng))
+                .collect(),
+        }
+    }
+
+    pub fn forward(&self, service: &DrimService, x: &BitRow) -> BitRow {
+        let mut a = x.clone();
+        for l in &self.layers {
+            a = l.forward(service, &a);
+        }
+        a
+    }
+
+    pub fn forward_host(&self, x: &BitRow) -> BitRow {
+        let mut a = x.clone();
+        for l in &self.layers {
+            a = l.forward_host(&a);
+        }
+        a
+    }
+
+    /// Classify: index of the first set output bit, or argmax-like pick.
+    pub fn classify(&self, service: &DrimService, x: &BitRow) -> usize {
+        let y = self.forward(service, x);
+        (0..y.len()).find(|&i| y.get(i)).unwrap_or(0)
+    }
+
+    /// Total XNOR bit-operations per forward pass (for throughput math).
+    pub fn ops_per_inference(&self) -> usize {
+        self.layers.iter().map(|l| l.inp * l.out).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ServiceConfig;
+
+    fn service() -> DrimService {
+        DrimService::new(ServiceConfig::tiny())
+    }
+
+    #[test]
+    fn layer_matches_host_reference() {
+        let mut rng = Rng::new(1);
+        let s = service();
+        let l = BinaryLayer::random(64, 16, &mut rng);
+        for _ in 0..5 {
+            let x = BitRow::random(64, &mut rng);
+            assert_eq!(l.forward(&s, &x), l.forward_host(&x));
+        }
+    }
+
+    #[test]
+    fn mlp_matches_host_reference() {
+        let mut rng = Rng::new(2);
+        let s = service();
+        let net = BinaryMlp::random(&[32, 24, 8], &mut rng);
+        for _ in 0..3 {
+            let x = BitRow::random(32, &mut rng);
+            assert_eq!(net.forward(&s, &x), net.forward_host(&x));
+        }
+    }
+
+    #[test]
+    fn perfect_match_neuron_fires() {
+        let mut rng = Rng::new(3);
+        let s = service();
+        let mut l = BinaryLayer::random(40, 4, &mut rng);
+        l.threshold = 40; // only exact weight match fires
+        let x = l.weights[2].clone();
+        let y = l.forward(&s, &x);
+        assert!(y.get(2));
+        // a far-away pattern must not fire neuron 2
+        let mut far = x.clone();
+        for i in 0..30 {
+            let v = far.get(i);
+            far.set(i, !v);
+        }
+        assert!(!l.forward(&s, &far).get(2));
+    }
+
+    #[test]
+    fn ops_accounting() {
+        let mut rng = Rng::new(4);
+        let net = BinaryMlp::random(&[128, 64, 10], &mut rng);
+        assert_eq!(net.ops_per_inference(), 128 * 64 + 64 * 10);
+    }
+}

@@ -1,0 +1,145 @@
+//! DNA short-read matching via in-memory XNOR + popcount.
+//!
+//! Encoding: 2 bits per base (A=00, C=01, G=10, T=11). A read matches a
+//! reference window when `XNOR(read, window)` is all-ones; Hamming
+//! similarity = popcount of the XNOR (paper §1: "applications such as DNA
+//! alignment" are XNOR-bound). The XNOR runs in DRIM through the service;
+//! the final popcount/threshold is the cheap host-side reduction, as in the
+//! paper's usage model.
+
+use crate::coordinator::{BulkRequest, DrimService, Payload};
+use crate::isa::program::BulkOp;
+use crate::util::bitrow::BitRow;
+use crate::util::rng::Rng;
+
+pub const BASES: [char; 4] = ['A', 'C', 'G', 'T'];
+
+/// 2-bit-encode a DNA string.
+pub fn encode(seq: &str) -> BitRow {
+    let mut row = BitRow::zeros(seq.len() * 2);
+    for (i, ch) in seq.chars().enumerate() {
+        let code = match ch {
+            'A' | 'a' => 0u8,
+            'C' | 'c' => 1,
+            'G' | 'g' => 2,
+            'T' | 't' => 3,
+            _ => panic!("not a base: {ch}"),
+        };
+        row.set(2 * i, code & 1 == 1);
+        row.set(2 * i + 1, code & 2 == 2);
+    }
+    row
+}
+
+/// Random genome of `n` bases.
+pub fn random_genome(n: usize, rng: &mut Rng) -> String {
+    (0..n).map(|_| BASES[rng.below(4) as usize]).collect()
+}
+
+/// One alignment hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub position: usize,
+    /// matching bases (read length = max)
+    pub score: usize,
+}
+
+/// Align `read` against every window of `genome`, batched through DRIM:
+/// all windows are concatenated into one bulk XNOR2 request (one row chunk
+/// per window batch), then scored by popcount. Returns hits with at least
+/// `min_matches` matching bases.
+pub fn align(
+    service: &DrimService,
+    genome: &str,
+    read: &str,
+    min_matches: usize,
+) -> Vec<Hit> {
+    assert!(read.len() <= genome.len());
+    let w = read.len() * 2;
+    let n_windows = genome.len() - read.len() + 1;
+    let read_bits = encode(read);
+    let genome_bits = encode(genome);
+
+    // big batched payload: window i occupies bits [i*w, (i+1)*w)
+    let mut windows = BitRow::zeros(n_windows * w);
+    let mut reads = BitRow::zeros(n_windows * w);
+    for i in 0..n_windows {
+        for b in 0..w {
+            windows.set(i * w + b, genome_bits.get(i * 2 + b));
+            reads.set(i * w + b, read_bits.get(b));
+        }
+    }
+    let resp = service.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![reads, windows]));
+    let xnor = match resp.result {
+        Payload::Bits(b) => b,
+        _ => unreachable!(),
+    };
+
+    let mut hits = Vec::new();
+    for i in 0..n_windows {
+        // a base matches iff *both* of its bits match
+        let mut score = 0;
+        for base in 0..read.len() {
+            if xnor.get(i * w + 2 * base) && xnor.get(i * w + 2 * base + 1) {
+                score += 1;
+            }
+        }
+        if score >= min_matches {
+            hits.push(Hit { position: i, score });
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ServiceConfig;
+
+    fn service() -> DrimService {
+        DrimService::new(ServiceConfig::tiny())
+    }
+
+    #[test]
+    fn encode_roundtrip_bits() {
+        let r = encode("ACGT");
+        // A=00 C=01(bit0) G=10(bit1) T=11
+        assert!(!r.get(0) && !r.get(1));
+        assert!(r.get(2) && !r.get(3));
+        assert!(!r.get(4) && r.get(5));
+        assert!(r.get(6) && r.get(7));
+    }
+
+    #[test]
+    fn exact_match_found() {
+        let s = service();
+        let genome = "ACGTACGGTTACGATCGA";
+        let read = "GGTTAC";
+        let hits = align(&s, genome, read, read.len());
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].position, genome.find(read).unwrap());
+        assert_eq!(hits[0].score, read.len());
+    }
+
+    #[test]
+    fn approximate_match_scores() {
+        let s = service();
+        let genome = "AAAAAAAAAA";
+        let read = "AAAT"; // 3 of 4 bases match everywhere
+        let hits = align(&s, genome, read, 3);
+        assert_eq!(hits.len(), genome.len() - read.len() + 1);
+        assert!(hits.iter().all(|h| h.score == 3));
+        assert!(align(&s, genome, read, 4).is_empty());
+    }
+
+    #[test]
+    fn random_genome_planted_read() {
+        let mut rng = Rng::new(42);
+        let s = service();
+        let mut genome = random_genome(300, &mut rng);
+        let read = "TTGACGTAGCAT";
+        genome.replace_range(100..100 + read.len(), read);
+        let hits = align(&s, &genome, read, read.len());
+        assert!(hits.iter().any(|h| h.position == 100));
+    }
+}

@@ -1,0 +1,11 @@
+//! Library-level applications — the workloads the paper's introduction
+//! motivates for X(N)OR-heavy PIM: DNA sequence alignment and data
+//! encryption, plus bit-serial vector arithmetic.
+//!
+//! Each app is written against the public `coordinator::DrimService` API
+//! only (no reaching into the array), exactly as a downstream user would.
+
+pub mod bnn;
+pub mod cipher;
+pub mod dna;
+pub mod vecadd;

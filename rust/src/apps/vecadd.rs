@@ -1,0 +1,95 @@
+//! Bit-serial vector arithmetic on 32-bit elements (paper §3.1 In-Memory
+//! Adder) plus a fused multiply-by-small-constant built from shifts+adds —
+//! demonstrating composition of the service's add primitive.
+
+use crate::coordinator::{BulkRequest, DrimService, Payload};
+
+/// `a + b` element-wise inside DRIM.
+pub fn add(service: &DrimService, a: &[u32], b: &[u32]) -> Vec<u32> {
+    let resp = service.run(BulkRequest::add32(a.to_vec(), b.to_vec()));
+    match resp.result {
+        Payload::U32(v) => v,
+        _ => unreachable!(),
+    }
+}
+
+/// `a - b` element-wise inside DRIM.
+pub fn sub(service: &DrimService, a: &[u32], b: &[u32]) -> Vec<u32> {
+    let resp = service.run(BulkRequest::sub32(a.to_vec(), b.to_vec()));
+    match resp.result {
+        Payload::U32(v) => v,
+        _ => unreachable!(),
+    }
+}
+
+/// `a * k` for small constants via shift-and-add (each shift is free —
+/// it is a host-side relabeling of bit-planes; adds run in memory).
+pub fn mul_const(service: &DrimService, a: &[u32], k: u32) -> Vec<u32> {
+    let mut acc = vec![0u32; a.len()];
+    let mut shifted: Vec<u32> = a.to_vec();
+    let mut kk = k;
+    while kk != 0 {
+        if kk & 1 == 1 {
+            acc = add(service, &acc, &shifted);
+        }
+        shifted = shifted.iter().map(|&x| x << 1).collect();
+        kk >>= 1;
+    }
+    acc
+}
+
+/// Sum-reduce a vector by repeated halving (log₂ n in-memory adds).
+pub fn reduce_sum(service: &DrimService, v: &[u32]) -> u32 {
+    let mut cur = v.to_vec();
+    while cur.len() > 1 {
+        let half = cur.len().div_ceil(2);
+        let (lo, hi) = cur.split_at(half);
+        let mut hi = hi.to_vec();
+        hi.resize(half, 0);
+        cur = add(service, &lo.to_vec(), &hi);
+    }
+    cur.first().copied().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::ServiceConfig;
+    use crate::coordinator::DrimService;
+    use crate::util::rng::Rng;
+
+    fn service() -> DrimService {
+        DrimService::new(ServiceConfig::tiny())
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let s = service();
+        let mut rng = Rng::new(5);
+        let a: Vec<u32> = (0..300).map(|_| rng.next_u64() as u32).collect();
+        let b: Vec<u32> = (0..300).map(|_| rng.next_u64() as u32).collect();
+        let sum = add(&s, &a, &b);
+        let back = sub(&s, &sum, &b);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn mul_const_matches_host() {
+        let s = service();
+        let a: Vec<u32> = (0..64).map(|i| i * 977).collect();
+        for k in [0u32, 1, 3, 10] {
+            let got = mul_const(&s, &a, k);
+            let want: Vec<u32> = a.iter().map(|&x| x.wrapping_mul(k)).collect();
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn reduce_sum_matches_host() {
+        let s = service();
+        let v: Vec<u32> = (1..=100).collect();
+        assert_eq!(reduce_sum(&s, &v), 5050);
+        assert_eq!(reduce_sum(&s, &[]), 0);
+        assert_eq!(reduce_sum(&s, &[7]), 7);
+    }
+}

@@ -1,0 +1,211 @@
+//! Row allocator: places operand/result rows so that every computation's
+//! rows are co-located in one sub-array (paper §4 "Memory Layout and
+//! Interleaving" — DRIM maximizes spatial locality instead of channel
+//! interleaving; operands of an AAP must share bit-lines).
+
+use crate::dram::geometry::DramGeometry;
+use crate::dram::command::RowId;
+use crate::isa::program::{FIRST_FREE_DATA_ROW, LAST_FREE_DATA_ROW};
+
+/// Rows 496/497 are controller scratch (carry chain), 498/499 control rows.
+pub const ALLOCATABLE_ROWS: u16 = 496;
+
+/// A group of co-located row allocations inside one sub-array.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowGroup {
+    pub bank: usize,
+    pub subarray: usize,
+    pub rows: Vec<RowId>,
+}
+
+#[derive(Clone, Debug)]
+struct SubFree {
+    free: Vec<u16>, // stack of free data-row indices
+}
+
+/// Free-list allocator over every (bank, sub-array) in the device.
+pub struct RowAllocator {
+    geometry: DramGeometry,
+    state: Vec<SubFree>, // bank-major
+    /// round-robin cursor so groups spread across sub-arrays (parallelism)
+    cursor: usize,
+}
+
+impl RowAllocator {
+    pub fn new(geometry: DramGeometry) -> Self {
+        let per = geometry.banks * geometry.subarrays_per_bank;
+        let fresh = SubFree {
+            free: (FIRST_FREE_DATA_ROW..ALLOCATABLE_ROWS.min(LAST_FREE_DATA_ROW))
+                .rev()
+                .collect(),
+        };
+        RowAllocator {
+            geometry,
+            state: vec![fresh; per],
+            cursor: 0,
+        }
+    }
+
+    fn idx(&self, bank: usize, sa: usize) -> usize {
+        bank * self.geometry.subarrays_per_bank + sa
+    }
+
+    pub fn free_rows_in(&self, bank: usize, sa: usize) -> usize {
+        self.state[self.idx(bank, sa)].free.len()
+    }
+
+    /// Allocate `n` rows together in one sub-array, round-robin across the
+    /// device. Returns None when no sub-array has `n` free rows.
+    pub fn alloc_group(&mut self, n: usize) -> Option<RowGroup> {
+        let total = self.state.len();
+        for probe in 0..total {
+            let i = (self.cursor + probe) % total;
+            if self.state[i].free.len() >= n {
+                let rows: Vec<RowId> = (0..n)
+                    .map(|_| RowId::Data(self.state[i].free.pop().unwrap()))
+                    .collect();
+                self.cursor = (i + 1) % total;
+                let bank = i / self.geometry.subarrays_per_bank;
+                let subarray = i % self.geometry.subarrays_per_bank;
+                return Some(RowGroup {
+                    bank,
+                    subarray,
+                    rows,
+                });
+            }
+        }
+        None
+    }
+
+    /// Allocate `n` rows in a *specific* sub-array (e.g. to co-locate with
+    /// existing operands).
+    pub fn alloc_in(&mut self, bank: usize, sa: usize, n: usize) -> Option<Vec<RowId>> {
+        let i = self.idx(bank, sa);
+        if self.state[i].free.len() < n {
+            return None;
+        }
+        Some(
+            (0..n)
+                .map(|_| RowId::Data(self.state[i].free.pop().unwrap()))
+                .collect(),
+        )
+    }
+
+    /// Return rows to the free list.
+    pub fn free_group(&mut self, g: &RowGroup) {
+        let i = self.idx(g.bank, g.subarray);
+        for r in &g.rows {
+            if let RowId::Data(d) = r {
+                debug_assert!(
+                    !self.state[i].free.contains(d),
+                    "double free of {r} in bank {} sa {}",
+                    g.bank,
+                    g.subarray
+                );
+                self.state[i].free.push(*d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn groups_are_colocated_and_disjoint() {
+        let mut a = RowAllocator::new(DramGeometry::tiny());
+        let g1 = a.alloc_group(10).unwrap();
+        let g2 = a.alloc_group(10).unwrap();
+        assert_eq!(g1.rows.len(), 10);
+        // round-robin: second group goes to a different sub-array
+        assert_ne!((g1.bank, g1.subarray), (g2.bank, g2.subarray));
+        let mut all: Vec<_> = g1.rows.clone();
+        all.extend(g2.rows.clone());
+        // distinctness within each sub-array group
+        let mut r1 = g1.rows.clone();
+        r1.sort();
+        r1.dedup();
+        assert_eq!(r1.len(), 10);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_then_free_restores() {
+        let g = DramGeometry::tiny();
+        let cap = g.banks * g.subarrays_per_bank * ALLOCATABLE_ROWS as usize;
+        let mut a = RowAllocator::new(g);
+        let mut groups = Vec::new();
+        while let Some(grp) = a.alloc_group(100) {
+            groups.push(grp);
+        }
+        assert!(groups.len() * 100 <= cap);
+        assert!(a.alloc_group(100).is_none());
+        for g in &groups {
+            a.free_group(g);
+        }
+        assert!(a.alloc_group(100).is_some());
+    }
+
+    #[test]
+    fn alloc_in_respects_subarray() {
+        let mut a = RowAllocator::new(DramGeometry::tiny());
+        let rows = a.alloc_in(1, 1, 5).unwrap();
+        assert_eq!(rows.len(), 5);
+        assert_eq!(a.free_rows_in(1, 1), ALLOCATABLE_ROWS as usize - 5);
+        assert_eq!(a.free_rows_in(0, 0), ALLOCATABLE_ROWS as usize);
+    }
+
+    #[test]
+    fn never_hands_out_reserved_rows() {
+        prop::check("no_reserved_rows", 50, |rng| {
+            let mut a = RowAllocator::new(DramGeometry::tiny());
+            let n = 1 + rng.below(64) as usize;
+            for _ in 0..8 {
+                if let Some(g) = a.alloc_group(n) {
+                    for r in &g.rows {
+                        if let RowId::Data(d) = r {
+                            if *d >= ALLOCATABLE_ROWS {
+                                return Err(format!("reserved row {r} allocated"));
+                            }
+                        } else {
+                            return Err(format!("non-data row {r} allocated"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_row_allocated_twice_property() {
+        prop::check("no_double_alloc", 30, |rng| {
+            let mut a = RowAllocator::new(DramGeometry::tiny());
+            let mut live: std::collections::HashSet<(usize, usize, RowId)> =
+                Default::default();
+            let mut groups = Vec::new();
+            for _ in 0..50 {
+                if rng.bool() || groups.is_empty() {
+                    let n = 1 + rng.below(20) as usize;
+                    if let Some(g) = a.alloc_group(n) {
+                        for r in &g.rows {
+                            if !live.insert((g.bank, g.subarray, *r)) {
+                                return Err(format!("row {r} double-allocated"));
+                            }
+                        }
+                        groups.push(g);
+                    }
+                } else {
+                    let i = rng.below(groups.len() as u64) as usize;
+                    let g = groups.swap_remove(i);
+                    for r in &g.rows {
+                        live.remove(&(g.bank, g.subarray, *r));
+                    }
+                    a.free_group(&g);
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Enable-signal generation — Table 1, as the controller drives it.
+//!
+//! The ctrl generates the three SA enable bits from the decoded AAP kind
+//! with 6-transistor MUX units (accounted in `subarray::area`). This module
+//! is the single source of truth for Table 1; the CLI prints it and tests
+//! assert it against `subarray::sense`.
+
+use crate::dram::command::AapKind;
+use crate::subarray::sense::{EnableBits, SenseMode};
+
+/// SA mode for each AAP kind during the *source* activation phase.
+pub fn sense_mode(kind: AapKind) -> SenseMode {
+    match kind {
+        // W/R, Copy (incl. NOT through DCC), TRA → conventional path
+        AapKind::Copy | AapKind::DoubleCopy | AapKind::Tra => SenseMode::Conventional,
+        AapKind::Dra => SenseMode::Dra,
+    }
+}
+
+pub fn enable_bits(kind: AapKind) -> EnableBits {
+    sense_mode(kind).enables()
+}
+
+/// Render Table 1 exactly as the paper prints it.
+pub fn table1() -> String {
+    let c = SenseMode::Conventional.enables();
+    let d = SenseMode::Dra.enables();
+    let b = |x: bool| if x { "1" } else { "0" };
+    format!(
+        "In-memory operations      | EN_M | EN_x | EN_C\n\
+         --------------------------+------+------+-----\n\
+         W/R - Copy - NOT - TRA    |  {}   |  {}   |  {}\n\
+         DRA                       |  {}   |  {}   |  {}\n",
+        b(c.en_m),
+        b(c.en_x),
+        b(c.en_c),
+        b(d.en_m),
+        b(d.en_x),
+        b(d.en_c),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enables_table() {
+        // Table 1: W/R-Copy-NOT-TRA → (1,1,0); DRA → (0,1,1)
+        let c = enable_bits(AapKind::Copy);
+        assert_eq!((c.en_m, c.en_x, c.en_c), (true, true, false));
+        let t = enable_bits(AapKind::Tra);
+        assert_eq!((t.en_m, t.en_x, t.en_c), (true, true, false));
+        let d = enable_bits(AapKind::Dra);
+        assert_eq!((d.en_m, d.en_x, d.en_c), (false, true, true));
+    }
+
+    #[test]
+    fn table1_renders_both_rows() {
+        let t = table1();
+        assert!(t.contains("W/R - Copy - NOT - TRA    |  1   |  1   |  0"));
+        assert!(t.contains("DRA                       |  0   |  1   |  1"));
+    }
+}

@@ -1,0 +1,11 @@
+//! The DRIM controller (paper Fig. 3 "Ctrl"): decodes AAP programs into
+//! sub-array operations, drives the Table 1 enable signals, allocates data
+//! rows, and accounts cycles + energy.
+
+pub mod alloc;
+pub mod enables;
+pub mod exec;
+pub mod translate;
+
+pub use alloc::RowAllocator;
+pub use exec::{Controller, ExecStats};

@@ -1,0 +1,169 @@
+//! Virtual-address translation for DRIM instructions (paper §4 "Virtual
+//! Memory"): the memory controller intercepts instructions written to the
+//! DRIM instruction registers and translates their virtual row addresses
+//! to physical rows *before* issue — the near-memory-controller
+//! translation path the paper recommends over giving DRIM a page-table
+//! walker (the page table may span DIMMs; coherence on it is hard).
+//!
+//! The §4 constraint is enforced here: "some operations are appropriate
+//! only if the resulting physical addresses are within specific plane,
+//! e.g., within the same bank" — for AAP operands, the same *sub-array*
+//! (they must share bit-lines). Violations are reported, mirroring the
+//! compiler/OS contract the paper describes.
+
+use std::collections::BTreeMap;
+
+use crate::dram::geometry::{DramGeometry, PhysAddr};
+
+/// A virtual row number (one page = one DRAM row in this model).
+pub type VRow = u64;
+
+#[derive(Debug, PartialEq)]
+pub enum TranslateError {
+    Unmapped(VRow),
+    /// operands landed in different sub-arrays — illegal for one AAP
+    PlaneMismatch { a: PhysAddr, b: PhysAddr },
+}
+
+impl std::fmt::Display for TranslateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TranslateError::Unmapped(v) => write!(f, "virtual row {v} unmapped"),
+            TranslateError::PlaneMismatch { a, b } => write!(
+                f,
+                "operands map to different sub-arrays: {a:?} vs {b:?} \
+                 (the OS/compiler must co-locate AAP operands — paper §4)"
+            ),
+        }
+    }
+}
+
+/// Controller-resident page table: virtual row → physical row.
+#[derive(Debug, Default)]
+pub struct PageTable {
+    map: BTreeMap<VRow, PhysAddr>,
+}
+
+impl PageTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn map(&mut self, v: VRow, p: PhysAddr) {
+        self.map.insert(v, p);
+    }
+
+    pub fn unmap(&mut self, v: VRow) -> Option<PhysAddr> {
+        self.map.remove(&v)
+    }
+
+    pub fn translate(&self, v: VRow) -> Result<PhysAddr, TranslateError> {
+        self.map
+            .get(&v)
+            .copied()
+            .ok_or(TranslateError::Unmapped(v))
+    }
+
+    /// Translate the operand set of one DRIM instruction, enforcing the
+    /// same-sub-array plane constraint.
+    pub fn translate_operands(
+        &self,
+        vrows: &[VRow],
+    ) -> Result<Vec<PhysAddr>, TranslateError> {
+        let phys: Vec<PhysAddr> = vrows
+            .iter()
+            .map(|&v| self.translate(v))
+            .collect::<Result<_, _>>()?;
+        for w in phys.windows(2) {
+            if (w[0].bank, w[0].subarray) != (w[1].bank, w[1].subarray) {
+                return Err(TranslateError::PlaneMismatch { a: w[0], b: w[1] });
+            }
+        }
+        Ok(phys)
+    }
+
+    /// OS-side allocation helper implementing the paper's contract: map a
+    /// contiguous virtual range so all rows share one sub-array (returns
+    /// None if the range doesn't fit a sub-array's data space).
+    pub fn map_colocated(
+        &mut self,
+        g: &DramGeometry,
+        base: VRow,
+        rows: usize,
+        bank: usize,
+        subarray: usize,
+        first_row: usize,
+    ) -> Option<()> {
+        if first_row + rows > crate::controller::alloc::ALLOCATABLE_ROWS as usize {
+            return None;
+        }
+        debug_assert!(bank < g.banks && subarray < g.subarrays_per_bank);
+        for i in 0..rows {
+            self.map(
+                base + i as u64,
+                PhysAddr {
+                    bank,
+                    subarray,
+                    row: first_row + i,
+                },
+            );
+        }
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pa(bank: usize, subarray: usize, row: usize) -> PhysAddr {
+        PhysAddr {
+            bank,
+            subarray,
+            row,
+        }
+    }
+
+    #[test]
+    fn translate_roundtrip() {
+        let mut pt = PageTable::new();
+        pt.map(100, pa(1, 2, 3));
+        assert_eq!(pt.translate(100), Ok(pa(1, 2, 3)));
+        assert_eq!(pt.translate(101), Err(TranslateError::Unmapped(101)));
+        pt.unmap(100);
+        assert!(pt.translate(100).is_err());
+    }
+
+    #[test]
+    fn colocated_operands_pass_plane_check() {
+        let mut pt = PageTable::new();
+        pt.map(0, pa(0, 4, 10));
+        pt.map(1, pa(0, 4, 11));
+        pt.map(2, pa(0, 4, 12));
+        let phys = pt.translate_operands(&[0, 1, 2]).unwrap();
+        assert_eq!(phys.len(), 3);
+    }
+
+    #[test]
+    fn cross_subarray_operands_rejected() {
+        let mut pt = PageTable::new();
+        pt.map(0, pa(0, 4, 10));
+        pt.map(1, pa(0, 5, 10));
+        match pt.translate_operands(&[0, 1]) {
+            Err(TranslateError::PlaneMismatch { .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn map_colocated_respects_reserved_rows() {
+        let g = DramGeometry::tiny();
+        let mut pt = PageTable::new();
+        // fits
+        assert!(pt.map_colocated(&g, 0, 10, 0, 0, 0).is_some());
+        // would spill into scratch/control rows
+        assert!(pt.map_colocated(&g, 100, 10, 0, 0, 490).is_none());
+        let phys = pt.translate_operands(&[0, 5, 9]).unwrap();
+        assert!(phys.iter().all(|p| p.bank == 0 && p.subarray == 0));
+    }
+}

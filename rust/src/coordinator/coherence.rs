@@ -1,0 +1,143 @@
+//! Host-cache coherence protocol (paper §4 "Cache Coherence"): when DRIM
+//! updates memory in place, stale copies may live in host caches, and the
+//! host may hold dirty lines DRIM would read stale. The paper's chosen
+//! mechanism — "rely on the OS to unmap the physical pages accessible by
+//! DRIM from any process that can run while computing in DRIM" — is
+//! modelled here as an epoch/lease protocol the router consults before
+//! dispatching a request over a row range.
+
+use std::collections::BTreeMap;
+
+use crate::dram::geometry::PhysAddr;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RowState {
+    /// host may cache this row; DRIM must not touch it
+    HostOwned,
+    /// unmapped from host page tables; DRIM may read/write
+    DrimOwned,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum CoherenceError {
+    /// DRIM op targeted a row the host still owns
+    NotAcquired(PhysAddr),
+    /// host access to a row leased to DRIM
+    LeasedToDrim(PhysAddr),
+}
+
+/// Ownership tracker for the rows DRIM operates on. Rows default to
+/// HostOwned; `acquire` models the OS unmap + cache flush (writeback +
+/// invalidate) of the page, `release` returns it to the host.
+#[derive(Debug, Default)]
+pub struct CoherenceDirectory {
+    state: BTreeMap<PhysAddr, RowState>,
+    pub flushes: u64,
+}
+
+impl CoherenceDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn state(&self, row: PhysAddr) -> RowState {
+        *self.state.get(&row).unwrap_or(&RowState::HostOwned)
+    }
+
+    /// OS unmaps + flushes the row's lines; DRIM may now compute on it.
+    pub fn acquire(&mut self, row: PhysAddr) {
+        if self.state(row) == RowState::HostOwned {
+            self.flushes += 1; // writeback+invalidate of the page's lines
+        }
+        self.state.insert(row, RowState::DrimOwned);
+    }
+
+    pub fn acquire_all(&mut self, rows: &[PhysAddr]) {
+        for &r in rows {
+            self.acquire(r);
+        }
+    }
+
+    /// DRIM finished; page is remappable by the host.
+    pub fn release(&mut self, row: PhysAddr) {
+        self.state.insert(row, RowState::HostOwned);
+    }
+
+    /// Gate for DRIM-side access (the router calls this per chunk range).
+    pub fn check_drim_access(&self, rows: &[PhysAddr]) -> Result<(), CoherenceError> {
+        for &r in rows {
+            if self.state(r) != RowState::DrimOwned {
+                return Err(CoherenceError::NotAcquired(r));
+            }
+        }
+        Ok(())
+    }
+
+    /// Gate for host-side access while DRIM computes.
+    pub fn check_host_access(&self, row: PhysAddr) -> Result<(), CoherenceError> {
+        if self.state(row) == RowState::DrimOwned {
+            return Err(CoherenceError::LeasedToDrim(row));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pa(row: usize) -> PhysAddr {
+        PhysAddr {
+            bank: 0,
+            subarray: 0,
+            row,
+        }
+    }
+
+    #[test]
+    fn drim_access_requires_acquire() {
+        let mut d = CoherenceDirectory::new();
+        assert_eq!(
+            d.check_drim_access(&[pa(1)]),
+            Err(CoherenceError::NotAcquired(pa(1)))
+        );
+        d.acquire(pa(1));
+        assert_eq!(d.check_drim_access(&[pa(1)]), Ok(()));
+    }
+
+    #[test]
+    fn host_access_blocked_while_leased() {
+        let mut d = CoherenceDirectory::new();
+        d.acquire(pa(2));
+        assert_eq!(
+            d.check_host_access(pa(2)),
+            Err(CoherenceError::LeasedToDrim(pa(2)))
+        );
+        d.release(pa(2));
+        assert_eq!(d.check_host_access(pa(2)), Ok(()));
+    }
+
+    #[test]
+    fn acquire_is_idempotent_but_flushes_once() {
+        let mut d = CoherenceDirectory::new();
+        d.acquire(pa(3));
+        d.acquire(pa(3));
+        assert_eq!(d.flushes, 1);
+        d.release(pa(3));
+        d.acquire(pa(3));
+        assert_eq!(d.flushes, 2, "re-acquire after host ownership flushes again");
+    }
+
+    #[test]
+    fn bulk_acquire_release_cycle() {
+        let mut d = CoherenceDirectory::new();
+        let rows: Vec<PhysAddr> = (0..10).map(pa).collect();
+        d.acquire_all(&rows);
+        assert_eq!(d.check_drim_access(&rows), Ok(()));
+        assert_eq!(d.flushes, 10);
+        for r in &rows {
+            d.release(*r);
+        }
+        assert!(d.check_drim_access(&rows).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Service metrics: requests, bits, simulated vs wall time, utilization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub chunks: AtomicU64,
+    pub result_bits: AtomicU64,
+    pub aaps: AtomicU64,
+    /// simulated DRAM nanoseconds (batched wave time)
+    pub sim_ns: AtomicU64,
+    /// host nanoseconds spent in workers
+    pub wall_ns: AtomicU64,
+    latency: Mutex<Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, result_bits: u64, chunks: u64, aaps: u64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.result_bits.fetch_add(result_bits, Ordering::Relaxed);
+        self.chunks.fetch_add(chunks, Ordering::Relaxed);
+        self.aaps.fetch_add(aaps, Ordering::Relaxed);
+    }
+
+    pub fn record_sim_ns(&self, ns: f64) {
+        self.sim_ns.fetch_add(ns as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_wall_ns(&self, ns: u64) {
+        self.wall_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_ns(&self, ns: f64) {
+        self.latency.lock().unwrap().add(ns);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latency.lock().unwrap();
+        let sim_ns = self.sim_ns.load(Ordering::Relaxed);
+        let bits = self.result_bits.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+            result_bits: bits,
+            aaps: self.aaps.load(Ordering::Relaxed),
+            sim_ns,
+            wall_ns: self.wall_ns.load(Ordering::Relaxed),
+            mean_latency_ns: lat.mean(),
+            max_latency_ns: if lat.count() > 0 { lat.max() } else { 0.0 },
+            sim_throughput_bits_per_sec: if sim_ns > 0 {
+                bits as f64 / (sim_ns as f64 * 1e-9)
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub chunks: u64,
+    pub result_bits: u64,
+    pub aaps: u64,
+    pub sim_ns: u64,
+    pub wall_ns: u64,
+    pub mean_latency_ns: f64,
+    pub max_latency_ns: f64,
+    pub sim_throughput_bits_per_sec: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn report(&self) -> String {
+        use crate::util::stats::{fmt_ns, fmt_rate};
+        format!(
+            "requests: {}  chunks: {}  result bits: {}  AAPs: {}\n\
+             simulated time: {}  (throughput {}bit/s)\n\
+             host wall time: {}  mean sim latency: {}  max: {}",
+            self.requests,
+            self.chunks,
+            self.result_bits,
+            self.aaps,
+            fmt_ns(self.sim_ns as f64),
+            fmt_rate(self.sim_throughput_bits_per_sec),
+            fmt_ns(self.wall_ns as f64),
+            fmt_ns(self.mean_latency_ns),
+            fmt_ns(self.max_latency_ns),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(8192, 1, 3);
+        m.record_request(8192, 1, 3);
+        m.record_sim_ns(540.0);
+        m.record_latency_ns(270.0);
+        m.record_latency_ns(810.0);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.result_bits, 16384);
+        assert_eq!(s.aaps, 6);
+        assert!((s.mean_latency_ns - 540.0).abs() < 1e-9);
+        assert!(s.sim_throughput_bits_per_sec > 0.0);
+        assert!(s.report().contains("requests: 2"));
+    }
+
+    #[test]
+    fn empty_snapshot_is_sane() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.sim_throughput_bits_per_sec, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The DRIM coordinator: the serving layer that turns the raw array into a
+//! bulk-bit-wise accelerator service (the role a request router plays for a
+//! model server — cf. vllm-project/router).
+//!
+//! * [`request`] — the service vocabulary: bit-wise bulk requests and
+//!   32-bit element-wise adds, with arbitrary payload sizes.
+//! * [`router`]  — sharding: payloads are cut into row-sized chunks and
+//!   scheduled in *waves* across banks × active sub-arrays.
+//! * [`service`] — worker threads (each owning a slice of banks), dynamic
+//!   batching with a configurable policy, response reassembly.
+//! * [`metrics`] — throughput/latency/utilization counters (simulated DRAM
+//!   time and wall time are tracked separately).
+
+pub mod coherence;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{BulkRequest, BulkResponse, Payload};
+pub use router::{BatchPolicy, Router, ServiceConfig};
+pub use service::DrimService;

@@ -1,0 +1,115 @@
+//! Service request/response vocabulary.
+
+use crate::controller::ExecStats;
+use crate::isa::program::BulkOp;
+use crate::util::bitrow::BitRow;
+
+/// Request payload: either flat bit-vectors (bit-wise ops) or 32-bit
+/// element vectors (in-memory add/sub, processed bit-serially).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Bits(BitRow),
+    U32(Vec<u32>),
+}
+
+impl Payload {
+    pub fn bits(&self) -> usize {
+        match self {
+            Payload::Bits(b) => b.len(),
+            Payload::U32(v) => v.len() * 32,
+        }
+    }
+}
+
+/// One bulk in-memory operation over arbitrary-size payloads.
+#[derive(Clone, Debug)]
+pub struct BulkRequest {
+    pub op: BulkOp,
+    pub operands: Vec<Payload>,
+}
+
+impl BulkRequest {
+    /// Bit-wise request (`not`, `xnor2`, ..., `maj3`).
+    pub fn bitwise(op: BulkOp, operands: Vec<BitRow>) -> Self {
+        assert!(
+            !matches!(op, BulkOp::Add | BulkOp::Sub),
+            "use BulkRequest::add32/sub32"
+        );
+        assert_eq!(operands.len(), op.arity(), "{}", op.name());
+        let bits = operands[0].len();
+        assert!(operands.iter().all(|o| o.len() == bits));
+        BulkRequest {
+            op,
+            operands: operands.into_iter().map(Payload::Bits).collect(),
+        }
+    }
+
+    /// Element-wise 32-bit addition (bit-serial in the array).
+    pub fn add32(a: Vec<u32>, b: Vec<u32>) -> Self {
+        assert_eq!(a.len(), b.len());
+        BulkRequest {
+            op: BulkOp::Add,
+            operands: vec![Payload::U32(a), Payload::U32(b)],
+        }
+    }
+
+    /// Element-wise 32-bit subtraction.
+    pub fn sub32(a: Vec<u32>, b: Vec<u32>) -> Self {
+        assert_eq!(a.len(), b.len());
+        BulkRequest {
+            op: BulkOp::Sub,
+            operands: vec![Payload::U32(a), Payload::U32(b)],
+        }
+    }
+
+    pub fn payload_bits(&self) -> usize {
+        self.operands[0].bits()
+    }
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct BulkResponse {
+    pub id: u64,
+    pub result: Payload,
+    /// simulated DRAM cost (sums the per-chunk command streams)
+    pub stats: ExecStats,
+    /// simulated wall-clock of the *batched* execution (waves × seq time)
+    pub sim_latency_ns: f64,
+    /// host wall-clock spent simulating
+    pub wall_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitwise_request_checks_arity() {
+        let mut rng = Rng::new(1);
+        let a = BitRow::random(100, &mut rng);
+        let b = BitRow::random(100, &mut rng);
+        let r = BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]);
+        assert_eq!(r.payload_bits(), 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let a = BitRow::zeros(8);
+        BulkRequest::bitwise(BulkOp::Xnor2, vec![a]);
+    }
+
+    #[test]
+    #[should_panic(expected = "add32")]
+    fn add_via_bitwise_rejected() {
+        BulkRequest::bitwise(BulkOp::Add, vec![BitRow::zeros(8)]);
+    }
+
+    #[test]
+    fn add32_payload_bits() {
+        let r = BulkRequest::add32(vec![1, 2, 3], vec![4, 5, 6]);
+        assert_eq!(r.payload_bits(), 96);
+    }
+}

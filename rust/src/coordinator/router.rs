@@ -1,0 +1,211 @@
+//! Sharding and wave scheduling.
+//!
+//! A payload of `B` bits is cut into chunks of one sub-array row (`cols`
+//! bits). The device executes chunks in *waves*: one wave = every bank ×
+//! every active sub-array runs the op's AAP sequence once, in lock-step
+//! (command issue is pipelined across banks). Simulated batch latency is
+//! therefore `ceil(chunks / wave_slots) × seq_ns`.
+//!
+//! `BatchPolicy` is the knob the `ablate_batching` bench studies:
+//! * `Immediate` — each request is dispatched alone; a trailing partial
+//!   wave wastes its empty slots.
+//! * `Coalesce`  — chunks from queued requests are packed into shared
+//!   waves (the router's dynamic batching), recovering that utilization.
+
+use crate::dram::geometry::DramGeometry;
+use crate::isa::program::BulkOp;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BatchPolicy {
+    Immediate,
+    Coalesce,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub geometry: DramGeometry,
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            geometry: DramGeometry::default(),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            policy: BatchPolicy::Coalesce,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn tiny() -> Self {
+        ServiceConfig {
+            geometry: DramGeometry::tiny(),
+            workers: 2,
+            policy: BatchPolicy::Coalesce,
+        }
+    }
+}
+
+/// One schedulable chunk of a request (a single result row's worth).
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub req_id: u64,
+    pub chunk_idx: usize,
+    /// first bit of this chunk within the request payload
+    pub bit_offset: usize,
+    /// live bits in this chunk (≤ cols)
+    pub bits: usize,
+}
+
+/// Pure sharding/wave math (the part worth unit-testing exhaustively).
+pub struct Router {
+    pub cfg: ServiceConfig,
+}
+
+impl Router {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        Router { cfg }
+    }
+
+    /// Device-wide parallel row slots per wave.
+    pub fn wave_slots(&self) -> usize {
+        self.cfg.geometry.banks * self.cfg.geometry.active_subarrays
+    }
+
+    /// Cut a payload into row chunks.
+    pub fn shard(&self, req_id: u64, payload_bits: usize) -> Vec<Chunk> {
+        let cols = self.cfg.geometry.cols;
+        let n = payload_bits.div_ceil(cols);
+        (0..n)
+            .map(|i| Chunk {
+                req_id,
+                chunk_idx: i,
+                bit_offset: i * cols,
+                bits: cols.min(payload_bits - i * cols),
+            })
+            .collect()
+    }
+
+    /// Simulated latency of executing `chunks` row-operations of `op`,
+    /// given the batching policy. `queue` is the list of chunk counts of
+    /// the co-scheduled requests (Coalesce packs them together).
+    pub fn sim_latency_ns(&self, op: BulkOp, queue: &[usize]) -> f64 {
+        let seq = crate::platforms::pim::drim_r().seq_ns(op)
+            * if matches!(op, BulkOp::Add | BulkOp::Sub) {
+                32.0 // bit-serial over 32 planes
+            } else {
+                1.0
+            };
+        let slots = self.wave_slots() as f64;
+        let waves: f64 = match self.cfg.policy {
+            BatchPolicy::Immediate => queue
+                .iter()
+                .map(|&c| (c as f64 / slots).ceil())
+                .sum(),
+            BatchPolicy::Coalesce => {
+                (queue.iter().sum::<usize>() as f64 / slots).ceil()
+            }
+        };
+        waves * seq
+    }
+
+    /// Wave utilization (0..1) for a queue under the configured policy.
+    pub fn utilization(&self, queue: &[usize]) -> f64 {
+        let slots = self.wave_slots() as f64;
+        let work: usize = queue.iter().sum();
+        let waves: f64 = match self.cfg.policy {
+            BatchPolicy::Immediate => queue
+                .iter()
+                .map(|&c| (c as f64 / slots).ceil())
+                .sum(),
+            BatchPolicy::Coalesce => (work as f64 / slots).ceil(),
+        };
+        if waves == 0.0 {
+            return 1.0;
+        }
+        work as f64 / (waves * slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn tiny_router(policy: BatchPolicy) -> Router {
+        Router::new(ServiceConfig {
+            policy,
+            ..ServiceConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn shard_covers_payload_exactly() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let cols = r.cfg.geometry.cols;
+        for bits in [1, cols - 1, cols, cols + 1, 10 * cols + 17] {
+            let chunks = r.shard(1, bits);
+            assert_eq!(chunks.iter().map(|c| c.bits).sum::<usize>(), bits);
+            assert!(chunks.iter().all(|c| c.bits <= cols));
+            // offsets are dense and ordered
+            let mut off = 0;
+            for c in &chunks {
+                assert_eq!(c.bit_offset, off);
+                off += c.bits;
+            }
+        }
+    }
+
+    #[test]
+    fn coalesce_never_slower_than_immediate() {
+        prop::check("coalesce_dominates", 100, |rng| {
+            let cfg_q: Vec<usize> =
+                (0..1 + rng.below(6)).map(|_| 1 + rng.below(40) as usize).collect();
+            let im = tiny_router(BatchPolicy::Immediate);
+            let co = tiny_router(BatchPolicy::Coalesce);
+            let op = BulkOp::Xnor2;
+            let (ti, tc) = (im.sim_latency_ns(op, &cfg_q), co.sim_latency_ns(op, &cfg_q));
+            if tc <= ti + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("coalesce {tc} > immediate {ti} for {cfg_q:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        prop::check("util_bounds", 100, |rng| {
+            let q: Vec<usize> =
+                (0..1 + rng.below(5)).map(|_| 1 + rng.below(30) as usize).collect();
+            for pol in [BatchPolicy::Immediate, BatchPolicy::Coalesce] {
+                let u = tiny_router(pol).utilization(&q);
+                if !(0.0..=1.0 + 1e-12).contains(&u) {
+                    return Err(format!("util {u} out of range for {q:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn add_is_32x_slower_than_xnor_per_wave() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let x = r.sim_latency_ns(BulkOp::Xnor2, &[1]);
+        let a = r.sim_latency_ns(BulkOp::Add, &[1]);
+        // 7 AAPs × 32 planes vs 3 AAPs
+        assert!((a / x - (7.0 * 32.0) / 3.0).abs() < 1e-9, "{}", a / x);
+    }
+
+    #[test]
+    fn single_full_wave_latency_is_seq_time() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let slots = r.wave_slots();
+        let t = r.sim_latency_ns(BulkOp::Xnor2, &[slots]);
+        assert!((t - 270.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,479 @@
+//! The DRIM service: worker threads executing chunk jobs on their own bank
+//! slices, a shared queue with dynamic batching, and response reassembly.
+//!
+//! Leader/worker layout: `submit` (leader side) shards a request into row
+//! chunks and enqueues them; each worker owns an independent `Controller`
+//! over a slice of the device's banks and processes chunks by streaming
+//! them through staging rows (load operands → run the Table 2 program →
+//! read the result row). A per-request collector thread reassembles chunk
+//! results in order and computes the simulated batch latency from the
+//! router's wave model.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::controller::{Controller, ExecStats};
+use crate::dram::command::RowId;
+use crate::dram::geometry::DramGeometry;
+use crate::isa::program::BulkOp;
+use crate::util::bitrow::BitRow;
+
+use super::metrics::Metrics;
+use super::request::{BulkRequest, BulkResponse, Payload};
+use super::router::{Router, ServiceConfig};
+
+/// Staging rows used by the streaming path (outside the allocator range is
+/// unnecessary — streaming rows are scratch and recycled per chunk).
+const STAGE_A: RowId = RowId::Data(0);
+const STAGE_B: RowId = RowId::Data(1);
+const STAGE_C: RowId = RowId::Data(2);
+const STAGE_R: RowId = RowId::Data(3);
+/// Plane staging base rows for add32 (32 planes each).
+const PLANES_A: u16 = 8;
+const PLANES_B: u16 = 40;
+const PLANES_S: u16 = 72;
+const PLANE_CARRY: RowId = RowId::Data(104);
+
+/// One schedulable unit of work: a group of row chunks (grouping amortizes
+/// queue/lock traffic — §Perf iteration 2 in EXPERIMENTS.md).
+struct ChunkJob {
+    op: BulkOp,
+    operands: Vec<BitRow>,
+    chunk_idx: usize,
+    /// elements for add32 chunks (bits for bit-wise)
+    add32: bool,
+}
+
+enum Job {
+    Group {
+        chunks: Vec<ChunkJob>,
+        reply: Sender<(usize, BitRow, ExecStats)>,
+    },
+    Stop,
+}
+
+/// Chunks per queue message.
+const JOB_GROUP: usize = 16;
+
+pub struct DrimService {
+    cfg: ServiceConfig,
+    router: Router,
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl DrimService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        let banks_per_worker =
+            (cfg.geometry.banks / cfg.workers.max(1)).max(1);
+        for _ in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let g = DramGeometry {
+                banks: banks_per_worker,
+                ..cfg.geometry.clone()
+            };
+            workers.push(std::thread::spawn(move || worker_loop(g, rx, metrics)));
+        }
+        let router = Router::new(cfg.clone());
+        DrimService {
+            cfg,
+            router,
+            tx,
+            workers,
+            metrics,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn with_default_config() -> Self {
+        Self::new(ServiceConfig::default())
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (done_tx, done_rx) = channel();
+        match (&req.op, &req.operands[0]) {
+            (BulkOp::Add | BulkOp::Sub, Payload::U32(_)) => {
+                self.submit_add32(id, req, done_tx)
+            }
+            _ => self.submit_bitwise(id, req, done_tx),
+        }
+        done_rx
+    }
+
+    /// Submit and wait.
+    pub fn run(&self, req: BulkRequest) -> BulkResponse {
+        self.submit(req).recv().expect("service dropped")
+    }
+
+    fn submit_bitwise(&self, id: u64, req: BulkRequest, done: Sender<BulkResponse>) {
+        let cols = self.cfg.geometry.cols;
+        let bits = req.payload_bits();
+        let chunks = self.router.shard(id, bits);
+        let n_chunks = chunks.len();
+        let sim_latency = self
+            .router
+            .sim_latency_ns(req.op, &[n_chunks]);
+        let (ctx, crx) = channel();
+        let rows: Vec<&BitRow> = req
+            .operands
+            .iter()
+            .map(|p| match p {
+                Payload::Bits(b) => b,
+                Payload::U32(_) => unreachable!(),
+            })
+            .collect();
+        for group in chunks.chunks(JOB_GROUP) {
+            let jobs: Vec<ChunkJob> = group
+                .iter()
+                .map(|c| ChunkJob {
+                    op: req.op,
+                    operands: rows
+                        .iter()
+                        .map(|r| slice_bits(r, c.bit_offset, c.bits, cols))
+                        .collect(),
+                    chunk_idx: c.chunk_idx,
+                    add32: false,
+                })
+                .collect();
+            self.tx
+                .send(Job::Group {
+                    chunks: jobs,
+                    reply: ctx.clone(),
+                })
+                .expect("workers gone");
+        }
+        drop(ctx);
+        let metrics = Arc::clone(&self.metrics);
+        let op = req.op;
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let mut parts: Vec<Option<(BitRow, ExecStats)>> = vec![None; n_chunks];
+            let mut total = ExecStats::default();
+            for (idx, row, stats) in crx {
+                total.accumulate(stats);
+                parts[idx] = Some((row, stats));
+            }
+            let mut out = BitRow::zeros(bits);
+            for (i, p) in parts.into_iter().enumerate() {
+                let (row, _) = p.expect("missing chunk");
+                let off = i * cols;
+                let live = cols.min(bits - off);
+                out.copy_bits_from(&row, 0, off, live);
+            }
+            let wall = t0.elapsed().as_nanos() as u64;
+            metrics.record_request(bits as u64, n_chunks as u64, total.aaps);
+            metrics.record_sim_ns(sim_latency);
+            metrics.record_wall_ns(wall);
+            metrics.record_latency_ns(sim_latency);
+            let _ = done.send(BulkResponse {
+                id,
+                result: Payload::Bits(out),
+                stats: total,
+                sim_latency_ns: sim_latency,
+                wall_ns: wall,
+            });
+            let _ = op;
+        });
+    }
+
+    fn submit_add32(&self, id: u64, req: BulkRequest, done: Sender<BulkResponse>) {
+        let cols = self.cfg.geometry.cols;
+        let (a, b) = match (&req.operands[0], &req.operands[1]) {
+            (Payload::U32(a), Payload::U32(b)) => (a.clone(), b.clone()),
+            _ => panic!("add32 needs u32 payloads"),
+        };
+        let n = a.len();
+        let elems_per_chunk = cols;
+        let n_chunks = n.div_ceil(elems_per_chunk);
+        let sim_latency = self.router.sim_latency_ns(req.op, &[n_chunks]);
+        let (ctx, crx) = channel();
+        for ci in 0..n_chunks {
+            let lo = ci * elems_per_chunk;
+            let hi = (lo + elems_per_chunk).min(n);
+            // bit-planes of this element span via 32×32 bit-matrix
+            // transpose (util::bitplane) — one BitRow per bit of a and b
+            let mut operands =
+                crate::util::bitplane::pack_planes(&a[lo..hi], cols);
+            operands.extend(crate::util::bitplane::pack_planes(&b[lo..hi], cols));
+            self.tx
+                .send(Job::Group {
+                    chunks: vec![ChunkJob {
+                        op: req.op,
+                        operands,
+                        chunk_idx: ci,
+                        add32: true,
+                    }],
+                    reply: ctx.clone(),
+                })
+                .expect("workers gone");
+        }
+        drop(ctx);
+        let metrics = Arc::clone(&self.metrics);
+        std::thread::spawn(move || {
+            let t0 = Instant::now();
+            // each chunk replies with 32 sum planes packed into one BitRow
+            // of 32×cols bits (plane-major)
+            let mut parts: Vec<Option<(BitRow, ExecStats)>> = vec![None; n_chunks];
+            let mut total = ExecStats::default();
+            for (idx, row, stats) in crx {
+                total.accumulate(stats);
+                parts[idx] = Some((row, stats));
+            }
+            let mut out = vec![0u32; n];
+            for (ci, p) in parts.into_iter().enumerate() {
+                let (wide, _) = p.expect("missing chunk");
+                let lo = ci * elems_per_chunk;
+                let hi = (lo + elems_per_chunk).min(n);
+                // split the plane-major wide row back into 32 planes
+                // (aligned word copies), then transpose to elements
+                let planes: Vec<BitRow> = (0..32)
+                    .map(|bit| {
+                        let mut p = BitRow::zeros(elems_per_chunk);
+                        p.copy_bits_from(
+                            &wide,
+                            bit * elems_per_chunk,
+                            0,
+                            elems_per_chunk,
+                        );
+                        p
+                    })
+                    .collect();
+                let vals =
+                    crate::util::bitplane::unpack_planes(&planes, hi - lo);
+                out[lo..hi].copy_from_slice(&vals);
+            }
+            let wall = t0.elapsed().as_nanos() as u64;
+            metrics.record_request((n * 32) as u64, n_chunks as u64, total.aaps);
+            metrics.record_sim_ns(sim_latency);
+            metrics.record_wall_ns(wall);
+            metrics.record_latency_ns(sim_latency);
+            let _ = done.send(BulkResponse {
+                id,
+                result: Payload::U32(out),
+                stats: total,
+                sim_latency_ns: sim_latency,
+                wall_ns: wall,
+            });
+        });
+    }
+
+    pub fn shutdown(mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for DrimService {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Extract `bits` bits of `src` starting at `off` into a `cols`-wide row.
+/// Chunk offsets are row-aligned (multiples of `cols`), so this hits the
+/// word-copy fast path (§Perf in EXPERIMENTS.md).
+fn slice_bits(src: &BitRow, off: usize, bits: usize, cols: usize) -> BitRow {
+    let mut out = BitRow::zeros(cols);
+    out.copy_bits_from(src, off, 0, bits);
+    out
+}
+
+fn worker_loop(
+    geometry: DramGeometry,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+) {
+    let mut ctrl = Controller::new(geometry);
+    let mut next_sa = 0usize;
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(Job::Group { chunks, reply }) => {
+                let t0 = Instant::now();
+                for ChunkJob {
+                    op,
+                    operands,
+                    chunk_idx,
+                    add32,
+                } in chunks
+                {
+                    // rotate across this worker's (bank, sub-array) grid
+                    let sa_total =
+                        ctrl.geometry.banks * ctrl.geometry.subarrays_per_bank;
+                    let slot = next_sa % sa_total;
+                    next_sa = next_sa.wrapping_add(1);
+                    let bank = slot / ctrl.geometry.subarrays_per_bank;
+                    let sa = slot % ctrl.geometry.subarrays_per_bank;
+                    let (result, stats) = if add32 {
+                        exec_add32_chunk(&mut ctrl, bank, sa, op, &operands)
+                    } else {
+                        exec_bitwise_chunk(&mut ctrl, bank, sa, op, &operands)
+                    };
+                    let _ = reply.send((chunk_idx, result, stats));
+                }
+                metrics.record_wall_ns(t0.elapsed().as_nanos() as u64);
+            }
+            Ok(Job::Stop) | Err(_) => break,
+        }
+    }
+}
+
+fn exec_bitwise_chunk(
+    ctrl: &mut Controller,
+    bank: usize,
+    sa: usize,
+    op: BulkOp,
+    operands: &[BitRow],
+) -> (BitRow, ExecStats) {
+    let stage = [STAGE_A, STAGE_B, STAGE_C];
+    for (i, o) in operands.iter().enumerate() {
+        ctrl.write_row(bank, sa, stage[i], o);
+    }
+    let stats = ctrl.exec_op(op, bank, sa, &stage[..operands.len()], STAGE_R);
+    (ctrl.read_row(bank, sa, STAGE_R), stats)
+}
+
+fn exec_add32_chunk(
+    ctrl: &mut Controller,
+    bank: usize,
+    sa: usize,
+    op: BulkOp,
+    operands: &[BitRow],
+) -> (BitRow, ExecStats) {
+    let cols = ctrl.geometry.cols;
+    debug_assert_eq!(operands.len(), 64);
+    let (mut ar, mut br, mut sr) = (vec![], vec![], vec![]);
+    for bit in 0..32u16 {
+        let (ra, rb, rs) = (
+            RowId::Data(PLANES_A + bit),
+            RowId::Data(PLANES_B + bit),
+            RowId::Data(PLANES_S + bit),
+        );
+        ctrl.write_row(bank, sa, ra, &operands[bit as usize]);
+        ctrl.write_row(bank, sa, rb, &operands[32 + bit as usize]);
+        ar.push(ra);
+        br.push(rb);
+        sr.push(rs);
+    }
+    let stats = match op {
+        BulkOp::Add => ctrl.add_planes(bank, sa, &ar, &br, &sr, PLANE_CARRY),
+        BulkOp::Sub => ctrl.sub_planes(bank, sa, &ar, &br, &sr, PLANE_CARRY),
+        _ => unreachable!(),
+    };
+    // pack the 32 sum planes plane-major into one wide BitRow
+    // (cols is a multiple of 64 in every geometry → aligned word copies)
+    let mut out = BitRow::zeros(32 * cols);
+    for (bit, rs) in sr.iter().enumerate() {
+        let plane = ctrl.read_row(bank, sa, *rs);
+        out.copy_bits_from(&plane, 0, bit * cols, cols);
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn service() -> DrimService {
+        DrimService::new(ServiceConfig::tiny())
+    }
+
+    #[test]
+    fn xnor_request_roundtrip() {
+        let s = service();
+        let mut rng = Rng::new(1);
+        let bits = 3000; // multiple chunks on tiny geometry (cols=256)
+        let a = BitRow::random(bits, &mut rng);
+        let b = BitRow::random(bits, &mut rng);
+        let resp = s.run(BulkRequest::bitwise(
+            BulkOp::Xnor2,
+            vec![a.clone(), b.clone()],
+        ));
+        let got = match resp.result {
+            Payload::Bits(r) => r,
+            _ => panic!(),
+        };
+        let mut want = BitRow::zeros(bits);
+        want.apply2(&a, &b, |x, y| !(x ^ y));
+        assert_eq!(got, want);
+        assert!(resp.stats.aaps > 0);
+        assert!(resp.sim_latency_ns > 0.0);
+    }
+
+    #[test]
+    fn add32_request_roundtrip() {
+        let s = service();
+        let mut rng = Rng::new(2);
+        let n = 600; // spans 3 chunks of 256 elements
+        let a: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+        let resp = s.run(BulkRequest::add32(a.clone(), b.clone()));
+        let got = match resp.result {
+            Payload::U32(v) => v,
+            _ => panic!(),
+        };
+        for i in 0..n {
+            assert_eq!(got[i], a[i].wrapping_add(b[i]), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let s = service();
+        let mut rng = Rng::new(3);
+        let mut pending = Vec::new();
+        for _ in 0..8 {
+            let a = BitRow::random(1000, &mut rng);
+            let r = BulkRequest::bitwise(BulkOp::Not, vec![a]);
+            pending.push(s.submit(r));
+        }
+        for p in pending {
+            let resp = p.recv().unwrap();
+            assert!(matches!(resp.result, Payload::Bits(_)));
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.requests, 8);
+    }
+
+    #[test]
+    fn metrics_track_throughput() {
+        let s = service();
+        let mut rng = Rng::new(4);
+        let a = BitRow::random(5000, &mut rng);
+        let b = BitRow::random(5000, &mut rng);
+        s.run(BulkRequest::bitwise(BulkOp::Xor2, vec![a, b]));
+        let snap = s.metrics.snapshot();
+        assert!(snap.sim_throughput_bits_per_sec > 0.0);
+        assert!(snap.aaps > 0);
+        s.shutdown();
+    }
+}

@@ -1,0 +1,77 @@
+//! A DRAM bank: a set of computational sub-arrays sharing the global row
+//! buffer and bank-level command sequencing.
+//!
+//! Sub-arrays within a bank can compute *concurrently* (sub-array-level
+//! parallelism, limited by `DramGeometry::active_subarrays`) because each
+//! has its own local SA row; the bank serializes only the command issue,
+//! which is pipelined and not the bottleneck (RowClone/Ambit convention).
+
+use crate::isa::program::{CTRL_ONES, CTRL_ZEROS};
+use crate::subarray::SubArray;
+use crate::util::bitrow::BitRow;
+
+use super::geometry::DramGeometry;
+
+#[derive(Clone, Debug)]
+pub struct Bank {
+    pub subarrays: Vec<SubArray>,
+}
+
+impl Bank {
+    /// Build a bank with preset control rows (zeros/ones) in every
+    /// sub-array — done once at power-up, RowClone-refreshed thereafter.
+    pub fn new(g: &DramGeometry) -> Self {
+        let mut subarrays = Vec::with_capacity(g.subarrays_per_bank);
+        for _ in 0..g.subarrays_per_bank {
+            let mut sa = SubArray::new(g.cols);
+            sa.write_row(CTRL_ZEROS, &BitRow::zeros(g.cols));
+            sa.write_row(CTRL_ONES, &BitRow::ones(g.cols));
+            subarrays.push(sa);
+        }
+        Bank { subarrays }
+    }
+
+    pub fn subarray(&self, i: usize) -> &SubArray {
+        &self.subarrays[i]
+    }
+
+    pub fn subarray_mut(&mut self, i: usize) -> &mut SubArray {
+        &mut self.subarrays[i]
+    }
+
+    /// Total AAPs executed across all sub-arrays (stats).
+    pub fn aap_count(&self) -> u64 {
+        self.subarrays.iter().map(|s| s.aap_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::command::RowId;
+
+    #[test]
+    fn control_rows_preset() {
+        let g = DramGeometry::tiny();
+        let b = Bank::new(&g);
+        for sa in &b.subarrays {
+            assert_eq!(sa.read_row(CTRL_ZEROS).popcount(), 0);
+            assert_eq!(sa.read_row(CTRL_ONES).popcount(), g.cols);
+        }
+    }
+
+    #[test]
+    fn subarray_count_matches_geometry() {
+        let g = DramGeometry::tiny();
+        let b = Bank::new(&g);
+        assert_eq!(b.subarrays.len(), g.subarrays_per_bank);
+        assert_eq!(b.subarray(0).cols(), g.cols);
+    }
+
+    #[test]
+    fn data_rows_start_zeroed() {
+        let g = DramGeometry::tiny();
+        let b = Bank::new(&g);
+        assert_eq!(b.subarray(0).read_row(RowId::Data(0)).popcount(), 0);
+    }
+}

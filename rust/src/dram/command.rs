@@ -1,0 +1,190 @@
+//! DRAM command vocabulary, row identifiers, and the AAP primitive kinds.
+
+use std::fmt;
+
+use super::geometry::{DATA_ROWS, NUM_DCC_WLS, NUM_X_ROWS, SUBARRAY_ROWS};
+
+/// A word-line within one sub-array's row space (paper Fig. 3).
+///
+/// * `Data(r)` — one of the 500 regular data rows (regular row decoder).
+/// * `X(i)`    — computation row x1..x8 (modified row decoder, may be
+///               co-activated with other computation rows).
+/// * `Dcc(i)`  — one of the 4 dual-contact-cell *word-lines* dcc1..dcc4.
+///               dcc1/dcc2 are the normal/complement word-lines of DCC cell
+///               A; dcc3/dcc4 of DCC cell B. Activating the complement
+///               word-line reads/writes the cell through BL̄, i.e. inverted.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum RowId {
+    Data(u16),
+    X(u8),
+    Dcc(u8),
+}
+
+impl RowId {
+    /// Word-line index in the physical row space 0..512.
+    pub fn wordline(self) -> usize {
+        match self {
+            RowId::Data(r) => {
+                assert!((r as usize) < DATA_ROWS, "data row {r} out of range");
+                r as usize
+            }
+            RowId::X(i) => {
+                assert!((1..=NUM_X_ROWS as u8).contains(&i), "x{i} out of range");
+                DATA_ROWS + (i as usize - 1)
+            }
+            RowId::Dcc(i) => {
+                assert!((1..=NUM_DCC_WLS as u8).contains(&i), "dcc{i} out of range");
+                DATA_ROWS + NUM_X_ROWS + (i as usize - 1)
+            }
+        }
+    }
+
+    /// Rows reachable by the Modified Row Decoder (multi-activation capable).
+    pub fn is_compute(self) -> bool {
+        !matches!(self, RowId::Data(_))
+    }
+
+    /// For DCC word-lines: (cell index 0/1, through-complement?).
+    pub fn dcc_cell(self) -> Option<(usize, bool)> {
+        match self {
+            RowId::Dcc(i) => Some((((i - 1) / 2) as usize, (i - 1) % 2 == 1)),
+            _ => None,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RowId> {
+        if let Some(n) = s.strip_prefix('x') {
+            return n.parse().ok().map(RowId::X);
+        }
+        if let Some(n) = s.strip_prefix("dcc") {
+            return n.parse().ok().map(RowId::Dcc);
+        }
+        if let Some(n) = s.strip_prefix('d') {
+            return n.parse().ok().map(RowId::Data);
+        }
+        None
+    }
+
+    pub fn total_wordlines() -> usize {
+        SUBARRAY_ROWS
+    }
+}
+
+impl fmt::Display for RowId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RowId::Data(r) => write!(f, "d{r}"),
+            RowId::X(i) => write!(f, "x{i}"),
+            RowId::Dcc(i) => write!(f, "dcc{i}"),
+        }
+    }
+}
+
+/// The four AAP instruction types of DRIM's ISA (paper §3.2), as bare DRAM
+/// command micro-ops. `size` is carried at the `isa::Program` level.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AapKind {
+    /// AAP(src, des): copy / NOT (through DCC word-lines)
+    Copy,
+    /// AAP(src, des1, des2): double-copy
+    DoubleCopy,
+    /// AAP(src1, src2, des): Dual-Row Activation — X(N)OR2
+    Dra,
+    /// AAP(src1, src2, src3, des): Triple-Row Activation — MAJ3
+    Tra,
+}
+
+impl AapKind {
+    /// ACTIVATE count of the primitive (for the energy model): activations
+    /// happen in two phases — source activation (1, 2 or 3 word-lines) and
+    /// destination activation (1 or 2 word-lines) — followed by PRECHARGE.
+    pub fn source_rows(self) -> usize {
+        match self {
+            AapKind::Copy | AapKind::DoubleCopy => 1,
+            AapKind::Dra => 2,
+            AapKind::Tra => 3,
+        }
+    }
+
+    pub fn dest_rows(self) -> usize {
+        match self {
+            AapKind::DoubleCopy => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// Raw command stream element (what the memory controller actually issues).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DramCommand {
+    /// simultaneous activation of 1..=3 word-lines (MRD handles >1)
+    Activate(Vec<RowId>),
+    Precharge,
+    /// column read/write of one 64-byte burst (addressing elided)
+    ReadBurst,
+    WriteBurst,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wordline_layout_is_dense_and_disjoint() {
+        let mut seen = vec![false; RowId::total_wordlines()];
+        for r in 0..DATA_ROWS as u16 {
+            let w = RowId::Data(r).wordline();
+            assert!(!seen[w]);
+            seen[w] = true;
+        }
+        for i in 1..=NUM_X_ROWS as u8 {
+            let w = RowId::X(i).wordline();
+            assert!(!seen[w]);
+            seen[w] = true;
+        }
+        for i in 1..=NUM_DCC_WLS as u8 {
+            let w = RowId::Dcc(i).wordline();
+            assert!(!seen[w]);
+            seen[w] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "512 word-lines covered");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn data_row_bounds_enforced() {
+        RowId::Data(500).wordline();
+    }
+
+    #[test]
+    fn dcc_cells() {
+        assert_eq!(RowId::Dcc(1).dcc_cell(), Some((0, false)));
+        assert_eq!(RowId::Dcc(2).dcc_cell(), Some((0, true)));
+        assert_eq!(RowId::Dcc(3).dcc_cell(), Some((1, false)));
+        assert_eq!(RowId::Dcc(4).dcc_cell(), Some((1, true)));
+        assert_eq!(RowId::X(1).dcc_cell(), None);
+    }
+
+    #[test]
+    fn compute_region() {
+        assert!(!RowId::Data(3).is_compute());
+        assert!(RowId::X(1).is_compute());
+        assert!(RowId::Dcc(4).is_compute());
+    }
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for r in [RowId::Data(17), RowId::X(3), RowId::Dcc(2)] {
+            assert_eq!(RowId::parse(&r.to_string()), Some(r));
+        }
+        assert_eq!(RowId::parse("bogus"), None);
+    }
+
+    #[test]
+    fn aap_row_counts() {
+        assert_eq!(AapKind::Copy.source_rows(), 1);
+        assert_eq!(AapKind::DoubleCopy.dest_rows(), 2);
+        assert_eq!(AapKind::Dra.source_rows(), 2);
+        assert_eq!(AapKind::Tra.source_rows(), 3);
+    }
+}

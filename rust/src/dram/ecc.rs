@@ -1,0 +1,213 @@
+//! Row-level ECC (paper §4 "Reliability", left as future work there —
+//! implemented here): conventional DIMM ECC is computed at the memory
+//! controller, which never sees PIM-generated data, so DRIM must compute
+//! and verify ECC *at the module level*. We augment each row with SEC-DED
+//! Hamming(72,64) check bits per 64-bit word, recomputed after every
+//! in-memory operation's write-back and verified on read-out.
+
+use crate::util::bitrow::BitRow;
+
+/// Check bits per 64-bit data word: 7 Hamming parity bits + 1 overall
+/// parity bit → single-error correction, double-error detection.
+pub const CHECK_BITS_PER_WORD: usize = 8;
+
+/// Compute the 8 SEC-DED check bits of one 64-bit word.
+///
+/// Parity bit `i` (i < 7) covers the data-bit positions whose (1-based,
+/// check-bit-skipping) Hamming index has bit `i` set; bit 7 is overall
+/// parity over data + check bits.
+pub fn encode_word(data: u64) -> u8 {
+    // per-parity-bit data masks, derived once from the Hamming indices
+    static MASKS: std::sync::OnceLock<[u64; 7]> = std::sync::OnceLock::new();
+    let masks = MASKS.get_or_init(|| {
+        let mut m = [0u64; 7];
+        for (p, mask) in m.iter_mut().enumerate() {
+            for d in 0..64u32 {
+                if hamming_index(d) & (1 << p) != 0 {
+                    *mask |= 1u64 << d;
+                }
+            }
+        }
+        m
+    });
+    let mut check = 0u8;
+    for (p, mask) in masks.iter().enumerate() {
+        check |= (((data & mask).count_ones() & 1) as u8) << p;
+    }
+    // overall parity over the data bits (the check-bit sidecar itself is
+    // modelled as incorruptible — it lives in the module-level ECC store)
+    let overall = data.count_ones() & 1;
+    check | ((overall as u8) << 7)
+}
+
+/// Hamming code position of data bit `d` (skipping power-of-two slots,
+/// 1-based).
+fn hamming_index(d: u32) -> u32 {
+    // the (d+1)-th position that is not a power of two, starting from 3
+    let mut pos = 0u32;
+    let mut seen = 0u32;
+    for candidate in 3.. {
+        if (candidate & (candidate - 1)) != 0 {
+            // not a power of two
+            if seen == d {
+                pos = candidate;
+                break;
+            }
+            seen += 1;
+        }
+    }
+    pos
+}
+
+/// Decode result of one word.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Decode {
+    Clean(u64),
+    Corrected { data: u64, bit: u32 },
+    /// double-bit (or worse) error — uncorrectable
+    Detected,
+}
+
+/// Verify/correct one word against its stored check bits.
+pub fn decode_word(data: u64, stored_check: u8) -> Decode {
+    let fresh = encode_word(data);
+    let syndrome = (fresh ^ stored_check) & 0x7F;
+    let overall_mismatch = ((fresh ^ stored_check) >> 7) & 1 == 1;
+    match (syndrome, overall_mismatch) {
+        (0, false) => Decode::Clean(data),
+        // parity disagrees but the Hamming syndrome is clean → ≥3 bits
+        (0, true) => Decode::Detected,
+        // syndrome without a parity flip → an even (≥2) number of flips
+        (_, false) => Decode::Detected,
+        (s, true) => {
+            // single data-bit error at Hamming position s
+            for d in 0..64u32 {
+                if hamming_index(d) == s as u32 {
+                    let fixed = data ^ (1u64 << d);
+                    // consistency: fixed word must re-encode cleanly
+                    if encode_word(fixed) == stored_check {
+                        return Decode::Corrected { data: fixed, bit: d };
+                    }
+                }
+            }
+            // no data position carries this syndrome → multi-bit damage
+            Decode::Detected
+        }
+    }
+}
+
+/// ECC sidecar for a full row: one check byte per 64-bit word.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowEcc {
+    pub check: Vec<u8>,
+}
+
+impl RowEcc {
+    pub fn encode(row: &BitRow) -> Self {
+        RowEcc {
+            check: row.words().iter().map(|&w| encode_word(w)).collect(),
+        }
+    }
+
+    /// Verify a row; corrects single-bit upsets in place. Returns the
+    /// number of corrected bits, or Err on an uncorrectable word.
+    pub fn verify_and_correct(&self, row: &mut BitRow) -> Result<usize, usize> {
+        let mut corrected = 0;
+        for (i, c) in self.check.iter().enumerate() {
+            match decode_word(row.words()[i], *c) {
+                Decode::Clean(_) => {}
+                Decode::Corrected { data, .. } => {
+                    row.words_mut()[i] = data;
+                    corrected += 1;
+                }
+                Decode::Detected => return Err(i),
+            }
+        }
+        Ok(corrected)
+    }
+
+    /// Storage overhead relative to the protected data.
+    pub fn overhead() -> f64 {
+        CHECK_BITS_PER_WORD as f64 / 64.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn clean_words_decode_clean() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let w = rng.next_u64();
+            assert_eq!(decode_word(w, encode_word(w)), Decode::Clean(w));
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_corrected() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let w = rng.next_u64();
+            let check = encode_word(w);
+            for b in 0..64 {
+                let corrupted = w ^ (1u64 << b);
+                match decode_word(corrupted, check) {
+                    Decode::Corrected { data, bit } => {
+                        assert_eq!(data, w);
+                        assert_eq!(bit, b);
+                    }
+                    other => panic!("bit {b}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn double_bit_flips_are_detected_not_miscorrected() {
+        prop::check("secded_double", 200, |rng| {
+            let w = rng.next_u64();
+            let check = encode_word(w);
+            let b1 = rng.below(64) as u64;
+            let mut b2 = rng.below(64) as u64;
+            if b1 == b2 {
+                b2 = (b2 + 1) % 64;
+            }
+            let corrupted = w ^ (1 << b1) ^ (1 << b2);
+            match decode_word(corrupted, check) {
+                Decode::Detected => Ok(()),
+                Decode::Corrected { data, .. } if data == w => {
+                    Err("double error silently mis-corrected to original?".into())
+                }
+                Decode::Corrected { .. } => {
+                    Err(format!("double error {b1},{b2} mis-corrected"))
+                }
+                Decode::Clean(_) => Err(format!("double error {b1},{b2} missed")),
+            }
+        });
+    }
+
+    #[test]
+    fn row_level_roundtrip_with_upsets() {
+        let mut rng = Rng::new(3);
+        let row = BitRow::random(8192, &mut rng);
+        let ecc = RowEcc::encode(&row);
+        let mut clean = row.clone();
+        assert_eq!(ecc.verify_and_correct(&mut clean), Ok(0));
+        // flip one bit in each of 5 different words
+        let mut hit = row.clone();
+        for w in [0usize, 17, 63, 100, 127] {
+            hit.words_mut()[w] ^= 1 << (w % 64);
+        }
+        assert_eq!(ecc.verify_and_correct(&mut hit), Ok(5));
+        assert_eq!(hit, row);
+    }
+
+    #[test]
+    fn overhead_is_12_5_percent() {
+        assert!((RowEcc::overhead() - 0.125).abs() < 1e-12);
+    }
+}

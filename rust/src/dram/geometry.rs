@@ -1,0 +1,172 @@
+//! DRAM organization & physical address mapping (paper Fig. 3).
+
+/// Row-space split of a computational sub-array (paper §3: "Data rows (500
+/// rows out of 512) ... and Computation rows (12)").
+pub const SUBARRAY_ROWS: usize = 512;
+pub const DATA_ROWS: usize = 500;
+pub const NUM_X_ROWS: usize = 8; // x1..x8, typical cells on the MRD
+pub const NUM_DCC_WLS: usize = 4; // dcc1..dcc4 word-lines (2 DCC cells × 2 WLs)
+
+/// Geometry of one DRIM device (chip-level view; chips in a rank operate in
+/// lock-step, so the simulator models one chip with rank-wide rows).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DramGeometry {
+    pub banks: usize,
+    pub subarrays_per_bank: usize,
+    /// bit-lines per sub-array row (= bits moved by one AAP per sub-array)
+    pub cols: usize,
+    /// sub-arrays per bank that may compute simultaneously (power budget —
+    /// Ambit-style sub-array-level parallelism; see platforms/drim.rs)
+    pub active_subarrays: usize,
+}
+
+impl Default for DramGeometry {
+    fn default() -> Self {
+        DramGeometry {
+            banks: 8,
+            subarrays_per_bank: 64,
+            cols: 8192,
+            active_subarrays: 32,
+        }
+    }
+}
+
+impl DramGeometry {
+    /// Small geometry for unit tests (fast to simulate exhaustively).
+    pub fn tiny() -> Self {
+        DramGeometry {
+            banks: 2,
+            subarrays_per_bank: 2,
+            cols: 256,
+            active_subarrays: 2,
+        }
+    }
+
+    /// 3D-stacked DRIM-S organization (HMC-2.0-like: 4 GB, 256 banks;
+    /// paper §3.4 "DRIM-S").
+    pub fn stacked() -> Self {
+        DramGeometry {
+            banks: 256,
+            subarrays_per_bank: 32,
+            cols: 8192,
+            // tighter per-bank power budget in the stack: 2 computing
+            // sub-arrays per bank (×256 banks still = 2× DRIM-R's wave)
+            active_subarrays: 2,
+        }
+    }
+
+    pub fn data_bits_per_bank(&self) -> usize {
+        self.subarrays_per_bank * DATA_ROWS * self.cols
+    }
+
+    pub fn data_bits_total(&self) -> usize {
+        self.banks * self.data_bits_per_bank()
+    }
+
+    /// Bits processed by one array-wide computational step (all banks ×
+    /// active sub-arrays × one row).
+    pub fn compute_width_bits(&self) -> usize {
+        self.banks * self.active_subarrays * self.cols
+    }
+}
+
+/// Physical location of a data row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PhysAddr {
+    pub bank: usize,
+    pub subarray: usize,
+    pub row: usize,
+}
+
+impl PhysAddr {
+    /// Flat index over data rows: bank-major, then sub-array, then row.
+    /// Bijective with `from_flat` (property-tested).
+    pub fn to_flat(self, g: &DramGeometry) -> usize {
+        debug_assert!(self.bank < g.banks);
+        debug_assert!(self.subarray < g.subarrays_per_bank);
+        debug_assert!(self.row < DATA_ROWS);
+        (self.bank * g.subarrays_per_bank + self.subarray) * DATA_ROWS + self.row
+    }
+
+    pub fn from_flat(g: &DramGeometry, flat: usize) -> Self {
+        let row = flat % DATA_ROWS;
+        let sa = (flat / DATA_ROWS) % g.subarrays_per_bank;
+        let bank = flat / (DATA_ROWS * g.subarrays_per_bank);
+        debug_assert!(bank < g.banks, "flat index out of range");
+        PhysAddr {
+            bank,
+            subarray: sa,
+            row,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn defaults_match_paper_scale() {
+        let g = DramGeometry::default();
+        assert_eq!(g.banks, 8); // paper: "implemented with 8 banks"
+        assert_eq!(SUBARRAY_ROWS, 512);
+        assert_eq!(DATA_ROWS, 500);
+        assert_eq!(NUM_X_ROWS + NUM_DCC_WLS, 12); // "Computation rows (12)"
+    }
+
+    #[test]
+    fn stacked_is_hmc_like() {
+        let g = DramGeometry::stacked();
+        assert_eq!(g.banks, 256);
+        // ≈ 4 GB of data space (paper: "256 banks in 4GB capacity")
+        let bytes = g.data_bits_total() / 8;
+        assert!(bytes > 3 << 30 && bytes <= 5 << 30, "{bytes}");
+    }
+
+    #[test]
+    fn flat_mapping_bijective() {
+        let g = DramGeometry::tiny();
+        prop::check("addr_bijective", 200, |rng| {
+            let a = PhysAddr {
+                bank: rng.below(g.banks as u64) as usize,
+                subarray: rng.below(g.subarrays_per_bank as u64) as usize,
+                row: rng.below(DATA_ROWS as u64) as usize,
+            };
+            let back = PhysAddr::from_flat(&g, a.to_flat(&g));
+            if back == a {
+                Ok(())
+            } else {
+                Err(format!("{a:?} -> {back:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn flat_mapping_dense() {
+        let g = DramGeometry::tiny();
+        let total = g.banks * g.subarrays_per_bank * DATA_ROWS;
+        let mut seen = vec![false; total];
+        for b in 0..g.banks {
+            for s in 0..g.subarrays_per_bank {
+                for r in 0..DATA_ROWS {
+                    let f = PhysAddr {
+                        bank: b,
+                        subarray: s,
+                        row: r,
+                    }
+                    .to_flat(&g);
+                    assert!(!seen[f]);
+                    seen[f] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn compute_width() {
+        let g = DramGeometry::default();
+        assert_eq!(g.compute_width_bits(), 8 * 32 * 8192);
+    }
+}

@@ -1,0 +1,19 @@
+//! DRAM substrate: geometry, timing, commands and banks.
+//!
+//! This is the memory system everything else is built on — the functional
+//! *and* timing model of a DDR4-class device extended with DRIM's
+//! computational sub-arrays (paper Fig. 3). The paper evaluates on "8 banks
+//! with 512×256 computational sub-arrays"; geometry is configurable and the
+//! defaults (8 banks × 64 sub-arrays × 512 rows × 8192 bit-lines) follow
+//! the Ambit/DRISA evaluation convention of an 8 Kb row.
+
+pub mod bank;
+pub mod command;
+pub mod ecc;
+pub mod geometry;
+pub mod timing;
+
+pub use bank::Bank;
+pub use command::{AapKind, DramCommand, RowId};
+pub use geometry::{DramGeometry, PhysAddr};
+pub use timing::TimingParams;

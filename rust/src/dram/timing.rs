@@ -1,0 +1,63 @@
+//! DDR4-class timing parameters and derived command latencies.
+//!
+//! All latencies in nanoseconds. Values follow the DDR4-2133 speed grade the
+//! paper's CPU baseline uses (and the RowClone/Ambit evaluation convention):
+//! tRCD ≈ 14 ns, tRAS ≈ 33 ns, tRP ≈ 14 ns, and the RowClone-FPM figure of
+//! ~90 ns for a full AAP (two back-to-back ACTIVATEs + PRECHARGE) [17].
+//!
+//! The paper's own calibration points:
+//!   * "This operation takes only 90ns" — RowClone-FPM copy (one AAP).
+//!   * "TRA method needs averagely 360ns" for a 4-AAP AND2/OR2 → 4 × 90 ns.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimingParams {
+    pub t_rcd_ns: f64,
+    pub t_ras_ns: f64,
+    pub t_rp_ns: f64,
+    /// one full ACTIVATE→ACTIVATE→PRECHARGE primitive
+    pub t_aap_ns: f64,
+    /// single ACTIVATE→PRECHARGE (used by DRISA-1T1C latch cycles)
+    pub t_ap_ns: f64,
+    /// column read/write burst (64 B over the DDR interface)
+    pub t_burst_ns: f64,
+}
+
+impl Default for TimingParams {
+    fn default() -> Self {
+        TimingParams {
+            t_rcd_ns: 14.16,
+            t_ras_ns: 33.0,
+            t_rp_ns: 14.16,
+            t_aap_ns: 90.0,
+            t_ap_ns: 47.16, // tRAS + tRP
+            t_burst_ns: 3.75, // 8 beats @ DDR4-2133
+        }
+    }
+}
+
+impl TimingParams {
+    /// Latency of an n-AAP command sequence.
+    pub fn seq_ns(&self, aaps: usize) -> f64 {
+        self.t_aap_ns * aaps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibration_points() {
+        let t = TimingParams::default();
+        // RowClone-FPM copy = 1 AAP ≈ 90 ns (paper §2.1)
+        assert_eq!(t.seq_ns(1), 90.0);
+        // TRA-based AND2/OR2 = 4 AAPs ≈ 360 ns (paper §2.2 Challenge-2)
+        assert_eq!(t.seq_ns(4), 360.0);
+    }
+
+    #[test]
+    fn ap_is_ras_plus_rp() {
+        let t = TimingParams::default();
+        assert!((t.t_ap_ns - (t.t_ras_ns + t.t_rp_ns)).abs() < 1e-9);
+    }
+}

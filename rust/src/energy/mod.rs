@@ -1,0 +1,17 @@
+//! Per-command DRAM energy model (Fig. 9).
+//!
+//! Constants are derived in the Rambus-power-model style the paper cites
+//! [28], for a 45 nm-class device with 8 Kb rows, and validated against the
+//! paper's own calibration points (asserted in tests and reported next to
+//! the paper's numbers by `cargo bench fig9_energy`):
+//!
+//! * in-DRAM copy vs DDR4-interface copy: ~69× (paper §1)
+//! * DRIM vs Ambit XNOR2: ~2.4×, vs DRISA-1T1C: ~1.6× (paper §3.4)
+//! * DRIM vs CPU add: ~27× (paper §3.4)
+//!
+//! Energy scales linearly with activated row width (`cols`); constants are
+//! quoted for the reference 8192-bit row.
+
+pub mod model;
+
+pub use model::EnergyModel;

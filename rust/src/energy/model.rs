@@ -1,0 +1,120 @@
+//! The energy model proper. All values in picojoules.
+
+use crate::dram::command::AapKind;
+
+/// Reference row width the constants are quoted for.
+pub const REF_ROW_BITS: f64 = 8192.0;
+
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// single-row ACTIVATE (charge restore of one 8 Kb row)
+    pub e_act_pj: f64,
+    /// each additional simultaneously-activated row (charge sharing across
+    /// more cells moves less charge per cell — cheaper than a full ACT)
+    pub e_act_extra_row_pj: f64,
+    /// PRECHARGE of the bit-lines
+    pub e_pre_pj: f64,
+    /// DRIM's add-on SA circuitry (two shifted-VTC inverters + AND gate)
+    /// switching during a DRA sense (per row-operation)
+    pub e_dra_addon_pj: f64,
+    /// DRISA-1T1C's add-on gate + latch per compute cycle (≥12 T per SA)
+    pub e_1t1c_gate_pj: f64,
+    /// DDR4 interface transfer, per bit (I/O + termination)
+    pub e_interface_pj_per_bit: f64,
+    /// DRAM core access (array → I/O) per bit, paid on any off-chip path
+    pub e_core_pj_per_bit: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            e_act_pj: 900.0,
+            e_act_extra_row_pj: 1000.0,
+            e_pre_pj: 600.0,
+            e_dra_addon_pj: 300.0,
+            e_1t1c_gate_pj: 2000.0,
+            e_interface_pj_per_bit: 10.0,
+            e_core_pj_per_bit: 15.0,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one ACTIVATE phase opening `rows` word-lines at once.
+    pub fn activate_pj(&self, rows: usize) -> f64 {
+        assert!(rows >= 1);
+        self.e_act_pj + (rows - 1) as f64 * self.e_act_extra_row_pj
+    }
+
+    /// Energy of one full AAP primitive on a `cols`-bit row.
+    pub fn aap_pj(&self, kind: AapKind, cols: usize) -> f64 {
+        let src = self.activate_pj(kind.source_rows());
+        let dst = self.activate_pj(kind.dest_rows());
+        let addon = if kind == AapKind::Dra {
+            self.e_dra_addon_pj
+        } else {
+            0.0
+        };
+        (src + dst + self.e_pre_pj + addon) * (cols as f64 / REF_ROW_BITS)
+    }
+
+    /// Energy to move `bits` across the DDR4 interface (one direction),
+    /// including the core access.
+    pub fn offchip_pj(&self, bits: f64) -> f64 {
+        bits * (self.e_interface_pj_per_bit + self.e_core_pj_per_bit)
+    }
+
+    /// DDR4 copy of `bits`: read out over the interface + write back, plus
+    /// the row activations on both ends. (The *core* per-bit energy is not
+    /// double-charged here — the row activation term covers the array
+    /// access for the full row.)
+    pub fn ddr4_copy_pj(&self, bits: f64) -> f64 {
+        2.0 * bits * self.e_interface_pj_per_bit
+            + 2.0 * (self.e_act_pj + self.e_pre_pj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KB_BITS: f64 = 8192.0;
+
+    fn m() -> EnergyModel {
+        EnergyModel::default()
+    }
+
+    #[test]
+    fn aap1_copy_energy() {
+        // AAP type-1 on a full row: ACT + ACT + PRE = 0.9 + 0.9 + 0.6 nJ
+        let e = m().aap_pj(AapKind::Copy, 8192);
+        assert!((e - 2400.0).abs() < 1e-9, "{e}");
+    }
+
+    #[test]
+    fn dra_and_tra_aap_energy() {
+        let dra = m().aap_pj(AapKind::Dra, 8192);
+        // (0.9+1.0) + 0.9 + 0.6 + 0.3 = 3.7 nJ
+        assert!((dra - 3700.0).abs() < 1e-9, "{dra}");
+        let tra = m().aap_pj(AapKind::Tra, 8192);
+        // (0.9+2.0) + 0.9 + 0.6 = 4.4 nJ
+        assert!((tra - 4400.0).abs() < 1e-9, "{tra}");
+    }
+
+    #[test]
+    fn energy_scales_with_row_width() {
+        let full = m().aap_pj(AapKind::Copy, 8192);
+        let half = m().aap_pj(AapKind::Copy, 4096);
+        assert!((half * 2.0 - full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_calibration_copy_vs_ddr4() {
+        // paper §1: "reduces the DRAM chip energy by ... 69× compared with
+        // copying data through the DDR4 interface"
+        let in_dram = m().aap_pj(AapKind::Copy, 8192);
+        let ddr4 = m().ddr4_copy_pj(KB_BITS);
+        let ratio = ddr4 / in_dram;
+        assert!((60.0..80.0).contains(&ratio), "ratio {ratio:.1}");
+    }
+}

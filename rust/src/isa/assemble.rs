@@ -1,0 +1,153 @@
+//! Text assembler / disassembler for AAP programs.
+//!
+//! Format: one instruction per line, `AAP(op1, op2[, op3[, op4]])` with row
+//! names `d<N>` (data), `x<N>` (computation), `dcc<N>` (dual-contact
+//! word-line). Comments start with `#`. The instruction type is inferred
+//! from arity, matching the paper's ISA (§3.2): 2 operands → type-1,
+//! 3 operands → type-2 vs type-3 is ambiguous, so type-2 is written as
+//! `AAP2(...)` and type-3 as `AAP(...)`; type-4 has 4 operands.
+
+use crate::dram::command::RowId;
+
+use super::{AapInstr, Program};
+
+pub fn format_program(p: &Program) -> String {
+    let mut out = format!("# program: {} ({} AAPs)\n", p.name, p.aap_count());
+    for i in &p.instrs {
+        out.push_str(&format_instr(i));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn format_instr(i: &AapInstr) -> String {
+    match i {
+        AapInstr::Aap2 { src, des } => format!("AAP2({src}, {}, {})", des[0], des[1]),
+        _ => i.to_string(),
+    }
+}
+
+#[derive(Debug, PartialEq)]
+pub enum ParseError {
+    BadSyntax(String),
+    BadRow(String),
+    BadArity(usize),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::BadSyntax(l) => write!(f, "syntax error: {l:?}"),
+            ParseError::BadRow(r) => write!(f, "bad row name: {r:?}"),
+            ParseError::BadArity(n) => write!(f, "bad operand count: {n}"),
+        }
+    }
+}
+
+pub fn parse_instr(line: &str) -> Result<AapInstr, ParseError> {
+    let line = line.trim();
+    let (head, rest) = line
+        .split_once('(')
+        .ok_or_else(|| ParseError::BadSyntax(line.into()))?;
+    let body = rest
+        .strip_suffix(')')
+        .ok_or_else(|| ParseError::BadSyntax(line.into()))?;
+    let is_type2 = match head.trim() {
+        "AAP" => false,
+        "AAP2" => true,
+        _ => return Err(ParseError::BadSyntax(line.into())),
+    };
+    let rows: Vec<RowId> = body
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            RowId::parse(t).ok_or_else(|| ParseError::BadRow(t.into()))
+        })
+        .collect::<Result<_, _>>()?;
+    match (rows.len(), is_type2) {
+        (2, false) => Ok(AapInstr::Aap1 {
+            src: rows[0],
+            des: rows[1],
+        }),
+        (3, true) => Ok(AapInstr::Aap2 {
+            src: rows[0],
+            des: [rows[1], rows[2]],
+        }),
+        (3, false) => Ok(AapInstr::Aap3 {
+            src: [rows[0], rows[1]],
+            des: rows[2],
+        }),
+        (4, false) => Ok(AapInstr::Aap4 {
+            src: [rows[0], rows[1], rows[2]],
+            des: rows[3],
+        }),
+        (n, _) => Err(ParseError::BadArity(n)),
+    }
+}
+
+pub fn parse_program(name: &str, text: &str) -> Result<Program, ParseError> {
+    let mut p = Program::new(name);
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        p.push(parse_instr(line)?);
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program;
+    use crate::dram::command::RowId::*;
+
+    #[test]
+    fn roundtrip_all_table2_programs() {
+        let progs = [
+            program::copy(Data(0), Data(1)),
+            program::not(Data(0), Data(1)),
+            program::maj3(Data(0), Data(1), Data(2), Data(3)),
+            program::xnor2(Data(0), Data(1), Data(2)),
+            program::xor2(Data(0), Data(1), Data(2)),
+            program::full_adder(Data(0), Data(1), Data(2), Data(3), Data(4)),
+            program::full_subtractor(Data(0), Data(1), Data(2), Data(3), Data(4)),
+        ];
+        for p in progs {
+            let text = format_program(&p);
+            let back = parse_program(&p.name, &text).unwrap();
+            assert_eq!(back, p, "roundtrip failed for {}", p.name);
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(matches!(
+            parse_instr("nonsense"),
+            Err(ParseError::BadSyntax(_))
+        ));
+        assert!(matches!(
+            parse_instr("AAP(d0, q9)"),
+            Err(ParseError::BadRow(_))
+        ));
+        assert!(matches!(
+            parse_instr("AAP(d0, d1, d2, d3, d4)"),
+            Err(ParseError::BadArity(5))
+        ));
+    }
+
+    #[test]
+    fn type2_vs_type3_disambiguation() {
+        let t2 = parse_instr("AAP2(d0, x1, x2)").unwrap();
+        assert!(matches!(t2, AapInstr::Aap2 { .. }));
+        let t3 = parse_instr("AAP(x1, x2, d0)").unwrap();
+        assert!(matches!(t3, AapInstr::Aap3 { .. }));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = parse_program("t", "# hello\n\nAAP(d0, x1)\n").unwrap();
+        assert_eq!(p.aap_count(), 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! DRIM's AAP instruction set (paper §3.2).
+//!
+//! Four AAP (ACTIVATE-ACTIVATE-PRECHARGE) instruction types, differing only
+//! in the number of activated source/destination rows:
+//!
+//! * type-1 `AAP(src, des)`            — copy / NOT (via DCC word-lines)
+//! * type-2 `AAP(src, des1, des2)`     — double-copy
+//! * type-3 `AAP(src1, src2, des)`     — DRA → X(N)OR2
+//! * type-4 `AAP(src1, src2, src3, des)` — TRA → MAJ3
+//!
+//! `Program` is a straight-line sequence of AAPs operating inside one
+//! sub-array (the unit the coordinator schedules); `programs` builds the
+//! Table 2 micro-programs.
+
+pub mod assemble;
+pub mod program;
+
+use crate::dram::command::{AapKind, RowId};
+
+/// One AAP instruction. The vector length (`size` in the paper's ISA) is
+/// carried by the enclosing `Program`; every AAP moves a full row.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AapInstr {
+    Aap1 { src: RowId, des: RowId },
+    Aap2 { src: RowId, des: [RowId; 2] },
+    Aap3 { src: [RowId; 2], des: RowId },
+    Aap4 { src: [RowId; 3], des: RowId },
+}
+
+impl AapInstr {
+    pub fn kind(&self) -> AapKind {
+        match self {
+            AapInstr::Aap1 { .. } => AapKind::Copy,
+            AapInstr::Aap2 { .. } => AapKind::DoubleCopy,
+            AapInstr::Aap3 { .. } => AapKind::Dra,
+            AapInstr::Aap4 { .. } => AapKind::Tra,
+        }
+    }
+
+    pub fn sources(&self) -> Vec<RowId> {
+        match self {
+            AapInstr::Aap1 { src, .. } | AapInstr::Aap2 { src, .. } => vec![*src],
+            AapInstr::Aap3 { src, .. } => src.to_vec(),
+            AapInstr::Aap4 { src, .. } => src.to_vec(),
+        }
+    }
+
+    pub fn dests(&self) -> Vec<RowId> {
+        match self {
+            AapInstr::Aap1 { des, .. }
+            | AapInstr::Aap3 { des, .. }
+            | AapInstr::Aap4 { des, .. } => vec![*des],
+            AapInstr::Aap2 { des, .. } => des.to_vec(),
+        }
+    }
+
+    /// Total simultaneously-activated word-lines in the wider of the two
+    /// activation phases (for reliability/energy accounting).
+    pub fn max_parallel_rows(&self) -> usize {
+        self.kind().source_rows().max(self.kind().dest_rows())
+    }
+}
+
+impl std::fmt::Display for AapInstr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s: Vec<String> = self
+            .sources()
+            .iter()
+            .chain(self.dests().iter())
+            .map(|r| r.to_string())
+            .collect();
+        write!(f, "AAP({})", s.join(", "))
+    }
+}
+
+/// A straight-line AAP program addressed within one sub-array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub instrs: Vec<AapInstr>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>) -> Self {
+        Program {
+            name: name.into(),
+            instrs: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, i: AapInstr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn aap_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// Latency on the given timing model (straight-line, no overlap — AAPs
+    /// within one sub-array serialize on the shared SA row).
+    pub fn duration_ns(&self, t: &crate::dram::timing::TimingParams) -> f64 {
+        t.seq_ns(self.aap_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::command::RowId::*;
+
+    #[test]
+    fn instr_accessors() {
+        let i = AapInstr::Aap3 {
+            src: [X(1), X(2)],
+            des: Data(5),
+        };
+        assert_eq!(i.kind(), AapKind::Dra);
+        assert_eq!(i.sources(), vec![X(1), X(2)]);
+        assert_eq!(i.dests(), vec![Data(5)]);
+        assert_eq!(i.max_parallel_rows(), 2);
+        assert_eq!(i.to_string(), "AAP(x1, x2, d5)");
+    }
+
+    #[test]
+    fn program_duration() {
+        let t = crate::dram::timing::TimingParams::default();
+        let mut p = Program::new("p");
+        p.push(AapInstr::Aap1 {
+            src: Data(0),
+            des: X(1),
+        });
+        p.push(AapInstr::Aap1 {
+            src: Data(1),
+            des: X(2),
+        });
+        assert_eq!(p.aap_count(), 2);
+        assert_eq!(p.duration_ns(&t), 180.0);
+    }
+}

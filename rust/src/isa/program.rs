@@ -1,0 +1,367 @@
+//! Table 2 micro-programs: the basic functions supported by DRIM, expressed
+//! as AAP sequences, plus the TRA-composed AND/OR family ("other operations
+//! such AND2/NAND2 and OR2/NOR2 in DRIM can be built on top of TRA").
+//!
+//! Control rows: DRIM (like Ambit) reserves two data rows per sub-array
+//! preset to all-zeros / all-ones for TRA-composed AND2/OR2 and for
+//! carry-in initialization. We use the top of the data-row space.
+
+use crate::dram::command::RowId::{self, *};
+
+use super::{AapInstr, Program};
+
+/// Reserved preset rows (initialized once by the controller at power-up,
+/// refreshed by RowClone from themselves like any other row).
+pub const CTRL_ZEROS: RowId = Data(499);
+pub const CTRL_ONES: RowId = Data(498);
+/// First data row usable by the allocator.
+pub const FIRST_FREE_DATA_ROW: u16 = 0;
+/// Last data row usable by the allocator (exclusive).
+pub const LAST_FREE_DATA_ROW: u16 = 498;
+
+/// `Dr ← Di` — Table 2 "copy": 1 AAP.
+pub fn copy(di: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("copy");
+    p.push(AapInstr::Aap1 { src: di, des: dr });
+    p
+}
+
+/// `Dr ← !Di` — Table 2 "NOT": 2 AAPs through DCC cell A.
+pub fn not(di: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("not");
+    // writing through dcc2 (cell A complement WL) stores !Di in cell A
+    p.push(AapInstr::Aap1 { src: di, des: Dcc(2) });
+    // reading through dcc1 (normal WL) presents cell A = !Di on BL
+    p.push(AapInstr::Aap1 { src: Dcc(1), des: dr });
+    p
+}
+
+/// `Dr ← MAJ3(Di, Dj, Dk)` — Table 2 "MAJ": 4 AAPs (3 copies + TRA).
+pub fn maj3(di: RowId, dj: RowId, dk: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("maj3");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    p.push(AapInstr::Aap1 { src: dk, des: X(3) });
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(2), X(3)],
+        des: dr,
+    });
+    p
+}
+
+/// `Dr ← MIN3(Di, Dj, Dk)` — complement of MAJ3 via DCC: 5 AAPs.
+pub fn min3(di: RowId, dj: RowId, dk: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("min3");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    p.push(AapInstr::Aap1 { src: dk, des: X(3) });
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(2), X(3)],
+        des: Dcc(2),
+    });
+    p.push(AapInstr::Aap1 { src: Dcc(1), des: dr });
+    p
+}
+
+/// `Dr ← Di ⊙ Dj` — Table 2 "XNOR2": 3 AAPs, the paper's headline op.
+pub fn xnor2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("xnor2");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    p.push(AapInstr::Aap3 {
+        src: [X(1), X(2)],
+        des: dr,
+    });
+    p
+}
+
+/// `Dr ← Di ⊕ Dj` — XOR2 = XNOR2 routed through a DCC complement
+/// word-line (Table 2 footnote): 4 AAPs.
+pub fn xor2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("xor2");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    // BL carries XNOR; storing via dcc2 leaves cell A = XOR
+    p.push(AapInstr::Aap3 {
+        src: [X(1), X(2)],
+        des: Dcc(2),
+    });
+    p.push(AapInstr::Aap1 { src: Dcc(1), des: dr });
+    p
+}
+
+/// `Dr ← Di AND Dj` — TRA with the zeros control row: 4 AAPs ("averagely
+/// 360ns", paper §2.2). MAJ3(a, b, 0) = a·b.
+pub fn and2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("and2");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    p.push(AapInstr::Aap1 { src: CTRL_ZEROS, des: X(3) });
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(2), X(3)],
+        des: dr,
+    });
+    p
+}
+
+/// `Dr ← Di OR Dj` — TRA with the ones control row: MAJ3(a, b, 1) = a+b.
+pub fn or2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = Program::new("or2");
+    p.push(AapInstr::Aap1 { src: di, des: X(1) });
+    p.push(AapInstr::Aap1 { src: dj, des: X(2) });
+    p.push(AapInstr::Aap1 { src: CTRL_ONES, des: X(3) });
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(2), X(3)],
+        des: dr,
+    });
+    p
+}
+
+/// `Dr ← !(Di AND Dj)` — AND2 into DCC, read complement: 5 AAPs.
+pub fn nand2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = and2(di, dj, Dcc(2));
+    p.name = "nand2".into();
+    p.push(AapInstr::Aap1 { src: Dcc(1), des: dr });
+    p
+}
+
+/// `Dr ← !(Di OR Dj)` — OR2 into DCC, read complement: 5 AAPs.
+pub fn nor2(di: RowId, dj: RowId, dr: RowId) -> Program {
+    let mut p = or2(di, dj, Dcc(2));
+    p.name = "nor2".into();
+    p.push(AapInstr::Aap1 { src: Dcc(1), des: dr });
+    p
+}
+
+/// One full-adder bit-slice — Table 2 "Add/Sub", 7 AAPs:
+///
+/// `Sum ← Di ⊕ Dj ⊕ Dk` (two back-to-back DRA XOR2s),
+/// `Cout ← MAJ3(Di, Dj, Dk)` (one TRA).
+///
+/// Note on the final TRA: the paper's table prints `AAP(x1, x2, x3, Cout)`,
+/// but x2 and x4 are consumed (destructively) by the first DRA and x6 by
+/// the second — that is exactly why each operand is double-copied by the
+/// AAP-type-2s. The intact copies are x1, x3, x5, which is what we (and
+/// any working implementation) must feed the TRA.
+pub fn full_adder(
+    di: RowId,
+    dj: RowId,
+    dk: RowId,
+    sum: RowId,
+    cout: RowId,
+) -> Program {
+    let mut p = Program::new("add");
+    p.push(AapInstr::Aap2 { src: di, des: [X(1), X(2)] });
+    p.push(AapInstr::Aap2 { src: dj, des: [X(3), X(4)] });
+    p.push(AapInstr::Aap2 { src: dk, des: [X(5), X(6)] });
+    // DRA(x2, x4) → BL = XNOR(a,b); store via dcc2 → cell A = a⊕b
+    p.push(AapInstr::Aap3 {
+        src: [X(2), X(4)],
+        des: Dcc(2),
+    });
+    // DRA(x6, dcc1) → BL = XNOR(c, a⊕b); store via dcc4 → cell B = Sum
+    p.push(AapInstr::Aap3 {
+        src: [X(6), Dcc(1)],
+        des: Dcc(4),
+    });
+    p.push(AapInstr::Aap1 { src: Dcc(3), des: sum });
+    // TRA over the untouched copies → carry-out
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(3), X(5)],
+        des: cout,
+    });
+    p
+}
+
+/// One full-subtractor bit-slice: `a - b = a + !b (+1 via carry-in)`.
+/// 8 AAPs — the Dj copy is replaced by a NOT-copy through DCC cell A.
+pub fn full_subtractor(
+    di: RowId,
+    dj: RowId,
+    bk: RowId,
+    diff: RowId,
+    bout: RowId,
+) -> Program {
+    let mut p = Program::new("sub");
+    p.push(AapInstr::Aap2 { src: di, des: [X(1), X(2)] });
+    // !Dj via DCC cell A, then double-copy it
+    p.push(AapInstr::Aap1 { src: dj, des: Dcc(2) });
+    p.push(AapInstr::Aap2 {
+        src: Dcc(1),
+        des: [X(3), X(4)],
+    });
+    p.push(AapInstr::Aap2 { src: bk, des: [X(5), X(6)] });
+    p.push(AapInstr::Aap3 {
+        src: [X(2), X(4)],
+        des: Dcc(2),
+    });
+    p.push(AapInstr::Aap3 {
+        src: [X(6), Dcc(1)],
+        des: Dcc(4),
+    });
+    p.push(AapInstr::Aap1 { src: Dcc(3), des: diff });
+    p.push(AapInstr::Aap4 {
+        src: [X(1), X(3), X(5)],
+        des: bout,
+    });
+    p
+}
+
+/// The op vocabulary exposed by the coordinator / CLI.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum BulkOp {
+    Copy,
+    Not,
+    Xnor2,
+    Xor2,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Maj3,
+    Min3,
+    Add,
+    Sub,
+}
+
+impl BulkOp {
+    pub fn arity(self) -> usize {
+        match self {
+            BulkOp::Copy | BulkOp::Not => 1,
+            BulkOp::Maj3 | BulkOp::Min3 | BulkOp::Add | BulkOp::Sub => 3,
+            _ => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BulkOp> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "copy" => BulkOp::Copy,
+            "not" => BulkOp::Not,
+            "xnor" | "xnor2" => BulkOp::Xnor2,
+            "xor" | "xor2" => BulkOp::Xor2,
+            "and" | "and2" => BulkOp::And2,
+            "or" | "or2" => BulkOp::Or2,
+            "nand" | "nand2" => BulkOp::Nand2,
+            "nor" | "nor2" => BulkOp::Nor2,
+            "maj" | "maj3" => BulkOp::Maj3,
+            "min" | "min3" => BulkOp::Min3,
+            "add" => BulkOp::Add,
+            "sub" => BulkOp::Sub,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BulkOp::Copy => "copy",
+            BulkOp::Not => "not",
+            BulkOp::Xnor2 => "xnor2",
+            BulkOp::Xor2 => "xor2",
+            BulkOp::And2 => "and2",
+            BulkOp::Or2 => "or2",
+            BulkOp::Nand2 => "nand2",
+            BulkOp::Nor2 => "nor2",
+            BulkOp::Maj3 => "maj3",
+            BulkOp::Min3 => "min3",
+            BulkOp::Add => "add",
+            BulkOp::Sub => "sub",
+        }
+    }
+
+    /// Build the micro-program for this op over generic operand rows.
+    /// `add`/`sub` return the *bit-slice* program (the controller iterates
+    /// planes); `srcs[2]` is then the carry/borrow-in row and `dests[1]`
+    /// the carry/borrow-out row.
+    pub fn program(self, srcs: &[RowId], dests: &[RowId]) -> Program {
+        match self {
+            BulkOp::Copy => copy(srcs[0], dests[0]),
+            BulkOp::Not => not(srcs[0], dests[0]),
+            BulkOp::Xnor2 => xnor2(srcs[0], srcs[1], dests[0]),
+            BulkOp::Xor2 => xor2(srcs[0], srcs[1], dests[0]),
+            BulkOp::And2 => and2(srcs[0], srcs[1], dests[0]),
+            BulkOp::Or2 => or2(srcs[0], srcs[1], dests[0]),
+            BulkOp::Nand2 => nand2(srcs[0], srcs[1], dests[0]),
+            BulkOp::Nor2 => nor2(srcs[0], srcs[1], dests[0]),
+            BulkOp::Maj3 => maj3(srcs[0], srcs[1], srcs[2], dests[0]),
+            BulkOp::Min3 => min3(srcs[0], srcs[1], srcs[2], dests[0]),
+            BulkOp::Add => full_adder(srcs[0], srcs[1], srcs[2], dests[0], dests[1]),
+            BulkOp::Sub => {
+                full_subtractor(srcs[0], srcs[1], srcs[2], dests[0], dests[1])
+            }
+        }
+    }
+
+    pub const ALL: [BulkOp; 12] = [
+        BulkOp::Copy,
+        BulkOp::Not,
+        BulkOp::Xnor2,
+        BulkOp::Xor2,
+        BulkOp::And2,
+        BulkOp::Or2,
+        BulkOp::Nand2,
+        BulkOp::Nor2,
+        BulkOp::Maj3,
+        BulkOp::Min3,
+        BulkOp::Add,
+        BulkOp::Sub,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_aap_counts() {
+        // Table 2, column "Command Sequence": copy=1, NOT=2, MAJ=4,
+        // XNOR2=3, Add=7 AAPs.
+        assert_eq!(copy(Data(0), Data(1)).aap_count(), 1);
+        assert_eq!(not(Data(0), Data(1)).aap_count(), 2);
+        assert_eq!(maj3(Data(0), Data(1), Data(2), Data(3)).aap_count(), 4);
+        assert_eq!(xnor2(Data(0), Data(1), Data(2)).aap_count(), 3);
+        assert_eq!(
+            full_adder(Data(0), Data(1), Data(2), Data(3), Data(4)).aap_count(),
+            7
+        );
+    }
+
+    #[test]
+    fn and2_is_four_aaps_360ns() {
+        // paper §2.2: "TRA method needs averagely 360ns" for AND2/OR2
+        let t = crate::dram::timing::TimingParams::default();
+        assert_eq!(and2(Data(0), Data(1), Data(2)).duration_ns(&t), 360.0);
+    }
+
+    #[test]
+    fn all_programs_validate() {
+        use crate::dram::command::AapKind;
+        use crate::subarray::decoder::validate_aap;
+        for op in BulkOp::ALL {
+            let srcs = [Data(0), Data(1), Data(2)];
+            let dests = [Data(3), Data(4)];
+            let p = op.program(&srcs[..op.arity()], &dests);
+            assert!(!p.instrs.is_empty());
+            for i in &p.instrs {
+                let k: AapKind = i.kind();
+                validate_aap(k, &i.sources(), &i.dests());
+            }
+        }
+    }
+
+    #[test]
+    fn bulkop_parse_names() {
+        for op in BulkOp::ALL {
+            assert_eq!(BulkOp::parse(op.name()), Some(op));
+        }
+        assert_eq!(BulkOp::parse("xnor"), Some(BulkOp::Xnor2));
+        assert_eq!(BulkOp::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn xnor_uses_dra_not_tra() {
+        let p = xnor2(Data(0), Data(1), Data(2));
+        let kinds: Vec<_> = p.instrs.iter().map(|i| i.kind()).collect();
+        assert!(kinds.contains(&crate::dram::command::AapKind::Dra));
+        assert!(!kinds.contains(&crate::dram::command::AapKind::Tra));
+    }
+}

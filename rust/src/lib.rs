@@ -1,0 +1,37 @@
+//! # DRIM — processing-in-DRAM for bulk bit-wise X(N)OR
+//!
+//! Full-system reproduction of *"Accelerating Bulk Bit-Wise X(N)OR
+//! Operation in Processing-in-DRAM Platform"* (Angizi & Fan, 2019).
+//!
+//! The crate is organized bottom-up (see DESIGN.md for the complete map):
+//!
+//! * [`dram`] — DDR4-class functional + timing substrate.
+//! * [`subarray`] — the computational sub-array: modified row decoder,
+//!   reconfigurable sense amplifier, DRA/TRA charge-sharing execution.
+//! * [`isa`] — the four AAP instruction types and the Table 2
+//!   micro-programs.
+//! * [`controller`] — instruction dispatch, enable signals, row
+//!   allocation, cycle/energy accounting.
+//! * [`coordinator`] — the serving layer: bulk-op requests sharded across
+//!   banks × sub-arrays with dynamic batching.
+//! * [`analog`] — behavioural circuit models (margins, Monte-Carlo
+//!   variation) mirrored against the JAX/Pallas artifacts.
+//! * [`energy`] — per-command energy model (Fig. 9).
+//! * [`platforms`] — baseline models (CPU, GPU, HMC, Ambit, DRISA) and
+//!   DRIM-R/DRIM-S for the Fig. 8 throughput comparison.
+//! * [`runtime`] — PJRT bridge executing the AOT-lowered JAX artifacts
+//!   (golden checks, Monte-Carlo, Fig. 6 transients).
+//! * [`apps`] — library-level applications (DNA matching, XOR cipher,
+//!   bit-serial vector math).
+
+pub mod analog;
+pub mod apps;
+pub mod controller;
+pub mod coordinator;
+pub mod dram;
+pub mod energy;
+pub mod isa;
+pub mod platforms;
+pub mod runtime;
+pub mod subarray;
+pub mod util;

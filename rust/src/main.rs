@@ -1,0 +1,359 @@
+//! `drim` — CLI for the DRIM reproduction.
+//!
+//! Subcommands map 1:1 onto the paper's artifacts (see DESIGN.md):
+//!   isa          Table 1 (enable bits) + Table 2 (command sequences)
+//!   area         §3.4 area-overhead breakdown
+//!   montecarlo   Table 3 (process variation; --jax uses the PJRT artifact)
+//!   transient    Fig. 6 waveforms (--csv FILE; --jax uses the artifact)
+//!   fig8         Fig. 8 throughput table across all platforms
+//!   fig9         Fig. 9 energy table
+//!   demo         run a bulk op through the service and golden-check it
+//!   serve        synthetic serving workload through the coordinator
+
+use drim::analog::montecarlo::{run_montecarlo, TABLE3_CORNERS, TABLE3_PAPER};
+use drim::analog::params as aparams;
+use drim::analog::transient as rtransient;
+use drim::controller::enables;
+use drim::coordinator::{BatchPolicy, BulkRequest, DrimService, Payload, ServiceConfig};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::isa::{assemble, program};
+use drim::platforms::{all_platforms, FIG8_OPS};
+use drim::subarray::area::AreaBreakdown;
+use drim::util::bitrow::BitRow;
+use drim::util::cli::Args;
+use drim::util::rng::Rng;
+use drim::util::stats::fmt_rate;
+use drim::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "isa" => cmd_isa(&args),
+        "area" => cmd_area(),
+        "montecarlo" | "mc" => cmd_montecarlo(&args),
+        "transient" => cmd_transient(&args),
+        "fig8" => cmd_fig8(&args),
+        "fig9" => cmd_fig9(),
+        "demo" => cmd_demo(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            println!("{}", HELP);
+        }
+    }
+}
+
+const HELP: &str = "\
+drim — processing-in-DRAM X(N)OR accelerator (paper reproduction)
+
+USAGE: drim <COMMAND> [flags]
+
+COMMANDS:
+  isa [--table1] [--table2]   print the paper's Table 1 / Table 2
+  area                        §3.4 area overhead breakdown
+  montecarlo [--trials N] [--seed S] [--jax]
+                              Table 3 process-variation analysis
+  transient [--csv FILE] [--jax]
+                              Fig. 6 DRA transient waveforms
+  fig8 [--bits LOG2]          Fig. 8 throughput comparison
+  fig9                        Fig. 9 energy comparison
+  demo [--op OP] [--bits N] [--golden]
+                              run one bulk op end-to-end (+PJRT check)
+  serve [--requests N] [--bits N] [--policy immediate|coalesce]
+                              synthetic serving workload + metrics
+";
+
+fn cmd_isa(args: &Args) {
+    let both = !args.has("table1") && !args.has("table2");
+    if args.has("table1") || both {
+        println!("Table 1: control bits in the Sense Amplification state\n");
+        println!("{}", enables::table1());
+    }
+    if args.has("table2") || both {
+        use drim::dram::command::RowId::*;
+        println!("Table 2: basic functions supported by DRIM\n");
+        for (label, p) in [
+            ("copy", program::copy(Data(10), Data(20))),
+            ("NOT", program::not(Data(10), Data(20))),
+            ("MAJ3", program::maj3(Data(10), Data(11), Data(12), Data(20))),
+            ("XNOR2", program::xnor2(Data(10), Data(11), Data(20))),
+            ("XOR2", program::xor2(Data(10), Data(11), Data(20))),
+            (
+                "Add",
+                program::full_adder(Data(10), Data(11), Data(12), Data(20), Data(21)),
+            ),
+            (
+                "Sub",
+                program::full_subtractor(Data(10), Data(11), Data(12), Data(20), Data(21)),
+            ),
+        ] {
+            println!("-- {label} ({} AAPs)", p.aap_count());
+            print!("{}", assemble::format_program(&p));
+            println!();
+        }
+    }
+}
+
+fn cmd_area() {
+    println!("DRIM area overhead (paper §3.4):\n");
+    println!("{}", AreaBreakdown::drim().report());
+}
+
+fn cmd_montecarlo(args: &Args) {
+    let trials = args.usize("trials", aparams::MC_TRIALS);
+    let seed = args.u64("seed", 7);
+    let use_jax = args.has("jax");
+    let mut t = Table::new(&[
+        "variation",
+        "TRA err% (paper)",
+        "TRA err%",
+        "DRA err% (paper)",
+        "DRA err%",
+    ]);
+    let mut rt = if use_jax {
+        Some(
+            drim::runtime::Runtime::load_default()
+                .expect("artifacts missing — run `make artifacts`"),
+        )
+    } else {
+        None
+    };
+    for (i, &v) in TABLE3_CORNERS.iter().enumerate() {
+        let (dra, tra) = if let Some(rt) = rt.as_mut() {
+            let (de, te, dn, tn) = rt
+                .mc_variation([seed as u32, i as u32], v as f32)
+                .expect("mc artifact failed");
+            (
+                100.0 * de as f64 / dn as f64,
+                100.0 * te as f64 / tn as f64,
+            )
+        } else {
+            let r = run_montecarlo(v, trials, seed + i as u64);
+            (r.dra_pct(), r.tra_pct())
+        };
+        let (pd, pt) = TABLE3_PAPER[i];
+        t.row(&[
+            format!("±{:.0}%", v * 100.0),
+            format!("{pt}"),
+            format!("{tra:.2}"),
+            format!("{pd}"),
+            format!("{dra:.2}"),
+        ]);
+    }
+    println!(
+        "Table 3: Monte-Carlo process variation ({} trials, {})\n",
+        trials,
+        if use_jax {
+            "JAX artifact via PJRT"
+        } else {
+            "rust mirror"
+        }
+    );
+    t.print();
+}
+
+fn cmd_transient(args: &Args) {
+    let use_jax = args.has("jax");
+    let steps = aparams::transient_steps();
+    // per case: flat [t][k] with k ∈ (BL, BL̄, Vcap-Di, Vcap-Dj)
+    let data: Vec<Vec<f64>> = if use_jax {
+        let mut rt =
+            drim::runtime::Runtime::load_default().expect("artifacts missing");
+        let flat = rt
+            .transient([[0., 0.], [0., 1.], [1., 0.], [1., 1.]])
+            .expect("transient artifact failed");
+        (0..4)
+            .map(|c| {
+                (0..steps * 4)
+                    .map(|i| flat[c * steps * 4 + i] as f64)
+                    .collect()
+            })
+            .collect()
+    } else {
+        rtransient::all_cases()
+            .into_iter()
+            .map(|(_, _, w)| w.into_iter().flatten().collect())
+            .collect()
+    };
+    if let Some(path) = args.get("csv") {
+        let mut out = String::from(
+            "t_ns,bl_00,blb_00,ci_00,cj_00,bl_01,blb_01,ci_01,cj_01,\
+             bl_10,blb_10,ci_10,cj_10,bl_11,blb_11,ci_11,cj_11\n",
+        );
+        for t in 0..steps {
+            let mut row = vec![format!("{:.3}", t as f64 * aparams::DT_NS)];
+            for case in &data {
+                for k in 0..4 {
+                    row.push(format!("{:.5}", case[t * 4 + k]));
+                }
+            }
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        std::fs::write(path, out).expect("write csv");
+        println!("wrote {steps}-step waveforms to {path}");
+    }
+    println!(
+        "\nFig. 6 transient end-states ({}):",
+        if use_jax { "JAX artifact" } else { "rust mirror" }
+    );
+    for (i, name) in ["Di=0,Dj=0", "Di=0,Dj=1", "Di=1,Dj=0", "Di=1,Dj=1"]
+        .iter()
+        .enumerate()
+    {
+        let last = &data[i][(steps - 1) * 4..];
+        println!(
+            "  {name}:  BL={:.3} V  BL̄={:.3} V  Vcap-Di={:.3} V  Vcap-Dj={:.3} V   (XNOR={})",
+            last[0],
+            last[1],
+            last[2],
+            last[3],
+            (last[0] > 0.6) as u8
+        );
+    }
+}
+
+fn cmd_fig8(args: &Args) {
+    let log2 = args.usize("bits", 29);
+    let bits = 1u64 << log2;
+    println!("Fig. 8: raw throughput, 2^{log2}-bit vectors (result bits/s)\n");
+    let mut t = Table::new(&["platform", "NOT", "XNOR2", "ADD"]);
+    let plats = all_platforms();
+    for p in &plats {
+        t.row(&[
+            p.name().to_string(),
+            fmt_rate(p.throughput_bits_per_sec(BulkOp::Not, bits)),
+            fmt_rate(p.throughput_bits_per_sec(BulkOp::Xnor2, bits)),
+            fmt_rate(p.throughput_bits_per_sec(BulkOp::Add, bits)),
+        ]);
+    }
+    t.print();
+    let get = |n: &str, op: BulkOp| {
+        plats
+            .iter()
+            .find(|p| p.name() == n)
+            .unwrap()
+            .throughput_bits_per_sec(op, bits)
+    };
+    let avg = |n: &str| {
+        FIG8_OPS
+            .iter()
+            .map(|&op| get("DRIM-R", op) / get(n, op))
+            .sum::<f64>()
+            / FIG8_OPS.len() as f64
+    };
+    println!("\nHeadline ratios (measured | paper):");
+    println!("  DRIM-R / CPU  (avg):    {:6.1}x | 71x", avg("CPU"));
+    println!("  DRIM-R / GPU  (avg):    {:6.1}x | 8.4x", avg("GPU"));
+    println!(
+        "  DRIM-R / Ambit (XNOR2):  {:6.1}x | 2.3x",
+        get("DRIM-R", BulkOp::Xnor2) / get("Ambit", BulkOp::Xnor2)
+    );
+    println!(
+        "  DRIM-R / DRISA-1T1C:     {:6.1}x | 1.9x",
+        get("DRIM-R", BulkOp::Xnor2) / get("DRISA-1T1C", BulkOp::Xnor2)
+    );
+    println!(
+        "  DRIM-R / DRISA-3T1C:     {:6.1}x | 3.7x",
+        get("DRIM-R", BulkOp::Xnor2) / get("DRISA-3T1C", BulkOp::Xnor2)
+    );
+    let hmc_avg = FIG8_OPS
+        .iter()
+        .map(|&op| get("DRIM-S", op) / get("HMC", op))
+        .sum::<f64>()
+        / FIG8_OPS.len() as f64;
+    println!("  DRIM-S / HMC  (avg):    {hmc_avg:6.1}x | 13.5x");
+}
+
+fn cmd_fig9() {
+    println!("Fig. 9: DRAM energy per KB of result (nJ)\n");
+    let mut t = Table::new(&["platform", "copy", "NOT", "XNOR2", "ADD"]);
+    for p in all_platforms() {
+        let cell = |op: BulkOp| {
+            p.energy_pj_per_kb(op)
+                .map(|e| format!("{:.1}", e / 1000.0))
+                .unwrap_or_else(|| "-".into())
+        };
+        t.row(&[
+            p.name().to_string(),
+            cell(BulkOp::Copy),
+            cell(BulkOp::Not),
+            cell(BulkOp::Xnor2),
+            cell(BulkOp::Add),
+        ]);
+    }
+    t.print();
+    let m = drim::energy::EnergyModel::default();
+    let ddr4 = m.ddr4_copy_pj(8192.0);
+    let in_dram = m.aap_pj(drim::dram::command::AapKind::Copy, 8192);
+    println!(
+        "\nDDR4-interface copy: {:.1} nJ/KB → in-DRAM copy is {:.0}x cheaper (paper: 69x)",
+        ddr4 / 1000.0,
+        ddr4 / in_dram
+    );
+}
+
+fn cmd_demo(args: &Args) {
+    let op = BulkOp::parse(args.get_or("op", "xnor2")).expect("unknown --op");
+    let bits = args.usize("bits", 100_000);
+    let service = DrimService::new(ServiceConfig::default());
+    let mut rng = Rng::new(args.u64("seed", 1));
+    println!("demo: {} over {bits} bits", op.name());
+
+    let operands: Vec<BitRow> = (0..op.arity())
+        .map(|_| BitRow::random(bits, &mut rng))
+        .collect();
+    let resp = service.run(BulkRequest::bitwise(op, operands.clone()));
+    let result = match &resp.result {
+        Payload::Bits(b) => b.clone(),
+        _ => unreachable!(),
+    };
+    println!(
+        "  executed {} AAPs, simulated latency {:.2} µs, DRAM energy {:.2} µJ",
+        resp.stats.aaps,
+        resp.sim_latency_ns / 1e3,
+        resp.stats.energy_pj / 1e6
+    );
+    if args.has("golden") {
+        let mut rt = drim::runtime::Runtime::load_default()
+            .expect("artifacts missing — run `make artifacts`");
+        let refs: Vec<&BitRow> = operands.iter().collect();
+        let n = drim::runtime::golden::verify_bulk(&mut rt, op.name(), &refs, &result)
+            .expect("golden check FAILED");
+        println!("  golden check vs JAX artifact: {n} bits OK");
+    }
+    println!("{}", service.metrics.snapshot().report());
+}
+
+fn cmd_serve(args: &Args) {
+    let n = args.usize("requests", 64);
+    let bits = args.usize("bits", 65_536);
+    let policy = match args.get_or("policy", "coalesce") {
+        "immediate" => BatchPolicy::Immediate,
+        _ => BatchPolicy::Coalesce,
+    };
+    let cfg = ServiceConfig {
+        geometry: DramGeometry::default(),
+        policy,
+        ..ServiceConfig::default()
+    };
+    let service = DrimService::new(cfg);
+    let mut rng = Rng::new(args.u64("seed", 3));
+    println!("serving {n} requests × {bits} bits (policy {policy:?})");
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let op = [BulkOp::Xnor2, BulkOp::Xor2, BulkOp::And2, BulkOp::Not][i % 4];
+        let operands: Vec<BitRow> = (0..op.arity())
+            .map(|_| BitRow::random(bits, &mut rng))
+            .collect();
+        pending.push(service.submit(BulkRequest::bitwise(op, operands)));
+    }
+    for p in pending {
+        p.recv().expect("response");
+    }
+    let wall = t0.elapsed();
+    println!("\ncompleted in {wall:?} (host)\n");
+    println!("{}", service.metrics.snapshot().report());
+}

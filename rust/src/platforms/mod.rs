@@ -1,0 +1,105 @@
+//! Platform models for the paper's evaluation (Fig. 8 throughput, Fig. 9
+//! energy): Von-Neumann baselines (CPU / GPU / HMC), prior processing-in-
+//! DRAM designs (Ambit, DRISA-1T1C, DRISA-3T1C), and DRIM-R / DRIM-S.
+//!
+//! Von-Neumann platforms are bandwidth-roofline models with the paper's
+//! published link widths; PIM platforms are *command-sequence-accurate*:
+//! their throughput/energy derive from the exact AAP/NOR/latch sequences
+//! each design needs per operation, on the shared DRAM timing/energy
+//! substrate. See DESIGN.md's substitution ledger.
+//!
+//! Throughput metric: **result bits per second** (the paper's "Operations"
+//! normalized to bit-operations) on `2^27..2^29`-bit input vectors.
+
+pub mod pim;
+pub mod vonneumann;
+
+use crate::isa::program::BulkOp;
+
+/// The three bulk operations of Fig. 8/9.
+pub const FIG8_OPS: [BulkOp; 3] = [BulkOp::Not, BulkOp::Xnor2, BulkOp::Add];
+
+/// One evaluated platform.
+pub trait Platform {
+    fn name(&self) -> &'static str;
+
+    /// Sustained throughput in result-bits/s for vectors of `vec_bits`.
+    fn throughput_bits_per_sec(&self, op: BulkOp, vec_bits: u64) -> f64;
+
+    /// DRAM-side energy per KB of result (pJ); None where the paper does
+    /// not report the platform in Fig. 9.
+    fn energy_pj_per_kb(&self, op: BulkOp) -> Option<f64>;
+}
+
+/// All platforms in the paper's Fig. 8, in its display order.
+pub fn all_platforms() -> Vec<Box<dyn Platform>> {
+    vec![
+        Box::new(vonneumann::Cpu::default()),
+        Box::new(vonneumann::Gpu::default()),
+        Box::new(vonneumann::Hmc::default()),
+        Box::new(pim::ambit()),
+        Box::new(pim::drisa_1t1c()),
+        Box::new(pim::drisa_3t1c()),
+        Box::new(pim::drim_r()),
+        Box::new(pim::drim_s()),
+    ]
+}
+
+/// Fetch one platform by (lowercase) name.
+pub fn by_name(name: &str) -> Option<Box<dyn Platform>> {
+    all_platforms()
+        .into_iter()
+        .find(|p| p.name().eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_fig8() {
+        let names: Vec<_> = all_platforms().iter().map(|p| p.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "CPU",
+                "GPU",
+                "HMC",
+                "Ambit",
+                "DRISA-1T1C",
+                "DRISA-3T1C",
+                "DRIM-R",
+                "DRIM-S"
+            ]
+        );
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("drim-r").is_some());
+        assert!(by_name("abacus").is_none());
+    }
+
+    #[test]
+    fn fig8_ordering_holds_for_xnor2() {
+        // the paper's qualitative result: CPU < GPU < HMC < DRISA-3T1C <
+        // Ambit < DRISA-1T1C < DRIM-R ≤ DRIM-S for X(N)OR2
+        let t: Vec<(String, f64)> = all_platforms()
+            .iter()
+            .map(|p| {
+                (
+                    p.name().to_string(),
+                    p.throughput_bits_per_sec(BulkOp::Xnor2, 1 << 29),
+                )
+            })
+            .collect();
+        let get = |n: &str| t.iter().find(|(m, _)| m == n).unwrap().1;
+        assert!(get("CPU") < get("GPU"));
+        assert!(get("GPU") < get("HMC"));
+        assert!(get("HMC") < get("DRISA-3T1C"));
+        assert!(get("DRISA-3T1C") < get("Ambit"));
+        assert!(get("Ambit") < get("DRISA-1T1C"));
+        assert!(get("DRISA-1T1C") < get("DRIM-R"));
+        assert!(get("DRIM-R") <= get("DRIM-S"));
+    }
+}

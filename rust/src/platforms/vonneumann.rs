@@ -1,0 +1,201 @@
+//! Von-Neumann baselines: bandwidth-roofline models.
+//!
+//! Bulk bit-wise operations on these machines are strictly memory-bound:
+//! every result byte costs `traffic_factor` bytes of DRAM traffic (2 for
+//! NOT: read A + write R; 3 for two-operand ops and add: read A, read B,
+//! write R). Throughput = effective_bandwidth × 8 / traffic_factor.
+//!
+//! Published link widths (paper §3.4):
+//! * CPU — Core-i7 6700, two 64-bit DDR4-1866/2133 channels → 34.1 GB/s
+//!   peak, 85 % streaming efficiency.
+//! * GPU — GTX 1080Ti, 352-bit GDDR5X @ 11 Gbps → 484 GB/s peak; bulk
+//!   byte-wise kernels on Pascal sustain ≈50 % on this access pattern
+//!   (three concurrent streams thrash the partition/channel mapping).
+//! * HMC 2.0 — 32 vaults × 10 GB/s vault bandwidth; near-memory atomics
+//!   make it *result*-bound (operands never cross the external links), so
+//!   the 320 GB/s aggregate applies to the result stream; 16-byte atomic
+//!   request granularity bounds the add-rate.
+//!
+//! Fixed per-call setup (dispatch/launch) differentiates the paper's three
+//! vector lengths slightly, as in Fig. 8.
+
+use crate::isa::program::BulkOp;
+
+use super::Platform;
+
+fn traffic_factor(op: BulkOp) -> f64 {
+    match op {
+        BulkOp::Copy => 2.0,
+        BulkOp::Not => 2.0,
+        BulkOp::Add | BulkOp::Sub | BulkOp::Maj3 | BulkOp::Min3 => 3.0,
+        _ => 3.0, // two-operand bit-wise: read 2, write 1
+    }
+}
+
+fn roofline(bw_bytes: f64, eff: f64, op: BulkOp, vec_bits: u64, setup_ns: f64) -> f64 {
+    let result_bits = vec_bits as f64;
+    let traffic_bytes = result_bits / 8.0 * traffic_factor(op);
+    let t = traffic_bytes / (bw_bytes * eff) + setup_ns * 1e-9;
+    result_bits / t
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct Cpu {
+    pub peak_bw: f64,
+    pub eff: f64,
+}
+
+impl Default for Cpu {
+    fn default() -> Self {
+        Cpu {
+            peak_bw: 34.1e9,
+            eff: 0.85,
+        }
+    }
+}
+
+impl Platform for Cpu {
+    fn name(&self) -> &'static str {
+        "CPU"
+    }
+
+    fn throughput_bits_per_sec(&self, op: BulkOp, vec_bits: u64) -> f64 {
+        roofline(self.peak_bw, self.eff, op, vec_bits, 2_000.0)
+    }
+
+    fn energy_pj_per_kb(&self, op: BulkOp) -> Option<f64> {
+        // DRAM-side energy only (paper footnote 1): traffic through the
+        // DDR4 interface + core accesses. 1 KB of result = 8192 bits.
+        let m = crate::energy::EnergyModel::default();
+        Some(m.offchip_pj(8192.0 * traffic_factor(op)))
+    }
+}
+
+pub struct Gpu {
+    pub peak_bw: f64,
+    pub eff: f64,
+}
+
+impl Default for Gpu {
+    fn default() -> Self {
+        Gpu {
+            peak_bw: 484.0e9,
+            eff: 0.50,
+        }
+    }
+}
+
+impl Platform for Gpu {
+    fn name(&self) -> &'static str {
+        "GPU"
+    }
+
+    fn throughput_bits_per_sec(&self, op: BulkOp, vec_bits: u64) -> f64 {
+        roofline(self.peak_bw, self.eff, op, vec_bits, 10_000.0)
+    }
+
+    fn energy_pj_per_kb(&self, _op: BulkOp) -> Option<f64> {
+        None // not in Fig. 9
+    }
+}
+
+pub struct Hmc {
+    pub vaults: usize,
+    pub vault_bw: f64,
+    pub eff: f64,
+}
+
+impl Default for Hmc {
+    fn default() -> Self {
+        Hmc {
+            vaults: 32,
+            vault_bw: 10.0e9,
+            eff: 0.70,
+        }
+    }
+}
+
+impl Platform for Hmc {
+    fn name(&self) -> &'static str {
+        "HMC"
+    }
+
+    fn throughput_bits_per_sec(&self, op: BulkOp, vec_bits: u64) -> f64 {
+        let agg = self.vaults as f64 * self.vault_bw * self.eff;
+        let result_bits = vec_bits as f64;
+        let t = match op {
+            // near-memory bit-wise: result stream bound
+            BulkOp::Not | BulkOp::Copy => result_bits / 8.0 / agg,
+            BulkOp::Add | BulkOp::Sub => {
+                // 16-byte atomic per 32-bit add → request-rate bound
+                let adds = result_bits / 32.0;
+                adds * 16.0 / agg
+            }
+            _ => result_bits / 8.0 / agg,
+        } + 3_000.0e-9;
+        result_bits / t
+    }
+
+    fn energy_pj_per_kb(&self, _op: BulkOp) -> Option<f64> {
+        None // not in Fig. 9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: u64 = 1 << 29;
+
+    #[test]
+    fn cpu_xnor_near_roofline() {
+        let c = Cpu::default();
+        let t = c.throughput_bits_per_sec(BulkOp::Xnor2, V);
+        // 34.1 GB/s × 0.85 × 8 / 3 ≈ 77 Gbit/s
+        assert!((70e9..85e9).contains(&t), "{t:e}");
+    }
+
+    #[test]
+    fn not_is_faster_than_xnor_on_bandwidth_bound_machines() {
+        // CPU/GPU pay per-operand traffic; HMC is result-bound, so NOT and
+        // XNOR2 tie there (both stream one result).
+        for p in [&Cpu::default() as &dyn Platform, &Gpu::default()] {
+            assert!(
+                p.throughput_bits_per_sec(BulkOp::Not, V)
+                    > p.throughput_bits_per_sec(BulkOp::Xnor2, V)
+            );
+        }
+        let h = Hmc::default();
+        assert!(
+            h.throughput_bits_per_sec(BulkOp::Not, V)
+                >= h.throughput_bits_per_sec(BulkOp::Xnor2, V)
+        );
+    }
+
+    #[test]
+    fn hmc_beats_gpu_beats_cpu_for_xnor() {
+        let (c, g, h) = (Cpu::default(), Gpu::default(), Hmc::default());
+        let tc = c.throughput_bits_per_sec(BulkOp::Xnor2, V);
+        let tg = g.throughput_bits_per_sec(BulkOp::Xnor2, V);
+        let th = h.throughput_bits_per_sec(BulkOp::Xnor2, V);
+        assert!(tc < tg && tg < th, "{tc:e} {tg:e} {th:e}");
+    }
+
+    #[test]
+    fn larger_vectors_amortize_setup() {
+        let g = Gpu::default();
+        assert!(
+            g.throughput_bits_per_sec(BulkOp::Xnor2, 1 << 29)
+                > g.throughput_bits_per_sec(BulkOp::Xnor2, 1 << 20)
+        );
+    }
+
+    #[test]
+    fn cpu_energy_is_traffic_times_offchip() {
+        let c = Cpu::default();
+        // 3 KB of traffic per result-KB × 25 pJ/bit = 614 nJ
+        let e = c.energy_pj_per_kb(BulkOp::Xnor2).unwrap();
+        assert!((e - 3.0 * 8192.0 * 25.0).abs() < 1.0, "{e}");
+    }
+}

@@ -1,0 +1,233 @@
+//! The PJRT client wrapper: compile-once, execute-many.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts are compiled lazily and cached.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// Typed host-side tensor for artifact I/O.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    F32(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I32(v) => v.len(),
+            Tensor::U32(v) => v.len(),
+            Tensor::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            Tensor::I32(_) => DType::I32,
+            Tensor::U32(_) => DType::U32,
+            Tensor::F32(_) => DType::F32,
+        }
+    }
+
+    fn to_literal(&self, dims: &[i64]) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::I32(v) => xla::Literal::vec1(v),
+            Tensor::U32(v) => xla::Literal::vec1(v),
+            Tensor::F32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType) -> Result<Tensor> {
+        Ok(match dtype {
+            DType::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+            DType::U32 => Tensor::U32(lit.to_vec::<u32>()?),
+            DType::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+        })
+    }
+}
+
+/// Compile-once execute-many runtime over the artifact manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (see `default_artifact_dir`) and start
+    /// a CPU PJRT client. Fails fast if the Python/Rust physical constants
+    /// have diverged (analog::params::check_manifest).
+    pub fn load(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let mismatches = crate::analog::params::check_manifest(&manifest.header);
+        if !mismatches.is_empty() {
+            bail!(
+                "artifact manifest constants diverge from rust mirror: {mismatches:?} \
+                 — re-run `make artifacts`"
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: HashMap::new(),
+            dir,
+        })
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(super::default_artifact_dir())
+    }
+
+    fn compiled(&mut self, name: &str) -> Result<(&xla::PjRtLoadedExecutable, ArtifactSpec)> {
+        let spec = self.manifest.get(name)?.clone();
+        if !self.cache.contains_key(name) {
+            let path = spec
+                .path
+                .to_str()
+                .context("non-utf8 artifact path")?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok((&self.cache[name], spec))
+    }
+
+    /// Execute an artifact with shape/dtype-checked inputs; returns one
+    /// tensor per manifest output (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let (exe, spec) = self.compiled(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if t.dtype() != s.dtype {
+                bail!("{name}: input {i} dtype mismatch ({:?} vs {:?})", t.dtype(), s.dtype);
+            }
+            if t.len() != s.elements() {
+                bail!(
+                    "{name}: input {i} has {} elements, manifest says {}",
+                    t.len(),
+                    s.elements()
+                );
+            }
+            let dims: Vec<i64> = s.dims.iter().map(|&d| d as i64).collect();
+            lits.push(t.to_literal(&dims)?);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs returned, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| Tensor::from_literal(l, s.dtype))
+            .collect()
+    }
+
+    // ---- typed convenience wrappers ------------------------------------
+
+    /// One Monte-Carlo batch (Table 3): returns (dra_err, tra_err,
+    /// dra_evals, tra_evals).
+    pub fn mc_variation(&mut self, key: [u32; 2], variation: f32) -> Result<(u64, u64, u64, u64)> {
+        let out = self.execute(
+            "mc_variation",
+            &[Tensor::U32(key.to_vec()), Tensor::F32(vec![variation])],
+        )?;
+        let g = |i: usize| -> Result<u64> { Ok(out[i].as_i32()?[0] as u64) };
+        Ok((g(0)?, g(1)?, g(2)?, g(3)?))
+    }
+
+    /// Fig. 6 transient: input 4 (Di, Dj) cases, output [4, steps, 4] f32.
+    pub fn transient(&mut self, cases: [[f32; 2]; 4]) -> Result<Vec<f32>> {
+        let flat: Vec<f32> = cases.iter().flatten().copied().collect();
+        let out = self.execute("transient", &[Tensor::F32(flat)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    /// Golden bulk op at the artifact shape (65 536 i32 words/operand).
+    pub fn bulk(&mut self, op: &str, operands: &[&[i32]]) -> Result<Vec<i32>> {
+        let name = format!("bulk_{op}");
+        let ins: Vec<Tensor> = operands.iter().map(|o| Tensor::I32(o.to_vec())).collect();
+        let out = self.execute(&name, &ins)?;
+        Ok(out[0].as_i32()?.to_vec())
+    }
+
+    /// Golden bit-plane adder: (sum_planes, carry).
+    pub fn bitplane_add(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        carry_in: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        let out = self.execute(
+            "bitplane_add",
+            &[
+                Tensor::I32(a.to_vec()),
+                Tensor::I32(b.to_vec()),
+                Tensor::I32(carry_in.to_vec()),
+            ],
+        )?;
+        Ok((out[0].as_i32()?.to_vec(), out[1].as_i32()?.to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_dtype_guards() {
+        let t = Tensor::I32(vec![1, 2, 3]);
+        assert_eq!(t.len(), 3);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/it_runtime_golden.rs (they need
+    // generated artifacts); here we only check the pure plumbing.
+    #[test]
+    fn runtime_load_fails_cleanly_without_artifacts() {
+        let r = Runtime::load(PathBuf::from("/nonexistent/dir"));
+        assert!(r.is_err());
+    }
+}

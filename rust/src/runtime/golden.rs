@@ -1,0 +1,88 @@
+//! Golden verification: DRIM's in-array functional results vs the
+//! AOT-lowered JAX reference kernels, chunked to the artifact shape.
+//!
+//! `BULK_WORDS` (= 512×128 i32 words = 2 Mbit) is the static shape the
+//! bulk artifacts were lowered at; arbitrary-size payloads are verified in
+//! zero-padded chunks.
+
+use anyhow::Result;
+
+use crate::util::bitrow::BitRow;
+
+use super::client::Runtime;
+
+/// Words per bulk-artifact call (python/compile/params.py BITWISE_*).
+pub const BULK_WORDS: usize = 512 * 128;
+
+/// Pack a `BitRow` into i32 lanes padded to a whole number of chunks.
+pub fn row_to_chunks(row: &BitRow) -> Vec<Vec<i32>> {
+    let lanes = row.to_u32_lanes();
+    lanes
+        .chunks(BULK_WORDS)
+        .map(|c| {
+            let mut v: Vec<i32> = c.iter().map(|&x| x as i32).collect();
+            v.resize(BULK_WORDS, 0);
+            v
+        })
+        .collect()
+}
+
+/// Verify `result = op(operands...)` against the JAX artifact. Returns the
+/// number of verified bits.
+pub fn verify_bulk(
+    rt: &mut Runtime,
+    op: &str,
+    operands: &[&BitRow],
+    result: &BitRow,
+) -> Result<usize> {
+    assert!(!operands.is_empty());
+    let bits = result.len();
+    let op_chunks: Vec<Vec<Vec<i32>>> = operands.iter().map(|o| row_to_chunks(o)).collect();
+    let res_chunks = row_to_chunks(result);
+    for ci in 0..res_chunks.len() {
+        let ins: Vec<&[i32]> = op_chunks.iter().map(|o| o[ci].as_slice()).collect();
+        let golden = rt.bulk(op, &ins)?;
+        // compare only the live words of this chunk
+        let live_words = ((bits - ci * BULK_WORDS * 32).min(BULK_WORDS * 32) + 31) / 32;
+        for w in 0..live_words {
+            let mask = if (ci * BULK_WORDS + w + 1) * 32 <= bits {
+                !0u32
+            } else {
+                let live = bits - (ci * BULK_WORDS + w) * 32;
+                (1u32 << live) - 1
+            };
+            let got = res_chunks[ci][w] as u32 & mask;
+            let want = golden[w] as u32 & mask;
+            if got != want {
+                anyhow::bail!(
+                    "golden mismatch for {op} at chunk {ci} word {w}: \
+                     drim={got:#010x} jax={want:#010x}"
+                );
+            }
+        }
+    }
+    Ok(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunking_pads_and_splits() {
+        let mut rng = Rng::new(1);
+        let row = BitRow::random(BULK_WORDS * 32 + 1000, &mut rng);
+        let chunks = row_to_chunks(&row);
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.len() == BULK_WORDS));
+    }
+
+    #[test]
+    fn small_row_is_one_chunk() {
+        let row = BitRow::zeros(64);
+        let chunks = row_to_chunks(&row);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].len(), BULK_WORDS);
+    }
+}

@@ -1,0 +1,207 @@
+//! Parser for `artifacts/manifest.txt` (written by python/compile/aot.py).
+//!
+//! Line format:
+//! `name \t file \t in=<dtype[dims],...> \t out=<dtype[dims],...> \t sha256=<16 hex>`
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DType {
+    I32,
+    U32,
+    F32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            "float32" => DType::F32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, PartialEq, Debug)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (d, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad tensor spec {s:?}"))?;
+        let dims_s = rest.strip_suffix(']').context("missing ]")?;
+        let dims = if dims_s.is_empty() {
+            vec![]
+        } else {
+            dims_s
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        Ok(TensorSpec {
+            dtype: DType::parse(d)?,
+            dims,
+        })
+    }
+}
+
+/// Split a comma-separated spec list, where commas also appear inside
+/// `[...]` dims.
+fn split_specs(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '[' => {
+                depth += 1;
+                cur.push(ch);
+            }
+            ']' => {
+                depth -= 1;
+                cur.push(ch);
+            }
+            ',' if depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(ch),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[derive(Clone, PartialEq, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256_prefix: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub header: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest {
+            header: text
+                .lines()
+                .filter(|l| l.starts_with('#'))
+                .collect::<Vec<_>>()
+                .join("\n"),
+            ..Default::default()
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            if fields.len() != 5 {
+                bail!("manifest line has {} fields: {line:?}", fields.len());
+            }
+            let name = fields[0].to_string();
+            let ins = fields[2].strip_prefix("in=").context("missing in=")?;
+            let outs = fields[3].strip_prefix("out=").context("missing out=")?;
+            let sha = fields[4].strip_prefix("sha256=").context("missing sha")?;
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                path: dir.join(fields[1]),
+                inputs: split_specs(ins)
+                    .iter()
+                    .map(|s| TensorSpec::parse(s))
+                    .collect::<Result<_>>()?,
+                outputs: split_specs(outs)
+                    .iter()
+                    .map(|s| TensorSpec::parse(s))
+                    .collect::<Result<_>>()?,
+                sha256_prefix: sha.to_string(),
+            };
+            m.artifacts.insert(name, spec);
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# DRIM AOT artifact manifest\n\
+# vdd=1.2 cp_ratio=0.6\n\
+bulk_xnor2\tbulk_xnor2.hlo.txt\tin=int32[512,128],int32[512,128]\tout=int32[512,128]\tsha256=0123456789abcdef\n\
+mc_variation\tmc_variation.hlo.txt\tin=uint32[2],float32[]\tout=int32[],int32[],int32[],int32[]\tsha256=fedcba9876543210\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let x = m.get("bulk_xnor2").unwrap();
+        assert_eq!(x.inputs.len(), 2);
+        assert_eq!(x.inputs[0].dims, vec![512, 128]);
+        assert_eq!(x.inputs[0].dtype, DType::I32);
+        assert_eq!(x.inputs[0].elements(), 65536);
+        let mc = m.get("mc_variation").unwrap();
+        assert_eq!(mc.inputs[1].dims, Vec::<usize>::new());
+        assert_eq!(mc.inputs[1].elements(), 1);
+        assert_eq!(mc.outputs.len(), 4);
+        assert_eq!(mc.path, Path::new("/tmp/a/mc_variation.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn header_captured() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert!(m.header.contains("vdd=1.2"));
+    }
+
+    #[test]
+    fn real_manifest_matches_rust_params_if_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if let Ok(m) = Manifest::load(&dir) {
+            let mismatches = crate::analog::params::check_manifest(&m.header);
+            assert!(mismatches.is_empty(), "{mismatches:?}");
+            assert!(m.artifacts.contains_key("bulk_xnor2"));
+            assert!(m.artifacts.contains_key("mc_variation"));
+            assert!(m.artifacts.contains_key("transient"));
+            assert!(m.artifacts.contains_key("bitplane_add"));
+        }
+    }
+}

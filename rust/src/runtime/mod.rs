@@ -1,0 +1,34 @@
+//! PJRT runtime: loads the AOT-lowered JAX artifacts (`artifacts/*.hlo.txt`)
+//! and executes them on the embedded CPU PJRT client.
+//!
+//! This is the only place the Rust system touches XLA. Python never runs at
+//! request time: `make artifacts` lowers the L1/L2 graphs once, and this
+//! module replays them for (a) golden verification of in-DRAM results,
+//! (b) the Table 3 Monte-Carlo reference, (c) the Fig. 6 transients.
+//!
+//! Interchange is HLO *text* — see python/compile/aot.py for why.
+
+pub mod client;
+pub mod golden;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactSpec, Manifest};
+
+/// Default artifact directory: honor `$DRIM_ARTIFACTS`, else walk up from
+/// the current directory looking for `artifacts/manifest.txt`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("DRIM_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

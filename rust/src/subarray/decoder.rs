@@ -1,0 +1,134 @@
+//! Modified Row Decoder (MRD) legality rules.
+//!
+//! The paper's MRD drives only the 12 computation word-lines (x1..x8,
+//! dcc1..dcc4) and is the only decoder capable of simultaneous multi-row
+//! activation; the 500 data rows hang off the regular decoder which
+//! activates exactly one word-line at a time. These invariants are enforced
+//! on every AAP (violations are architecture bugs, hence panics, not
+//! recoverable errors).
+
+use crate::dram::command::{AapKind, RowId};
+
+/// Panics if the (srcs, dests) combination is not issuable on DRIM hardware.
+pub fn validate_aap(kind: AapKind, srcs: &[RowId], dests: &[RowId]) {
+    assert_eq!(srcs.len(), kind.source_rows(), "{kind:?}: wrong source arity");
+    assert_eq!(dests.len(), kind.dest_rows(), "{kind:?}: wrong dest arity");
+
+    // Multi-row *source* activation requires every word-line on the MRD.
+    if srcs.len() > 1 {
+        for s in srcs {
+            assert!(
+                s.is_compute(),
+                "{kind:?}: multi-row activation of data row {s} needs the MRD \
+                 — RowClone operands into x rows first (paper Table 2)"
+            );
+        }
+    }
+    // Dual-destination activation (AAP type-2) likewise.
+    if dests.len() > 1 {
+        for d in dests {
+            assert!(
+                d.is_compute(),
+                "{kind:?}: simultaneous dual-destination {d} must be a \
+                 computation row"
+            );
+        }
+    }
+
+    // No word-line may appear twice in one activation phase.
+    for (i, a) in srcs.iter().enumerate() {
+        for b in &srcs[i + 1..] {
+            assert_ne!(a, b, "{kind:?}: duplicate source word-line {a}");
+        }
+    }
+    for (i, a) in dests.iter().enumerate() {
+        for b in &dests[i + 1..] {
+            assert_ne!(a, b, "{kind:?}: duplicate destination word-line {a}");
+        }
+    }
+
+    // Both word-lines of the same DCC cell would short BL to BL̄ through
+    // the cell — electrically illegal.
+    let same_dcc_cell = |a: RowId, b: RowId| match (a.dcc_cell(), b.dcc_cell()) {
+        (Some((ca, _)), Some((cb, _))) => ca == cb,
+        _ => false,
+    };
+    for (i, a) in srcs.iter().enumerate() {
+        for b in &srcs[i + 1..] {
+            assert!(
+                !same_dcc_cell(*a, *b),
+                "{kind:?}: {a} and {b} are the two contacts of one DCC cell"
+            );
+        }
+    }
+    for (i, a) in dests.iter().enumerate() {
+        for b in &dests[i + 1..] {
+            assert!(
+                !same_dcc_cell(*a, *b),
+                "{kind:?}: {a} and {b} are the two contacts of one DCC cell"
+            );
+        }
+    }
+
+    // A row cannot be simultaneously source and destination (the second
+    // ACTIVATE of an AAP opens the destination while the SA still drives
+    // the source's value — re-opening the same word-line is a no-op but
+    // indicates a malformed program).
+    for s in srcs {
+        for d in dests {
+            assert_ne!(s, d, "{kind:?}: {s} is both source and destination");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::command::RowId::*;
+
+    #[test]
+    fn legal_sequences_pass() {
+        validate_aap(AapKind::Copy, &[Data(0)], &[X(1)]);
+        validate_aap(AapKind::Copy, &[Data(0)], &[Dcc(2)]);
+        validate_aap(AapKind::DoubleCopy, &[Data(0)], &[X(1), X(2)]);
+        validate_aap(AapKind::Dra, &[X(1), X(2)], &[Data(0)]);
+        validate_aap(AapKind::Dra, &[X(6), Dcc(1)], &[Dcc(4)]);
+        validate_aap(AapKind::Tra, &[X(1), X(2), X(3)], &[Data(7)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs the MRD")]
+    fn dra_on_data_rows_rejected() {
+        validate_aap(AapKind::Dra, &[Data(0), Data(1)], &[Data(2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dual-destination")]
+    fn double_copy_to_data_rows_rejected() {
+        validate_aap(AapKind::DoubleCopy, &[Data(0)], &[Data(1), Data(2)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate source")]
+    fn duplicate_sources_rejected() {
+        validate_aap(AapKind::Dra, &[X(1), X(1)], &[Data(0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "DCC cell")]
+    fn dcc_short_rejected() {
+        validate_aap(AapKind::Dra, &[Dcc(1), Dcc(2)], &[Data(0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "both source and destination")]
+    fn src_dest_overlap_rejected() {
+        validate_aap(AapKind::Copy, &[X(1)], &[X(1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong source arity")]
+    fn arity_checked() {
+        validate_aap(AapKind::Tra, &[X(1), X(2)], &[Data(0)]);
+    }
+}

@@ -1,0 +1,278 @@
+//! The DRIM computational sub-array: 512 word-lines (500 data + x1..x8 +
+//! dcc1..dcc4), a Modified Row Decoder, and the reconfigurable sense
+//! amplifier row (paper Fig. 3/4).
+//!
+//! This is the *functional* (bit-accurate) model used on the hot path; the
+//! *analog* fidelity of the same operations (voltages, margins, variation)
+//! lives in `analog/` and the L1/L2 JAX artifacts, and the two are
+//! cross-validated in tests.
+
+pub mod area;
+pub mod decoder;
+pub mod sense;
+
+use crate::dram::command::{AapKind, RowId};
+use crate::util::bitrow::BitRow;
+use crate::util::rng::Rng;
+
+use decoder::validate_aap;
+use sense::SenseAmp;
+
+/// One computational sub-array: cell matrix + SA row.
+#[derive(Clone, Debug)]
+pub struct SubArray {
+    cols: usize,
+    /// data rows + x rows (cells addressed by word-line index)
+    rows: Vec<BitRow>,
+    /// the two dual-contact cells (cell A: dcc1/dcc2, cell B: dcc3/dcc4)
+    dcc: [BitRow; 2],
+    /// sense amplifier row (latch after amplification)
+    sa: SenseAmp,
+    /// AAPs executed (for stats/ablations)
+    pub aap_count: u64,
+}
+
+impl SubArray {
+    pub fn new(cols: usize) -> Self {
+        use crate::dram::geometry::{DATA_ROWS, NUM_X_ROWS};
+        SubArray {
+            cols,
+            rows: vec![BitRow::zeros(cols); DATA_ROWS + NUM_X_ROWS],
+            dcc: [BitRow::zeros(cols), BitRow::zeros(cols)],
+            sa: SenseAmp::new(cols),
+            aap_count: 0,
+        }
+    }
+
+    pub fn randomize(&mut self, rng: &mut Rng) {
+        for r in &mut self.rows {
+            *r = BitRow::random(self.cols, rng);
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Cell contents as seen on BL when `row`'s word-line is activated
+    /// alone: DCC complement word-lines present the *inverted* cell value
+    /// (the cell's second access transistor connects it to BL̄).
+    fn bl_view(&self, row: RowId) -> BitRow {
+        match row.dcc_cell() {
+            Some((cell, through_complement)) => {
+                if through_complement {
+                    let mut v = BitRow::zeros(self.cols);
+                    v.not_from(&self.dcc[cell]);
+                    v
+                } else {
+                    self.dcc[cell].clone()
+                }
+            }
+            None => self.rows[row.wordline()].clone(),
+        }
+    }
+
+    /// Drive the (amplified) BL value into an open row: normal cells take
+    /// BL, DCC-complement word-lines take BL̄ (i.e. store the inverse).
+    fn drive_into(&mut self, row: RowId, bl: &BitRow) {
+        match row.dcc_cell() {
+            Some((cell, through_complement)) => {
+                if through_complement {
+                    self.dcc[cell].not_from(bl);
+                } else {
+                    self.dcc[cell].copy_from(bl);
+                }
+            }
+            None => self.rows[row.wordline()].copy_from(bl),
+        }
+    }
+
+    /// Direct cell access for host load/readback (models a column-granular
+    /// WRITE/READ through the global row buffer).
+    pub fn write_row(&mut self, row: RowId, value: &BitRow) {
+        assert_eq!(value.len(), self.cols);
+        self.drive_into(row, value);
+    }
+
+    pub fn read_row(&self, row: RowId) -> BitRow {
+        self.bl_view(row)
+    }
+
+    /// Execute one AAP primitive: source activation (charge sharing + sense
+    /// amplification), destination activation (drive SA value into the
+    /// destination cells), precharge. Returns the SA latch value after the
+    /// operation (what landed on BL).
+    ///
+    /// Reference: paper §3.1 (DRA), §2.1 (RowClone-FPM, TRA), Table 1/2.
+    pub fn execute_aap(
+        &mut self,
+        kind: AapKind,
+        srcs: &[RowId],
+        dests: &[RowId],
+    ) -> BitRow {
+        validate_aap(kind, srcs, dests);
+        self.aap_count += 1;
+
+        // --- first ACTIVATE: charge share + amplify --------------------
+        //
+        // The all-plain-row case (no DCC word-line involved) is the hot
+        // path of every Fig.-8-class workload and runs clone-free: the SA
+        // latches straight from the cell rows (§Perf iteration 3).
+        let plain = srcs.iter().all(|s| s.dcc_cell().is_none());
+        match kind {
+            AapKind::Copy | AapKind::DoubleCopy => {
+                if plain {
+                    self.sa.latch_single(&self.rows[srcs[0].wordline()]);
+                } else {
+                    let v = self.bl_view(srcs[0]);
+                    self.sa.latch_single(&v);
+                }
+                // activation is restorative for the source cell
+            }
+            AapKind::Dra => {
+                if plain {
+                    self.sa.latch_dra(
+                        &self.rows[srcs[0].wordline()],
+                        &self.rows[srcs[1].wordline()],
+                    );
+                } else {
+                    let a = self.bl_view(srcs[0]);
+                    let b = self.bl_view(srcs[1]);
+                    self.sa.latch_dra(&a, &b);
+                }
+                // DRA is destructive: both open cells are overwritten with
+                // the amplified BL value (visible in Fig. 6's Vcap traces).
+                let bl = self.sa.bl().clone();
+                self.drive_into(srcs[0], &bl);
+                self.drive_into(srcs[1], &bl);
+            }
+            AapKind::Tra => {
+                if plain {
+                    self.sa.latch_tra(
+                        &self.rows[srcs[0].wordline()],
+                        &self.rows[srcs[1].wordline()],
+                        &self.rows[srcs[2].wordline()],
+                    );
+                } else {
+                    let a = self.bl_view(srcs[0]);
+                    let b = self.bl_view(srcs[1]);
+                    let c = self.bl_view(srcs[2]);
+                    self.sa.latch_tra(&a, &b, &c);
+                }
+                let bl = self.sa.bl().clone();
+                self.drive_into(srcs[0], &bl);
+                self.drive_into(srcs[1], &bl);
+                self.drive_into(srcs[2], &bl);
+            }
+        }
+
+        // --- second ACTIVATE: drive result into destination(s) ---------
+        let bl = self.sa.bl().clone();
+        for &d in dests {
+            self.drive_into(d, &bl);
+        }
+
+        // --- PRECHARGE: SA released, bit-lines return to Vdd/2 ----------
+        // (latch content is consumed; nothing persists in the SA model)
+        bl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::command::RowId::*;
+
+    fn sa_with(cols: usize, pairs: &[(RowId, &BitRow)]) -> SubArray {
+        let mut s = SubArray::new(cols);
+        for (r, v) in pairs {
+            s.write_row(*r, v);
+        }
+        s
+    }
+
+    fn rand_row(cols: usize, seed: u64) -> BitRow {
+        BitRow::random(cols, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn copy_aap_copies() {
+        let a = rand_row(256, 1);
+        let mut s = sa_with(256, &[(Data(3), &a)]);
+        s.execute_aap(AapKind::Copy, &[Data(3)], &[X(1)]);
+        assert_eq!(s.read_row(X(1)), a);
+        assert_eq!(s.read_row(Data(3)), a, "activation is restorative");
+    }
+
+    #[test]
+    fn double_copy_reaches_both_dests() {
+        let a = rand_row(256, 2);
+        let mut s = sa_with(256, &[(Data(0), &a)]);
+        s.execute_aap(AapKind::DoubleCopy, &[Data(0)], &[X(1), X(2)]);
+        assert_eq!(s.read_row(X(1)), a);
+        assert_eq!(s.read_row(X(2)), a);
+    }
+
+    #[test]
+    fn dra_computes_xnor_and_is_destructive() {
+        let a = rand_row(512, 3);
+        let b = rand_row(512, 4);
+        let mut s = sa_with(512, &[(X(1), &a), (X(2), &b)]);
+        let out = s.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(9)]);
+        let mut want = BitRow::zeros(512);
+        want.apply2(&a, &b, |x, y| !(x ^ y));
+        assert_eq!(out, want);
+        assert_eq!(s.read_row(Data(9)), want);
+        // Fig. 6: the source cells end at the BL rail (the XNOR result)
+        assert_eq!(s.read_row(X(1)), want);
+        assert_eq!(s.read_row(X(2)), want);
+    }
+
+    #[test]
+    fn tra_computes_maj3() {
+        let (a, b, c) = (rand_row(128, 5), rand_row(128, 6), rand_row(128, 7));
+        let mut s = sa_with(128, &[(X(1), &a), (X(2), &b), (X(3), &c)]);
+        let out = s.execute_aap(AapKind::Tra, &[X(1), X(2), X(3)], &[Data(0)]);
+        let mut want = BitRow::zeros(128);
+        want.apply3(&a, &b, &c, |x, y, z| (x & y) | (x & z) | (y & z));
+        assert_eq!(out, want);
+        assert_eq!(s.read_row(Data(0)), want);
+    }
+
+    #[test]
+    fn dcc_complement_wordline_inverts_on_write_and_read() {
+        let a = rand_row(64, 8);
+        let mut s = sa_with(64, &[(Data(1), &a)]);
+        // Table 2 NOT: AAP(Di, dcc2); AAP(dcc1, Dr)
+        s.execute_aap(AapKind::Copy, &[Data(1)], &[Dcc(2)]);
+        s.execute_aap(AapKind::Copy, &[Dcc(1)], &[Data(2)]);
+        let mut want = BitRow::zeros(64);
+        want.not_from(&a);
+        assert_eq!(s.read_row(Data(2)), want, "NOT via DCC");
+    }
+
+    #[test]
+    fn dra_over_dcc_source_gives_xnor_of_complement() {
+        // the Add sequence uses AAP(x6, dcc1, dcc4): DRA over an x row and
+        // the DCC normal word-line
+        let a = rand_row(64, 9);
+        let b = rand_row(64, 10);
+        let mut s = SubArray::new(64);
+        s.write_row(X(6), &a);
+        s.write_row(Dcc(1), &b);
+        s.execute_aap(AapKind::Dra, &[X(6), Dcc(1)], &[Dcc(4)]);
+        // BL gets XNOR(a,b); dcc4 is cell B's complement WL → cell B = XOR
+        let mut xor = BitRow::zeros(64);
+        xor.apply2(&a, &b, |x, y| x ^ y);
+        assert_eq!(s.read_row(Dcc(3)), xor, "cell B holds XOR(a,b)");
+    }
+
+    #[test]
+    fn aap_count_increments() {
+        let mut s = SubArray::new(64);
+        assert_eq!(s.aap_count, 0);
+        s.execute_aap(AapKind::Copy, &[Data(0)], &[X(1)]);
+        s.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(1)]);
+        assert_eq!(s.aap_count, 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! The reconfigurable sense amplifier (paper Fig. 4) — digital model.
+//!
+//! The SA row holds one latch per bit-line. Three enable signals (Table 1)
+//! select the operating mode:
+//!
+//! | operation              | En_M | En_x | En_C |
+//! |------------------------|------|------|------|
+//! | W/R – Copy – NOT – TRA |  1   |  1   |  0   |
+//! | DRA                    |  0   |  1   |  1   |
+//!
+//! In DRA mode the two shifted-VTC inverters act as threshold detectors on
+//! the isolated charge-sharing node (n = #cells storing '1', levels
+//! n·Vdd/2): the low-Vs inverter realizes NOR2, the high-Vs inverter NAND2,
+//! and the add-on AND gate produces XOR2 on BL̄ — hence XNOR2 on BL
+//! (paper Eq. 1). The digital decision table below is exactly what the
+//! analog model in `analog/` resolves to with zero variation (asserted by
+//! `it_functional::digital_matches_analog_decisions`).
+
+use crate::util::bitrow::BitRow;
+
+/// Enable-signal values (Table 1).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct EnableBits {
+    pub en_m: bool,
+    pub en_x: bool,
+    pub en_c: bool,
+}
+
+/// SA operating mode, selecting the charge-sharing interpretation.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SenseMode {
+    /// conventional: W/R, Copy, NOT, TRA
+    Conventional,
+    /// dual-row activation through the add-on inverters
+    Dra,
+}
+
+impl SenseMode {
+    /// Table 1, verbatim.
+    pub fn enables(self) -> EnableBits {
+        match self {
+            SenseMode::Conventional => EnableBits {
+                en_m: true,
+                en_x: true,
+                en_c: false,
+            },
+            SenseMode::Dra => EnableBits {
+                en_m: false,
+                en_x: true,
+                en_c: true,
+            },
+        }
+    }
+}
+
+/// The SA latch row.
+#[derive(Clone, Debug)]
+pub struct SenseAmp {
+    bl: BitRow,
+    blbar: BitRow,
+}
+
+impl SenseAmp {
+    pub fn new(cols: usize) -> Self {
+        SenseAmp {
+            bl: BitRow::zeros(cols),
+            blbar: BitRow::ones(cols),
+        }
+    }
+
+    /// Amplified BL value (the latch).
+    pub fn bl(&self) -> &BitRow {
+        &self.bl
+    }
+
+    /// Complement bit-line (XOR2 during DRA — paper Eq. 1).
+    pub fn blbar(&self) -> &BitRow {
+        &self.blbar
+    }
+
+    /// Single-row activation: conventional read (En_M/En_x high).
+    pub fn latch_single(&mut self, v: &BitRow) {
+        self.bl.copy_from(v);
+        self.blbar.not_from(v);
+    }
+
+    /// Dual-row activation (En_x/En_C high): BL ← XNOR2, BL̄ ← XOR2.
+    pub fn latch_dra(&mut self, a: &BitRow, b: &BitRow) {
+        self.bl.apply2(a, b, |x, y| !(x ^ y));
+        self.blbar.apply2(a, b, |x, y| x ^ y);
+    }
+
+    /// Triple-row activation (conventional SA): BL ← MAJ3.
+    pub fn latch_tra(&mut self, a: &BitRow, b: &BitRow, c: &BitRow) {
+        self.bl
+            .apply3(a, b, c, |x, y, z| (x & y) | (x & z) | (y & z));
+        let bl = self.bl.clone();
+        self.blbar.not_from(&bl);
+    }
+}
+
+/// Truth-table form of the DRA decision as a function of n (number of
+/// activated cells storing '1') — Fig. 4b. Used to cross-check the analog
+/// threshold model.
+pub fn dra_decision(n: usize) -> (bool, bool) {
+    // (XNOR on BL, XOR on BL̄)
+    match n {
+        0 => (true, false),  // NOR fires → OR=0 → XOR=0
+        1 => (false, true),  // between thresholds → XOR=1
+        2 => (true, false),  // NAND off → XOR=0
+        _ => panic!("DRA connects exactly 2 cells"),
+    }
+}
+
+/// TRA decision (conventional SA against Vdd/2): MAJ3.
+pub fn tra_decision(n: usize) -> bool {
+    assert!(n <= 3);
+    n >= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table1_enables() {
+        let c = SenseMode::Conventional.enables();
+        assert!(c.en_m && c.en_x && !c.en_c);
+        let d = SenseMode::Dra.enables();
+        assert!(!d.en_m && d.en_x && d.en_c);
+    }
+
+    #[test]
+    fn dra_truth_table() {
+        assert_eq!(dra_decision(0), (true, false));
+        assert_eq!(dra_decision(1), (false, true));
+        assert_eq!(dra_decision(2), (true, false));
+    }
+
+    #[test]
+    fn latch_dra_matches_decision_table() {
+        let a = BitRow::from_bits(&[false, false, true, true]);
+        let b = BitRow::from_bits(&[false, true, false, true]);
+        let mut sa = SenseAmp::new(4);
+        sa.latch_dra(&a, &b);
+        for i in 0..4 {
+            let n = a.get(i) as usize + b.get(i) as usize;
+            let (xnor, xor) = dra_decision(n);
+            assert_eq!(sa.bl().get(i), xnor);
+            assert_eq!(sa.blbar().get(i), xor);
+        }
+    }
+
+    #[test]
+    fn latch_tra_matches_decision_table() {
+        let mut rng = Rng::new(1);
+        let a = BitRow::random(128, &mut rng);
+        let b = BitRow::random(128, &mut rng);
+        let c = BitRow::random(128, &mut rng);
+        let mut sa = SenseAmp::new(128);
+        sa.latch_tra(&a, &b, &c);
+        for i in 0..128 {
+            let n = a.get(i) as usize + b.get(i) as usize + c.get(i) as usize;
+            assert_eq!(sa.bl().get(i), tra_decision(n));
+        }
+    }
+
+    #[test]
+    fn blbar_is_complement_outside_dra() {
+        let mut rng = Rng::new(2);
+        let v = BitRow::random(64, &mut rng);
+        let mut sa = SenseAmp::new(64);
+        sa.latch_single(&v);
+        for i in 0..64 {
+            assert_eq!(sa.bl().get(i), !sa.blbar().get(i));
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal benchmark harness (criterion is not vendored).
+//!
+//! Measures wall time with warm-up, reports mean ± stddev and derived
+//! throughput. Benches run with `cargo bench` via `harness = false` targets.
+
+use std::time::Instant;
+
+use crate::util::stats::{fmt_ns, fmt_rate, Summary};
+
+pub struct Bencher {
+    pub warmup_iters: u32,
+    pub iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 3,
+            iters: 10,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// user-supplied work units per iteration (e.g. bit-ops) for throughput
+    pub units_per_iter: f64,
+}
+
+impl Measurement {
+    pub fn rate(&self) -> f64 {
+        self.units_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn report(&self) -> String {
+        if self.units_per_iter > 0.0 {
+            format!(
+                "{:40} {:>12} ± {:>10}   {:>12}ops/s",
+                self.name,
+                fmt_ns(self.mean_ns),
+                fmt_ns(self.stddev_ns),
+                fmt_rate(self.rate()),
+            )
+        } else {
+            format!(
+                "{:40} {:>12} ± {:>10}",
+                self.name,
+                fmt_ns(self.mean_ns),
+                fmt_ns(self.stddev_ns)
+            )
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup_iters: 1,
+            iters: 3,
+        }
+    }
+
+    /// Benchmark `f`, which performs `units` work-units per call.
+    pub fn run<R>(&self, name: &str, units: f64, mut f: impl FnMut() -> R) -> Measurement {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            s.add(t.elapsed().as_nanos() as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            mean_ns: s.mean(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+            units_per_iter: units,
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+/// Simple section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::quick();
+        let m = b.run("spin", 1000.0, || {
+            let mut x = 0u64;
+            for i in 0..1000u64 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            x
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.rate() > 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Bit-plane ⇄ element-vector conversion via 32×32 bit-matrix transpose
+//! (Hacker's Delight §7-3). This is the hot conversion on the add32 path:
+//! naive per-bit loops cost 32 operations per element; the transpose does
+//! a 32-element block in ~5·32 word operations.
+
+use crate::util::bitrow::BitRow;
+
+/// Transpose a 32×32 bit matrix held as 32 u32 rows, in place.
+/// LSB-first indexing: entry (r, c) is bit `c` of `a[r]`; after the call,
+/// bit `c` of `a[r]` is the old bit `r` of `a[c]` (main-diagonal
+/// transpose — the Hacker's Delight variant swaps about the
+/// anti-diagonal in this indexing, hence the mirrored shift pattern).
+pub fn transpose32(a: &mut [u32; 32]) {
+    let mut j = 16;
+    let mut m = 0x0000_FFFFu32;
+    while j != 0 {
+        let mut k = 0;
+        while k < 32 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Pack `elems` (32-bit values) into 32 bit-planes of `cols` bit-lines
+/// each: plane `b`, position `e` = bit `b` of `elems[e]`.
+pub fn pack_planes(elems: &[u32], cols: usize) -> Vec<BitRow> {
+    assert!(elems.len() <= cols);
+    let mut planes: Vec<Vec<u32>> = vec![vec![0u32; cols.div_ceil(32)]; 32];
+    let mut block = [0u32; 32];
+    for (blk, chunk) in elems.chunks(32).enumerate() {
+        block[..chunk.len()].copy_from_slice(chunk);
+        block[chunk.len()..].fill(0);
+        // element e of this block is row e; after transpose, row b holds
+        // bit b of all 32 elements (element 0 in bit 0)
+        transpose32(&mut block);
+        for b in 0..32 {
+            planes[b][blk] = block[b];
+        }
+    }
+    planes
+        .into_iter()
+        .map(|lanes| BitRow::from_u32_lanes(cols, &lanes))
+        .collect()
+}
+
+/// Inverse of `pack_planes`: planes (32 × cols bits) → `n` element values.
+pub fn unpack_planes(planes: &[BitRow], n: usize) -> Vec<u32> {
+    assert_eq!(planes.len(), 32);
+    let lanes: Vec<Vec<u32>> = planes.iter().map(|p| p.to_u32_lanes()).collect();
+    let mut out = vec![0u32; n];
+    let mut block = [0u32; 32];
+    for blk in 0..n.div_ceil(32) {
+        for b in 0..32 {
+            block[b] = lanes[b].get(blk).copied().unwrap_or(0);
+        }
+        transpose32(&mut block);
+        let lo = blk * 32;
+        let hi = (lo + 32).min(n);
+        out[lo..hi].copy_from_slice(&block[..hi - lo]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transpose_is_involution() {
+        let mut rng = Rng::new(1);
+        let mut a = [0u32; 32];
+        for w in a.iter_mut() {
+            *w = rng.next_u64() as u32;
+        }
+        let orig = a;
+        transpose32(&mut a);
+        transpose32(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn transpose_moves_bits_correctly() {
+        let mut a = [0u32; 32];
+        a[3] = 1 << 7; // row 3, column 7
+        transpose32(&mut a);
+        assert_eq!(a[7], 1 << 3); // row 7, column 3
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(2);
+        for n in [1usize, 31, 32, 33, 100, 256] {
+            let elems: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let planes = pack_planes(&elems, 256);
+            assert_eq!(planes.len(), 32);
+            let back = unpack_planes(&planes, n);
+            assert_eq!(back, elems, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pack_matches_naive_definition() {
+        let mut rng = Rng::new(3);
+        let elems: Vec<u32> = (0..77).map(|_| rng.next_u64() as u32).collect();
+        let planes = pack_planes(&elems, 128);
+        for (e, &v) in elems.iter().enumerate() {
+            for b in 0..32 {
+                assert_eq!(
+                    planes[b].get(e),
+                    (v >> b) & 1 == 1,
+                    "elem {e} bit {b}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! `BitRow`: a DRAM row's worth of bit-lines, packed 64 per word.
+//!
+//! This is the hot data structure of the functional simulator: every AAP
+//! charge-sharing evaluation is a handful of word-wise loops over `BitRow`s.
+//! All logic ops are branch-free word-parallel.
+
+/// One DRAM row (or sense-amplifier latch row): `bits` bit-lines.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct BitRow {
+    bits: usize,
+    words: Vec<u64>,
+}
+
+#[inline]
+fn words_for(bits: usize) -> usize {
+    bits.div_ceil(64)
+}
+
+impl BitRow {
+    pub fn zeros(bits: usize) -> Self {
+        BitRow {
+            bits,
+            words: vec![0; words_for(bits)],
+        }
+    }
+
+    pub fn ones(bits: usize) -> Self {
+        let mut r = BitRow {
+            bits,
+            words: vec![!0u64; words_for(bits)],
+        };
+        r.mask_tail();
+        r
+    }
+
+    pub fn random(bits: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let mut r = Self::zeros(bits);
+        rng.fill(&mut r.words);
+        r.mask_tail();
+        r
+    }
+
+    pub fn from_words(bits: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), words_for(bits));
+        let mut r = BitRow { bits, words };
+        r.mask_tail();
+        r
+    }
+
+    /// Build from bools (tests / small examples).
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut r = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            r.set(i, b);
+        }
+        r
+    }
+
+    /// Zero the unused tail of the last word so Eq/popcount stay exact.
+    #[inline]
+    fn mask_tail(&mut self) {
+        let tail = self.bits % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits == 0
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.bits);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    pub fn popcount(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// dst = f(a, b) word-wise, writing into self.
+    #[inline]
+    pub fn apply2(&mut self, a: &BitRow, b: &BitRow, f: impl Fn(u64, u64) -> u64) {
+        debug_assert!(a.bits == self.bits && b.bits == self.bits);
+        for ((d, &x), &y) in self.words.iter_mut().zip(&a.words).zip(&b.words) {
+            *d = f(x, y);
+        }
+        self.mask_tail();
+    }
+
+    /// dst = f(a, b, c) word-wise, writing into self.
+    #[inline]
+    pub fn apply3(
+        &mut self,
+        a: &BitRow,
+        b: &BitRow,
+        c: &BitRow,
+        f: impl Fn(u64, u64, u64) -> u64,
+    ) {
+        debug_assert!(a.bits == self.bits && b.bits == self.bits && c.bits == self.bits);
+        for (((d, &x), &y), &z) in self
+            .words
+            .iter_mut()
+            .zip(&a.words)
+            .zip(&b.words)
+            .zip(&c.words)
+        {
+            *d = f(x, y, z);
+        }
+        self.mask_tail();
+    }
+
+    pub fn copy_from(&mut self, src: &BitRow) {
+        debug_assert_eq!(self.bits, src.bits);
+        self.words.copy_from_slice(&src.words);
+    }
+
+    /// Copy `len` bits from `src[src_off..]` into `self[dst_off..]`.
+    /// Word-aligned offsets take the memcpy fast path (the router always
+    /// slices on row boundaries, which are 64-bit aligned); the general
+    /// case falls back to bit loops at the ragged edges only.
+    pub fn copy_bits_from(
+        &mut self,
+        src: &BitRow,
+        src_off: usize,
+        dst_off: usize,
+        len: usize,
+    ) {
+        debug_assert!(src_off + len <= src.bits);
+        debug_assert!(dst_off + len <= self.bits);
+        if src_off % 64 == 0 && dst_off % 64 == 0 {
+            let whole = len / 64;
+            let (sw, dw) = (src_off / 64, dst_off / 64);
+            self.words[dw..dw + whole].copy_from_slice(&src.words[sw..sw + whole]);
+            for b in whole * 64..len {
+                self.set(dst_off + b, src.get(src_off + b));
+            }
+        } else {
+            for b in 0..len {
+                self.set(dst_off + b, src.get(src_off + b));
+            }
+        }
+    }
+
+    pub fn not_from(&mut self, src: &BitRow) {
+        debug_assert_eq!(self.bits, src.bits);
+        for (d, &s) in self.words.iter_mut().zip(&src.words) {
+            *d = !s;
+        }
+        self.mask_tail();
+    }
+
+    /// Pack little-endian: bit i of element k (width w) lives at row index
+    /// `k*w + i` — the layout `apps::vecadd` and the converters use.
+    pub fn to_u32_lanes(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.bits.div_ceil(32));
+        for i in 0..self.bits.div_ceil(32) {
+            let w = self.words[i / 2];
+            out.push(if i % 2 == 0 { w as u32 } else { (w >> 32) as u32 });
+        }
+        out
+    }
+
+    pub fn from_u32_lanes(bits: usize, lanes: &[u32]) -> Self {
+        assert!(lanes.len() * 32 >= bits);
+        let mut words = vec![0u64; words_for(bits)];
+        for (i, &l) in lanes.iter().enumerate() {
+            if i / 2 < words.len() {
+                words[i / 2] |= (l as u64) << (32 * (i % 2));
+            }
+        }
+        let mut r = BitRow { bits, words };
+        r.mask_tail();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zeros_ones() {
+        let z = BitRow::zeros(100);
+        let o = BitRow::ones(100);
+        assert_eq!(z.popcount(), 0);
+        assert_eq!(o.popcount(), 100);
+        assert_eq!(z.len(), 100);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut r = BitRow::zeros(130);
+        r.set(0, true);
+        r.set(64, true);
+        r.set(129, true);
+        assert!(r.get(0) && r.get(64) && r.get(129));
+        assert!(!r.get(1) && !r.get(128));
+        assert_eq!(r.popcount(), 3);
+        r.set(64, false);
+        assert_eq!(r.popcount(), 2);
+    }
+
+    #[test]
+    fn tail_masked_after_ops() {
+        let mut rng = Rng::new(1);
+        let a = BitRow::random(70, &mut rng);
+        let b = BitRow::random(70, &mut rng);
+        let mut d = BitRow::zeros(70);
+        d.apply2(&a, &b, |x, y| !(x ^ y)); // XNOR sets tail bits w/o mask
+        assert_eq!(d.words()[1] >> 6, 0, "tail must stay zero");
+        assert_eq!(d.popcount(), (0..70).filter(|&i| a.get(i) == b.get(i)).count());
+    }
+
+    #[test]
+    fn apply3_maj() {
+        let mut rng = Rng::new(2);
+        let (a, b, c) = (
+            BitRow::random(256, &mut rng),
+            BitRow::random(256, &mut rng),
+            BitRow::random(256, &mut rng),
+        );
+        let mut d = BitRow::zeros(256);
+        d.apply3(&a, &b, &c, |x, y, z| (x & y) | (x & z) | (y & z));
+        for i in 0..256 {
+            let n = a.get(i) as u8 + b.get(i) as u8 + c.get(i) as u8;
+            assert_eq!(d.get(i), n >= 2);
+        }
+    }
+
+    #[test]
+    fn u32_lane_roundtrip() {
+        let mut rng = Rng::new(3);
+        let r = BitRow::random(8192, &mut rng);
+        let lanes = r.to_u32_lanes();
+        assert_eq!(lanes.len(), 256);
+        let back = BitRow::from_u32_lanes(8192, &lanes);
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn from_bits() {
+        let r = BitRow::from_bits(&[true, false, true, true]);
+        assert_eq!(r.len(), 4);
+        assert!(r.get(0) && !r.get(1) && r.get(2) && r.get(3));
+    }
+}

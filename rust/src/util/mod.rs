@@ -1,0 +1,12 @@
+//! Small self-contained utilities (the crates that would normally provide
+//! these — `rand`, `clap`, `criterion`, `proptest` — are not vendored in
+//! this offline environment, so we carry minimal, well-tested equivalents).
+
+pub mod bench;
+pub mod bitplane;
+pub mod bitrow;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

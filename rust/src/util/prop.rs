@@ -1,0 +1,75 @@
+//! Minimal property-testing harness (proptest is not vendored).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded RNGs;
+//! on failure it reports the failing seed so the case can be replayed as a
+//! deterministic regression (`replay(seed, f)`).
+
+use crate::util::rng::Rng;
+
+/// Result of one property case: Ok or a human-readable counterexample.
+pub type CaseResult = Result<(), String>;
+
+/// Run `f` for `cases` deterministic seeds. Panics with the failing seed on
+/// the first counterexample.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng) -> CaseResult) {
+    for case in 0..cases {
+        let seed = 0xDB1A_5EED ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng) -> CaseResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert helper producing `CaseResult`s.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |rng| {
+            n += 1;
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            let x = rng.below(10);
+            if x < 9 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+}

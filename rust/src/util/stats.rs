@@ -1,0 +1,125 @@
+//! Summary statistics & unit helpers shared by benches and metrics.
+
+/// Online mean/min/max/stddev accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// Percentile over a sorted-in-place sample buffer.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * p / 100.0).round() as usize;
+    samples[idx]
+}
+
+/// Human-readable ops/s (bit-ops per second here).
+pub fn fmt_rate(per_sec: f64) -> String {
+    const UNITS: &[(&str, f64)] = &[
+        ("T", 1e12),
+        ("G", 1e9),
+        ("M", 1e6),
+        ("K", 1e3),
+    ];
+    for (u, s) in UNITS {
+        if per_sec >= *s {
+            return format!("{:.2} {u}", per_sec / s);
+        }
+    }
+    format!("{per_sec:.2} ")
+}
+
+/// Human-readable duration from nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_closed_form() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.stddev() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut v: Vec<f64> = (1..=101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut v, 50.0), 51.0);
+        assert_eq!(percentile(&mut v, 100.0), 101.0);
+        assert_eq!(percentile(&mut v, 0.0), 1.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_rate(2.5e12), "2.50 T");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+    }
+}

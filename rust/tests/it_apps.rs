@@ -1,0 +1,64 @@
+//! Application-level integration on the full-size geometry service.
+
+use drim::apps::{cipher, dna, vecadd};
+use drim::coordinator::{DrimService, ServiceConfig};
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn service() -> DrimService {
+    DrimService::new(ServiceConfig::default())
+}
+
+#[test]
+fn dna_pipeline_on_synthetic_genome() {
+    let mut rng = Rng::new(0xD7A);
+    let s = service();
+    let mut genome = dna::random_genome(2_000, &mut rng);
+    let read = "ACGTTGCAGGTCAT";
+    // plant the read three times
+    for pos in [150usize, 900, 1700] {
+        genome.replace_range(pos..pos + read.len(), read);
+    }
+    let hits = dna::align(&s, &genome, read, read.len());
+    for pos in [150usize, 900, 1700] {
+        assert!(
+            hits.iter().any(|h| h.position == pos),
+            "planted hit at {pos} not found"
+        );
+    }
+    // approximate search finds at least as many
+    let approx = dna::align(&s, &genome, read, read.len() - 2);
+    assert!(approx.len() >= hits.len());
+}
+
+#[test]
+fn cipher_large_payload() {
+    let s = service();
+    let mut rng = Rng::new(0xC1F);
+    let msg = BitRow::random(300_000, &mut rng);
+    let ct = cipher::apply(&s, &msg, 0x1234_5678);
+    assert_ne!(ct, msg);
+    assert_eq!(cipher::apply(&s, &ct, 0x1234_5678), msg);
+}
+
+#[test]
+fn vecadd_composition() {
+    let s = service();
+    let a: Vec<u32> = (0..10_000u32).collect();
+    let b: Vec<u32> = (0..10_000u32).map(|x| x * 2).collect();
+    let sum = vecadd::add(&s, &a, &b);
+    assert!(sum.iter().enumerate().all(|(i, &v)| v == 3 * i as u32));
+    let five_a = vecadd::mul_const(&s, &a, 5);
+    assert!(five_a.iter().enumerate().all(|(i, &v)| v == 5 * i as u32));
+}
+
+#[test]
+fn service_metrics_reflect_app_usage() {
+    let s = service();
+    let a: Vec<u32> = (0..1000u32).collect();
+    let _ = vecadd::add(&s, &a, &a);
+    let snap = s.metrics.snapshot();
+    assert!(snap.requests >= 1);
+    assert!(snap.aaps > 0);
+    assert!(snap.sim_ns > 0);
+}

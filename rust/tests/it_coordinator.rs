@@ -1,0 +1,184 @@
+//! Serving-layer integration: multi-chunk payloads, concurrency, batching
+//! policies, and metrics consistency.
+
+use drim::coordinator::{
+    BatchPolicy, BulkRequest, DrimService, Payload, Router, ServiceConfig,
+};
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn tiny_service(policy: BatchPolicy) -> DrimService {
+    DrimService::new(ServiceConfig {
+        policy,
+        ..ServiceConfig::tiny()
+    })
+}
+
+fn host_op(op: BulkOp, ops: &[&BitRow]) -> BitRow {
+    let mut out = BitRow::zeros(ops[0].len());
+    match op {
+        BulkOp::Not => out.not_from(ops[0]),
+        BulkOp::Xnor2 => out.apply2(ops[0], ops[1], |x, y| !(x ^ y)),
+        BulkOp::Xor2 => out.apply2(ops[0], ops[1], |x, y| x ^ y),
+        BulkOp::And2 => out.apply2(ops[0], ops[1], |x, y| x & y),
+        BulkOp::Or2 => out.apply2(ops[0], ops[1], |x, y| x | y),
+        BulkOp::Nand2 => out.apply2(ops[0], ops[1], |x, y| !(x & y)),
+        BulkOp::Nor2 => out.apply2(ops[0], ops[1], |x, y| !(x | y)),
+        BulkOp::Maj3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
+            (x & y) | (x & z) | (y & z)
+        }),
+        BulkOp::Min3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
+            !((x & y) | (x & z) | (y & z))
+        }),
+        _ => unreachable!(),
+    }
+    out
+}
+
+#[test]
+fn every_bitwise_op_through_the_service() {
+    let s = tiny_service(BatchPolicy::Coalesce);
+    let mut rng = Rng::new(1);
+    for op in [
+        BulkOp::Not,
+        BulkOp::Xnor2,
+        BulkOp::Xor2,
+        BulkOp::And2,
+        BulkOp::Or2,
+        BulkOp::Nand2,
+        BulkOp::Nor2,
+        BulkOp::Maj3,
+        BulkOp::Min3,
+    ] {
+        let bits = 777 + (op as usize) * 131; // odd sizes cross chunks
+        let operands: Vec<BitRow> = (0..op.arity())
+            .map(|_| BitRow::random(bits, &mut rng))
+            .collect();
+        let resp = s.run(BulkRequest::bitwise(op, operands.clone()));
+        let got = match resp.result {
+            Payload::Bits(b) => b,
+            _ => panic!(),
+        };
+        let refs: Vec<&BitRow> = operands.iter().collect();
+        assert_eq!(got, host_op(op, &refs), "op {}", op.name());
+    }
+}
+
+#[test]
+fn large_payload_many_chunks() {
+    let s = tiny_service(BatchPolicy::Coalesce);
+    let mut rng = Rng::new(2);
+    let bits = 100_000; // ~391 chunks at 256 cols
+    let a = BitRow::random(bits, &mut rng);
+    let b = BitRow::random(bits, &mut rng);
+    let resp = s.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![a.clone(), b.clone()]));
+    let got = match resp.result {
+        Payload::Bits(r) => r,
+        _ => panic!(),
+    };
+    assert_eq!(got, host_op(BulkOp::Xnor2, &[&a, &b]));
+    let snap = s.metrics.snapshot();
+    assert_eq!(snap.chunks as usize, bits.div_ceil(256));
+    assert_eq!(snap.aaps, 3 * snap.chunks); // 3 AAPs per XNOR2 chunk
+}
+
+#[test]
+fn add_and_sub_roundtrip_through_service() {
+    let s = tiny_service(BatchPolicy::Coalesce);
+    let mut rng = Rng::new(3);
+    let n = 700;
+    let a: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+    let b: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+    let sum = match s.run(BulkRequest::add32(a.clone(), b.clone())).result {
+        Payload::U32(v) => v,
+        _ => panic!(),
+    };
+    for i in 0..n {
+        assert_eq!(sum[i], a[i].wrapping_add(b[i]));
+    }
+    let diff = match s.run(BulkRequest::sub32(sum.clone(), b.clone())).result {
+        Payload::U32(v) => v,
+        _ => panic!(),
+    };
+    assert_eq!(diff, a);
+}
+
+#[test]
+fn interleaved_concurrent_requests_are_isolated() {
+    let s = tiny_service(BatchPolicy::Coalesce);
+    let mut rng = Rng::new(4);
+    let mut inputs = Vec::new();
+    let mut pending = Vec::new();
+    for _ in 0..12 {
+        let a = BitRow::random(2048, &mut rng);
+        let b = BitRow::random(2048, &mut rng);
+        pending.push(s.submit(BulkRequest::bitwise(
+            BulkOp::Xor2,
+            vec![a.clone(), b.clone()],
+        )));
+        inputs.push((a, b));
+    }
+    for (i, p) in pending.into_iter().enumerate() {
+        let resp = p.recv().unwrap();
+        let got = match resp.result {
+            Payload::Bits(r) => r,
+            _ => panic!(),
+        };
+        let (a, b) = &inputs[i];
+        assert_eq!(got, host_op(BulkOp::Xor2, &[a, b]), "request {i}");
+    }
+}
+
+#[test]
+fn batching_policy_changes_sim_latency_not_results() {
+    let mut rng = Rng::new(5);
+    let a = BitRow::random(10_000, &mut rng);
+    let b = BitRow::random(10_000, &mut rng);
+    let mut results = Vec::new();
+    let mut latencies = Vec::new();
+    for pol in [BatchPolicy::Immediate, BatchPolicy::Coalesce] {
+        let s = tiny_service(pol);
+        let resp = s.run(BulkRequest::bitwise(
+            BulkOp::Xnor2,
+            vec![a.clone(), b.clone()],
+        ));
+        latencies.push(resp.sim_latency_ns);
+        results.push(match resp.result {
+            Payload::Bits(r) => r,
+            _ => panic!(),
+        });
+    }
+    assert_eq!(results[0], results[1]);
+    // single request: immediate == coalesce latency
+    assert!((latencies[0] - latencies[1]).abs() < 1e-9);
+}
+
+#[test]
+fn router_wave_math_consistent_with_metrics() {
+    let cfg = ServiceConfig::tiny();
+    let router = Router::new(cfg.clone());
+    let s = DrimService::new(cfg);
+    let mut rng = Rng::new(6);
+    let bits = 5_000;
+    let a = BitRow::random(bits, &mut rng);
+    let resp = s.run(BulkRequest::bitwise(BulkOp::Not, vec![a]));
+    let chunks = router.shard(0, bits).len();
+    let expect = router.sim_latency_ns(BulkOp::Not, &[chunks]);
+    assert!((resp.sim_latency_ns - expect).abs() < 1e-9);
+}
+
+#[test]
+fn empty_edge_one_bit_request() {
+    let s = tiny_service(BatchPolicy::Coalesce);
+    let mut a = BitRow::zeros(1);
+    a.set(0, true);
+    let resp = s.run(BulkRequest::bitwise(BulkOp::Not, vec![a]));
+    match resp.result {
+        Payload::Bits(r) => {
+            assert_eq!(r.len(), 1);
+            assert!(!r.get(0));
+        }
+        _ => panic!(),
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-layer functional integration: sub-array charge sharing vs the
+//! analog decision models, controller execution on full-size geometry.
+
+use drim::analog::{dra_sense, model, tra_sense};
+use drim::analog::params as P;
+use drim::controller::Controller;
+use drim::dram::command::{AapKind, RowId::*};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::subarray::sense::{dra_decision, tra_decision};
+use drim::subarray::SubArray;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+/// The digital SA decision table must equal the zero-variation analog
+/// model — the two layers describe the same circuit.
+#[test]
+fn digital_matches_analog_decisions() {
+    for n in 0..=2usize {
+        let (di, dj) = match n {
+            0 => (0.0, 0.0),
+            1 => (1.0, 0.0),
+            _ => (1.0, 1.0),
+        };
+        let (xnor_analog, xor_analog) = dra_sense(
+            di * P::VDD,
+            dj * P::VDD,
+            1.0,
+            1.0,
+            P::CP_RATIO,
+            P::VS_LOW,
+            P::VS_HIGH,
+            0.0,
+        );
+        assert_eq!((xnor_analog, xor_analog), dra_decision(n), "DRA n={n}");
+    }
+    for n in 0..=3usize {
+        let q: Vec<f64> = (0..3).map(|i| ((i < n) as u8) as f64 * P::VDD).collect();
+        let maj = tra_sense([q[0], q[1], q[2]], [1.0; 3], P::CB_RATIO, P::VSA, 0.0);
+        assert_eq!(maj, tra_decision(n), "TRA n={n}");
+    }
+}
+
+/// The margins that make Table 3 work, measured from the ideal levels.
+#[test]
+fn margin_geometry() {
+    assert!(model::dra_worst_margin() > 1.5 * model::tra_worst_margin());
+}
+
+#[test]
+fn full_geometry_controller_xnor() {
+    let mut c = Controller::new(DramGeometry::default());
+    let mut rng = Rng::new(1);
+    let a = BitRow::random(8192, &mut rng);
+    let b = BitRow::random(8192, &mut rng);
+    c.write_row(3, 17, Data(100), &a);
+    c.write_row(3, 17, Data(101), &b);
+    c.exec_op(BulkOp::Xnor2, 3, 17, &[Data(100), Data(101)], Data(102));
+    let mut want = BitRow::zeros(8192);
+    want.apply2(&a, &b, |x, y| !(x ^ y));
+    assert_eq!(c.read_row(3, 17, Data(102)), want);
+    // untouched sub-arrays are untouched
+    assert_eq!(c.read_row(3, 18, Data(100)).popcount(), 0);
+}
+
+#[test]
+fn dra_write_back_is_visible_in_cells() {
+    // Fig. 6: after DRA, both source cells hold the XNOR result
+    let mut s = SubArray::new(1024);
+    let mut rng = Rng::new(2);
+    let a = BitRow::random(1024, &mut rng);
+    let b = BitRow::random(1024, &mut rng);
+    s.write_row(X(1), &a);
+    s.write_row(X(2), &b);
+    s.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(0)]);
+    let mut xnor = BitRow::zeros(1024);
+    xnor.apply2(&a, &b, |x, y| !(x ^ y));
+    assert_eq!(s.read_row(X(1)), xnor);
+    assert_eq!(s.read_row(X(2)), xnor);
+    assert_eq!(s.read_row(Data(0)), xnor);
+}
+
+#[test]
+fn tra_write_back_is_visible_in_cells() {
+    let mut s = SubArray::new(512);
+    let mut rng = Rng::new(3);
+    let rows: Vec<BitRow> = (0..3).map(|_| BitRow::random(512, &mut rng)).collect();
+    s.write_row(X(1), &rows[0]);
+    s.write_row(X(2), &rows[1]);
+    s.write_row(X(3), &rows[2]);
+    s.execute_aap(AapKind::Tra, &[X(1), X(2), X(3)], &[Data(7)]);
+    let mut maj = BitRow::zeros(512);
+    maj.apply3(&rows[0], &rows[1], &rows[2], |x, y, z| {
+        (x & y) | (x & z) | (y & z)
+    });
+    for r in [X(1), X(2), X(3), Data(7)] {
+        assert_eq!(s.read_row(r), maj, "row {r}");
+    }
+}
+
+#[test]
+fn thirty_two_bit_add_on_full_rows() {
+    let mut c = Controller::new(DramGeometry::default());
+    let mut rng = Rng::new(4);
+    let n = 8192usize;
+    let av: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+    let bv: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+    let (mut ar, mut br, mut sr) = (vec![], vec![], vec![]);
+    for bit in 0..32u16 {
+        let mut pa = BitRow::zeros(n);
+        let mut pb = BitRow::zeros(n);
+        for e in 0..n {
+            pa.set(e, (av[e] >> bit) & 1 == 1);
+            pb.set(e, (bv[e] >> bit) & 1 == 1);
+        }
+        c.write_row(0, 0, Data(bit), &pa);
+        c.write_row(0, 0, Data(100 + bit), &pb);
+        ar.push(Data(bit));
+        br.push(Data(100 + bit));
+        sr.push(Data(200 + bit));
+    }
+    let stats = c.add_planes(0, 0, &ar, &br, &sr, Data(300));
+    assert_eq!(stats.aaps, 7 * 32);
+    // spot-check 200 random elements
+    for _ in 0..200 {
+        let e = rng.below(n as u64) as usize;
+        let mut got = 0u32;
+        for (bit, s) in sr.iter().enumerate() {
+            got |= (c.read_row(0, 0, *s).get(e) as u32) << bit;
+        }
+        assert_eq!(got, av[e].wrapping_add(bv[e]), "elem {e}");
+    }
+}
+
+#[test]
+fn energy_and_time_scale_with_sequences() {
+    let mut c = Controller::new(DramGeometry::tiny());
+    let mut rng = Rng::new(5);
+    let a = BitRow::random(c.geometry.cols, &mut rng);
+    c.write_row(0, 0, Data(0), &a);
+    c.write_row(0, 0, Data(1), &a);
+    let xnor = c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(0), Data(1)], Data(2));
+    let xor = c.exec_op(BulkOp::Xor2, 0, 0, &[Data(0), Data(1)], Data(3));
+    // XOR routes through DCC: exactly one extra AAP
+    assert_eq!(xor.aaps, xnor.aaps + 1);
+    assert!(xor.time_ns > xnor.time_ns);
+    assert!(xor.energy_pj > xnor.energy_pj);
+}

@@ -1,0 +1,184 @@
+//! Table 2 micro-programs executed end-to-end on the sub-array, plus the
+//! assembler round-trip *through execution* (a parsed program must compute
+//! the same thing as the built one).
+
+use drim::controller::Controller;
+use drim::dram::command::RowId::{self, *};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::{self, BulkOp};
+use drim::isa::assemble;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn fresh() -> (Controller, Rng) {
+    (Controller::new(DramGeometry::tiny()), Rng::new(0xA11CE))
+}
+
+fn load(c: &mut Controller, rows: &[(RowId, &BitRow)]) {
+    for (r, v) in rows {
+        c.write_row(0, 0, *r, v);
+    }
+}
+
+#[test]
+fn every_bulkop_program_computes_its_truth_table() {
+    let (mut c, mut rng) = fresh();
+    let cols = c.geometry.cols;
+    let a = BitRow::random(cols, &mut rng);
+    let b = BitRow::random(cols, &mut rng);
+    let k = BitRow::random(cols, &mut rng);
+    for op in [
+        BulkOp::Copy,
+        BulkOp::Not,
+        BulkOp::Xnor2,
+        BulkOp::Xor2,
+        BulkOp::And2,
+        BulkOp::Or2,
+        BulkOp::Nand2,
+        BulkOp::Nor2,
+        BulkOp::Maj3,
+        BulkOp::Min3,
+    ] {
+        load(&mut c, &[(Data(0), &a), (Data(1), &b), (Data(2), &k)]);
+        let srcs = [Data(0), Data(1), Data(2)];
+        c.exec_op(op, 0, 0, &srcs[..op.arity()], Data(5));
+        let got = c.read_row(0, 0, Data(5));
+        for i in (0..cols).step_by(17) {
+            let (x, y, z) = (a.get(i), b.get(i), k.get(i));
+            let want = match op {
+                BulkOp::Copy => x,
+                BulkOp::Not => !x,
+                BulkOp::Xnor2 => x == y,
+                BulkOp::Xor2 => x != y,
+                BulkOp::And2 => x && y,
+                BulkOp::Or2 => x || y,
+                BulkOp::Nand2 => !(x && y),
+                BulkOp::Nor2 => !(x || y),
+                BulkOp::Maj3 => (x as u8 + y as u8 + z as u8) >= 2,
+                BulkOp::Min3 => (x as u8 + y as u8 + z as u8) < 2,
+                _ => unreachable!(),
+            };
+            assert_eq!(got.get(i), want, "{} bit {i}", op.name());
+        }
+    }
+}
+
+#[test]
+fn parsed_program_executes_identically() {
+    let (mut c, mut rng) = fresh();
+    let cols = c.geometry.cols;
+    let a = BitRow::random(cols, &mut rng);
+    let b = BitRow::random(cols, &mut rng);
+
+    let built = program::xnor2(Data(0), Data(1), Data(5));
+    let text = assemble::format_program(&built);
+    let parsed = assemble::parse_program("xnor2", &text).unwrap();
+
+    load(&mut c, &[(Data(0), &a), (Data(1), &b)]);
+    c.run_program(0, 0, &built);
+    let want = c.read_row(0, 0, Data(5));
+
+    let mut c2 = Controller::new(DramGeometry::tiny());
+    c2.write_row(0, 0, Data(0), &a);
+    c2.write_row(0, 0, Data(1), &b);
+    c2.run_program(0, 0, &parsed);
+    assert_eq!(c2.read_row(0, 0, Data(5)), want);
+}
+
+#[test]
+fn hand_written_program_via_assembler() {
+    // NOT through the DCC pair, written as assembly text
+    let (mut c, mut rng) = fresh();
+    let a = BitRow::random(c.geometry.cols, &mut rng);
+    load(&mut c, &[(Data(3), &a)]);
+    let p = assemble::parse_program(
+        "not_asm",
+        "# manual NOT\nAAP(d3, dcc2)\nAAP(dcc1, d4)\n",
+    )
+    .unwrap();
+    c.run_program(0, 0, &p);
+    let mut want = BitRow::zeros(c.geometry.cols);
+    want.not_from(&a);
+    assert_eq!(c.read_row(0, 0, Data(4)), want);
+}
+
+#[test]
+fn add_slice_matches_full_adder_truth_table() {
+    let (mut c, _) = fresh();
+    let cols = c.geometry.cols;
+    // enumerate all 8 (a, b, cin) combinations, one per bit position
+    let mut a = BitRow::zeros(cols);
+    let mut b = BitRow::zeros(cols);
+    let mut cin = BitRow::zeros(cols);
+    for i in 0..8.min(cols) {
+        a.set(i, (i >> 2) & 1 == 1);
+        b.set(i, (i >> 1) & 1 == 1);
+        cin.set(i, i & 1 == 1);
+    }
+    load(&mut c, &[(Data(0), &a), (Data(1), &b), (Data(2), &cin)]);
+    let p = program::full_adder(Data(0), Data(1), Data(2), Data(5), Data(6));
+    c.run_program(0, 0, &p);
+    let sum = c.read_row(0, 0, Data(5));
+    let cout = c.read_row(0, 0, Data(6));
+    for i in 0..8.min(cols) {
+        let total = (a.get(i) as u8) + (b.get(i) as u8) + (cin.get(i) as u8);
+        assert_eq!(sum.get(i), total & 1 == 1, "sum bit {i}");
+        assert_eq!(cout.get(i), total >= 2, "carry bit {i}");
+    }
+}
+
+#[test]
+fn subtractor_slice_is_borrow_correct() {
+    let (mut c, _) = fresh();
+    let cols = c.geometry.cols;
+    let mut a = BitRow::zeros(cols);
+    let mut b = BitRow::zeros(cols);
+    let mut cin = BitRow::zeros(cols); // carry-in of the two's-complement add
+    for i in 0..8.min(cols) {
+        a.set(i, (i >> 2) & 1 == 1);
+        b.set(i, (i >> 1) & 1 == 1);
+        cin.set(i, i & 1 == 1);
+    }
+    load(&mut c, &[(Data(0), &a), (Data(1), &b), (Data(2), &cin)]);
+    let p = program::full_subtractor(Data(0), Data(1), Data(2), Data(5), Data(6));
+    c.run_program(0, 0, &p);
+    let diff = c.read_row(0, 0, Data(5));
+    let cout = c.read_row(0, 0, Data(6));
+    for i in 0..8.min(cols) {
+        // a + !b + cin (one slice of two's-complement subtraction)
+        let total = a.get(i) as u8 + (!b.get(i)) as u8 + cin.get(i) as u8;
+        assert_eq!(diff.get(i), total & 1 == 1, "diff bit {i}");
+        assert_eq!(cout.get(i), total >= 2, "carry bit {i}");
+    }
+}
+
+#[test]
+fn control_rows_survive_tra_composed_ops() {
+    // AND2 consumes CTRL_ZEROS via a copy, never destructively
+    let (mut c, mut rng) = fresh();
+    let cols = c.geometry.cols;
+    let a = BitRow::random(cols, &mut rng);
+    let b = BitRow::random(cols, &mut rng);
+    for _ in 0..3 {
+        load(&mut c, &[(Data(0), &a), (Data(1), &b)]);
+        c.exec_op(BulkOp::And2, 0, 0, &[Data(0), Data(1)], Data(5));
+        c.exec_op(BulkOp::Or2, 0, 0, &[Data(0), Data(1)], Data(6));
+    }
+    assert_eq!(c.read_row(0, 0, program::CTRL_ZEROS).popcount(), 0);
+    assert_eq!(c.read_row(0, 0, program::CTRL_ONES).popcount(), cols);
+}
+
+#[test]
+fn table2_timings() {
+    use drim::dram::timing::TimingParams;
+    let t = TimingParams::default();
+    // the paper's headline sequence timings
+    assert_eq!(program::copy(Data(0), Data(1)).duration_ns(&t), 90.0);
+    assert_eq!(program::not(Data(0), Data(1)).duration_ns(&t), 180.0);
+    assert_eq!(program::xnor2(Data(0), Data(1), Data(2)).duration_ns(&t), 270.0);
+    assert_eq!(
+        program::full_adder(Data(0), Data(1), Data(2), Data(3), Data(4))
+            .duration_ns(&t),
+        630.0
+    );
+}

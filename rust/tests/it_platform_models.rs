@@ -1,0 +1,141 @@
+//! Fig. 8 / Fig. 9 reproduction bands: every headline number the paper
+//! quotes, asserted as a ratio band against our models, at all three
+//! vector lengths the paper sweeps (2^27, 2^28, 2^29).
+
+use drim::isa::program::BulkOp;
+use drim::platforms::{all_platforms, by_name, Platform, FIG8_OPS};
+
+const SIZES: [u64; 3] = [1 << 27, 1 << 28, 1 << 29];
+
+fn tp(name: &str, op: BulkOp, bits: u64) -> f64 {
+    by_name(name).unwrap().throughput_bits_per_sec(op, bits)
+}
+
+fn avg_ratio(a: &str, b: &str, bits: u64) -> f64 {
+    FIG8_OPS
+        .iter()
+        .map(|&op| tp(a, op, bits) / tp(b, op, bits))
+        .sum::<f64>()
+        / FIG8_OPS.len() as f64
+}
+
+#[test]
+fn fig8_drim_vs_cpu_71x() {
+    for bits in SIZES {
+        let r = avg_ratio("DRIM-R", "CPU", bits);
+        assert!((50.0..110.0).contains(&r), "{bits}: {r:.1} (paper 71)");
+    }
+}
+
+#[test]
+fn fig8_drim_vs_gpu_8_4x() {
+    for bits in SIZES {
+        let r = avg_ratio("DRIM-R", "GPU", bits);
+        assert!((6.0..13.0).contains(&r), "{bits}: {r:.1} (paper 8.4)");
+    }
+}
+
+#[test]
+fn fig8_drim_vs_prior_pims_xnor() {
+    for bits in SIZES {
+        let ambit = tp("DRIM-R", BulkOp::Xnor2, bits) / tp("Ambit", BulkOp::Xnor2, bits);
+        let d1 = tp("DRIM-R", BulkOp::Xnor2, bits) / tp("DRISA-1T1C", BulkOp::Xnor2, bits);
+        let d3 = tp("DRIM-R", BulkOp::Xnor2, bits) / tp("DRISA-3T1C", BulkOp::Xnor2, bits);
+        assert!((1.9..2.8).contains(&ambit), "Ambit {ambit:.2} (paper 2.3)");
+        assert!((1.4..2.4).contains(&d1), "1T1C {d1:.2} (paper 1.9)");
+        assert!((3.0..4.5).contains(&d3), "3T1C {d3:.2} (paper 3.7)");
+    }
+}
+
+#[test]
+fn fig8_hmc_over_von_neumann() {
+    // paper: HMC ≈ 25×/6.5× over CPU/GPU on average; our bandwidth model
+    // lands lower for CPU (see EXPERIMENTS.md discussion) but the ordering
+    // and order of magnitude must hold
+    for bits in SIZES {
+        let vs_cpu = avg_ratio("HMC", "CPU", bits);
+        let vs_gpu = avg_ratio("HMC", "GPU", bits);
+        assert!(vs_cpu > 10.0, "HMC/CPU {vs_cpu:.1}");
+        assert!(vs_gpu > 1.5, "HMC/GPU {vs_gpu:.1}");
+    }
+}
+
+#[test]
+fn fig8_drim_s_boosts_hmc_13_5x() {
+    for bits in SIZES {
+        let r = avg_ratio("DRIM-S", "HMC", bits);
+        assert!((8.0..20.0).contains(&r), "{r:.1} (paper 13.5)");
+    }
+}
+
+#[test]
+fn fig8_pim_ordering_stable_across_sizes() {
+    for bits in SIZES {
+        for op in FIG8_OPS {
+            let pims = ["Ambit", "DRISA-1T1C", "DRISA-3T1C"];
+            for p in pims {
+                assert!(
+                    tp("DRIM-R", op, bits) >= tp(p, op, bits) * 0.99,
+                    "DRIM-R must dominate {p} on {} at {bits}",
+                    op.name()
+                );
+            }
+            // every PIM beats every Von-Neumann machine on every op
+            for p in ["Ambit", "DRISA-1T1C", "DRISA-3T1C", "DRIM-R", "DRIM-S"] {
+                for v in ["CPU", "GPU"] {
+                    assert!(tp(p, op, bits) > tp(v, op, bits), "{p} vs {v} on {}", op.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fig9_energy_ratios() {
+    let e = |n: &str, op: BulkOp| {
+        by_name(n).unwrap().energy_pj_per_kb(op).unwrap()
+    };
+    // XNOR2: 2.4× vs Ambit, 1.6× vs DRISA-1T1C
+    let ambit = e("Ambit", BulkOp::Xnor2) / e("DRIM-R", BulkOp::Xnor2);
+    assert!((2.0..2.9).contains(&ambit), "{ambit:.2} (paper 2.4)");
+    let d1 = e("DRISA-1T1C", BulkOp::Xnor2) / e("DRIM-R", BulkOp::Xnor2);
+    assert!((1.3..2.0).contains(&d1), "{d1:.2} (paper 1.6)");
+    // add: ~2× vs Ambit, 1.7× vs DRISA-1T1C, 27× vs CPU
+    let add_ambit = e("Ambit", BulkOp::Add) / e("DRIM-R", BulkOp::Add);
+    assert!((1.5..2.5).contains(&add_ambit), "{add_ambit:.2} (paper ~2)");
+    let add_d1 = e("DRISA-1T1C", BulkOp::Add) / e("DRIM-R", BulkOp::Add);
+    assert!((1.3..2.2).contains(&add_d1), "{add_d1:.2} (paper 1.7)");
+    let add_cpu = e("CPU", BulkOp::Add) / e("DRIM-R", BulkOp::Add);
+    assert!((20.0..34.0).contains(&add_cpu), "{add_cpu:.1} (paper 27)");
+}
+
+#[test]
+fn fig9_ddr4_copy_69x() {
+    let m = drim::energy::EnergyModel::default();
+    let r = m.ddr4_copy_pj(8192.0)
+        / m.aap_pj(drim::dram::command::AapKind::Copy, 8192);
+    assert!((60.0..80.0).contains(&r), "{r:.1} (paper 69)");
+}
+
+#[test]
+fn energy_never_negative_or_zero() {
+    for p in all_platforms() {
+        for op in [BulkOp::Copy, BulkOp::Not, BulkOp::Xnor2, BulkOp::Add] {
+            if let Some(e) = p.energy_pj_per_kb(op) {
+                assert!(e > 0.0, "{} {}", p.name(), op.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn throughput_monotone_in_vector_size() {
+    for p in all_platforms() {
+        let p: &dyn Platform = p.as_ref();
+        for op in FIG8_OPS {
+            let t27 = p.throughput_bits_per_sec(op, SIZES[0]);
+            let t29 = p.throughput_bits_per_sec(op, SIZES[2]);
+            assert!(t29 >= t27 * 0.999, "{} {}", p.name(), op.name());
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT integration: the Rust functional simulator and analog mirrors vs
+//! the AOT-lowered JAX artifacts. Requires `make artifacts` (skips with a
+//! clear message otherwise).
+//!
+//! PJRT clients are not `Send`, so each test builds its own `Runtime`;
+//! a process-wide mutex serializes them (concurrent CPU clients in one
+//! process are fragile at teardown).
+
+use std::sync::Mutex;
+
+use drim::analog::montecarlo::run_montecarlo;
+use drim::analog::params as P;
+use drim::analog::transient;
+use drim::controller::Controller;
+use drim::dram::command::RowId::*;
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::runtime::golden::{verify_bulk, BULK_WORDS};
+use drim::runtime::Runtime;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+static PJRT_GATE: Mutex<()> = Mutex::new(());
+
+macro_rules! with_rt {
+    ($rt:ident) => {
+        let _gate = PJRT_GATE.lock().unwrap_or_else(|p| p.into_inner());
+        let mut $rt = match Runtime::load_default() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping PJRT test (run `make artifacts`): {e}");
+                return;
+            }
+        };
+    };
+}
+
+#[test]
+fn all_bulk_artifacts_match_functional_sim() {
+    with_rt!(rt);
+    let mut c = Controller::new(DramGeometry::tiny());
+    let mut rng = Rng::new(1);
+    let cols = c.geometry.cols;
+    for (op, name) in [
+        (BulkOp::Xnor2, "xnor2"),
+        (BulkOp::Xor2, "xor2"),
+        (BulkOp::And2, "and2"),
+        (BulkOp::Or2, "or2"),
+        (BulkOp::Nand2, "nand2"),
+        (BulkOp::Nor2, "nor2"),
+        (BulkOp::Maj3, "maj3"),
+        (BulkOp::Min3, "min3"),
+    ] {
+        let operands: Vec<BitRow> = (0..op.arity())
+            .map(|_| BitRow::random(cols, &mut rng))
+            .collect();
+        for (i, o) in operands.iter().enumerate() {
+            c.write_row(0, 0, Data(i as u16), o);
+        }
+        let srcs = [Data(0), Data(1), Data(2)];
+        c.exec_op(op, 0, 0, &srcs[..op.arity()], Data(5));
+        let result = c.read_row(0, 0, Data(5));
+        let refs: Vec<&BitRow> = operands.iter().collect();
+        let bits = verify_bulk(&mut rt, name, &refs, &result)
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(bits, cols);
+    }
+}
+
+#[test]
+fn not_artifact_matches_dcc_not() {
+    with_rt!(rt);
+    let mut c = Controller::new(DramGeometry::tiny());
+    let mut rng = Rng::new(2);
+    let a = BitRow::random(c.geometry.cols, &mut rng);
+    c.write_row(0, 0, Data(0), &a);
+    c.exec_op(BulkOp::Not, 0, 0, &[Data(0)], Data(5));
+    let result = c.read_row(0, 0, Data(5));
+    verify_bulk(&mut rt, "not1", &[&a], &result).unwrap();
+}
+
+#[test]
+fn bitplane_add_artifact_matches_controller_adder() {
+    with_rt!(rt);
+    // artifact shape: 32 planes × 2048 i32 words = 65 536 elements;
+    // simulate a slice of it on the controller and compare plane-wise
+    let words = 2048usize;
+    let mut rng = Rng::new(3);
+    let a: Vec<i32> = (0..32 * words).map(|_| rng.next_u64() as i32).collect();
+    let b: Vec<i32> = (0..32 * words).map(|_| rng.next_u64() as i32).collect();
+    let cin = vec![0i32; words];
+    let (sum, carry) = rt.bitplane_add(&a, &b, &cin).unwrap();
+
+    // controller: same planes over a cols=2048*32 geometry is too wide for
+    // one sub-array; use the first 8192 bit-lanes (256 words per plane)
+    let lanes = 8192usize;
+    let wpl = lanes / 32;
+    let mut c = Controller::new(DramGeometry::default());
+    let (mut ar, mut br, mut sr) = (vec![], vec![], vec![]);
+    for bit in 0..32usize {
+        let pa: Vec<u32> = a[bit * words..bit * words + wpl]
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        let pb: Vec<u32> = b[bit * words..bit * words + wpl]
+            .iter()
+            .map(|&x| x as u32)
+            .collect();
+        c.write_row(0, 0, Data(bit as u16), &BitRow::from_u32_lanes(lanes, &pa));
+        c.write_row(
+            0,
+            0,
+            Data(100 + bit as u16),
+            &BitRow::from_u32_lanes(lanes, &pb),
+        );
+        ar.push(Data(bit as u16));
+        br.push(Data(100 + bit as u16));
+        sr.push(Data(200 + bit as u16));
+    }
+    c.add_planes(0, 0, &ar, &br, &sr, Data(300));
+    for bit in 0..32usize {
+        let got = c.read_row(0, 0, sr[bit]).to_u32_lanes();
+        let want = &sum[bit * words..bit * words + wpl];
+        for w in 0..wpl {
+            assert_eq!(got[w] as i32, want[w], "plane {bit} word {w}");
+        }
+    }
+    let got_c = c.read_row(0, 0, Data(300)).to_u32_lanes();
+    for w in 0..wpl {
+        assert_eq!(got_c[w] as i32, carry[w], "carry word {w}");
+    }
+}
+
+#[test]
+fn mc_artifact_statistically_matches_rust_mirror() {
+    with_rt!(rt);
+    for (i, &v) in [0.10f64, 0.20].iter().enumerate() {
+        let (de, te, dn, tn) = rt.mc_variation([42, i as u32], v as f32).unwrap();
+        let jax_dra = 100.0 * de as f64 / dn as f64;
+        let jax_tra = 100.0 * te as f64 / tn as f64;
+        let r = run_montecarlo(v, P::MC_TRIALS, 99 + i as u64);
+        // Monte-Carlo agreement: within 1.5 percentage points
+        assert!(
+            (jax_dra - r.dra_pct()).abs() < 1.5,
+            "±{v}: DRA jax {jax_dra:.2} vs rust {:.2}",
+            r.dra_pct()
+        );
+        assert!(
+            (jax_tra - r.tra_pct()).abs() < 2.0,
+            "±{v}: TRA jax {jax_tra:.2} vs rust {:.2}",
+            r.tra_pct()
+        );
+    }
+}
+
+#[test]
+fn mc_artifact_reproduces_table3_shape() {
+    with_rt!(rt);
+    let mut last_dra = 0.0;
+    for (i, &v) in [0.05f32, 0.10, 0.15, 0.20, 0.30].iter().enumerate() {
+        let (de, te, dn, tn) = rt.mc_variation([7, i as u32], v).unwrap();
+        let dra = 100.0 * de as f64 / dn as f64;
+        let tra = 100.0 * te as f64 / tn as f64;
+        assert!(dra <= tra, "±{v}: DRA {dra} > TRA {tra}");
+        assert!(dra >= last_dra - 0.01, "DRA not monotone at ±{v}");
+        last_dra = dra;
+        if v <= 0.10 {
+            assert!(dra < 0.05, "DRA must be clean at ±{v}: {dra}");
+        }
+    }
+}
+
+#[test]
+fn transient_artifact_matches_rust_mirror_pointwise() {
+    with_rt!(rt);
+    let flat = rt
+        .transient([[0., 0.], [0., 1.], [1., 0.], [1., 1.]])
+        .unwrap();
+    let steps = P::transient_steps();
+    assert_eq!(flat.len(), 4 * steps * 4);
+    for (ci, (_, _, w)) in transient::all_cases().into_iter().enumerate() {
+        for (t, s) in w.iter().enumerate().step_by(37) {
+            for k in 0..4 {
+                let jax = flat[(ci * steps + t) * 4 + k] as f64;
+                assert!(
+                    (jax - s[k]).abs() < 2e-3,
+                    "case {ci} t {t} ch {k}: jax {jax} rust {}",
+                    s[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_check_detects_corruption() {
+    with_rt!(rt);
+    let mut rng = Rng::new(9);
+    let a = BitRow::random(BULK_WORDS * 32, &mut rng);
+    let b = BitRow::random(BULK_WORDS * 32, &mut rng);
+    let mut result = BitRow::zeros(a.len());
+    result.apply2(&a, &b, |x, y| !(x ^ y));
+    assert!(verify_bulk(&mut rt, "xnor2", &[&a, &b], &result).is_ok());
+    // flip one bit — the checker must catch it
+    let flip = (rng.below(result.len() as u64)) as usize;
+    let v = result.get(flip);
+    result.set(flip, !v);
+    assert!(verify_bulk(&mut rt, "xnor2", &[&a, &b], &result).is_err());
+}

@@ -1,0 +1,263 @@
+//! Property-based invariants across the stack (mini-proptest harness from
+//! util::prop; every failure reports a replayable seed).
+
+use drim::controller::{Controller, RowAllocator};
+use drim::coordinator::{BatchPolicy, Router, ServiceConfig};
+use drim::dram::command::RowId::{self, *};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+use drim::util::prop;
+use drim::util::rng::Rng;
+
+fn rand_row(cols: usize, rng: &mut Rng) -> BitRow {
+    BitRow::random(cols, rng)
+}
+
+/// XNOR is an involution through its operand: xnor(xnor(a,b), b) == a.
+#[test]
+fn prop_xnor_involution_in_memory() {
+    prop::check("xnor_involution", 40, |rng| {
+        let mut c = Controller::new(DramGeometry::tiny());
+        let cols = c.geometry.cols;
+        let a = rand_row(cols, rng);
+        let b = rand_row(cols, rng);
+        c.write_row(0, 0, Data(0), &a);
+        c.write_row(0, 0, Data(1), &b);
+        c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(0), Data(1)], Data(2));
+        c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(2), Data(1)], Data(3));
+        if c.read_row(0, 0, Data(3)) == a {
+            Ok(())
+        } else {
+            Err("xnor(xnor(a,b),b) != a".into())
+        }
+    });
+}
+
+/// De Morgan executed entirely in-memory: NAND(a,b) == OR(!a, !b).
+#[test]
+fn prop_de_morgan_in_memory() {
+    prop::check("de_morgan", 30, |rng| {
+        let mut c = Controller::new(DramGeometry::tiny());
+        let cols = c.geometry.cols;
+        let a = rand_row(cols, rng);
+        let b = rand_row(cols, rng);
+        c.write_row(0, 0, Data(0), &a);
+        c.write_row(0, 0, Data(1), &b);
+        c.exec_op(BulkOp::Nand2, 0, 0, &[Data(0), Data(1)], Data(2));
+        c.exec_op(BulkOp::Not, 0, 0, &[Data(0)], Data(3));
+        c.exec_op(BulkOp::Not, 0, 0, &[Data(1)], Data(4));
+        c.exec_op(BulkOp::Or2, 0, 0, &[Data(3), Data(4)], Data(5));
+        if c.read_row(0, 0, Data(2)) == c.read_row(0, 0, Data(5)) {
+            Ok(())
+        } else {
+            Err("NAND(a,b) != OR(!a,!b)".into())
+        }
+    });
+}
+
+/// MAJ3 is symmetric under operand permutation.
+#[test]
+fn prop_maj3_symmetry() {
+    prop::check("maj3_symmetry", 25, |rng| {
+        let mut c = Controller::new(DramGeometry::tiny());
+        let cols = c.geometry.cols;
+        let rows: Vec<BitRow> = (0..3).map(|_| rand_row(cols, rng)).collect();
+        let perms: [[usize; 3]; 3] = [[0, 1, 2], [2, 0, 1], [1, 2, 0]];
+        let mut outs = Vec::new();
+        for (pi, p) in perms.iter().enumerate() {
+            c.write_row(0, 0, Data(0), &rows[p[0]]);
+            c.write_row(0, 0, Data(1), &rows[p[1]]);
+            c.write_row(0, 0, Data(2), &rows[p[2]]);
+            c.exec_op(
+                BulkOp::Maj3,
+                0,
+                0,
+                &[Data(0), Data(1), Data(2)],
+                Data(10 + pi as u16),
+            );
+            outs.push(c.read_row(0, 0, Data(10 + pi as u16)));
+        }
+        if outs[0] == outs[1] && outs[1] == outs[2] {
+            Ok(())
+        } else {
+            Err("MAJ3 not permutation-invariant".into())
+        }
+    });
+}
+
+/// add_planes then sub_planes restores the original planes (two's
+/// complement round trip) for random widths.
+#[test]
+fn prop_add_sub_roundtrip() {
+    prop::check("add_sub_roundtrip", 15, |rng| {
+        let mut c = Controller::new(DramGeometry::tiny());
+        let cols = c.geometry.cols;
+        let bits = 1 + rng.below(12) as usize;
+        let (mut ar, mut br, mut sr, mut dr) = (vec![], vec![], vec![], vec![]);
+        for i in 0..bits {
+            let pa = rand_row(cols, rng);
+            let pb = rand_row(cols, rng);
+            c.write_row(0, 0, Data(i as u16), &pa);
+            c.write_row(0, 0, Data(50 + i as u16), &pb);
+            ar.push(Data(i as u16));
+            br.push(Data(50 + i as u16));
+            sr.push(Data(100 + i as u16));
+            dr.push(Data(150 + i as u16));
+        }
+        c.add_planes(0, 0, &ar, &br, &sr, Data(200));
+        c.sub_planes(0, 0, &sr, &br, &dr, Data(201));
+        for i in 0..bits {
+            // compare diff planes against original a planes
+            let orig = c.read_row(0, 0, ar[i]);
+            let back = c.read_row(0, 0, dr[i]);
+            if orig != back {
+                return Err(format!("plane {i} of {bits} mismatch after a+b-b"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Add is commutative in-memory.
+#[test]
+fn prop_add_commutative() {
+    prop::check("add_commutative", 15, |rng| {
+        let mut c = Controller::new(DramGeometry::tiny());
+        let cols = c.geometry.cols;
+        let bits = 1 + rng.below(8) as usize;
+        let (mut ar, mut br) = (vec![], vec![]);
+        for i in 0..bits {
+            let pa = rand_row(cols, rng);
+            let pb = rand_row(cols, rng);
+            c.write_row(0, 0, Data(i as u16), &pa);
+            c.write_row(0, 0, Data(50 + i as u16), &pb);
+            ar.push(Data(i as u16));
+            br.push(Data(50 + i as u16));
+        }
+        let s1: Vec<RowId> = (0..bits).map(|i| Data(100 + i as u16)).collect();
+        let s2: Vec<RowId> = (0..bits).map(|i| Data(150 + i as u16)).collect();
+        c.add_planes(0, 0, &ar, &br, &s1, Data(200));
+        c.add_planes(0, 0, &br, &ar, &s2, Data(201));
+        for i in 0..bits {
+            if c.read_row(0, 0, s1[i]) != c.read_row(0, 0, s2[i]) {
+                return Err(format!("a+b != b+a at plane {i}"));
+            }
+        }
+        if c.read_row(0, 0, Data(200)) != c.read_row(0, 0, Data(201)) {
+            return Err("carry differs".into());
+        }
+        Ok(())
+    });
+}
+
+/// Allocator: groups never overlap reserved/scratch rows and survive
+/// arbitrary alloc/free interleavings (further cases in the unit tests).
+#[test]
+fn prop_allocator_stress() {
+    prop::check("allocator_stress", 20, |rng| {
+        let mut a = RowAllocator::new(DramGeometry::tiny());
+        let mut live: Vec<_> = Vec::new();
+        for _ in 0..200 {
+            if rng.bool() || live.is_empty() {
+                let n = 1 + rng.below(30) as usize;
+                if let Some(g) = a.alloc_group(n) {
+                    for r in &g.rows {
+                        if let RowId::Data(d) = r {
+                            if *d >= 496 {
+                                return Err(format!("reserved row {d} leaked"));
+                            }
+                        }
+                    }
+                    live.push(g);
+                }
+            } else {
+                let g = live.swap_remove(rng.below(live.len() as u64) as usize);
+                a.free_group(&g);
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Router sharding: reassembled chunk spans tile the payload exactly, for
+/// any payload size and geometry.
+#[test]
+fn prop_router_sharding_tiles_payload() {
+    prop::check("router_tiles", 50, |rng| {
+        let cfg = ServiceConfig {
+            geometry: DramGeometry::tiny(),
+            workers: 1,
+            policy: BatchPolicy::Coalesce,
+        };
+        let r = Router::new(cfg);
+        let bits = 1 + rng.below(100_000) as usize;
+        let chunks = r.shard(1, bits);
+        let mut covered = 0usize;
+        for (i, c) in chunks.iter().enumerate() {
+            if c.chunk_idx != i || c.bit_offset != covered {
+                return Err(format!("chunk {i} misplaced"));
+            }
+            covered += c.bits;
+        }
+        if covered == bits {
+            Ok(())
+        } else {
+            Err(format!("covered {covered} != {bits}"))
+        }
+    });
+}
+
+/// Simulated wave latency is monotone in queue size and consistent between
+/// policies (coalesce ≤ immediate, equal for single requests).
+#[test]
+fn prop_wave_latency_monotone() {
+    prop::check("wave_monotone", 40, |rng| {
+        let mk = |policy| {
+            Router::new(ServiceConfig {
+                geometry: DramGeometry::tiny(),
+                workers: 1,
+                policy,
+            })
+        };
+        let im = mk(BatchPolicy::Immediate);
+        let co = mk(BatchPolicy::Coalesce);
+        let a = 1 + rng.below(50) as usize;
+        let b = 1 + rng.below(50) as usize;
+        let op = BulkOp::Xnor2;
+        let single = co.sim_latency_ns(op, &[a]);
+        let both_co = co.sim_latency_ns(op, &[a, b]);
+        let both_im = im.sim_latency_ns(op, &[a, b]);
+        if both_co < single {
+            return Err("adding work reduced latency".into());
+        }
+        if both_co > both_im + 1e-9 {
+            return Err("coalesce slower than immediate".into());
+        }
+        if (im.sim_latency_ns(op, &[a]) - single).abs() > 1e-9 {
+            return Err("policies differ for a single request".into());
+        }
+        Ok(())
+    });
+}
+
+/// DRA destructiveness: after any DRA, the two source cells and the
+/// destination agree (the array's own write-back invariant).
+#[test]
+fn prop_dra_writeback_consistency() {
+    prop::check("dra_writeback", 30, |rng| {
+        use drim::dram::command::AapKind;
+        use drim::subarray::SubArray;
+        let cols = 64 + rng.below(512) as usize;
+        let mut s = SubArray::new(cols);
+        s.write_row(X(1), &rand_row(cols, rng));
+        s.write_row(X(2), &rand_row(cols, rng));
+        let out = s.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(0)]);
+        if s.read_row(X(1)) == out && s.read_row(X(2)) == out && s.read_row(Data(0)) == out
+        {
+            Ok(())
+        } else {
+            Err("cells and destination diverge after DRA".into())
+        }
+    });
+}
