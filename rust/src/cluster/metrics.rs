@@ -1,0 +1,204 @@
+//! Fleet-level metrics: merge per-device [`MetricsSnapshot`]s and add the
+//! cluster-only counters (admission, shedding, stealing, queue wait).
+//!
+//! Merge semantics: counters (requests, chunks, bits, AAPs) sum across
+//! devices, and host wall time sums (workers really do burn those host
+//! nanoseconds). Simulated DRAM time does *not* sum — devices run in
+//! parallel, so the fleet's simulated makespan is the busiest device's
+//! `sim_ns`, and fleet throughput is total result bits over that makespan.
+//! That is exactly the quantity the 1→N scaling ablation compares.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::MetricsSnapshot;
+use crate::util::stats::{fmt_ns, fmt_rate, Summary};
+
+/// Merge per-device snapshots into one fleet view (see module docs for
+/// which fields sum vs max).
+pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+    let mut out = MetricsSnapshot {
+        requests: 0,
+        chunks: 0,
+        result_bits: 0,
+        aaps: 0,
+        sim_ns: 0,
+        wall_ns: 0,
+        mean_latency_ns: 0.0,
+        max_latency_ns: 0.0,
+        sim_throughput_bits_per_sec: 0.0,
+    };
+    let mut latency_mass = 0.0;
+    for p in parts {
+        out.requests += p.requests;
+        out.chunks += p.chunks;
+        out.result_bits += p.result_bits;
+        out.aaps += p.aaps;
+        out.sim_ns = out.sim_ns.max(p.sim_ns);
+        out.wall_ns += p.wall_ns;
+        latency_mass += p.mean_latency_ns * p.requests as f64;
+        out.max_latency_ns = out.max_latency_ns.max(p.max_latency_ns);
+    }
+    if out.requests > 0 {
+        out.mean_latency_ns = latency_mass / out.requests as f64;
+    }
+    if out.sim_ns > 0 {
+        out.sim_throughput_bits_per_sec =
+            out.result_bits as f64 / (out.sim_ns as f64 * 1e-9);
+    }
+    out
+}
+
+/// Cluster-only live counters (the per-device counters live inside each
+/// device's `Metrics`).
+#[derive(Default)]
+pub struct FleetMetrics {
+    pub completed: AtomicU64,
+    /// batches a worker drained from another device's queue
+    pub steals: AtomicU64,
+    queue_wait_ns: Mutex<Summary>,
+}
+
+impl FleetMetrics {
+    pub fn new() -> Self {
+        FleetMetrics::default()
+    }
+
+    pub fn record_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_queue_wait_ns(&self, ns: f64) {
+        self.queue_wait_ns.lock().unwrap().add(ns);
+    }
+
+    pub fn mean_queue_wait_ns(&self) -> f64 {
+        self.queue_wait_ns.lock().unwrap().mean()
+    }
+}
+
+/// Point-in-time view of the whole fleet.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub per_device: Vec<MetricsSnapshot>,
+    pub merged: MetricsSnapshot,
+    pub admitted: u64,
+    /// requests refused outright (`try_submit` backpressure)
+    pub shed: u64,
+    /// blocking submissions that had to park for a free slot
+    pub waited: u64,
+    pub completed: u64,
+    pub steals: u64,
+    /// host-side wait between admission and a worker picking the task up
+    pub mean_queue_wait_ns: f64,
+}
+
+impl FleetSnapshot {
+    pub fn devices(&self) -> usize {
+        self.per_device.len()
+    }
+
+    /// Fleet simulated throughput (total bits / busiest-device makespan).
+    pub fn sim_throughput_bits_per_sec(&self) -> f64 {
+        self.merged.sim_throughput_bits_per_sec
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "fleet: {} devices  admitted: {}  shed: {}  waited: {}  \
+             completed: {}  steals: {}  mean queue wait: {}\n",
+            self.devices(),
+            self.admitted,
+            self.shed,
+            self.waited,
+            self.completed,
+            self.steals,
+            fmt_ns(self.mean_queue_wait_ns),
+        );
+        for (i, d) in self.per_device.iter().enumerate() {
+            s.push_str(&format!(
+                "  dev{i}: {:>6} req  {:>8} chunks  sim {}  ({}bit/s)\n",
+                d.requests,
+                d.chunks,
+                fmt_ns(d.sim_ns as f64),
+                fmt_rate(d.sim_throughput_bits_per_sec),
+            ));
+        }
+        s.push_str(&format!(
+            "  fleet merged (makespan = busiest device):\n  {}",
+            self.merged.report().replace('\n', "\n  ")
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(requests: u64, bits: u64, sim_ns: u64, mean_lat: f64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests,
+            chunks: requests * 2,
+            result_bits: bits,
+            aaps: requests * 3,
+            sim_ns,
+            wall_ns: 10,
+            mean_latency_ns: mean_lat,
+            max_latency_ns: mean_lat * 2.0,
+            sim_throughput_bits_per_sec: 0.0,
+        }
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_sim_time() {
+        let m = merge_snapshots(&[snap(4, 4000, 100, 50.0), snap(12, 8000, 300, 150.0)]);
+        assert_eq!(m.requests, 16);
+        assert_eq!(m.chunks, 32);
+        assert_eq!(m.result_bits, 12_000);
+        assert_eq!(m.aaps, 48);
+        assert_eq!(m.sim_ns, 300); // max, not sum: devices run in parallel
+        assert_eq!(m.wall_ns, 20); // sum: host really spent it
+        // request-weighted mean: (4·50 + 12·150) / 16
+        assert!((m.mean_latency_ns - 125.0).abs() < 1e-9);
+        assert!((m.max_latency_ns - 300.0).abs() < 1e-9);
+        // throughput over the makespan
+        let want = 12_000.0 / (300.0 * 1e-9);
+        assert!((m.sim_throughput_bits_per_sec - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn merge_of_nothing_is_empty() {
+        let m = merge_snapshots(&[]);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.sim_throughput_bits_per_sec, 0.0);
+        assert_eq!(m.mean_latency_ns, 0.0);
+    }
+
+    #[test]
+    fn fleet_counters_and_report() {
+        let f = FleetMetrics::new();
+        f.record_completed();
+        f.record_steal();
+        f.record_queue_wait_ns(500.0);
+        f.record_queue_wait_ns(1500.0);
+        assert!((f.mean_queue_wait_ns() - 1000.0).abs() < 1e-9);
+        let snapshot = FleetSnapshot {
+            per_device: vec![snap(1, 100, 10, 5.0)],
+            merged: merge_snapshots(&[snap(1, 100, 10, 5.0)]),
+            admitted: 1,
+            shed: 2,
+            waited: 3,
+            completed: 1,
+            steals: 1,
+            mean_queue_wait_ns: 1000.0,
+        };
+        let r = snapshot.report();
+        assert!(r.contains("shed: 2"), "{r}");
+        assert!(r.contains("dev0"), "{r}");
+    }
+}

@@ -1,0 +1,294 @@
+//! Multi-device scale-out: N independent DRIM devices served as one fleet.
+//!
+//! The paper's platform wins by exploiting bank × sub-array parallelism
+//! *inside* one chip; this layer takes the step SIMDRAM frames as going
+//! from a compute-capable sub-array to an end-to-end multi-unit framework:
+//! scheduling bulk X(N)OR traffic *across* devices (channels/ranks in
+//! lock-step, as Ambit's rank-level operation motivates).
+//!
+//! * [`topology`]  — which devices exist (channel/rank coordinates, per-
+//!   device [`ServiceConfig`]).
+//! * [`scheduler`] — per-device FIFO queues behind one shared ready list,
+//!   with an atomic Idle→Pending→Running shard state machine so a device
+//!   queue is never double-enqueued (and never drained by two workers).
+//! * [`worker`]    — one OS thread per device, each owning a
+//!   [`Device`] (a [`DrimService`] by default), draining its own queue
+//!   first and work-stealing backlogged ones.
+//! * [`admission`] — bounded per-device in-flight tickets with load
+//!   shedding: when every queue is full the fleet says so instead of
+//!   letting latency grow without bound.
+//! * [`metrics`]   — fleet aggregation: merge per-device
+//!   [`MetricsSnapshot`]s (counters sum, simulated makespan is the
+//!   busiest device) plus cluster-only counters (shed, steals, queue
+//!   wait).
+//!
+//! [`DrimCluster`] is the facade gluing these together; `drim serve
+//! --devices N`, `drim cluster`, examples/e2e_cluster.rs and
+//! benches/ablate_devices.rs all sit on it.
+
+pub mod admission;
+pub mod metrics;
+pub mod scheduler;
+pub mod topology;
+pub mod worker;
+
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
+pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot};
+pub use scheduler::{Scheduler, ShardState};
+pub use topology::{DeviceDesc, DeviceId, Topology};
+pub use worker::{ClusterResponse, ClusterTask};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::{
+    BulkRequest, Device, DrimService, Metrics, ServiceConfig,
+};
+
+/// Fleet construction knobs.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub topology: Topology,
+    pub admission: AdmissionConfig,
+    /// Allow idle workers to drain other devices' queues. On by default;
+    /// the scaling ablation turns it off to measure pure sharding.
+    pub steal: bool,
+}
+
+impl ClusterConfig {
+    /// `n` identical devices with the given per-device service config.
+    pub fn uniform(n: usize, service: ServiceConfig) -> Self {
+        ClusterConfig {
+            topology: Topology::uniform(n, service),
+            admission: AdmissionConfig::default(),
+            steal: true,
+        }
+    }
+
+    /// `n` test-sized devices.
+    pub fn tiny(n: usize) -> Self {
+        Self::uniform(n, ServiceConfig::tiny())
+    }
+}
+
+/// N DRIM devices behind one submit interface.
+pub struct DrimCluster {
+    cfg: ClusterConfig,
+    sched: Arc<Scheduler<ClusterTask>>,
+    admission: Arc<AdmissionController>,
+    fleet: Arc<FleetMetrics>,
+    /// per-device metrics handles (outlive the devices themselves)
+    device_metrics: Vec<Arc<Metrics>>,
+    workers: Vec<JoinHandle<()>>,
+    next_seq: AtomicU64,
+}
+
+impl DrimCluster {
+    /// Build the default fleet: one [`DrimService`] per topology entry.
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let devices: Vec<DrimService> = cfg
+            .topology
+            .devices
+            .iter()
+            .map(|d| DrimService::new(d.service.clone()))
+            .collect();
+        Self::with_devices(cfg, devices)
+    }
+
+    pub fn with_default_config(n_devices: usize) -> Self {
+        Self::new(ClusterConfig::uniform(n_devices, ServiceConfig::default()))
+    }
+
+    /// Build a fleet over caller-supplied devices (tests inject mocks or
+    /// heterogeneous services). `devices.len()` must match the topology.
+    pub fn with_devices<D: Device + 'static>(cfg: ClusterConfig, devices: Vec<D>) -> Self {
+        assert_eq!(
+            devices.len(),
+            cfg.topology.len(),
+            "one device per topology entry"
+        );
+        let n = devices.len();
+        let sched = Arc::new(Scheduler::new(n));
+        let admission = Arc::new(AdmissionController::new(n, cfg.admission));
+        let fleet = Arc::new(FleetMetrics::new());
+        let device_metrics: Vec<Arc<Metrics>> =
+            devices.iter().map(|d| d.metrics()).collect();
+        let workers = devices
+            .into_iter()
+            .enumerate()
+            .map(|(i, dev)| {
+                let sched = Arc::clone(&sched);
+                let admission = Arc::clone(&admission);
+                let fleet = Arc::clone(&fleet);
+                let steal = cfg.steal;
+                std::thread::spawn(move || {
+                    worker::worker_loop(DeviceId(i), dev, sched, admission, fleet, steal)
+                })
+            })
+            .collect();
+        DrimCluster {
+            cfg,
+            sched,
+            admission,
+            fleet,
+            device_metrics,
+            workers,
+            next_seq: AtomicU64::new(1),
+        }
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    pub fn devices(&self) -> usize {
+        self.device_metrics.len()
+    }
+
+    fn enqueue(&self, home: DeviceId, req: BulkRequest) -> Receiver<ClusterResponse> {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        self.sched.submit(
+            home.0,
+            ClusterTask {
+                seq,
+                home,
+                req,
+                reply: tx,
+                admitted_at: Instant::now(),
+            },
+        );
+        rx
+    }
+
+    /// Admit-or-shed submission: `Err` is the backpressure signal.
+    pub fn try_submit(
+        &self,
+        req: BulkRequest,
+    ) -> Result<Receiver<ClusterResponse>, AdmissionError> {
+        let home = self.admission.try_admit()?;
+        Ok(self.enqueue(home, req))
+    }
+
+    /// Pin a request to one device's queue (still admission-bounded).
+    pub fn try_submit_to(
+        &self,
+        device: DeviceId,
+        req: BulkRequest,
+    ) -> Result<Receiver<ClusterResponse>, AdmissionError> {
+        let home = self.admission.try_admit_to(device)?;
+        Ok(self.enqueue(home, req))
+    }
+
+    /// Submit, parking through backpressure (clients that would rather
+    /// wait than be refused). Never sheds; time spent waiting shows up in
+    /// the fleet `waited` counter instead.
+    pub fn submit_blocking(&self, req: BulkRequest) -> Receiver<ClusterResponse> {
+        let home = self.admission.admit_wait();
+        self.enqueue(home, req)
+    }
+
+    /// Submit and wait for the response.
+    pub fn run(&self, req: BulkRequest) -> ClusterResponse {
+        self.submit_blocking(req)
+            .recv()
+            .expect("cluster shut down mid-request")
+    }
+
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let per_device: Vec<_> =
+            self.device_metrics.iter().map(|m| m.snapshot()).collect();
+        FleetSnapshot {
+            merged: merge_snapshots(&per_device),
+            per_device,
+            admitted: self.admission.admitted.load(Ordering::Relaxed),
+            shed: self.admission.shed.load(Ordering::Relaxed),
+            waited: self.admission.waited.load(Ordering::Relaxed),
+            completed: self.fleet.completed.load(Ordering::Relaxed),
+            steals: self.fleet.steals.load(Ordering::Relaxed),
+            mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
+        }
+    }
+
+    /// Close the scheduler, let workers drain the ready backlog, and join
+    /// them. Requests never admitted keep their receivers alive; requests
+    /// still queued on a never-reacquired shard are dropped (their
+    /// receivers observe disconnection).
+    pub fn shutdown(mut self) -> FleetSnapshot {
+        self.shutdown_now();
+        self.snapshot()
+    }
+
+    fn shutdown_now(&mut self) {
+        self.sched.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for DrimCluster {
+    fn drop(&mut self) {
+        self.shutdown_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Payload;
+    use crate::isa::program::BulkOp;
+    use crate::util::bitrow::BitRow;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_device_fleet_roundtrip() {
+        let c = DrimCluster::new(ClusterConfig::tiny(2));
+        let mut rng = Rng::new(21);
+        let a = BitRow::random(1000, &mut rng);
+        let b = BitRow::random(1000, &mut rng);
+        let mut want = BitRow::zeros(1000);
+        want.apply2(&a, &b, |x, y| !(x ^ y));
+        let resp = c.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]));
+        match resp.inner.result {
+            Payload::Bits(got) => assert_eq!(got, want),
+            _ => panic!("wrong payload kind"),
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.merged.requests, 1);
+    }
+
+    #[test]
+    fn round_robin_lands_on_both_devices() {
+        let c = DrimCluster::new(ClusterConfig::tiny(2));
+        let mut rng = Rng::new(22);
+        let pending: Vec<_> = (0..6)
+            .map(|_| {
+                let a = BitRow::random(512, &mut rng);
+                c.try_submit(BulkRequest::bitwise(BulkOp::Not, vec![a]))
+                    .expect("admission open")
+            })
+            .collect();
+        let homes: Vec<usize> =
+            pending.into_iter().map(|p| p.recv().unwrap().home.0).collect();
+        assert!(homes.contains(&0) && homes.contains(&1), "{homes:?}");
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 6);
+        // every request ran on some device and the merged view saw it
+        assert_eq!(snap.merged.requests, 6);
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_no_traffic() {
+        let c = DrimCluster::new(ClusterConfig::tiny(3));
+        let snap = c.shutdown();
+        assert_eq!(snap.devices(), 3);
+        assert_eq!(snap.admitted, 0);
+        assert_eq!(snap.merged.requests, 0);
+    }
+}

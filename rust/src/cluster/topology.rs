@@ -1,0 +1,145 @@
+//! Fleet topology: which DRIM devices exist and where they sit on the
+//! memory interface.
+//!
+//! One *device* is one lock-step DRIM rank (the chip-level view
+//! [`DramGeometry`] models — chips in a rank issue the same AAP in
+//! lock-step, cf. Ambit's rank-level operation). Devices are grouped into
+//! DDR channels; the channel/rank coordinates matter only for reporting
+//! today, but they are the axis a future inter-device copy-cost model
+//! hangs off, so the topology carries them from the start.
+
+use std::fmt;
+
+use crate::coordinator::ServiceConfig;
+
+/// Index of a device within the fleet (dense, 0-based).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dev{}", self.0)
+    }
+}
+
+/// One DRIM device slot: its interface coordinates and the serving
+/// configuration (geometry, intra-device workers, batching policy) its
+/// `DrimService` is built with.
+#[derive(Clone, Debug)]
+pub struct DeviceDesc {
+    pub id: DeviceId,
+    pub channel: usize,
+    pub rank: usize,
+    pub service: ServiceConfig,
+}
+
+/// The whole fleet.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub ranks_per_channel: usize,
+    pub devices: Vec<DeviceDesc>,
+}
+
+impl Topology {
+    /// `n` identical devices, filled channel-major (`ranks_per_channel`
+    /// ranks per channel before moving to the next channel).
+    pub fn homogeneous(n: usize, service: ServiceConfig, ranks_per_channel: usize) -> Self {
+        assert!(n > 0, "a fleet needs at least one device");
+        assert!(ranks_per_channel > 0);
+        let devices = (0..n)
+            .map(|i| DeviceDesc {
+                id: DeviceId(i),
+                channel: i / ranks_per_channel,
+                rank: i % ranks_per_channel,
+                service: service.clone(),
+            })
+            .collect();
+        Topology {
+            ranks_per_channel,
+            devices,
+        }
+    }
+
+    /// `n` identical devices, two ranks per channel (commodity DDR4 DIMM).
+    pub fn uniform(n: usize, service: ServiceConfig) -> Self {
+        Self::homogeneous(n, service, 2)
+    }
+
+    /// `n` test-sized devices (unit/integration tests, fast exhaustive
+    /// simulation).
+    pub fn tiny(n: usize) -> Self {
+        Self::uniform(n, ServiceConfig::tiny())
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Number of populated channels.
+    pub fn channels(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|d| d.channel + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Fleet-wide parallel row slots per wave (sum of per-device
+    /// banks × active sub-arrays) — the scale-out analogue of
+    /// `Router::wave_slots`.
+    pub fn total_wave_slots(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|d| d.service.geometry.banks * d.service.geometry.active_subarrays)
+            .sum()
+    }
+
+    /// Bits processed by one fleet-wide computational step.
+    pub fn compute_width_bits(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|d| d.service.geometry.compute_width_bits())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_fills_channels_rank_major() {
+        let t = Topology::homogeneous(5, ServiceConfig::tiny(), 2);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.channels(), 3);
+        let coords: Vec<(usize, usize)> =
+            t.devices.iter().map(|d| (d.channel, d.rank)).collect();
+        assert_eq!(coords, vec![(0, 0), (0, 1), (1, 0), (1, 1), (2, 0)]);
+        assert_eq!(t.devices[3].id, DeviceId(3));
+    }
+
+    #[test]
+    fn wave_slots_scale_linearly() {
+        let one = Topology::tiny(1);
+        let four = Topology::tiny(4);
+        assert_eq!(four.total_wave_slots(), 4 * one.total_wave_slots());
+        assert_eq!(four.compute_width_bits(), 4 * one.compute_width_bits());
+        // tiny geometry: 2 banks × 2 active sub-arrays
+        assert_eq!(one.total_wave_slots(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn empty_fleet_rejected() {
+        Topology::tiny(0);
+    }
+
+    #[test]
+    fn device_id_display() {
+        assert_eq!(DeviceId(3).to_string(), "dev3");
+    }
+}

@@ -1,0 +1,92 @@
+//! Fleet workers: one OS thread per device, each exclusively owning a
+//! [`Device`] (a `DrimService` in the default fleet) and draining device
+//! queues from the shared [`Scheduler`].
+//!
+//! A worker prefers its own device's queue; when that queue is empty it
+//! steals the oldest backlogged device queue (if stealing is enabled) and
+//! executes those requests on *its own* device — payloads travel with the
+//! request, so any device can serve any admitted request, and stealing
+//! converts fleet-level imbalance into extra utilization instead of tail
+//! latency.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{BulkRequest, BulkResponse, Device};
+
+use super::admission::AdmissionController;
+use super::metrics::FleetMetrics;
+use super::scheduler::Scheduler;
+use super::topology::DeviceId;
+
+/// One admitted request in flight through the fleet.
+pub struct ClusterTask {
+    /// fleet-wide submission sequence number
+    pub seq: u64,
+    /// device whose admission ticket this request holds
+    pub home: DeviceId,
+    pub req: BulkRequest,
+    pub reply: Sender<ClusterResponse>,
+    pub admitted_at: Instant,
+}
+
+/// A fleet response: the single-device [`BulkResponse`] plus where it ran.
+#[derive(Clone, Debug)]
+pub struct ClusterResponse {
+    pub seq: u64,
+    /// device that executed the request (≠ `home` when stolen)
+    pub device: DeviceId,
+    pub home: DeviceId,
+    pub inner: BulkResponse,
+}
+
+/// Tasks drained per scheduler acquisition. Small enough that a stolen
+/// batch doesn't starve the home worker when it comes back, large enough
+/// to amortize ready-list traffic.
+pub const DRAIN_BATCH: usize = 8;
+
+/// Body of a fleet worker thread. Runs until the scheduler is closed and
+/// drained, then shuts the device down.
+pub(crate) fn worker_loop<D: Device>(
+    me: DeviceId,
+    mut device: D,
+    sched: Arc<Scheduler<ClusterTask>>,
+    admission: Arc<AdmissionController>,
+    fleet: Arc<FleetMetrics>,
+    steal: bool,
+) {
+    while let Some(shard) = sched.acquire(me.0, steal) {
+        if shard != me.0 {
+            fleet.record_steal();
+        }
+        // Submit the whole batch before collecting: the device sees up to
+        // DRAIN_BATCH requests in flight at once, so its internal workers
+        // overlap chunk execution across requests (blocking run() per task
+        // would serialize them and waste the device's own parallelism).
+        // Collecting in drain order keeps per-queue FIFO responses.
+        let batch = sched.drain(shard, DRAIN_BATCH);
+        let inflight: Vec<_> = batch
+            .into_iter()
+            .map(|task| {
+                fleet.record_queue_wait_ns(task.admitted_at.elapsed().as_nanos() as f64);
+                let rx = device.submit(task.req);
+                (task.seq, task.home, task.reply, rx)
+            })
+            .collect();
+        for (seq, home, reply, rx) in inflight {
+            let inner = rx.recv().expect("device dropped mid-request");
+            admission.complete(home);
+            fleet.record_completed();
+            // a dropped receiver just means the client went away
+            let _ = reply.send(ClusterResponse {
+                seq,
+                device: me,
+                home,
+                inner,
+            });
+        }
+        sched.release(shard);
+    }
+    device.shutdown();
+}

@@ -1,0 +1,89 @@
+//! The reusable device abstraction the scale-out layer schedules over.
+//!
+//! A [`Device`] is anything that can execute [`BulkRequest`]s and report
+//! [`Metrics`]: today the in-process [`DrimService`] simulator, tomorrow a
+//! remote DRIM channel behind an RPC stub. The `cluster` subsystem owns one
+//! `Device` per fleet worker and drives it exclusively from that worker's
+//! OS thread, so implementations only need `&self` request submission from
+//! a single thread at a time (plus `Send` to move onto the thread).
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{BulkRequest, BulkResponse};
+use super::router::ServiceConfig;
+use super::service::DrimService;
+
+pub trait Device: Send {
+    /// Enqueue a request; the receiver yields exactly one response.
+    fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse>;
+
+    /// Submit and block for the response.
+    fn run(&self, req: BulkRequest) -> BulkResponse {
+        self.submit(req).recv().expect("device dropped mid-request")
+    }
+
+    /// Live counters for this device (shared handle; cheap to clone).
+    fn metrics(&self) -> Arc<Metrics>;
+
+    /// Point-in-time view of the counters.
+    fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics().snapshot()
+    }
+
+    /// The device's serving configuration (geometry, workers, batching).
+    fn service_config(&self) -> &ServiceConfig;
+
+    /// Drain in-flight work and join internal workers. Idempotent; called
+    /// by fleet workers before the device is dropped.
+    fn shutdown(&mut self);
+}
+
+impl Device for DrimService {
+    fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse> {
+        DrimService::submit(self, req)
+    }
+
+    fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    fn service_config(&self) -> &ServiceConfig {
+        self.config()
+    }
+
+    fn shutdown(&mut self) {
+        self.shutdown_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program::BulkOp;
+    use crate::util::bitrow::BitRow;
+    use crate::util::rng::Rng;
+
+    /// Exercise DrimService purely through the trait object surface the
+    /// cluster workers use.
+    #[test]
+    fn drim_service_through_trait_object() {
+        let mut dev: Box<dyn Device> =
+            Box::new(DrimService::new(ServiceConfig::tiny()));
+        let mut rng = Rng::new(11);
+        let a = BitRow::random(500, &mut rng);
+        let b = BitRow::random(500, &mut rng);
+        let mut want = BitRow::zeros(500);
+        want.apply2(&a, &b, |x, y| !(x ^ y));
+        let resp = dev.run(BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]));
+        match resp.result {
+            crate::coordinator::Payload::Bits(got) => assert_eq!(got, want),
+            _ => panic!("wrong payload kind"),
+        }
+        assert_eq!(dev.snapshot().requests, 1);
+        assert_eq!(dev.service_config().geometry.cols, 256);
+        dev.shutdown();
+        dev.shutdown(); // idempotent
+    }
+}

@@ -10,13 +10,22 @@
 //!   batching with a configurable policy, response reassembly.
 //! * [`metrics`] — throughput/latency/utilization counters (simulated DRAM
 //!   time and wall time are tracked separately).
+//! * [`device`] — the [`Device`] trait: the one-chip abstraction
+//!   (`submit`/`run`/metrics/shutdown) that [`crate::cluster`] schedules
+//!   over to scale the service across many DRIM devices.
+//!
+//! One `DrimService` is one device. Multi-device serving (topology,
+//! fleet scheduling, admission control, work stealing) lives one layer up
+//! in [`crate::cluster`] and consumes this module only through [`Device`].
 
 pub mod coherence;
+pub mod device;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod service;
 
+pub use device::Device;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{BulkRequest, BulkResponse, Payload};
 pub use router::{BatchPolicy, Router, ServiceConfig};

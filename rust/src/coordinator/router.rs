@@ -28,13 +28,32 @@ pub struct ServiceConfig {
     pub policy: BatchPolicy,
 }
 
+/// Bounds for the auto-detected worker count (see [`auto_workers`]).
+pub const MIN_AUTO_WORKERS: usize = 2;
+pub const MAX_AUTO_WORKERS: usize = 8;
+
+/// Clamp a detected CPU count to a sane worker count.
+///
+/// Floor of [`MIN_AUTO_WORKERS`]: `available_parallelism()` legitimately
+/// returns 1 on constrained CI runners (single-vCPU containers, cgroup
+/// cpu quotas), and a single worker would serialize chunk execution
+/// against the per-request collector thread — two workers keep the
+/// pipeline overlapped even there. Ceiling of [`MAX_AUTO_WORKERS`]: the
+/// simulated device has 8 banks, so extra workers only shrink each
+/// worker's bank slice without adding parallel rows.
+pub fn auto_workers(detected: usize) -> usize {
+    detected.clamp(MIN_AUTO_WORKERS, MAX_AUTO_WORKERS)
+}
+
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             geometry: DramGeometry::default(),
-            workers: std::thread::available_parallelism()
-                .map(|n| n.get().min(8))
-                .unwrap_or(4),
+            workers: auto_workers(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4),
+            ),
             policy: BatchPolicy::Coalesce,
         }
     }
@@ -207,5 +226,81 @@ mod tests {
         let slots = r.wave_slots();
         let t = r.sim_latency_ns(BulkOp::Xnor2, &[slots]);
         assert!((t - 270.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auto_workers_clamps_detected_parallelism() {
+        // single-vCPU CI runner: floor keeps executor + collector overlapped
+        assert_eq!(auto_workers(1), MIN_AUTO_WORKERS);
+        // defensive: a hypothetical 0 still yields a working pool
+        assert_eq!(auto_workers(0), MIN_AUTO_WORKERS);
+        // in-range values pass through
+        assert_eq!(auto_workers(4), 4);
+        assert_eq!(auto_workers(8), 8);
+        // many-core hosts cap at the bank count
+        assert_eq!(auto_workers(64), MAX_AUTO_WORKERS);
+        let d = ServiceConfig::default();
+        assert!((MIN_AUTO_WORKERS..=MAX_AUTO_WORKERS).contains(&d.workers));
+    }
+
+    #[test]
+    fn empty_payload_shards_to_nothing() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let chunks = r.shard(1, 0);
+        assert!(chunks.is_empty());
+        // and the wave math agrees: no chunks, no waves, no time
+        assert_eq!(r.sim_latency_ns(BulkOp::Xnor2, &[0]), 0.0);
+        assert_eq!(r.sim_latency_ns(BulkOp::Xnor2, &[]), 0.0);
+    }
+
+    #[test]
+    fn sub_row_payload_is_one_partial_chunk() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let cols = r.cfg.geometry.cols;
+        for bits in [1usize, 2, cols / 2, cols - 1] {
+            let chunks = r.shard(7, bits);
+            assert_eq!(chunks.len(), 1, "{bits} bits");
+            assert_eq!(chunks[0].bits, bits);
+            assert_eq!(chunks[0].bit_offset, 0);
+            assert_eq!(chunks[0].req_id, 7);
+            // still costs one full wave
+            assert!((r.sim_latency_ns(BulkOp::Xnor2, &[1]) - 270.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn non_multiple_payload_has_one_ragged_tail_chunk() {
+        let r = tiny_router(BatchPolicy::Coalesce);
+        let cols = r.cfg.geometry.cols;
+        let bits = 5 * cols + 17;
+        let chunks = r.shard(1, bits);
+        assert_eq!(chunks.len(), 6);
+        for c in &chunks[..5] {
+            assert_eq!(c.bits, cols);
+        }
+        assert_eq!(chunks[5].bits, 17);
+        assert_eq!(chunks[5].bit_offset, 5 * cols);
+    }
+
+    #[test]
+    fn immediate_vs_coalesce_slot_utilization_accounting() {
+        // tiny geometry: 2 banks × 2 active sub-arrays = 4 slots per wave
+        let im = tiny_router(BatchPolicy::Immediate);
+        let co = tiny_router(BatchPolicy::Coalesce);
+        assert_eq!(im.wave_slots(), 4);
+        // four 1-chunk requests: Immediate burns one wave each (3 empty
+        // slots per wave), Coalesce packs them into a single full wave.
+        let q = [1usize, 1, 1, 1];
+        assert!((im.utilization(&q) - 0.25).abs() < 1e-12);
+        assert!((co.utilization(&q) - 1.0).abs() < 1e-12);
+        assert!((im.sim_latency_ns(BulkOp::Xnor2, &q) - 4.0 * 270.0).abs() < 1e-9);
+        assert!((co.sim_latency_ns(BulkOp::Xnor2, &q) - 270.0).abs() < 1e-9);
+        // 5 chunks in one request: both policies need two waves, 5/8 full
+        let q5 = [5usize];
+        assert!((im.utilization(&q5) - 0.625).abs() < 1e-12);
+        assert!((co.utilization(&q5) - 0.625).abs() < 1e-12);
+        // empty queue is vacuously fully utilized (documented edge)
+        assert_eq!(im.utilization(&[]), 1.0);
+        assert_eq!(co.utilization(&[]), 1.0);
     }
 }

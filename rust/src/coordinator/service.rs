@@ -274,6 +274,13 @@ impl DrimService {
     }
 
     pub fn shutdown(mut self) {
+        self.shutdown_now();
+    }
+
+    /// Stop and join the worker threads. Idempotent (the worker list is
+    /// drained on the first call); shared by [`Self::shutdown`], `Drop`,
+    /// and the [`super::device::Device`] impl.
+    pub(crate) fn shutdown_now(&mut self) {
         for _ in 0..self.workers.len() {
             let _ = self.tx.send(Job::Stop);
         }
@@ -285,12 +292,7 @@ impl DrimService {
 
 impl Drop for DrimService {
     fn drop(&mut self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Job::Stop);
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown_now();
     }
 }
 

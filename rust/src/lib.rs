@@ -13,7 +13,11 @@
 //! * [`controller`] — instruction dispatch, enable signals, row
 //!   allocation, cycle/energy accounting.
 //! * [`coordinator`] — the serving layer: bulk-op requests sharded across
-//!   banks × sub-arrays with dynamic batching.
+//!   banks × sub-arrays with dynamic batching; exposes the [`Device`]
+//!   abstraction (one chip = one `DrimService`).
+//! * [`cluster`] — the scale-out layer above the coordinator: N devices
+//!   (channels/ranks) behind one fleet scheduler with work stealing,
+//!   admission-control load shedding, and merged fleet metrics.
 //! * [`analog`] — behavioural circuit models (margins, Monte-Carlo
 //!   variation) mirrored against the JAX/Pallas artifacts.
 //! * [`energy`] — per-command energy model (Fig. 9).
@@ -26,6 +30,7 @@
 
 pub mod analog;
 pub mod apps;
+pub mod cluster;
 pub mod controller;
 pub mod coordinator;
 pub mod dram;

@@ -9,10 +9,12 @@
 //!   fig9         Fig. 9 energy table
 //!   demo         run a bulk op through the service and golden-check it
 //!   serve        synthetic serving workload through the coordinator
+//!   cluster      multi-device scale-out workload through the fleet layer
 
 use drim::analog::montecarlo::{run_montecarlo, TABLE3_CORNERS, TABLE3_PAPER};
 use drim::analog::params as aparams;
 use drim::analog::transient as rtransient;
+use drim::cluster::{AdmissionConfig, ClusterConfig, DrimCluster, FleetSnapshot};
 use drim::controller::enables;
 use drim::coordinator::{BatchPolicy, BulkRequest, DrimService, Payload, ServiceConfig};
 use drim::dram::geometry::DramGeometry;
@@ -38,6 +40,7 @@ fn main() {
         "fig9" => cmd_fig9(),
         "demo" => cmd_demo(&args),
         "serve" => cmd_serve(&args),
+        "cluster" => cmd_cluster(&args),
         _ => {
             println!("{}", HELP);
         }
@@ -60,8 +63,15 @@ COMMANDS:
   fig9                        Fig. 9 energy comparison
   demo [--op OP] [--bits N] [--golden]
                               run one bulk op end-to-end (+PJRT check)
-  serve [--requests N] [--bits N] [--policy immediate|coalesce]
+  serve [--requests N] [--bits N] [--policy immediate|coalesce] [--seed S]
+        [--devices N] [--queue-cap N] [--no-steal]
                               synthetic serving workload + metrics
+                              (--devices > 1 routes through the fleet layer;
+                               the fleet honors --queue-cap / --no-steal)
+  cluster [--devices N] [--requests N] [--bits N] [--seed S] [--queue-cap N]
+          [--no-steal] [--sweep]
+                              multi-device scale-out workload + fleet
+                              metrics (--sweep ablates 1/2/4/8 devices)
 ";
 
 fn cmd_isa(args: &Args) {
@@ -338,22 +348,127 @@ fn cmd_serve(args: &Args) {
         policy,
         ..ServiceConfig::default()
     };
+    let devices = args.usize("devices", 1);
+    if devices > 1 {
+        serve_fleet(args, cfg, devices, n, bits);
+        return;
+    }
     let service = DrimService::new(cfg);
     let mut rng = Rng::new(args.u64("seed", 3));
     println!("serving {n} requests × {bits} bits (policy {policy:?})");
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    for i in 0..n {
-        let op = [BulkOp::Xnor2, BulkOp::Xor2, BulkOp::And2, BulkOp::Not][i % 4];
-        let operands: Vec<BitRow> = (0..op.arity())
-            .map(|_| BitRow::random(bits, &mut rng))
-            .collect();
-        pending.push(service.submit(BulkRequest::bitwise(op, operands)));
-    }
+    let pending: Vec<_> = synth_workload(n, bits, &mut rng)
+        .into_iter()
+        .map(|req| service.submit(req))
+        .collect();
     for p in pending {
         p.recv().expect("response");
     }
     let wall = t0.elapsed();
     println!("\ncompleted in {wall:?} (host)\n");
     println!("{}", service.metrics.snapshot().report());
+}
+
+/// The standard synthetic serving mix (4 ops cycled, fixed sizes) used by
+/// `serve` (single-device and fleet) and `cluster` — one definition so the
+/// paths measure the same workload.
+fn synth_workload(n: usize, bits: usize, rng: &mut Rng) -> Vec<BulkRequest> {
+    (0..n)
+        .map(|i| {
+            let op = [BulkOp::Xnor2, BulkOp::Xor2, BulkOp::And2, BulkOp::Not][i % 4];
+            let operands: Vec<BitRow> = (0..op.arity())
+                .map(|_| BitRow::random(bits, rng))
+                .collect();
+            BulkRequest::bitwise(op, operands)
+        })
+        .collect()
+}
+
+/// Build a fleet from the shared CLI flags (`--queue-cap`, `--no-steal`,
+/// `--seed`), pump the synthetic workload through it, and return the host
+/// wall time plus the final fleet snapshot. Shared by `serve --devices N`
+/// and `cluster` so the two paths cannot drift.
+fn pump_fleet(
+    args: &Args,
+    devices: usize,
+    per_device: ServiceConfig,
+    requests: usize,
+    bits: usize,
+) -> (std::time::Duration, FleetSnapshot) {
+    let cluster = DrimCluster::new(ClusterConfig {
+        admission: AdmissionConfig {
+            max_inflight_per_device: args.usize("queue-cap", 64),
+        },
+        steal: !args.has("no-steal"),
+        ..ClusterConfig::uniform(devices, per_device)
+    });
+    let mut rng = Rng::new(args.u64("seed", 3));
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = synth_workload(requests, bits, &mut rng)
+        .into_iter()
+        .map(|req| cluster.submit_blocking(req))
+        .collect();
+    for p in pending {
+        p.recv().expect("response");
+    }
+    (t0.elapsed(), cluster.shutdown())
+}
+
+/// `serve --devices N`: the same synthetic workload, spread over a fleet.
+fn serve_fleet(args: &Args, per_device: ServiceConfig, devices: usize, n: usize, bits: usize) {
+    println!("serving {n} requests × {bits} bits over {devices} devices");
+    let (wall, snap) = pump_fleet(args, devices, per_device, n, bits);
+    println!("\ncompleted in {wall:?} (host)\n");
+    println!("{}", snap.report());
+}
+
+fn cmd_cluster(args: &Args) {
+    let requests = args.usize("requests", 128);
+    let bits = args.usize("bits", 262_144);
+    let device_counts: Vec<usize> = if args.has("sweep") {
+        vec![1, 2, 4, 8]
+    } else {
+        vec![args.usize("devices", 4)]
+    };
+    let mut t = Table::new(&[
+        "devices",
+        "host wall",
+        "sim makespan",
+        "fleet throughput",
+        "scaling",
+    ]);
+    let mut base_tp = 0.0;
+    let mut last_snapshot = None;
+    for &devices in &device_counts {
+        let (wall, snap) =
+            pump_fleet(args, devices, ServiceConfig::default(), requests, bits);
+        let tp = snap.sim_throughput_bits_per_sec();
+        if base_tp == 0.0 {
+            base_tp = tp;
+        }
+        t.row(&[
+            format!("{devices}"),
+            format!("{wall:?}"),
+            format!("{:.2} µs", snap.merged.sim_ns as f64 / 1e3),
+            format!("{}bit/s", fmt_rate(tp)),
+            // an all-zero workload (--requests 0 / --bits 0) has no
+            // baseline to scale against
+            if base_tp > 0.0 {
+                format!("{:.2}x", tp / base_tp)
+            } else {
+                "-".to_string()
+            },
+        ]);
+        last_snapshot = Some(snap);
+    }
+    println!(
+        "fleet scale-out: {requests} requests × {bits} bits \
+         (steal={}, queue cap {})\n",
+        !args.has("no-steal"),
+        args.usize("queue-cap", 64)
+    );
+    t.print();
+    if let Some(snap) = last_snapshot {
+        println!("\nlast fleet in detail:\n{}", snap.report());
+    }
 }

@@ -1,0 +1,40 @@
+//! Helpers shared by the integration-test binaries (`it_coordinator`,
+//! `it_cluster`): the host-side reference model for bulk bit-wise ops and
+//! payload accessors. One definition so every suite verifies against the
+//! same reference.
+
+use drim::coordinator::Payload;
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+
+/// Host (non-DRIM) reference implementation of the bit-wise op vocabulary.
+#[allow(dead_code)]
+pub fn host_op(op: BulkOp, ops: &[&BitRow]) -> BitRow {
+    let mut out = BitRow::zeros(ops[0].len());
+    match op {
+        BulkOp::Not => out.not_from(ops[0]),
+        BulkOp::Xnor2 => out.apply2(ops[0], ops[1], |x, y| !(x ^ y)),
+        BulkOp::Xor2 => out.apply2(ops[0], ops[1], |x, y| x ^ y),
+        BulkOp::And2 => out.apply2(ops[0], ops[1], |x, y| x & y),
+        BulkOp::Or2 => out.apply2(ops[0], ops[1], |x, y| x | y),
+        BulkOp::Nand2 => out.apply2(ops[0], ops[1], |x, y| !(x & y)),
+        BulkOp::Nor2 => out.apply2(ops[0], ops[1], |x, y| !(x | y)),
+        BulkOp::Maj3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
+            (x & y) | (x & z) | (y & z)
+        }),
+        BulkOp::Min3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
+            !((x & y) | (x & z) | (y & z))
+        }),
+        _ => unreachable!("host_op covers only bit-wise ops"),
+    }
+    out
+}
+
+/// Unwrap a bit payload (panics with a clear message on add32 results).
+#[allow(dead_code)]
+pub fn bits_of(p: &Payload) -> &BitRow {
+    match p {
+        Payload::Bits(b) => b,
+        _ => panic!("expected bit payload"),
+    }
+}

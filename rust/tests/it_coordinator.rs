@@ -1,6 +1,9 @@
 //! Serving-layer integration: multi-chunk payloads, concurrency, batching
 //! policies, and metrics consistency.
 
+mod common;
+
+use common::host_op;
 use drim::coordinator::{
     BatchPolicy, BulkRequest, DrimService, Payload, Router, ServiceConfig,
 };
@@ -13,27 +16,6 @@ fn tiny_service(policy: BatchPolicy) -> DrimService {
         policy,
         ..ServiceConfig::tiny()
     })
-}
-
-fn host_op(op: BulkOp, ops: &[&BitRow]) -> BitRow {
-    let mut out = BitRow::zeros(ops[0].len());
-    match op {
-        BulkOp::Not => out.not_from(ops[0]),
-        BulkOp::Xnor2 => out.apply2(ops[0], ops[1], |x, y| !(x ^ y)),
-        BulkOp::Xor2 => out.apply2(ops[0], ops[1], |x, y| x ^ y),
-        BulkOp::And2 => out.apply2(ops[0], ops[1], |x, y| x & y),
-        BulkOp::Or2 => out.apply2(ops[0], ops[1], |x, y| x | y),
-        BulkOp::Nand2 => out.apply2(ops[0], ops[1], |x, y| !(x & y)),
-        BulkOp::Nor2 => out.apply2(ops[0], ops[1], |x, y| !(x | y)),
-        BulkOp::Maj3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
-            (x & y) | (x & z) | (y & z)
-        }),
-        BulkOp::Min3 => out.apply3(ops[0], ops[1], ops[2], |x, y, z| {
-            !((x & y) | (x & z) | (y & z))
-        }),
-        _ => unreachable!(),
-    }
-    out
 }
 
 #[test]

@@ -1,0 +1,147 @@
+//! Minimal offline shim of the `anyhow` crate, covering the API surface
+//! this repository uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Semantics match real `anyhow` for these paths: errors are opaque,
+//! `Display`-driven, and context wraps the cause as `"context: cause"`.
+//! The shim exists only so the workspace builds with no registry access;
+//! replacing the path dependency with crates.io `anyhow = "1"` requires no
+//! source changes.
+
+use std::fmt;
+
+/// Opaque error: a display chain (outermost context first).
+///
+/// Deliberately does *not* implement `std::error::Error`, exactly like the
+/// real `anyhow::Error` — that is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    /// Prepend a context layer (outermost first, as in `anyhow`).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The layers of the error, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow's Debug is the display chain with causes listed; a single
+        // joined line is enough for test output here.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = Err(io_err()).with_context(|| "reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing ]");
+        assert_eq!(r.unwrap_err().to_string(), "missing ]");
+        let ok: Result<i32> = Some(3).context("unused");
+        assert_eq!(ok.unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            let n: u32 = "42".parse()?; // std error converts via From
+            Ok(n)
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "bad value 7");
+        assert_eq!(f(false).unwrap(), 42);
+    }
+}
