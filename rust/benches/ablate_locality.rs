@@ -1,0 +1,152 @@
+//! Locality ablation: resident (placement-routed) vs. carried
+//! (payload-carrying round-robin) operand placement on the same fleet and
+//! workload.
+//!
+//! Reported per placement policy:
+//!   * resident hits / misses — requests whose operands were / were not
+//!     already on the executing device;
+//!   * copied bytes and DDR bus copy cycles — the operand movement the
+//!     copy-cost model charges (host→device for carried payloads,
+//!     device→device for resident misses, serialized 2× on a shared
+//!     channel);
+//!   * compute makespan vs. makespan including copy — the busiest device
+//!     with and without the movement charged to it.
+//!
+//! Stealing is disabled and the miss pattern is deterministic, so the
+//! gates below are exact: locality-aware routing at ≥80 % resident hits
+//! must beat payload-carrying round-robin on both simulated makespan
+//! (incl. copy) and copy cycles.
+
+use drim::cluster::{ClusterConfig, DrimCluster, FleetSnapshot};
+use drim::coordinator::ServiceConfig;
+use drim::dram::geometry::DramGeometry;
+use drim::util::bench::section;
+use drim::util::stats::fmt_ns;
+use drim::util::table::Table;
+
+const DEVICES: usize = 4;
+const REQUESTS: usize = 48;
+const BITS: usize = 1 << 18;
+
+/// Bench-sized device (same geometry as ablate_devices).
+fn bench_service() -> ServiceConfig {
+    ServiceConfig {
+        geometry: DramGeometry {
+            banks: 4,
+            subarrays_per_bank: 8,
+            cols: 1024,
+            active_subarrays: 4,
+        },
+        workers: 2,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Placement policy in `DrimCluster::pump_locality`'s convention:
+/// `None` → carried inline; `Some(k)` → resident, every `k`-th request a
+/// forced miss; `Some(0)` → fully resident.
+#[derive(Clone, Copy)]
+struct Strategy(Option<usize>);
+
+impl Strategy {
+    fn label(self) -> String {
+        match self.0 {
+            None => "carried (round-robin)".into(),
+            Some(0) => "resident 100%".into(),
+            Some(miss_every) => {
+                format!("resident {:.0}%", 100.0 * (1.0 - 1.0 / miss_every as f64))
+            }
+        }
+    }
+}
+
+fn run(strategy: Strategy, seed: u64) -> FleetSnapshot {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        ..ClusterConfig::uniform(DEVICES, bench_service())
+    });
+    // the workload driver is shared with `drim cluster --locality`
+    cluster.pump_locality(REQUESTS, BITS, strategy.0, seed);
+    cluster.shutdown()
+}
+
+fn main() {
+    section("operand placement — resident routing vs. carried round-robin");
+    println!(
+        "{REQUESTS} requests × 2 × {BITS} bits over {DEVICES} devices \
+         (steal off, deterministic miss pattern)\n"
+    );
+    let mut t = Table::new(&[
+        "placement",
+        "hits",
+        "misses",
+        "copied KB",
+        "copy cycles",
+        "makespan (compute)",
+        "makespan (+copy)",
+    ]);
+    let strategies = [
+        Strategy(None),
+        Strategy(Some(2)),
+        Strategy(Some(5)),
+        Strategy(Some(0)),
+    ];
+    let mut snaps = Vec::new();
+    for s in strategies {
+        let snap = run(s, 0x10CA117);
+        t.row(&[
+            s.label(),
+            format!("{}", snap.resident_hits),
+            format!("{}", snap.resident_misses),
+            format!("{:.1}", snap.copied_bytes as f64 / 1024.0),
+            format!("{}", snap.copy_cycles),
+            fmt_ns(snap.merged.sim_ns as f64),
+            fmt_ns(snap.makespan_with_copy_ns() as f64),
+        ]);
+        snaps.push(snap);
+    }
+    t.print();
+
+    let (carried, r80, r100) = (&snaps[0], &snaps[2], &snaps[3]);
+
+    // --- gates -----------------------------------------------------------
+    // fully resident placement moves nothing
+    assert_eq!(r100.copied_bytes, 0, "resident 100% must be zero-copy");
+    assert_eq!(r100.copy_cycles, 0);
+    assert_eq!(r100.makespan_with_copy_ns(), r100.merged.sim_ns);
+    // the 80%-hit run really is ≥80% hits
+    let total = r80.resident_hits + r80.resident_misses;
+    assert!(
+        r80.resident_hits * 5 >= total * 4,
+        "hit rate below 80%: {}/{total}",
+        r80.resident_hits
+    );
+    // locality-aware routing beats payload-carrying round-robin
+    assert!(
+        r80.copy_cycles < carried.copy_cycles,
+        "copy cycles: resident80 {} vs carried {}",
+        r80.copy_cycles,
+        carried.copy_cycles
+    );
+    assert!(
+        r80.makespan_with_copy_ns() < carried.makespan_with_copy_ns(),
+        "makespan incl copy: resident80 {} vs carried {}",
+        r80.makespan_with_copy_ns(),
+        carried.makespan_with_copy_ns()
+    );
+    // both policies do the same compute on the same fleet — the win is
+    // operand movement, and carried pays it on every single request
+    assert_eq!(carried.resident_hits, 0);
+    assert_eq!(carried.resident_misses as usize, REQUESTS);
+
+    println!(
+        "\n→ resident routing at ≥80% hits: {} copy cycles vs carried {} \
+         ({}% of the traffic), makespan {} vs {}",
+        r80.copy_cycles,
+        carried.copy_cycles,
+        100 * r80.copy_cycles / carried.copy_cycles.max(1),
+        fmt_ns(r80.makespan_with_copy_ns() as f64),
+        fmt_ns(carried.makespan_with_copy_ns() as f64),
+    );
+    println!("\nablate_locality bench OK");
+}

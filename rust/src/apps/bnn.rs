@@ -16,7 +16,9 @@ use crate::util::rng::Rng;
 /// One binary dense layer: `out` neurons × `inp` binary inputs.
 #[derive(Clone, Debug)]
 pub struct BinaryLayer {
+    /// input width in bits
     pub inp: usize,
+    /// number of output neurons
     pub out: usize,
     /// weight matrix, one BitRow of `inp` bits per output neuron
     pub weights: Vec<BitRow>,
@@ -26,6 +28,7 @@ pub struct BinaryLayer {
 }
 
 impl BinaryLayer {
+    /// Random weights, canonical `inp / 2` threshold.
     pub fn random(inp: usize, out: usize, rng: &mut Rng) -> Self {
         BinaryLayer {
             inp,
@@ -75,10 +78,12 @@ impl BinaryLayer {
 /// A stack of binary layers (a BNN MLP).
 #[derive(Clone, Debug)]
 pub struct BinaryMlp {
+    /// the dense layers, input-first
     pub layers: Vec<BinaryLayer>,
 }
 
 impl BinaryMlp {
+    /// Random MLP with the given layer widths (`dims[0]` = input bits).
     pub fn random(dims: &[usize], rng: &mut Rng) -> Self {
         assert!(dims.len() >= 2);
         BinaryMlp {
@@ -89,6 +94,7 @@ impl BinaryMlp {
         }
     }
 
+    /// Forward pass through every layer, XNORs in-memory.
     pub fn forward(&self, service: &DrimService, x: &BitRow) -> BitRow {
         let mut a = x.clone();
         for l in &self.layers {
@@ -97,6 +103,7 @@ impl BinaryMlp {
         a
     }
 
+    /// Host reference forward pass (for tests).
     pub fn forward_host(&self, x: &BitRow) -> BitRow {
         let mut a = x.clone();
         for l in &self.layers {

@@ -40,6 +40,7 @@ pub fn bits_from_bytes(bytes: &[u8]) -> BitRow {
     r
 }
 
+/// BitRow → bytes, inverse of [`bits_from_bytes`].
 pub fn bytes_from_bits(row: &BitRow) -> Vec<u8> {
     let n = row.len() / 8;
     (0..n)

@@ -12,6 +12,7 @@ use crate::isa::program::BulkOp;
 use crate::util::bitrow::BitRow;
 use crate::util::rng::Rng;
 
+/// The four bases, in 2-bit encoding order (A=00 … T=11).
 pub const BASES: [char; 4] = ['A', 'C', 'G', 'T'];
 
 /// 2-bit-encode a DNA string.
@@ -39,6 +40,7 @@ pub fn random_genome(n: usize, rng: &mut Rng) -> String {
 /// One alignment hit.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Hit {
+    /// genome offset (in bases) of the matching window
     pub position: usize,
     /// matching bases (read length = max)
     pub score: usize,

@@ -4,6 +4,7 @@
 //!
 //! Each app is written against the public `coordinator::DrimService` API
 //! only (no reaching into the array), exactly as a downstream user would.
+#![warn(missing_docs)]
 
 pub mod bnn;
 pub mod cipher;

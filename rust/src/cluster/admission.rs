@@ -149,6 +149,21 @@ impl AdmissionController {
         }
     }
 
+    /// Admit with a placement preference: claim `device` if it has a free
+    /// slot, otherwise fall back to any unsaturated device (round-robin).
+    /// Sheds — and counts one shed — only when the *whole fleet* is full.
+    /// This is the routed-submission path: residency makes `device` the
+    /// cheapest executor, but a saturated owner should not refuse work the
+    /// rest of the fleet can absorb (at a copy cost the worker will
+    /// charge).
+    pub fn try_admit_prefer(&self, device: DeviceId) -> Result<DeviceId, AdmissionError> {
+        if self.claim(device.0) {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            return Ok(device);
+        }
+        self.try_admit()
+    }
+
     /// Like [`Self::try_admit`] but pinned to one device (data-residency
     /// style routing); still bounded and shed-counted.
     pub fn try_admit_to(&self, device: DeviceId) -> Result<DeviceId, AdmissionError> {
@@ -178,6 +193,26 @@ impl AdmissionController {
             if let Some(d) = self.claim_any() {
                 self.admitted.fetch_add(1, Ordering::Relaxed);
                 return d;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Admit pinned to one device, parking until that device frees a slot.
+    /// The blocking analogue of [`Self::try_admit_to`], used by routed
+    /// submissions that must land on a specific executor (residency tests,
+    /// forced-miss ablations).
+    pub fn admit_wait_to(&self, device: DeviceId) -> DeviceId {
+        if self.claim(device.0) {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            return device;
+        }
+        self.waited.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.gate.lock().unwrap();
+        loop {
+            if self.claim(device.0) {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                return device;
             }
             g = self.cv.wait(g).unwrap();
         }
@@ -298,6 +333,49 @@ mod tests {
         assert_eq!(a.shed.load(Ordering::Relaxed), 0, "waiting is not shedding");
         assert_eq!(a.waited.load(Ordering::Relaxed), 1);
         assert_eq!(a.admitted.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn prefer_claims_target_then_falls_back_without_shedding() {
+        let a = AdmissionController::new(
+            2,
+            AdmissionConfig {
+                max_inflight_per_device: 1,
+            },
+        );
+        // preferred device free → claimed directly
+        assert_eq!(a.try_admit_prefer(DeviceId(1)).unwrap(), DeviceId(1));
+        // preferred full, fleet not → falls back, no shed counted
+        assert_eq!(a.try_admit_prefer(DeviceId(1)).unwrap(), DeviceId(0));
+        assert_eq!(a.shed.load(Ordering::Relaxed), 0);
+        // whole fleet full → sheds exactly once
+        let e = a.try_admit_prefer(DeviceId(1)).unwrap_err();
+        assert!(matches!(e, AdmissionError::Overloaded { .. }));
+        assert_eq!(a.shed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn admit_wait_to_parks_until_the_pinned_device_frees() {
+        let a = std::sync::Arc::new(AdmissionController::new(
+            2,
+            AdmissionConfig {
+                max_inflight_per_device: 1,
+            },
+        ));
+        assert_eq!(a.admit_wait_to(DeviceId(1)), DeviceId(1));
+        let waiter = {
+            let a = std::sync::Arc::clone(&a);
+            std::thread::spawn(move || a.admit_wait_to(DeviceId(1)))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // freeing the *other* device must not release a pinned waiter
+        assert_eq!(a.try_admit_to(DeviceId(0)).unwrap(), DeviceId(0));
+        a.complete(DeviceId(0));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(a.inflight(DeviceId(1)), 1, "waiter still parked");
+        a.complete(DeviceId(1));
+        assert_eq!(waiter.join().unwrap(), DeviceId(1));
+        assert_eq!(a.waited.load(Ordering::Relaxed), 1);
     }
 
     #[test]

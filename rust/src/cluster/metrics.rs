@@ -1,5 +1,6 @@
 //! Fleet-level metrics: merge per-device [`MetricsSnapshot`]s and add the
-//! cluster-only counters (admission, shedding, stealing, queue wait).
+//! cluster-only counters (admission, shedding, stealing, queue wait, and
+//! operand-copy traffic).
 //!
 //! Merge semantics: counters (requests, chunks, bits, AAPs) sum across
 //! devices, and host wall time sums (workers really do burn those host
@@ -7,12 +8,22 @@
 //! parallel, so the fleet's simulated makespan is the busiest device's
 //! `sim_ns`, and fleet throughput is total result bits over that makespan.
 //! That is exactly the quantity the 1→N scaling ablation compares.
+//!
+//! Copy accounting: placement-routed requests
+//! ([`crate::cluster::ClusterRequest`]) are charged for every operand that
+//! was not already resident on the executing device. Copied bytes and DDR
+//! bus copy cycles sum fleet-wide; simulated copy *time* accrues per
+//! executing device, and [`FleetSnapshot::makespan_with_copy_ns`] reports
+//! the busiest device including that movement — the quantity the locality
+//! ablation compares against pure compute makespan.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::MetricsSnapshot;
 use crate::util::stats::{fmt_ns, fmt_rate, Summary};
+
+use super::residency::CopyCharge;
 
 /// Merge per-device snapshots into one fleet view (see module docs for
 /// which fields sum vs max).
@@ -51,17 +62,38 @@ pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
 
 /// Cluster-only live counters (the per-device counters live inside each
 /// device's `Metrics`).
-#[derive(Default)]
 pub struct FleetMetrics {
     pub completed: AtomicU64,
     /// batches a worker drained from another device's queue
     pub steals: AtomicU64,
+    /// operand bytes moved for placement-routed requests (host→device and
+    /// device→device)
+    pub copied_bytes: AtomicU64,
+    /// DDR bus clock cycles those moves occupied
+    pub copy_cycles: AtomicU64,
+    /// placement-routed requests whose operands were all already resident
+    /// on the executing device (zero copy charge)
+    pub resident_hits: AtomicU64,
+    /// placement-routed requests charged a non-zero copy cost
+    pub resident_misses: AtomicU64,
+    /// simulated copy nanoseconds charged to each device (index = DeviceId)
+    copy_ns: Vec<AtomicU64>,
     queue_wait_ns: Mutex<Summary>,
 }
 
 impl FleetMetrics {
-    pub fn new() -> Self {
-        FleetMetrics::default()
+    /// Counters for a fleet of `devices` devices.
+    pub fn new(devices: usize) -> Self {
+        FleetMetrics {
+            completed: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            copied_bytes: AtomicU64::new(0),
+            copy_cycles: AtomicU64::new(0),
+            resident_hits: AtomicU64::new(0),
+            resident_misses: AtomicU64::new(0),
+            copy_ns: (0..devices).map(|_| AtomicU64::new(0)).collect(),
+            queue_wait_ns: Mutex::new(Summary::default()),
+        }
     }
 
     pub fn record_completed(&self) {
@@ -70,6 +102,27 @@ impl FleetMetrics {
 
     pub fn record_steal(&self) {
         self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one placement-routed request's copy charge against the
+    /// device that executed it.
+    pub fn record_copy(&self, device: usize, charge: &CopyCharge) {
+        if charge.is_free() {
+            self.resident_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.resident_misses.fetch_add(1, Ordering::Relaxed);
+            self.copied_bytes.fetch_add(charge.bytes, Ordering::Relaxed);
+            self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
+            self.copy_ns[device].fetch_add(charge.ns.round() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Simulated copy nanoseconds charged per device so far.
+    pub fn copy_ns_per_device(&self) -> Vec<u64> {
+        self.copy_ns
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn record_queue_wait_ns(&self, ns: f64) {
@@ -93,6 +146,16 @@ pub struct FleetSnapshot {
     pub waited: u64,
     pub completed: u64,
     pub steals: u64,
+    /// operand bytes moved for placement-routed requests
+    pub copied_bytes: u64,
+    /// DDR bus clock cycles those moves occupied
+    pub copy_cycles: u64,
+    /// placement-routed requests with zero copy charge
+    pub resident_hits: u64,
+    /// placement-routed requests charged a non-zero copy cost
+    pub resident_misses: u64,
+    /// simulated copy nanoseconds charged per device (index = DeviceId)
+    pub copy_ns_per_device: Vec<u64>,
     /// host-side wait between admission and a worker picking the task up
     pub mean_queue_wait_ns: f64,
 }
@@ -107,10 +170,25 @@ impl FleetSnapshot {
         self.merged.sim_throughput_bits_per_sec
     }
 
+    /// Fleet makespan including operand movement: the busiest device's
+    /// compute time plus the copy time charged to it. Equals
+    /// `merged.sim_ns` when every placement-routed request was a resident
+    /// hit (the `it_residency` zero-copy gate).
+    pub fn makespan_with_copy_ns(&self) -> u64 {
+        self.per_device
+            .iter()
+            .zip(self.copy_ns_per_device.iter())
+            .map(|(d, c)| d.sim_ns + c)
+            .max()
+            .unwrap_or(0)
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
             "fleet: {} devices  admitted: {}  shed: {}  waited: {}  \
-             completed: {}  steals: {}  mean queue wait: {}\n",
+             completed: {}  steals: {}  mean queue wait: {}\n\
+             copy traffic: {} B  ({} bus cycles)  resident hits: {}  \
+             misses: {}  makespan incl copy: {}\n",
             self.devices(),
             self.admitted,
             self.shed,
@@ -118,6 +196,11 @@ impl FleetSnapshot {
             self.completed,
             self.steals,
             fmt_ns(self.mean_queue_wait_ns),
+            self.copied_bytes,
+            self.copy_cycles,
+            self.resident_hits,
+            self.resident_misses,
+            fmt_ns(self.makespan_with_copy_ns() as f64),
         );
         for (i, d) in self.per_device.iter().enumerate() {
             s.push_str(&format!(
@@ -180,8 +263,28 @@ mod tests {
     }
 
     #[test]
+    fn merge_with_an_idle_device_is_unpolluted() {
+        // A device that completed nothing must not skew the fleet view:
+        // zero requests contribute zero latency mass (no NaN from the
+        // 0-weighted mean), zero time, zero counters.
+        let idle = snap(0, 0, 0, 0.0);
+        let busy = snap(8, 6400, 200, 90.0);
+        let m = merge_snapshots(&[idle.clone(), busy.clone(), idle]);
+        assert_eq!(m.requests, 8);
+        assert_eq!(m.result_bits, 6400);
+        assert_eq!(m.sim_ns, 200);
+        // mean is the busy device's mean, not dragged down by idle zeros
+        assert!((m.mean_latency_ns - 90.0).abs() < 1e-9);
+        assert!(m.mean_latency_ns.is_finite());
+        let only_idle = merge_snapshots(&[snap(0, 0, 0, 0.0)]);
+        assert_eq!(only_idle.requests, 0);
+        assert_eq!(only_idle.mean_latency_ns, 0.0);
+        assert_eq!(only_idle.sim_throughput_bits_per_sec, 0.0);
+    }
+
+    #[test]
     fn fleet_counters_and_report() {
-        let f = FleetMetrics::new();
+        let f = FleetMetrics::new(1);
         f.record_completed();
         f.record_steal();
         f.record_queue_wait_ns(500.0);
@@ -195,10 +298,52 @@ mod tests {
             waited: 3,
             completed: 1,
             steals: 1,
+            copied_bytes: 64,
+            copy_cycles: 8,
+            resident_hits: 4,
+            resident_misses: 1,
+            copy_ns_per_device: vec![30],
             mean_queue_wait_ns: 1000.0,
         };
         let r = snapshot.report();
         assert!(r.contains("shed: 2"), "{r}");
         assert!(r.contains("dev0"), "{r}");
+        assert!(r.contains("resident hits: 4"), "{r}");
+        // makespan incl copy = sim 10 + copy 30
+        assert_eq!(snapshot.makespan_with_copy_ns(), 40);
+    }
+
+    #[test]
+    fn copy_charges_accumulate_per_device() {
+        let f = FleetMetrics::new(2);
+        f.record_copy(
+            0,
+            &CopyCharge {
+                bytes: 0,
+                ns: 0.0,
+                cycles: 0,
+            },
+        );
+        f.record_copy(
+            1,
+            &CopyCharge {
+                bytes: 256,
+                ns: 30.0,
+                cycles: 32,
+            },
+        );
+        f.record_copy(
+            1,
+            &CopyCharge {
+                bytes: 128,
+                ns: 15.0,
+                cycles: 16,
+            },
+        );
+        assert_eq!(f.resident_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(f.resident_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(f.copied_bytes.load(Ordering::Relaxed), 384);
+        assert_eq!(f.copy_cycles.load(Ordering::Relaxed), 48);
+        assert_eq!(f.copy_ns_per_device(), vec![0, 45]);
     }
 }

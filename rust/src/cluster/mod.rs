@@ -17,23 +17,34 @@
 //! * [`admission`] — bounded per-device in-flight tickets with load
 //!   shedding: when every queue is full the fleet says so instead of
 //!   letting latency grow without bound.
+//! * [`residency`] — operand residency and placement-aware routing: a
+//!   registry mapping operand regions to owning devices, requests that
+//!   reference operands by resident handle instead of carrying them, and
+//!   an inter-device copy-cost model (derived from the DDR burst/channel
+//!   timing) charged whenever operands must move to the executor.
 //! * [`metrics`]   — fleet aggregation: merge per-device
-//!   [`MetricsSnapshot`]s (counters sum, simulated makespan is the
-//!   busiest device) plus cluster-only counters (shed, steals, queue
-//!   wait).
+//!   [`crate::coordinator::MetricsSnapshot`]s (counters sum, simulated
+//!   makespan is the busiest device) plus cluster-only counters (shed,
+//!   steals, queue wait, copied bytes / copy cycles).
 //!
 //! [`DrimCluster`] is the facade gluing these together; `drim serve
-//! --devices N`, `drim cluster`, examples/e2e_cluster.rs and
-//! benches/ablate_devices.rs all sit on it.
+//! --devices N`, `drim cluster` (and its `--locality` sweep),
+//! examples/e2e_cluster.rs, benches/ablate_devices.rs and
+//! benches/ablate_locality.rs all sit on it.
 
 pub mod admission;
 pub mod metrics;
+pub mod residency;
 pub mod scheduler;
 pub mod topology;
 pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
 pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot};
+pub use residency::{
+    ClusterRequest, CopyCharge, CopyCostModel, LocalityModel, OperandRef,
+    Placement, RegionId, ResidencyRegistry, RouteError,
+};
 pub use scheduler::{Scheduler, ShardState};
 pub use topology::{DeviceDesc, DeviceId, Topology};
 pub use worker::{ClusterResponse, ClusterTask};
@@ -45,8 +56,12 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::{
-    BulkRequest, Device, DrimService, Metrics, ServiceConfig,
+    BulkRequest, Device, DrimService, Metrics, Payload, ServiceConfig,
 };
+use crate::dram::timing::TimingParams;
+use crate::isa::program::BulkOp;
+use crate::util::bitrow::BitRow;
+use crate::util::rng::Rng;
 
 /// Fleet construction knobs.
 #[derive(Clone, Debug)]
@@ -80,6 +95,8 @@ pub struct DrimCluster {
     sched: Arc<Scheduler<ClusterTask>>,
     admission: Arc<AdmissionController>,
     fleet: Arc<FleetMetrics>,
+    registry: Arc<ResidencyRegistry>,
+    locality: Arc<LocalityModel>,
     /// per-device metrics handles (outlive the devices themselves)
     device_metrics: Vec<Arc<Metrics>>,
     workers: Vec<JoinHandle<()>>,
@@ -113,7 +130,12 @@ impl DrimCluster {
         let n = devices.len();
         let sched = Arc::new(Scheduler::new(n));
         let admission = Arc::new(AdmissionController::new(n, cfg.admission));
-        let fleet = Arc::new(FleetMetrics::new());
+        let fleet = Arc::new(FleetMetrics::new(n));
+        let registry = Arc::new(ResidencyRegistry::for_fleet(n));
+        let locality = Arc::new(LocalityModel::from_topology(
+            &cfg.topology,
+            TimingParams::default(),
+        ));
         let device_metrics: Vec<Arc<Metrics>> =
             devices.iter().map(|d| d.metrics()).collect();
         let workers = devices
@@ -123,9 +145,18 @@ impl DrimCluster {
                 let sched = Arc::clone(&sched);
                 let admission = Arc::clone(&admission);
                 let fleet = Arc::clone(&fleet);
+                let locality = Arc::clone(&locality);
                 let steal = cfg.steal;
                 std::thread::spawn(move || {
-                    worker::worker_loop(DeviceId(i), dev, sched, admission, fleet, steal)
+                    worker::worker_loop(
+                        DeviceId(i),
+                        dev,
+                        sched,
+                        admission,
+                        fleet,
+                        locality,
+                        steal,
+                    )
                 })
             })
             .collect();
@@ -134,6 +165,8 @@ impl DrimCluster {
             sched,
             admission,
             fleet,
+            registry,
+            locality,
             device_metrics,
             workers,
             next_seq: AtomicU64::new(1),
@@ -148,7 +181,29 @@ impl DrimCluster {
         self.device_metrics.len()
     }
 
-    fn enqueue(&self, home: DeviceId, req: BulkRequest) -> Receiver<ClusterResponse> {
+    /// The fleet's operand-residency registry.
+    pub fn registry(&self) -> &ResidencyRegistry {
+        &self.registry
+    }
+
+    /// The copy-cost model bound to this fleet's topology.
+    pub fn locality(&self) -> &LocalityModel {
+        &self.locality
+    }
+
+    /// Register a payload as resident on `device`; the returned handle can
+    /// be used in [`ClusterRequest`] operands from then on. Panics if
+    /// `device` is outside the fleet (the registry is fleet-bounded).
+    pub fn register_resident(&self, device: DeviceId, payload: Payload) -> RegionId {
+        self.registry.register(device, payload)
+    }
+
+    fn enqueue(
+        &self,
+        home: DeviceId,
+        req: BulkRequest,
+        placement: Option<Placement>,
+    ) -> Receiver<ClusterResponse> {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         self.sched.submit(
@@ -157,6 +212,7 @@ impl DrimCluster {
                 seq,
                 home,
                 req,
+                placement,
                 reply: tx,
                 admitted_at: Instant::now(),
             },
@@ -170,7 +226,7 @@ impl DrimCluster {
         req: BulkRequest,
     ) -> Result<Receiver<ClusterResponse>, AdmissionError> {
         let home = self.admission.try_admit()?;
-        Ok(self.enqueue(home, req))
+        Ok(self.enqueue(home, req, None))
     }
 
     /// Pin a request to one device's queue (still admission-bounded).
@@ -180,7 +236,7 @@ impl DrimCluster {
         req: BulkRequest,
     ) -> Result<Receiver<ClusterResponse>, AdmissionError> {
         let home = self.admission.try_admit_to(device)?;
-        Ok(self.enqueue(home, req))
+        Ok(self.enqueue(home, req, None))
     }
 
     /// Submit, parking through backpressure (clients that would rather
@@ -188,7 +244,7 @@ impl DrimCluster {
     /// the fleet `waited` counter instead.
     pub fn submit_blocking(&self, req: BulkRequest) -> Receiver<ClusterResponse> {
         let home = self.admission.admit_wait();
-        self.enqueue(home, req)
+        self.enqueue(home, req, None)
     }
 
     /// Submit and wait for the response.
@@ -196,6 +252,156 @@ impl DrimCluster {
         self.submit_blocking(req)
             .recv()
             .expect("cluster shut down mid-request")
+    }
+
+    /// Where the router would *prefer* to execute `req`: the device owning
+    /// the most resident operand bits, or `None` when every operand is
+    /// carried inline (round-robin admission decides then). Placement-only
+    /// — no payload is cloned.
+    pub fn route(&self, req: &ClusterRequest) -> Result<Option<DeviceId>, RouteError> {
+        Ok(self.registry.placement_of(req)?.preferred())
+    }
+
+    /// Materialize a routed request *after* an admission ticket was won,
+    /// returning the ticket if materialization fails (a region removed
+    /// between the placement check and here). Keeps payload cloning off
+    /// the shed path: routing/admission run on the clone-free
+    /// [`ResidencyRegistry::placement_of`], and operands are only cloned
+    /// out of the registry once the request is definitely entering a
+    /// queue.
+    fn resolve_admitted(
+        &self,
+        home: DeviceId,
+        req: &ClusterRequest,
+    ) -> Result<(BulkRequest, Placement), RouteError> {
+        self.registry.resolve(req).map_err(|e| {
+            self.admission.complete(home);
+            e
+        })
+    }
+
+    /// Placement-aware admit-or-shed submission: resident operands pull
+    /// the request toward their owning device (falling back to any
+    /// unsaturated device when the owner is full — the worker then charges
+    /// the copy), and the executing worker records the copy cost in the
+    /// fleet metrics.
+    pub fn try_submit_routed(
+        &self,
+        req: ClusterRequest,
+    ) -> Result<Receiver<ClusterResponse>, RouteError> {
+        let placement = self.registry.placement_of(&req)?;
+        let home = match placement.preferred() {
+            Some(d) => self.admission.try_admit_prefer(d)?,
+            None => self.admission.try_admit()?,
+        };
+        let (bulk, placement) = self.resolve_admitted(home, &req)?;
+        Ok(self.enqueue(home, bulk, Some(placement)))
+    }
+
+    /// Routed submission pinned to one executor (still copy-charged
+    /// against that executor — the forced-miss path the residency tests
+    /// and the locality ablation use).
+    pub fn try_submit_routed_to(
+        &self,
+        device: DeviceId,
+        req: ClusterRequest,
+    ) -> Result<Receiver<ClusterResponse>, RouteError> {
+        self.registry.placement_of(&req)?;
+        let home = self.admission.try_admit_to(device)?;
+        let (bulk, placement) = self.resolve_admitted(home, &req)?;
+        Ok(self.enqueue(home, bulk, Some(placement)))
+    }
+
+    /// Placement-aware blocking submission: parks on the preferred owner's
+    /// admission (or anywhere, for all-inline requests) instead of
+    /// shedding.
+    pub fn submit_routed_blocking(
+        &self,
+        req: ClusterRequest,
+    ) -> Result<Receiver<ClusterResponse>, RouteError> {
+        let placement = self.registry.placement_of(&req)?;
+        let home = match placement.preferred() {
+            Some(d) => self.admission.admit_wait_to(d),
+            None => self.admission.admit_wait(),
+        };
+        let (bulk, placement) = self.resolve_admitted(home, &req)?;
+        Ok(self.enqueue(home, bulk, Some(placement)))
+    }
+
+    /// Blocking routed submission pinned to one executor.
+    pub fn submit_routed_blocking_to(
+        &self,
+        device: DeviceId,
+        req: ClusterRequest,
+    ) -> Result<Receiver<ClusterResponse>, RouteError> {
+        self.registry.placement_of(&req)?;
+        let home = self.admission.admit_wait_to(device);
+        let (bulk, placement) = self.resolve_admitted(home, &req)?;
+        Ok(self.enqueue(home, bulk, Some(placement)))
+    }
+
+    /// Routed submit-and-wait.
+    pub fn run_routed(&self, req: ClusterRequest) -> Result<ClusterResponse, RouteError> {
+        Ok(self
+            .submit_routed_blocking(req)?
+            .recv()
+            .expect("cluster shut down mid-request"))
+    }
+
+    /// Drive the shared locality-ablation workload and block until every
+    /// response arrives: `requests` XNOR2 requests of 2 × `bits` random
+    /// operand bits each, operand owners assigned round-robin across the
+    /// fleet.
+    ///
+    /// `policy`: `None` — operands are carried inline (the
+    /// payload-carrying baseline, placed by round-robin admission);
+    /// `Some(k)` — operands are pre-registered on their owner and the
+    /// request routed there, except every `k`-th request, which is pinned
+    /// to the next device as a forced miss (`Some(0)` = no misses).
+    ///
+    /// One definition shared by `drim cluster --locality` and
+    /// benches/ablate_locality.rs so the two ablations measure the same
+    /// workload and cannot drift.
+    pub fn pump_locality(
+        &self,
+        requests: usize,
+        bits: usize,
+        policy: Option<usize>,
+        seed: u64,
+    ) {
+        let devices = self.devices();
+        let mut rng = Rng::new(seed);
+        let pending: Vec<_> = (0..requests)
+            .map(|i| {
+                let owner = DeviceId(i % devices);
+                let a = BitRow::random(bits, &mut rng);
+                let b = BitRow::random(bits, &mut rng);
+                match policy {
+                    None => self
+                        .submit_routed_blocking(ClusterRequest::carried(
+                            BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]),
+                        ))
+                        .expect("carried requests always resolve"),
+                    Some(miss_every) => {
+                        let ra = self.register_resident(owner, Payload::Bits(a));
+                        let rb = self.register_resident(owner, Payload::Bits(b));
+                        let req =
+                            ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
+                        if miss_every > 0 && i % miss_every == miss_every - 1 {
+                            let elsewhere = DeviceId((owner.0 + 1) % devices);
+                            self.submit_routed_blocking_to(elsewhere, req)
+                                .expect("registered regions always resolve")
+                        } else {
+                            self.submit_routed_blocking(req)
+                                .expect("registered regions always resolve")
+                        }
+                    }
+                }
+            })
+            .collect();
+        for p in pending {
+            p.recv().expect("response");
+        }
     }
 
     pub fn snapshot(&self) -> FleetSnapshot {
@@ -209,6 +415,11 @@ impl DrimCluster {
             waited: self.admission.waited.load(Ordering::Relaxed),
             completed: self.fleet.completed.load(Ordering::Relaxed),
             steals: self.fleet.steals.load(Ordering::Relaxed),
+            copied_bytes: self.fleet.copied_bytes.load(Ordering::Relaxed),
+            copy_cycles: self.fleet.copy_cycles.load(Ordering::Relaxed),
+            resident_hits: self.fleet.resident_hits.load(Ordering::Relaxed),
+            resident_misses: self.fleet.resident_misses.load(Ordering::Relaxed),
+            copy_ns_per_device: self.fleet.copy_ns_per_device(),
             mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
         }
     }
@@ -290,5 +501,50 @@ mod tests {
         assert_eq!(snap.devices(), 3);
         assert_eq!(snap.admitted, 0);
         assert_eq!(snap.merged.requests, 0);
+        assert_eq!(snap.copied_bytes, 0);
+        assert_eq!(snap.makespan_with_copy_ns(), 0);
+    }
+
+    #[test]
+    fn routed_request_lands_on_owner_and_is_free() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            ..ClusterConfig::tiny(2)
+        });
+        let mut rng = Rng::new(23);
+        let a = BitRow::random(1000, &mut rng);
+        let b = BitRow::random(1000, &mut rng);
+        let ra = c.register_resident(DeviceId(1), Payload::Bits(a.clone()));
+        let rb = c.register_resident(DeviceId(1), Payload::Bits(b.clone()));
+        let req = ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
+        assert_eq!(c.route(&req).unwrap(), Some(DeviceId(1)));
+        let resp = c.run_routed(req).unwrap();
+        assert_eq!(resp.home, DeviceId(1));
+        assert_eq!(resp.device, DeviceId(1));
+        let mut want = BitRow::zeros(1000);
+        want.apply2(&a, &b, |x, y| !(x ^ y));
+        match resp.inner.result {
+            Payload::Bits(got) => assert_eq!(got, want),
+            _ => panic!("wrong payload kind"),
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.resident_hits, 1);
+        assert_eq!(snap.resident_misses, 0);
+        assert_eq!(snap.copied_bytes, 0);
+        assert_eq!(snap.copy_cycles, 0);
+        assert_eq!(snap.makespan_with_copy_ns(), snap.merged.sim_ns);
+    }
+
+    #[test]
+    fn unknown_region_is_refused_without_burning_a_ticket() {
+        let c = DrimCluster::new(ClusterConfig::tiny(2));
+        let req = ClusterRequest::resident(BulkOp::Not, vec![RegionId(12345)]);
+        match c.try_submit_routed(req) {
+            Err(RouteError::UnknownRegion(r)) => assert_eq!(r, RegionId(12345)),
+            other => panic!("expected UnknownRegion, got {other:?}"),
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.admitted, 0, "no admission ticket may leak");
+        assert_eq!(snap.shed, 0);
     }
 }

@@ -1,0 +1,659 @@
+//! Operand residency: which device owns which operand region, and what it
+//! costs to move operands that are not where the computation runs.
+//!
+//! DRIM computes X(N)OR between operands stored *in the same bit-line*, so
+//! which device holds an operand is not a scheduling detail — it is the
+//! premise of the whole platform (cf. RowClone/Ambit in-DRAM copy,
+//! SIMDRAM's allocation-aware framework). PR 1's fleet routed requests
+//! that *carry* their payloads, letting any device serve any request; this
+//! module models the data instead:
+//!
+//! * [`ResidencyRegistry`] maps [`RegionId`] handles to the
+//!   [`DeviceId`] that owns them (and holds the simulated payload so
+//!   routed requests can be materialized for execution).
+//! * [`ClusterRequest`] lets each operand be either carried
+//!   ([`OperandRef::Inline`]) or referenced by resident handle
+//!   ([`OperandRef::Resident`]).
+//! * [`CopyCostModel`] prices the movement of operands that are *not*
+//!   resident on the executing device, from the DDR burst/channel timing
+//!   parameters (`dram::timing`): a host-carried operand is one streamed
+//!   transfer into the device; an operand resident on another device is a
+//!   read-out plus write-in, which serializes (2×) when source and
+//!   destination share a channel and overlaps when they do not.
+//! * [`LocalityModel`] binds the cost model to a concrete fleet topology
+//!   and computes the [`CopyCharge`] of executing a placed request on a
+//!   given device. The charge is computed against the device that
+//!   *actually executes* (fleet workers call it with their own id), so
+//!   the accounting stays correct under work stealing.
+//!
+//! A request whose operands are all resident on the executing device is a
+//! *resident hit*: zero copied bytes, zero copy cycles. Everything else is
+//! a miss and is charged; the fleet metrics surface copied bytes and copy
+//! cycles alongside the makespan so the `ablate_locality` bench and the
+//! `drim cluster --locality` sweep can ablate placement policies.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+use crate::coordinator::{BulkRequest, Payload};
+use crate::dram::timing::TimingParams;
+use crate::isa::program::BulkOp;
+
+use super::admission::AdmissionError;
+use super::topology::{DeviceId, Topology};
+
+/// Handle to a registered operand region (dense, fleet-wide, never reused).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct RegionId(pub u64);
+
+impl fmt::Display for RegionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "region{}", self.0)
+    }
+}
+
+/// One operand of a [`ClusterRequest`].
+#[derive(Clone, Debug)]
+pub enum OperandRef {
+    /// Payload carried with the request — charged as a host→device
+    /// streamed transfer no matter where it executes.
+    Inline(Payload),
+    /// Operand resident on some device — free when the request executes
+    /// there, charged as an inter-device copy otherwise.
+    Resident(RegionId),
+}
+
+/// A fleet-level request whose operands may be resident handles instead of
+/// carried payloads. The placement-aware submission paths
+/// (`DrimCluster::try_submit_routed` and friends) accept this type; the
+/// legacy payload-carrying paths keep accepting plain [`BulkRequest`]s.
+#[derive(Clone, Debug)]
+pub struct ClusterRequest {
+    pub op: BulkOp,
+    pub operands: Vec<OperandRef>,
+}
+
+impl ClusterRequest {
+    /// Build a request, checking operand count against the op's arity.
+    pub fn new(op: BulkOp, operands: Vec<OperandRef>) -> Self {
+        assert_eq!(operands.len(), op.arity(), "{}", op.name());
+        ClusterRequest { op, operands }
+    }
+
+    /// All-inline request: the payload-carrying baseline, now with its
+    /// host→device transfer made explicit in the copy accounting.
+    pub fn carried(req: BulkRequest) -> Self {
+        ClusterRequest {
+            op: req.op,
+            operands: req.operands.into_iter().map(OperandRef::Inline).collect(),
+        }
+    }
+
+    /// All-resident request: every operand referenced by handle.
+    pub fn resident(op: BulkOp, regions: Vec<RegionId>) -> Self {
+        Self::new(op, regions.into_iter().map(OperandRef::Resident).collect())
+    }
+}
+
+/// Why a routed submission was refused.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RouteError {
+    /// A resident handle references a region the registry does not know
+    /// (never registered, or dropped).
+    UnknownRegion(RegionId),
+    /// Admission control refused the request (fleet or device saturated).
+    Admission(AdmissionError),
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::UnknownRegion(r) => {
+                write!(f, "unknown operand {r}: not in the residency registry")
+            }
+            RouteError::Admission(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl From<AdmissionError> for RouteError {
+    fn from(e: AdmissionError) -> Self {
+        RouteError::Admission(e)
+    }
+}
+
+/// Where a routed request's operand bits live, summarized for the worker
+/// that will execute it. Resident bits are grouped per owning device (one
+/// streamed transfer per source device); inline bits are the payloads the
+/// request carried from the host.
+#[derive(Clone, Debug, Default)]
+pub struct Placement {
+    /// total resident operand bits per owning device
+    pub resident_bits: Vec<(DeviceId, u64)>,
+    /// operand bits carried inline with the request
+    pub inline_bits: u64,
+}
+
+impl Placement {
+    /// Accumulate `bits` of residency on `device`.
+    pub fn add_resident(&mut self, device: DeviceId, bits: u64) {
+        if let Some(e) = self.resident_bits.iter_mut().find(|(d, _)| *d == device) {
+            e.1 += bits;
+        } else {
+            self.resident_bits.push((device, bits));
+        }
+    }
+
+    /// The device owning the most resident operand bits (ties broken
+    /// toward the lowest id), if any operand is resident at all. This is
+    /// the placement the router prefers: executing there moves the fewest
+    /// bytes.
+    pub fn preferred(&self) -> Option<DeviceId> {
+        self.resident_bits
+            .iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|&(d, _)| d)
+    }
+
+    /// Total resident operand bits across all owning devices.
+    pub fn total_resident_bits(&self) -> u64 {
+        self.resident_bits.iter().map(|&(_, b)| b).sum()
+    }
+}
+
+struct Region {
+    device: DeviceId,
+    payload: Payload,
+}
+
+/// Registry mapping operand regions to the devices that own them.
+///
+/// In the simulator the registry also holds the payload itself, so a
+/// routed request can be materialized into an executable [`BulkRequest`]
+/// wherever it lands; on real hardware the payload would be the row range
+/// and only the coordinates would live here.
+#[derive(Default)]
+pub struct ResidencyRegistry {
+    inner: RwLock<HashMap<u64, Region>>,
+    next: AtomicU64,
+    /// devices this registry may reference (`None` = standalone/unbounded)
+    bound: Option<usize>,
+}
+
+impl ResidencyRegistry {
+    /// Unbounded registry (standalone use; fleet-owned registries are
+    /// created with [`Self::for_fleet`] so a bad `DeviceId` fails at
+    /// registration time, not deep inside routing).
+    pub fn new() -> Self {
+        ResidencyRegistry::default()
+    }
+
+    /// Registry whose regions may only reference devices `0..devices`.
+    pub fn for_fleet(devices: usize) -> Self {
+        ResidencyRegistry {
+            bound: Some(devices),
+            ..ResidencyRegistry::default()
+        }
+    }
+
+    fn check(&self, device: DeviceId) {
+        if let Some(n) = self.bound {
+            assert!(device.0 < n, "{device} outside the {n}-device fleet");
+        }
+    }
+
+    /// Register a payload as resident on `device`; returns its handle.
+    /// Panics if `device` is outside a fleet-bounded registry's range.
+    pub fn register(&self, device: DeviceId, payload: Payload) -> RegionId {
+        self.check(device);
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        self.inner
+            .write()
+            .unwrap()
+            .insert(id, Region { device, payload });
+        RegionId(id)
+    }
+
+    /// Owning device of a region, if registered.
+    pub fn owner(&self, region: RegionId) -> Option<DeviceId> {
+        self.inner.read().unwrap().get(&region.0).map(|r| r.device)
+    }
+
+    /// Payload size of a region in bits, if registered.
+    pub fn bits(&self, region: RegionId) -> Option<usize> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(&region.0)
+            .map(|r| r.payload.bits())
+    }
+
+    /// Owner and a copy of the payload, if registered.
+    pub fn lookup(&self, region: RegionId) -> Option<(DeviceId, Payload)> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(&region.0)
+            .map(|r| (r.device, r.payload.clone()))
+    }
+
+    /// Re-home a region onto another device (an explicit migration —
+    /// future requests routed by this handle will prefer `to`). Returns
+    /// false if the region is unknown; panics if `to` is outside a
+    /// fleet-bounded registry's range.
+    pub fn migrate(&self, region: RegionId, to: DeviceId) -> bool {
+        self.check(to);
+        match self.inner.write().unwrap().get_mut(&region.0) {
+            Some(r) => {
+                r.device = to;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a region; returns its payload if it was registered.
+    pub fn remove(&self, region: RegionId) -> Option<Payload> {
+        self.inner
+            .write()
+            .unwrap()
+            .remove(&region.0)
+            .map(|r| r.payload)
+    }
+
+    /// Number of registered regions.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bits resident on one device (capacity/balance reporting).
+    pub fn resident_bits_on(&self, device: DeviceId) -> u64 {
+        self.inner
+            .read()
+            .unwrap()
+            .values()
+            .filter(|r| r.device == device)
+            .map(|r| r.payload.bits() as u64)
+            .sum()
+    }
+
+    /// Summarize where a request's operand bits live *without* cloning any
+    /// payload — the cheap path for routing decisions ([`Placement`] only;
+    /// use [`Self::resolve`] when the request is actually submitted).
+    pub fn placement_of(&self, req: &ClusterRequest) -> Result<Placement, RouteError> {
+        let mut placement = Placement::default();
+        let inner = self.inner.read().unwrap();
+        for o in &req.operands {
+            match o {
+                OperandRef::Inline(p) => placement.inline_bits += p.bits() as u64,
+                OperandRef::Resident(r) => {
+                    let region =
+                        inner.get(&r.0).ok_or(RouteError::UnknownRegion(*r))?;
+                    placement.add_resident(region.device, region.payload.bits() as u64);
+                }
+            }
+        }
+        Ok(placement)
+    }
+
+    /// Materialize a [`ClusterRequest`] into an executable [`BulkRequest`]
+    /// plus the [`Placement`] summary the copy accounting charges from.
+    ///
+    /// Panics if materialized operands disagree in bit length (the same
+    /// contract `BulkRequest::bitwise` enforces for carried payloads).
+    pub fn resolve(
+        &self,
+        req: &ClusterRequest,
+    ) -> Result<(BulkRequest, Placement), RouteError> {
+        let mut operands = Vec::with_capacity(req.operands.len());
+        let mut placement = Placement::default();
+        for o in &req.operands {
+            match o {
+                OperandRef::Inline(p) => {
+                    placement.inline_bits += p.bits() as u64;
+                    operands.push(p.clone());
+                }
+                OperandRef::Resident(r) => {
+                    let (device, payload) =
+                        self.lookup(*r).ok_or(RouteError::UnknownRegion(*r))?;
+                    placement.add_resident(device, payload.bits() as u64);
+                    operands.push(payload);
+                }
+            }
+        }
+        if let Some(first) = operands.first() {
+            let bits = first.bits();
+            assert!(
+                operands.iter().all(|o| o.bits() == bits),
+                "{}: operand sizes disagree",
+                req.op.name()
+            );
+        }
+        Ok((
+            BulkRequest {
+                op: req.op,
+                operands,
+            },
+            placement,
+        ))
+    }
+}
+
+/// Inter-device copy-cost model derived from the DDR timing parameters.
+///
+/// All transfers are streamed in [`crate::dram::timing::BURST_BITS`]-bit
+/// bursts at `t_burst_ns` each; cycle counts use the command-clock period
+/// `t_ck_ns` (one burst = 4 clocks at DDR4-2133).
+#[derive(Clone, Debug)]
+pub struct CopyCostModel {
+    pub timing: TimingParams,
+}
+
+impl CopyCostModel {
+    pub fn new(timing: TimingParams) -> Self {
+        CopyCostModel { timing }
+    }
+
+    /// Nanoseconds to bring `bits` from the host into a device: one
+    /// streamed pass over the destination channel.
+    pub fn host_to_device_ns(&self, bits: u64) -> f64 {
+        self.timing.stream_ns(bits)
+    }
+
+    /// Nanoseconds to move `bits` between two devices. When source and
+    /// destination share a DDR channel the read-out and write-in serialize
+    /// on the shared data bus (2× the stream time); across channels the
+    /// two directions overlap and the stream time is paid once.
+    pub fn device_to_device_ns(&self, bits: u64, same_channel: bool) -> f64 {
+        let one = self.timing.stream_ns(bits);
+        if same_channel {
+            2.0 * one
+        } else {
+            one
+        }
+    }
+
+    /// Bus clock cycles corresponding to `ns` of copy time.
+    pub fn cycles_for(&self, ns: f64) -> u64 {
+        self.timing.cycles_for_ns(ns)
+    }
+}
+
+impl Default for CopyCostModel {
+    fn default() -> Self {
+        CopyCostModel::new(TimingParams::default())
+    }
+}
+
+/// What executing a placed request on a particular device costs in operand
+/// movement. `bytes == 0` means a resident hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CopyCharge {
+    /// operand bytes that had to move (host→device or device→device)
+    pub bytes: u64,
+    /// simulated copy time added to the executing device
+    pub ns: f64,
+    /// DDR bus clock cycles the movement occupied
+    pub cycles: u64,
+}
+
+impl CopyCharge {
+    /// True when no operand had to move — the resident-hit case.
+    pub fn is_free(&self) -> bool {
+        self.bytes == 0
+    }
+}
+
+/// The copy-cost model bound to a concrete fleet topology: knows which
+/// devices share a channel and turns a [`Placement`] plus an executing
+/// device into a [`CopyCharge`].
+pub struct LocalityModel {
+    channel_of: Vec<usize>,
+    pub model: CopyCostModel,
+}
+
+impl LocalityModel {
+    /// Bind `timing`-derived costs to the channel coordinates of `t`.
+    pub fn from_topology(t: &Topology, timing: TimingParams) -> Self {
+        LocalityModel {
+            channel_of: (0..t.len()).map(|i| t.channel_of(DeviceId(i))).collect(),
+            model: CopyCostModel::new(timing),
+        }
+    }
+
+    /// Do two devices sit on the same DDR channel?
+    pub fn same_channel(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.channel_of[a.0] == self.channel_of[b.0]
+    }
+
+    /// Charge for executing a request with placement `p` on `executor`:
+    /// resident bits already on `executor` are free; resident bits on
+    /// other devices pay the device→device stream (per source device);
+    /// inline bits pay the host→device stream.
+    pub fn charge(&self, p: &Placement, executor: DeviceId) -> CopyCharge {
+        let mut ns = 0.0;
+        let mut bytes = 0u64;
+        for &(device, bits) in &p.resident_bits {
+            if device != executor && bits > 0 {
+                ns += self
+                    .model
+                    .device_to_device_ns(bits, self.same_channel(device, executor));
+                bytes += bits.div_ceil(8);
+            }
+        }
+        if p.inline_bits > 0 {
+            ns += self.model.host_to_device_ns(p.inline_bits);
+            bytes += p.inline_bits.div_ceil(8);
+        }
+        CopyCharge {
+            bytes,
+            ns,
+            cycles: self.model.cycles_for(ns),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bitrow::BitRow;
+
+    fn payload(bits: usize) -> Payload {
+        Payload::Bits(BitRow::zeros(bits))
+    }
+
+    #[test]
+    fn register_lookup_migrate_remove() {
+        let reg = ResidencyRegistry::new();
+        assert!(reg.is_empty());
+        let r = reg.register(DeviceId(1), payload(1000));
+        assert_eq!(reg.owner(r), Some(DeviceId(1)));
+        assert_eq!(reg.bits(r), Some(1000));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.resident_bits_on(DeviceId(1)), 1000);
+        assert_eq!(reg.resident_bits_on(DeviceId(0)), 0);
+        assert!(reg.migrate(r, DeviceId(0)));
+        assert_eq!(reg.owner(r), Some(DeviceId(0)));
+        assert!(reg.remove(r).is_some());
+        assert_eq!(reg.owner(r), None);
+        assert!(!reg.migrate(r, DeviceId(1)));
+        assert!(reg.remove(r).is_none());
+    }
+
+    #[test]
+    fn fleet_bounded_registry_rejects_foreign_devices() {
+        let reg = ResidencyRegistry::for_fleet(2);
+        let r = reg.register(DeviceId(1), payload(8));
+        assert!(reg.migrate(r, DeviceId(0)));
+        // unbounded registries accept anything (standalone use)
+        let free = ResidencyRegistry::new();
+        free.register(DeviceId(99), payload(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 2-device fleet")]
+    fn fleet_bounded_register_panics_out_of_range() {
+        ResidencyRegistry::for_fleet(2).register(DeviceId(2), payload(8));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 2-device fleet")]
+    fn fleet_bounded_migrate_panics_out_of_range() {
+        let reg = ResidencyRegistry::for_fleet(2);
+        let r = reg.register(DeviceId(0), payload(8));
+        reg.migrate(r, DeviceId(5));
+    }
+
+    #[test]
+    fn placement_of_matches_resolve_without_cloning() {
+        let reg = ResidencyRegistry::new();
+        let ra = reg.register(DeviceId(1), payload(2048));
+        let req = ClusterRequest::new(
+            BulkOp::Xnor2,
+            vec![
+                OperandRef::Resident(ra),
+                OperandRef::Inline(payload(2048)),
+            ],
+        );
+        let cheap = reg.placement_of(&req).unwrap();
+        let (_, full) = reg.resolve(&req).unwrap();
+        assert_eq!(cheap.resident_bits, full.resident_bits);
+        assert_eq!(cheap.inline_bits, full.inline_bits);
+        assert_eq!(cheap.preferred(), full.preferred());
+        let bogus = ClusterRequest::resident(BulkOp::Not, vec![RegionId(404)]);
+        assert_eq!(
+            reg.placement_of(&bogus).unwrap_err(),
+            RouteError::UnknownRegion(RegionId(404))
+        );
+    }
+
+    #[test]
+    fn region_handles_are_never_reused() {
+        let reg = ResidencyRegistry::new();
+        let a = reg.register(DeviceId(0), payload(8));
+        reg.remove(a);
+        let b = reg.register(DeviceId(0), payload(8));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn resolve_materializes_and_summarizes() {
+        let reg = ResidencyRegistry::new();
+        let ra = reg.register(DeviceId(1), payload(2048));
+        let req = ClusterRequest::new(
+            BulkOp::Xnor2,
+            vec![
+                OperandRef::Resident(ra),
+                OperandRef::Inline(payload(2048)),
+            ],
+        );
+        let (bulk, place) = reg.resolve(&req).unwrap();
+        assert_eq!(bulk.operands.len(), 2);
+        assert_eq!(bulk.payload_bits(), 2048);
+        assert_eq!(place.inline_bits, 2048);
+        assert_eq!(place.resident_bits, vec![(DeviceId(1), 2048)]);
+        assert_eq!(place.preferred(), Some(DeviceId(1)));
+        assert_eq!(place.total_resident_bits(), 2048);
+    }
+
+    #[test]
+    fn resolve_unknown_region_is_an_error() {
+        let reg = ResidencyRegistry::new();
+        let req = ClusterRequest::resident(BulkOp::Not, vec![RegionId(77)]);
+        assert_eq!(
+            reg.resolve(&req).unwrap_err(),
+            RouteError::UnknownRegion(RegionId(77))
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "operand sizes disagree")]
+    fn resolve_rejects_mismatched_sizes() {
+        let reg = ResidencyRegistry::new();
+        let ra = reg.register(DeviceId(0), payload(100));
+        let rb = reg.register(DeviceId(0), payload(200));
+        let req = ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
+        let _ = reg.resolve(&req);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cluster_request_checks_arity() {
+        ClusterRequest::resident(BulkOp::Xnor2, vec![RegionId(0)]);
+    }
+
+    #[test]
+    fn preferred_picks_biggest_owner_lowest_id_on_tie() {
+        let mut p = Placement::default();
+        assert_eq!(p.preferred(), None);
+        p.add_resident(DeviceId(2), 100);
+        p.add_resident(DeviceId(0), 300);
+        p.add_resident(DeviceId(2), 100); // merges: dev2 now 200
+        assert_eq!(p.resident_bits.len(), 2);
+        assert_eq!(p.preferred(), Some(DeviceId(0)));
+        p.add_resident(DeviceId(2), 100); // tie at 300 → lowest id wins
+        assert_eq!(p.preferred(), Some(DeviceId(0)));
+    }
+
+    #[test]
+    fn copy_cost_calibration() {
+        let m = CopyCostModel::default();
+        // 2048 bits = 4 bursts = 15 ns host→device, 16 clocks
+        assert!((m.host_to_device_ns(2048) - 15.0).abs() < 1e-9);
+        assert_eq!(m.cycles_for(15.0), 16);
+        // same channel serializes read-out + write-in
+        assert!((m.device_to_device_ns(2048, true) - 30.0).abs() < 1e-9);
+        // cross-channel overlaps
+        assert!((m.device_to_device_ns(2048, false) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn locality_charge_hits_and_misses() {
+        let topo = Topology::tiny(4); // two ranks per channel
+        let loc = LocalityModel::from_topology(&topo, TimingParams::default());
+        assert!(loc.same_channel(DeviceId(0), DeviceId(1)));
+        assert!(!loc.same_channel(DeviceId(1), DeviceId(2)));
+
+        let mut p = Placement::default();
+        p.add_resident(DeviceId(0), 2048);
+        // executing on the owner: free
+        let hit = loc.charge(&p, DeviceId(0));
+        assert!(hit.is_free());
+        assert_eq!(hit.cycles, 0);
+        assert_eq!(hit.ns, 0.0);
+        // executing on the same-channel neighbour: serialized transfer
+        let near = loc.charge(&p, DeviceId(1));
+        assert_eq!(near.bytes, 256);
+        assert!((near.ns - 30.0).abs() < 1e-9);
+        assert_eq!(near.cycles, 32);
+        // executing across channels: overlapped transfer
+        let far = loc.charge(&p, DeviceId(2));
+        assert_eq!(far.bytes, 256);
+        assert!((far.ns - 15.0).abs() < 1e-9);
+        assert_eq!(far.cycles, 16);
+
+        // inline bits are charged wherever the request runs
+        p.inline_bits = 2048;
+        let mixed = loc.charge(&p, DeviceId(0));
+        assert_eq!(mixed.bytes, 256);
+        assert!((mixed.ns - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn route_error_messages() {
+        let e = RouteError::UnknownRegion(RegionId(9));
+        assert!(e.to_string().contains("region9"), "{e}");
+        let a: RouteError = AdmissionError::Overloaded {
+            devices: 2,
+            max_inflight_per_device: 1,
+        }
+        .into();
+        assert!(a.to_string().contains("overloaded"), "{a}");
+    }
+}

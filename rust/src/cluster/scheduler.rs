@@ -22,6 +22,12 @@
 //! `release` first publishes `Idle` and *then* re-checks the queue,
 //! re-enqueueing itself if a racing `submit` landed between the drain and
 //! the release — no lost wakeups, no dedicated dispatcher thread.
+//!
+//! Interaction with placement-aware routing: the residency layer decides
+//! which *queue* a request enters (the operand owner's, when it can), but
+//! a stolen shard still executes on the stealer's device — the copy-cost
+//! accounting therefore lives with the worker, which charges operand
+//! movement against its own device id, not the queue's.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU8, Ordering};

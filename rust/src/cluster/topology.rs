@@ -2,11 +2,12 @@
 //! memory interface.
 //!
 //! One *device* is one lock-step DRIM rank (the chip-level view
-//! [`DramGeometry`] models — chips in a rank issue the same AAP in
-//! lock-step, cf. Ambit's rank-level operation). Devices are grouped into
-//! DDR channels; the channel/rank coordinates matter only for reporting
-//! today, but they are the axis a future inter-device copy-cost model
-//! hangs off, so the topology carries them from the start.
+//! [`crate::dram::geometry::DramGeometry`] models — chips in a rank issue
+//! the same AAP in lock-step, cf. Ambit's rank-level operation). Devices
+//! are grouped into DDR channels; the channel/rank coordinates are the
+//! axis the inter-device copy-cost model
+//! ([`crate::cluster::residency`]) hangs off: ranks sharing a channel
+//! share its data bus, so copies between them serialize.
 
 use std::fmt;
 
@@ -88,6 +89,18 @@ impl Topology {
             .unwrap_or(0)
     }
 
+    /// Channel coordinate of one device (the axis the inter-device
+    /// copy-cost model prices: same-channel copies serialize on the shared
+    /// data bus, cross-channel copies overlap).
+    pub fn channel_of(&self, d: DeviceId) -> usize {
+        self.devices[d.0].channel
+    }
+
+    /// Do two devices share a DDR channel?
+    pub fn same_channel(&self, a: DeviceId, b: DeviceId) -> bool {
+        self.channel_of(a) == self.channel_of(b)
+    }
+
     /// Fleet-wide parallel row slots per wave (sum of per-device
     /// banks × active sub-arrays) — the scale-out analogue of
     /// `Router::wave_slots`.
@@ -141,5 +154,37 @@ mod tests {
     #[test]
     fn device_id_display() {
         assert_eq!(DeviceId(3).to_string(), "dev3");
+    }
+
+    #[test]
+    fn single_device_fleet_is_degenerate_but_valid() {
+        let t = Topology::homogeneous(1, ServiceConfig::tiny(), 2);
+        assert_eq!(t.len(), 1);
+        assert!(!t.is_empty());
+        assert_eq!(t.channels(), 1);
+        assert_eq!((t.devices[0].channel, t.devices[0].rank), (0, 0));
+        assert_eq!(t.channel_of(DeviceId(0)), 0);
+        assert!(t.same_channel(DeviceId(0), DeviceId(0)));
+        // fleet-wide aggregates equal the single device's own
+        assert_eq!(t.total_wave_slots(), 4);
+        assert_eq!(t.compute_width_bits(), Topology::tiny(1).compute_width_bits());
+    }
+
+    #[test]
+    fn more_ranks_per_channel_than_devices_stays_on_one_channel() {
+        // ranks_per_channel larger than the fleet: everything packs onto
+        // channel 0, rank index dense — no phantom channels appear.
+        let t = Topology::homogeneous(3, ServiceConfig::tiny(), 8);
+        assert_eq!(t.channels(), 1);
+        let coords: Vec<(usize, usize)> =
+            t.devices.iter().map(|d| (d.channel, d.rank)).collect();
+        assert_eq!(coords, vec![(0, 0), (0, 1), (0, 2)]);
+        assert!(t.same_channel(DeviceId(0), DeviceId(2)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ranks_per_channel_rejected() {
+        Topology::homogeneous(2, ServiceConfig::tiny(), 0);
     }
 }

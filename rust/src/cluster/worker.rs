@@ -4,10 +4,16 @@
 //!
 //! A worker prefers its own device's queue; when that queue is empty it
 //! steals the oldest backlogged device queue (if stealing is enabled) and
-//! executes those requests on *its own* device — payloads travel with the
-//! request, so any device can serve any admitted request, and stealing
-//! converts fleet-level imbalance into extra utilization instead of tail
-//! latency.
+//! executes those requests on *its own* device — materialized payloads
+//! travel with the task, so any device can serve any admitted request, and
+//! stealing converts fleet-level imbalance into extra utilization instead
+//! of tail latency.
+//!
+//! Copy accounting happens here, not at submit time: a placement-routed
+//! task carries its [`Placement`] summary, and the worker charges the
+//! [`LocalityModel`] against *its own* device id — so a stolen task is
+//! charged for the operands its new executor has to pull, and a task that
+//! landed on its operands' owner is charged nothing.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -17,6 +23,7 @@ use crate::coordinator::{BulkRequest, BulkResponse, Device};
 
 use super::admission::AdmissionController;
 use super::metrics::FleetMetrics;
+use super::residency::{LocalityModel, Placement};
 use super::scheduler::Scheduler;
 use super::topology::DeviceId;
 
@@ -27,6 +34,9 @@ pub struct ClusterTask {
     /// device whose admission ticket this request holds
     pub home: DeviceId,
     pub req: BulkRequest,
+    /// operand-residency summary for placement-routed requests (`None`
+    /// for the legacy payload-carrying paths, which are not copy-charged)
+    pub placement: Option<Placement>,
     pub reply: Sender<ClusterResponse>,
     pub admitted_at: Instant,
 }
@@ -54,6 +64,7 @@ pub(crate) fn worker_loop<D: Device>(
     sched: Arc<Scheduler<ClusterTask>>,
     admission: Arc<AdmissionController>,
     fleet: Arc<FleetMetrics>,
+    locality: Arc<LocalityModel>,
     steal: bool,
 ) {
     while let Some(shard) = sched.acquire(me.0, steal) {
@@ -70,6 +81,11 @@ pub(crate) fn worker_loop<D: Device>(
             .into_iter()
             .map(|task| {
                 fleet.record_queue_wait_ns(task.admitted_at.elapsed().as_nanos() as f64);
+                if let Some(p) = &task.placement {
+                    // charge operand movement against the device that
+                    // actually executes (correct under stealing)
+                    fleet.record_copy(me.0, &locality.charge(p, me));
+                }
                 let rx = device.submit(task.req);
                 (task.seq, task.home, task.reply, rx)
             })

@@ -15,8 +15,11 @@
 //!   over to scale the service across many DRIM devices.
 //!
 //! One `DrimService` is one device. Multi-device serving (topology,
-//! fleet scheduling, admission control, work stealing) lives one layer up
-//! in [`crate::cluster`] and consumes this module only through [`Device`].
+//! fleet scheduling, admission control, work stealing, operand residency
+//! and copy-cost accounting) lives one layer up in [`crate::cluster`] and
+//! consumes this module only through [`Device`] — a device always receives
+//! fully materialized payloads; resolving resident operand handles is the
+//! cluster's job.
 
 pub mod coherence;
 pub mod device;

@@ -19,6 +19,7 @@ impl Payload {
             Payload::U32(v) => v.len() * 32,
         }
     }
+
 }
 
 /// One bulk in-memory operation over arbitrary-size payloads.
@@ -64,6 +65,13 @@ impl BulkRequest {
 
     pub fn payload_bits(&self) -> usize {
         self.operands[0].bits()
+    }
+
+    /// Total bits across *all* operands — the quantity that has to move
+    /// when none of them is resident where the request executes (the
+    /// cluster's locality ablation charges carried requests exactly this).
+    pub fn operand_bits(&self) -> usize {
+        self.operands.iter().map(|o| o.bits()).sum()
     }
 }
 
@@ -111,5 +119,6 @@ mod tests {
     fn add32_payload_bits() {
         let r = BulkRequest::add32(vec![1, 2, 3], vec![4, 5, 6]);
         assert_eq!(r.payload_bits(), 96);
+        assert_eq!(r.operand_bits(), 192);
     }
 }

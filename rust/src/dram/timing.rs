@@ -9,6 +9,11 @@
 //!   * "This operation takes only 90ns" — RowClone-FPM copy (one AAP).
 //!   * "TRA method needs averagely 360ns" for a 4-AAP AND2/OR2 → 4 × 90 ns.
 
+/// Bits moved per DDR burst: a 64-byte transfer (8 beats over the x64
+/// interface), the granularity every off-chip or inter-device copy is
+/// streamed in.
+pub const BURST_BITS: u64 = 512;
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct TimingParams {
     pub t_rcd_ns: f64,
@@ -20,6 +25,9 @@ pub struct TimingParams {
     pub t_ap_ns: f64,
     /// column read/write burst (64 B over the DDR interface)
     pub t_burst_ns: f64,
+    /// DDR command-clock period (DDR4-2133: 1066 MHz → one 8-beat burst
+    /// occupies exactly 4 clocks = `t_burst_ns`)
+    pub t_ck_ns: f64,
 }
 
 impl Default for TimingParams {
@@ -31,6 +39,7 @@ impl Default for TimingParams {
             t_aap_ns: 90.0,
             t_ap_ns: 47.16, // tRAS + tRP
             t_burst_ns: 3.75, // 8 beats @ DDR4-2133
+            t_ck_ns: 0.9375, // 1066 MHz command clock
         }
     }
 }
@@ -39,6 +48,28 @@ impl TimingParams {
     /// Latency of an n-AAP command sequence.
     pub fn seq_ns(&self, aaps: usize) -> f64 {
         self.t_aap_ns * aaps as f64
+    }
+
+    /// Number of DDR bursts needed to move `bits` (64 B granularity).
+    pub fn bursts(bits: u64) -> u64 {
+        bits.div_ceil(BURST_BITS)
+    }
+
+    /// Time to stream `bits` over one channel's data bus, back-to-back
+    /// bursts (the cluster's inter-device copy-cost model builds on this).
+    pub fn stream_ns(&self, bits: u64) -> f64 {
+        Self::bursts(bits) as f64 * self.t_burst_ns
+    }
+
+    /// Bus clock cycles occupied by streaming `bits` (the unit the fleet
+    /// metrics report copy traffic in).
+    pub fn stream_cycles(&self, bits: u64) -> u64 {
+        self.cycles_for_ns(self.stream_ns(bits))
+    }
+
+    /// Convert a bus-time duration to whole command-clock cycles.
+    pub fn cycles_for_ns(&self, ns: f64) -> u64 {
+        (ns / self.t_ck_ns).round() as u64
     }
 }
 
@@ -59,5 +90,24 @@ mod tests {
     fn ap_is_ras_plus_rp() {
         let t = TimingParams::default();
         assert!((t.t_ap_ns - (t.t_ras_ns + t.t_rp_ns)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burst_is_four_clocks() {
+        let t = TimingParams::default();
+        assert!((t.t_burst_ns - 4.0 * t.t_ck_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_rounds_up_to_whole_bursts() {
+        let t = TimingParams::default();
+        assert_eq!(TimingParams::bursts(0), 0);
+        assert_eq!(TimingParams::bursts(1), 1);
+        assert_eq!(TimingParams::bursts(512), 1);
+        assert_eq!(TimingParams::bursts(513), 2);
+        // 2048 bits = 4 bursts = 15 ns = 16 clocks
+        assert!((t.stream_ns(2048) - 15.0).abs() < 1e-9);
+        assert_eq!(t.stream_cycles(2048), 16);
+        assert_eq!(t.stream_cycles(0), 0);
     }
 }

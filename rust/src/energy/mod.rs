@@ -11,6 +11,7 @@
 //!
 //! Energy scales linearly with activated row width (`cols`); constants are
 //! quoted for the reference 8192-bit row.
+#![warn(missing_docs)]
 
 pub mod model;
 

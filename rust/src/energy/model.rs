@@ -5,6 +5,8 @@ use crate::dram::command::AapKind;
 /// Reference row width the constants are quoted for.
 pub const REF_ROW_BITS: f64 = 8192.0;
 
+/// Per-command DRAM energy constants (picojoules) and the derived costs of
+/// AAP primitives and off-chip transfers — the substrate behind Fig. 9.
 #[derive(Clone, Debug)]
 pub struct EnergyModel {
     /// single-row ACTIVATE (charge restore of one 8 Kb row)

@@ -11,6 +11,8 @@ use crate::dram::command::RowId;
 
 use super::{AapInstr, Program};
 
+/// Render a program in the text format (`# program:` header + one
+/// instruction per line); round-trips through [`parse_program`].
 pub fn format_program(p: &Program) -> String {
     let mut out = format!("# program: {} ({} AAPs)\n", p.name, p.aap_count());
     for i in &p.instrs {
@@ -20,6 +22,7 @@ pub fn format_program(p: &Program) -> String {
     out
 }
 
+/// Render one instruction (`AAP2(...)` for type-2, `AAP(...)` otherwise).
 pub fn format_instr(i: &AapInstr) -> String {
     match i {
         AapInstr::Aap2 { src, des } => format!("AAP2({src}, {}, {})", des[0], des[1]),
@@ -27,10 +30,14 @@ pub fn format_instr(i: &AapInstr) -> String {
     }
 }
 
+/// Why a line failed to assemble.
 #[derive(Debug, PartialEq)]
 pub enum ParseError {
+    /// Not of the form `AAP(...)` / `AAP2(...)`.
     BadSyntax(String),
+    /// An operand is not a valid row name (`d<N>`, `x<N>`, `dcc<N>`).
     BadRow(String),
+    /// Operand count matches no AAP type.
     BadArity(usize),
 }
 
@@ -44,6 +51,7 @@ impl std::fmt::Display for ParseError {
     }
 }
 
+/// Parse one instruction line (see the module docs for the format).
 pub fn parse_instr(line: &str) -> Result<AapInstr, ParseError> {
     let line = line.trim();
     let (head, rest) = line
@@ -85,6 +93,7 @@ pub fn parse_instr(line: &str) -> Result<AapInstr, ParseError> {
     }
 }
 
+/// Parse a whole program, skipping blank lines and `#` comments.
 pub fn parse_program(name: &str, text: &str) -> Result<Program, ParseError> {
     let mut p = Program::new(name);
     for line in text.lines() {

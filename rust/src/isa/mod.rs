@@ -11,6 +11,7 @@
 //! `Program` is a straight-line sequence of AAPs operating inside one
 //! sub-array (the unit the coordinator schedules); `programs` builds the
 //! Table 2 micro-programs.
+#![warn(missing_docs)]
 
 pub mod assemble;
 pub mod program;
@@ -21,13 +22,39 @@ use crate::dram::command::{AapKind, RowId};
 /// carried by the enclosing `Program`; every AAP moves a full row.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum AapInstr {
-    Aap1 { src: RowId, des: RowId },
-    Aap2 { src: RowId, des: [RowId; 2] },
-    Aap3 { src: [RowId; 2], des: RowId },
-    Aap4 { src: [RowId; 3], des: RowId },
+    /// type-1: single-source copy (also NOT, via a DCC word-line)
+    Aap1 {
+        /// source row
+        src: RowId,
+        /// destination row
+        des: RowId,
+    },
+    /// type-2: double-copy (one source restored into two destinations)
+    Aap2 {
+        /// source row
+        src: RowId,
+        /// both destination rows
+        des: [RowId; 2],
+    },
+    /// type-3: dual-row activation → X(N)OR2 of the two sources
+    Aap3 {
+        /// the two simultaneously activated source rows
+        src: [RowId; 2],
+        /// destination row
+        des: RowId,
+    },
+    /// type-4: triple-row activation → MAJ3 of the three sources
+    Aap4 {
+        /// the three simultaneously activated source rows
+        src: [RowId; 3],
+        /// destination row
+        des: RowId,
+    },
 }
 
 impl AapInstr {
+    /// The DRAM command-level kind of this instruction (copy / double-copy
+    /// / DRA / TRA) — what timing and energy accounting key off.
     pub fn kind(&self) -> AapKind {
         match self {
             AapInstr::Aap1 { .. } => AapKind::Copy,
@@ -37,6 +64,7 @@ impl AapInstr {
         }
     }
 
+    /// Source rows, in activation order.
     pub fn sources(&self) -> Vec<RowId> {
         match self {
             AapInstr::Aap1 { src, .. } | AapInstr::Aap2 { src, .. } => vec![*src],
@@ -45,6 +73,7 @@ impl AapInstr {
         }
     }
 
+    /// Destination rows.
     pub fn dests(&self) -> Vec<RowId> {
         match self {
             AapInstr::Aap1 { des, .. }
@@ -76,11 +105,14 @@ impl std::fmt::Display for AapInstr {
 /// A straight-line AAP program addressed within one sub-array.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Program {
+    /// Human-readable name (the Table 2 row it implements).
     pub name: String,
+    /// The instruction sequence, executed in order.
     pub instrs: Vec<AapInstr>,
 }
 
 impl Program {
+    /// Empty program with the given name.
     pub fn new(name: impl Into<String>) -> Self {
         Program {
             name: name.into(),
@@ -88,11 +120,13 @@ impl Program {
         }
     }
 
+    /// Append one instruction (builder-style).
     pub fn push(&mut self, i: AapInstr) -> &mut Self {
         self.instrs.push(i);
         self
     }
 
+    /// Number of AAP primitives (the paper's command-sequence cost unit).
     pub fn aap_count(&self) -> usize {
         self.instrs.len()
     }

@@ -10,9 +10,10 @@ use crate::dram::command::RowId::{self, *};
 
 use super::{AapInstr, Program};
 
-/// Reserved preset rows (initialized once by the controller at power-up,
-/// refreshed by RowClone from themselves like any other row).
+/// Reserved all-zeros preset row (initialized once by the controller at
+/// power-up, refreshed by RowClone from itself like any other row).
 pub const CTRL_ZEROS: RowId = Data(499);
+/// Reserved all-ones preset row (TRA-composed OR2 and carry/borrow init).
 pub const CTRL_ONES: RowId = Data(498);
 /// First data row usable by the allocator.
 pub const FIRST_FREE_DATA_ROW: u16 = 0;
@@ -210,21 +211,34 @@ pub fn full_subtractor(
 /// The op vocabulary exposed by the coordinator / CLI.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
 pub enum BulkOp {
+    /// RowClone-style in-array copy (1 AAP).
     Copy,
+    /// Bit-wise complement via DCC (2 AAPs).
     Not,
+    /// The headline dual-row-activation XNOR (3 AAPs).
     Xnor2,
+    /// XNOR through a DCC complement word-line (4 AAPs).
     Xor2,
+    /// TRA with the zeros control row: MAJ3(a, b, 0) (4 AAPs).
     And2,
+    /// TRA with the ones control row: MAJ3(a, b, 1) (4 AAPs).
     Or2,
+    /// AND2 read back complemented through DCC (5 AAPs).
     Nand2,
+    /// OR2 read back complemented through DCC (5 AAPs).
     Nor2,
+    /// Native triple-row-activation majority (4 AAPs).
     Maj3,
+    /// Complemented majority (5 AAPs).
     Min3,
+    /// Element-wise 32-bit addition, bit-serial over planes (7 AAPs/slice).
     Add,
+    /// Element-wise 32-bit subtraction (8 AAPs/slice).
     Sub,
 }
 
 impl BulkOp {
+    /// Number of operands the op consumes.
     pub fn arity(self) -> usize {
         match self {
             BulkOp::Copy | BulkOp::Not => 1,
@@ -233,6 +247,7 @@ impl BulkOp {
         }
     }
 
+    /// Parse a (case-insensitive) op name as the CLI accepts it.
     pub fn parse(s: &str) -> Option<BulkOp> {
         Some(match s.to_ascii_lowercase().as_str() {
             "copy" => BulkOp::Copy,
@@ -251,6 +266,7 @@ impl BulkOp {
         })
     }
 
+    /// Canonical lowercase name (round-trips through [`BulkOp::parse`]).
     pub fn name(self) -> &'static str {
         match self {
             BulkOp::Copy => "copy",
@@ -291,6 +307,7 @@ impl BulkOp {
         }
     }
 
+    /// Every op, in Table 2 order (exhaustive-test convenience).
     pub const ALL: [BulkOp; 12] = [
         BulkOp::Copy,
         BulkOp::Not,

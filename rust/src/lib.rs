@@ -13,11 +13,12 @@
 //! * [`controller`] — instruction dispatch, enable signals, row
 //!   allocation, cycle/energy accounting.
 //! * [`coordinator`] — the serving layer: bulk-op requests sharded across
-//!   banks × sub-arrays with dynamic batching; exposes the [`Device`]
-//!   abstraction (one chip = one `DrimService`).
+//!   banks × sub-arrays with dynamic batching; exposes the
+//!   [`coordinator::Device`] abstraction (one chip = one `DrimService`).
 //! * [`cluster`] — the scale-out layer above the coordinator: N devices
 //!   (channels/ranks) behind one fleet scheduler with work stealing,
-//!   admission-control load shedding, and merged fleet metrics.
+//!   admission-control load shedding, operand-residency routing with an
+//!   inter-device copy-cost model, and merged fleet metrics.
 //! * [`analog`] — behavioural circuit models (margins, Monte-Carlo
 //!   variation) mirrored against the JAX/Pallas artifacts.
 //! * [`energy`] — per-command energy model (Fig. 9).

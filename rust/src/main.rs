@@ -69,9 +69,11 @@ COMMANDS:
                               (--devices > 1 routes through the fleet layer;
                                the fleet honors --queue-cap / --no-steal)
   cluster [--devices N] [--requests N] [--bits N] [--seed S] [--queue-cap N]
-          [--no-steal] [--sweep]
+          [--no-steal] [--sweep] [--locality]
                               multi-device scale-out workload + fleet
-                              metrics (--sweep ablates 1/2/4/8 devices)
+                              metrics (--sweep ablates 1/2/4/8 devices;
+                               --locality ablates resident vs carried
+                               operand placement and the copy traffic)
 ";
 
 fn cmd_isa(args: &Args) {
@@ -423,6 +425,10 @@ fn serve_fleet(args: &Args, per_device: ServiceConfig, devices: usize, n: usize,
 }
 
 fn cmd_cluster(args: &Args) {
+    if args.has("locality") {
+        cmd_cluster_locality(args);
+        return;
+    }
     let requests = args.usize("requests", 128);
     let bits = args.usize("bits", 262_144);
     let device_counts: Vec<usize> = if args.has("sweep") {
@@ -471,4 +477,63 @@ fn cmd_cluster(args: &Args) {
     if let Some(snap) = last_snapshot {
         println!("\nlast fleet in detail:\n{}", snap.report());
     }
+}
+
+/// `cluster --locality`: the same workload with operands (a) carried
+/// inline and spread round-robin vs (b) resident on their owning device
+/// and placement-routed, at several hit rates. Surfaces the copy traffic
+/// the residency layer models: copied bytes, DDR bus copy cycles, and the
+/// makespan including operand movement. The workload itself is
+/// `DrimCluster::pump_locality`, shared with benches/ablate_locality.rs.
+fn cmd_cluster_locality(args: &Args) {
+    let devices = args.usize("devices", 4);
+    let requests = args.usize("requests", 64);
+    let bits = args.usize("bits", 262_144);
+    let seed = args.u64("seed", 3);
+    println!(
+        "locality ablation: {requests} requests × 2 × {bits} bits over \
+         {devices} devices (steal off)\n"
+    );
+    let mut t = Table::new(&[
+        "placement",
+        "hits",
+        "misses",
+        "copied KB",
+        "copy cycles",
+        "makespan (compute)",
+        "makespan (+copy)",
+    ]);
+    // policy: None → carried; Some(k) → resident with every k-th request
+    // a forced miss; Some(0) → no misses (pump_locality's convention)
+    for (label, policy) in [
+        ("carried (round-robin)", None),
+        ("resident 50%", Some(2usize)),
+        ("resident 80%", Some(5)),
+        ("resident 100%", Some(0)),
+    ] {
+        let cluster = DrimCluster::new(ClusterConfig {
+            admission: AdmissionConfig {
+                max_inflight_per_device: args.usize("queue-cap", 64),
+            },
+            steal: false,
+            ..ClusterConfig::uniform(devices, ServiceConfig::default())
+        });
+        cluster.pump_locality(requests, bits, policy, seed);
+        let snap = cluster.shutdown();
+        t.row(&[
+            label.to_string(),
+            format!("{}", snap.resident_hits),
+            format!("{}", snap.resident_misses),
+            format!("{:.1}", snap.copied_bytes as f64 / 1024.0),
+            format!("{}", snap.copy_cycles),
+            format!("{:.2} µs", snap.merged.sim_ns as f64 / 1e3),
+            format!("{:.2} µs", snap.makespan_with_copy_ns() as f64 / 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n→ resident placement eliminates operand movement; carried \
+         payloads pay the host→device stream on every request, and \
+         misses pay the inter-device copy (2× on a shared channel)"
+    );
 }

@@ -10,6 +10,7 @@
 //!
 //! Throughput metric: **result bits per second** (the paper's "Operations"
 //! normalized to bit-operations) on `2^27..2^29`-bit input vectors.
+#![warn(missing_docs)]
 
 pub mod pim;
 pub mod vonneumann;
@@ -21,6 +22,7 @@ pub const FIG8_OPS: [BulkOp; 3] = [BulkOp::Not, BulkOp::Xnor2, BulkOp::Add];
 
 /// One evaluated platform.
 pub trait Platform {
+    /// Display name, as printed in Fig. 8/9.
     fn name(&self) -> &'static str;
 
     /// Sustained throughput in result-bits/s for vectors of `vec_bits`.

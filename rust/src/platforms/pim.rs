@@ -47,6 +47,8 @@ pub struct SeqCost {
     pub nor_cycles: usize,
 }
 
+/// A processing-in-DRAM design characterized by its per-op command
+/// sequence and its array-level parallelism (see the module docs).
 pub struct PimPlatform {
     name: &'static str,
     geometry: DramGeometry,
@@ -81,6 +83,8 @@ impl PimPlatform {
                     * (cols as f64 / crate::energy::model::REF_ROW_BITS))
     }
 
+    /// Rows processed per wave (banks × simultaneously-computing
+    /// sub-arrays).
     pub fn parallel_rows(&self) -> f64 {
         (self.geometry.banks * self.geometry.active_subarrays) as f64
     }
@@ -209,6 +213,7 @@ fn drisa_3t1c_seq(op: BulkOp) -> SeqCost {
 // constructors
 // ---------------------------------------------------------------------------
 
+/// DRIM on the default commodity-DIMM geometry (the paper's DRIM-R).
 pub fn drim_r() -> PimPlatform {
     drim_r_with_geometry(DramGeometry::default())
 }
@@ -226,6 +231,7 @@ pub fn drim_r_with_geometry(geometry: DramGeometry) -> PimPlatform {
     }
 }
 
+/// DRIM on the 3D-stacked organization (the paper's DRIM-S).
 pub fn drim_s() -> PimPlatform {
     PimPlatform {
         name: "DRIM-S",
@@ -238,6 +244,7 @@ pub fn drim_s() -> PimPlatform {
     }
 }
 
+/// Ambit: TRA + DCC on unmodified sense amplifiers.
 pub fn ambit() -> PimPlatform {
     PimPlatform {
         name: "Ambit",
@@ -250,6 +257,7 @@ pub fn ambit() -> PimPlatform {
     }
 }
 
+/// DRISA-1T1C: add-on XNOR gate + latch per sense amplifier.
 pub fn drisa_1t1c() -> PimPlatform {
     PimPlatform {
         name: "DRISA-1T1C",
@@ -265,6 +273,7 @@ pub fn drisa_1t1c() -> PimPlatform {
     }
 }
 
+/// DRISA-3T1C: native dual-row NOR on the read bit-line.
 pub fn drisa_3t1c() -> PimPlatform {
     PimPlatform {
         name: "DRISA-3T1C",

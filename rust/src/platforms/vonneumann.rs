@@ -41,8 +41,11 @@ fn roofline(bw_bytes: f64, eff: f64, op: BulkOp, vec_bits: u64, setup_ns: f64) -
 
 // ---------------------------------------------------------------------------
 
+/// Core-i7-class CPU baseline: a two-channel DDR4 bandwidth roofline.
 pub struct Cpu {
+    /// peak DRAM bandwidth, bytes/s
     pub peak_bw: f64,
+    /// sustained streaming efficiency (0..1)
     pub eff: f64,
 }
 
@@ -72,8 +75,11 @@ impl Platform for Cpu {
     }
 }
 
+/// GTX-1080Ti-class GPU baseline: a GDDR5X bandwidth roofline.
 pub struct Gpu {
+    /// peak DRAM bandwidth, bytes/s
     pub peak_bw: f64,
+    /// sustained efficiency on this access pattern (0..1)
     pub eff: f64,
 }
 
@@ -100,9 +106,13 @@ impl Platform for Gpu {
     }
 }
 
+/// HMC 2.0 baseline: near-memory atomics, result-stream bound.
 pub struct Hmc {
+    /// number of vaults
     pub vaults: usize,
+    /// per-vault bandwidth, bytes/s
     pub vault_bw: f64,
+    /// sustained efficiency (0..1)
     pub eff: f64,
 }
 

@@ -1,0 +1,239 @@
+//! Residency-layer integration: placement-aware routing over the fleet.
+//!
+//! Covers the acceptance gates for data-resident routing:
+//!   * a request whose operands are resident on the executing device is a
+//!     *resident hit*: zero copied bytes, zero copy cycles, makespan
+//!     unchanged by copy accounting
+//!   * a request forced onto a non-owning device is charged exactly what
+//!     the copy-cost model predicts (bytes, bus cycles, per-device ns)
+//!   * carried (inline) operands are charged the host→device stream
+//!   * routing prefers the device owning the most operand bits
+//!   * unknown region handles are refused without losing tickets
+
+mod common;
+
+use common::{bits_of, host_op};
+use drim::cluster::{
+    ClusterConfig, ClusterRequest, DeviceId, DrimCluster, OperandRef, Placement,
+    RegionId, RouteError,
+};
+use drim::coordinator::{BulkRequest, Payload};
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+fn no_steal(n: usize) -> DrimCluster {
+    DrimCluster::new(ClusterConfig {
+        steal: false,
+        ..ClusterConfig::tiny(n)
+    })
+}
+
+/// Resident-hit requests execute on the owner and incur zero copy cost.
+#[test]
+fn resident_hits_are_zero_copy() {
+    let cluster = no_steal(2);
+    let mut rng = Rng::new(51);
+    let mut inputs = Vec::new();
+    let mut pending = Vec::new();
+    for i in 0..6 {
+        let owner = DeviceId(i % 2);
+        let a = BitRow::random(2048, &mut rng);
+        let b = BitRow::random(2048, &mut rng);
+        let ra = cluster.register_resident(owner, Payload::Bits(a.clone()));
+        let rb = cluster.register_resident(owner, Payload::Bits(b.clone()));
+        let req = ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
+        assert_eq!(cluster.route(&req).unwrap(), Some(owner));
+        pending.push((owner, cluster.submit_routed_blocking(req).unwrap()));
+        inputs.push((a, b));
+    }
+    for (i, (owner, rx)) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("routed response");
+        assert_eq!(resp.home, owner, "request {i} queued on its owner");
+        assert_eq!(resp.device, owner, "request {i} executed on its owner");
+        let (a, b) = &inputs[i];
+        assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Xnor2, &[a, b]));
+    }
+    let snap = cluster.shutdown();
+    assert_eq!(snap.resident_hits, 6);
+    assert_eq!(snap.resident_misses, 0);
+    assert_eq!(snap.copied_bytes, 0, "resident hits must move no bytes");
+    assert_eq!(snap.copy_cycles, 0, "resident hits must burn no bus cycles");
+    assert_eq!(
+        snap.makespan_with_copy_ns(),
+        snap.merged.sim_ns,
+        "zero copy time may not stretch the makespan"
+    );
+}
+
+/// A request pinned away from its operands is charged exactly what the
+/// fleet's own copy-cost model predicts.
+#[test]
+fn forced_miss_is_charged_exactly() {
+    let cluster = no_steal(2); // two ranks, one channel → same-channel copy
+    let mut rng = Rng::new(52);
+    let bits = 2048u64;
+    let a = BitRow::random(bits as usize, &mut rng);
+    let b = BitRow::random(bits as usize, &mut rng);
+    let ra = cluster.register_resident(DeviceId(0), Payload::Bits(a.clone()));
+    let rb = cluster.register_resident(DeviceId(0), Payload::Bits(b.clone()));
+    let req = ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
+
+    // what the model says executing on dev1 should cost: both operands
+    // stream from dev0, merged into one per-source transfer
+    let mut placement = Placement::default();
+    placement.add_resident(DeviceId(0), 2 * bits);
+    let want = cluster.locality().charge(&placement, DeviceId(1));
+    assert!(want.bytes > 0 && want.cycles > 0);
+
+    let resp = cluster
+        .submit_routed_blocking_to(DeviceId(1), req)
+        .unwrap()
+        .recv()
+        .expect("pinned routed response");
+    assert_eq!(resp.device, DeviceId(1));
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Xnor2, &[&a, &b]));
+
+    let snap = cluster.shutdown();
+    assert_eq!(snap.resident_hits, 0);
+    assert_eq!(snap.resident_misses, 1);
+    assert_eq!(snap.copied_bytes, want.bytes, "bytes follow the model");
+    assert_eq!(snap.copy_cycles, want.cycles, "cycles follow the model");
+    // the copy time lands on the executing device, not the owner
+    assert_eq!(snap.copy_ns_per_device[0], 0);
+    assert_eq!(snap.copy_ns_per_device[1], want.ns.round() as u64);
+    assert_eq!(
+        snap.makespan_with_copy_ns(),
+        snap.merged.sim_ns + want.ns.round() as u64,
+        "the miss stretches the makespan by exactly the modeled copy time"
+    );
+}
+
+/// Carried (inline) operands pay the host→device stream wherever they run.
+#[test]
+fn carried_operands_pay_host_transfer() {
+    let cluster = no_steal(2);
+    let mut rng = Rng::new(53);
+    let a = BitRow::random(4096, &mut rng);
+    let b = BitRow::random(4096, &mut rng);
+    let bulk = BulkRequest::bitwise(BulkOp::Xor2, vec![a.clone(), b.clone()]);
+    let operand_bits = bulk.operand_bits() as u64;
+    let req = ClusterRequest::carried(bulk);
+
+    let want_ns = cluster
+        .locality()
+        .model
+        .host_to_device_ns(operand_bits);
+    let resp = cluster.run_routed(req).unwrap();
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Xor2, &[&a, &b]));
+
+    let snap = cluster.shutdown();
+    assert_eq!(snap.resident_misses, 1, "carried operands are never hits");
+    assert_eq!(snap.copied_bytes, operand_bits / 8);
+    assert_eq!(
+        snap.copy_ns_per_device[resp.device.0],
+        want_ns.round() as u64
+    );
+}
+
+/// Mixed operands: the resident one pulls the request to its owner, and
+/// only the inline one is charged.
+#[test]
+fn mixed_operands_route_to_owner_and_charge_only_inline() {
+    let cluster = no_steal(2);
+    let mut rng = Rng::new(54);
+    let a = BitRow::random(2048, &mut rng);
+    let b = BitRow::random(2048, &mut rng);
+    let ra = cluster.register_resident(DeviceId(1), Payload::Bits(a.clone()));
+    let req = ClusterRequest::new(
+        BulkOp::And2,
+        vec![
+            OperandRef::Resident(ra),
+            OperandRef::Inline(Payload::Bits(b.clone())),
+        ],
+    );
+    assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(1)));
+    let want_ns = cluster.locality().model.host_to_device_ns(2048);
+
+    let resp = cluster.run_routed(req).unwrap();
+    assert_eq!(resp.device, DeviceId(1));
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::And2, &[&a, &b]));
+
+    let snap = cluster.shutdown();
+    assert_eq!(snap.copied_bytes, 2048 / 8, "only the inline operand moves");
+    assert_eq!(snap.copy_ns_per_device[1], want_ns.round() as u64);
+    assert_eq!(snap.copy_ns_per_device[0], 0);
+}
+
+/// Migrating a region re-homes future routed requests (and restores the
+/// zero-copy property on the new owner).
+#[test]
+fn migration_moves_the_preferred_executor() {
+    let cluster = no_steal(2);
+    let mut rng = Rng::new(55);
+    let a = BitRow::random(1024, &mut rng);
+    let ra = cluster.register_resident(DeviceId(0), Payload::Bits(a.clone()));
+    let req = ClusterRequest::resident(BulkOp::Not, vec![ra]);
+    assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(0)));
+    assert!(cluster.registry().migrate(ra, DeviceId(1)));
+    assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(1)));
+    let resp = cluster.run_routed(req).unwrap();
+    assert_eq!(resp.device, DeviceId(1));
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Not, &[&a]));
+    let snap = cluster.shutdown();
+    assert_eq!(snap.resident_hits, 1);
+    assert_eq!(snap.copied_bytes, 0);
+}
+
+/// Unknown handles are refused up front; no admission ticket leaks and the
+/// fleet keeps serving.
+#[test]
+fn unknown_region_refused_cleanly() {
+    let cluster = no_steal(2);
+    let bogus = ClusterRequest::resident(BulkOp::Not, vec![RegionId(999_999)]);
+    match cluster.try_submit_routed(bogus) {
+        Err(RouteError::UnknownRegion(r)) => assert_eq!(r, RegionId(999_999)),
+        other => panic!("expected UnknownRegion, got {other:?}"),
+    }
+    // the fleet is still fully operational afterwards
+    let mut rng = Rng::new(56);
+    let a = BitRow::random(512, &mut rng);
+    let resp = cluster.run(BulkRequest::bitwise(BulkOp::Not, vec![a.clone()]));
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Not, &[&a]));
+    let snap = cluster.shutdown();
+    assert_eq!(snap.admitted, 1, "only the valid request took a ticket");
+    assert_eq!(snap.completed, 1);
+}
+
+/// Majority-resident routing: with operands split across devices, the
+/// request runs where most of its bits already are, and only the minority
+/// share is charged.
+#[test]
+fn majority_owner_wins_the_route() {
+    let cluster = no_steal(2);
+    let mut rng = Rng::new(57);
+    let a = BitRow::random(2048, &mut rng);
+    let b = BitRow::random(2048, &mut rng);
+    let c = BitRow::random(2048, &mut rng);
+    // two operands on dev1, one on dev0 → dev1 owns the majority
+    let ra = cluster.register_resident(DeviceId(1), Payload::Bits(a.clone()));
+    let rb = cluster.register_resident(DeviceId(1), Payload::Bits(b.clone()));
+    let rc = cluster.register_resident(DeviceId(0), Payload::Bits(c.clone()));
+    let req = ClusterRequest::resident(BulkOp::Maj3, vec![ra, rb, rc]);
+    assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(1)));
+    let want_ns = cluster
+        .locality()
+        .model
+        .device_to_device_ns(2048, true); // tiny(2): both ranks share channel 0
+
+    let resp = cluster.run_routed(req).unwrap();
+    assert_eq!(resp.device, DeviceId(1));
+    assert_eq!(
+        *bits_of(&resp.inner.result),
+        host_op(BulkOp::Maj3, &[&a, &b, &c])
+    );
+    let snap = cluster.shutdown();
+    assert_eq!(snap.resident_misses, 1, "the minority operand had to move");
+    assert_eq!(snap.copied_bytes, 2048 / 8);
+    assert_eq!(snap.copy_ns_per_device[1], want_ns.round() as u64);
+}
