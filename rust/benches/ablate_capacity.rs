@@ -1,0 +1,203 @@
+//! Capacity ablation: per-device footprint enforcement, eviction, and
+//! cost-driven hot-region replication under a Zipf-skewed popularity
+//! workload (the shared driver is `DrimCluster::pump_capacity`, also
+//! behind `drim cluster --capacity`).
+//!
+//! Gates (the CI bench-gate step runs this binary):
+//!   (a) hot-region replication beats single-copy placement on makespan
+//!       including copy under skewed popularity — spreading the hot
+//!       region's replicas across channels outweighs the one-time stream;
+//!   (b) registration beyond capacity either evicts (LRU) or fails fast
+//!       (fail-fast policy) — footprint on every device stays within its
+//!       `DeviceCapacity`, and the fleet degrades gracefully (every
+//!       request still completes) as footprint approaches capacity.
+
+use drim::cluster::{
+    CapacityConfig, ClusterConfig, DeviceCapacity, DeviceId, DrimCluster,
+    EvictionPolicy, FleetSnapshot, ReplicationConfig, ReplicationPolicy,
+};
+use drim::coordinator::ServiceConfig;
+use drim::dram::geometry::DramGeometry;
+use drim::util::bench::section;
+use drim::util::stats::fmt_ns;
+use drim::util::table::Table;
+
+const DEVICES: usize = 4; // two DDR channels × two ranks
+const REGIONS: usize = 12;
+const REQUESTS: usize = 64;
+const BITS: usize = 1 << 16;
+const THETA: f64 = 1.5;
+const SEED: u64 = 0xCA9AC17;
+
+/// Bench-sized device (same geometry as ablate_devices/ablate_locality).
+fn bench_service() -> ServiceConfig {
+    ServiceConfig {
+        geometry: DramGeometry {
+            banks: 4,
+            subarrays_per_bank: 8,
+            cols: 1024,
+            active_subarrays: 4,
+        },
+        workers: 2,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Per-device share of the working set (REGIONS regions of BITS each,
+/// owners round-robin over DEVICES).
+fn share_bits() -> u64 {
+    (REGIONS / DEVICES * BITS) as u64
+}
+
+fn run(capacity: DeviceCapacity, policy: EvictionPolicy, replicate: bool) -> (FleetSnapshot, u64) {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        capacity: CapacityConfig { capacity, policy },
+        ..ClusterConfig::uniform(DEVICES, bench_service())
+    });
+    let rep = ReplicationPolicy::new(ReplicationConfig {
+        hot_uses: 3,
+        amortize_factor: 1.0,
+        ..ReplicationConfig::default()
+    });
+    let rebalance = replicate.then_some((&rep, 16));
+    let requeues = cluster.pump_capacity(REGIONS, REQUESTS, BITS, THETA, rebalance, SEED);
+    // gate (b): the footprint bound holds on every device, and the
+    // registry's own bookkeeping (which asserts footprint ≤ capacity)
+    // is internally consistent
+    for d in 0..DEVICES {
+        let resident = cluster.registry().resident_bits_on(DeviceId(d));
+        assert!(
+            resident <= capacity.resident_bits,
+            "dev{d} footprint {resident} exceeds capacity {}",
+            capacity.resident_bits
+        );
+    }
+    cluster.registry().check_invariants().expect("registry invariants");
+    (cluster.shutdown(), requeues)
+}
+
+fn main() {
+    section("capacity — footprint enforcement, eviction, hot-region replication");
+    println!(
+        "{REQUESTS} requests over {REGIONS} Zipf({THETA}) regions × {BITS} bits, \
+         {DEVICES} devices (per-device share {} KB, steal off)\n",
+        share_bits() / 8192
+    );
+    let share = share_bits();
+    let cases: &[(&str, &str, DeviceCapacity, EvictionPolicy, bool)] = &[
+        (
+            "unbounded",
+            "single-copy",
+            DeviceCapacity::unbounded(),
+            EvictionPolicy::FailFast,
+            false,
+        ),
+        (
+            "unbounded",
+            "replicate",
+            DeviceCapacity::unbounded(),
+            EvictionPolicy::FailFast,
+            true,
+        ),
+        (
+            "1.0x share",
+            "lru evict",
+            DeviceCapacity::of_bits(share),
+            EvictionPolicy::Lru,
+            false,
+        ),
+        (
+            "0.5x share",
+            "lru evict",
+            DeviceCapacity::of_bits(share / 2),
+            EvictionPolicy::Lru,
+            false,
+        ),
+        (
+            "0.8x share",
+            "fail fast",
+            DeviceCapacity::of_bits(share * 4 / 5),
+            EvictionPolicy::FailFast,
+            false,
+        ),
+    ];
+    let mut t = Table::new(&[
+        "capacity",
+        "policy",
+        "evictions",
+        "refusals",
+        "requeues",
+        "hits",
+        "misses",
+        "copied KB",
+        "makespan (+copy)",
+    ]);
+    let mut snaps = Vec::new();
+    for &(cap_label, policy_label, capacity, policy, replicate) in cases {
+        let (snap, requeues) = run(capacity, policy, replicate);
+        t.row(&[
+            cap_label.to_string(),
+            policy_label.to_string(),
+            format!("{}", snap.evictions),
+            format!("{}", snap.capacity_refusals),
+            format!("{requeues}"),
+            format!("{}", snap.resident_hits),
+            format!("{}", snap.resident_misses),
+            format!("{:.1}", snap.copied_bytes as f64 / 1024.0),
+            fmt_ns(snap.makespan_with_copy_ns() as f64),
+        ]);
+        snaps.push((snap, requeues));
+    }
+    t.print();
+
+    let (single, _) = &snaps[0];
+    let (replicated, _) = &snaps[1];
+    let (lru_full, _) = &snaps[2];
+    let (lru_half, lru_half_requeues) = &snaps[3];
+    let (fail_fast, _) = &snaps[4];
+
+    // --- gate (a): replication beats single-copy under skew -------------
+    assert!(replicated.replications >= 1, "the hot region must replicate");
+    assert!(
+        replicated.makespan_with_copy_ns() < single.makespan_with_copy_ns(),
+        "makespan incl copy: replicated {} vs single-copy {}",
+        replicated.makespan_with_copy_ns(),
+        single.makespan_with_copy_ns()
+    );
+    // the win comes from spreading load, not from dropping work
+    assert_eq!(single.completed as usize, REQUESTS);
+    assert_eq!(replicated.completed as usize, REQUESTS);
+    assert_eq!(single.evictions, 0, "unbounded fleets never evict");
+
+    // --- gate (b): enforcement + graceful degradation -------------------
+    // every bounded run completed the full workload (no collapse) —
+    // the per-device footprint bound itself is asserted inside run()
+    for (snap, _) in &snaps {
+        assert_eq!(snap.completed as usize, REQUESTS, "no request may be lost");
+    }
+    // 3 regions per device against a 1-region (0.5x) budget must evict
+    // and requeue the evicted regions' traffic
+    assert!(lru_half.evictions > 0, "0.5x share must evict");
+    assert!(*lru_half_requeues > 0, "evicted hot regions must requeue");
+    // 1.0x share fits the whole working set: steady state, no thrash
+    assert_eq!(lru_full.evictions, 0, "1.0x share fits without eviction");
+    // fail-fast refuses instead of evicting; refused slots degrade to
+    // carried payloads (which count as misses, not failures)
+    assert!(fail_fast.capacity_refusals > 0, "fail-fast must refuse");
+    assert_eq!(fail_fast.evictions, 0, "fail-fast never evicts");
+    assert!(fail_fast.resident_misses > 0, "refused slots run carried");
+
+    println!(
+        "\n→ replication: makespan {} vs single-copy {} ({} replicas, {} KB streamed); \
+         0.5x capacity: {} evictions, {} requeues, all {} requests served",
+        fmt_ns(replicated.makespan_with_copy_ns() as f64),
+        fmt_ns(single.makespan_with_copy_ns() as f64),
+        replicated.replications,
+        replicated.copied_bytes as f64 / 1024.0,
+        lru_half.evictions,
+        lru_half_requeues,
+        REQUESTS,
+    );
+    println!("\nablate_capacity bench OK");
+}

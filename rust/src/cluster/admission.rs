@@ -157,11 +157,52 @@ impl AdmissionController {
     /// rest of the fleet can absorb (at a copy cost the worker will
     /// charge).
     pub fn try_admit_prefer(&self, device: DeviceId) -> Result<DeviceId, AdmissionError> {
-        if self.claim(device.0) {
+        self.try_admit_prefer_any(&[device])
+    }
+
+    /// Claim a slot on the least-loaded of `candidates` (ties toward the
+    /// lowest id), or `None` when every candidate is saturated.
+    fn claim_least_loaded(&self, candidates: &[DeviceId]) -> Option<DeviceId> {
+        let mut order: Vec<DeviceId> = candidates.to_vec();
+        order.sort_by_key(|d| (self.inflight(*d), d.0));
+        order.into_iter().find(|d| self.claim(d.0))
+    }
+
+    /// Admit preferring the least-loaded of several equally-cheap
+    /// executors — the routed path when a request's operands are
+    /// replicated, so any replica holder serves at zero copy cost.
+    /// Falls back to any unsaturated device when every candidate is
+    /// full; sheds only when the whole fleet is.
+    pub fn try_admit_prefer_any(
+        &self,
+        candidates: &[DeviceId],
+    ) -> Result<DeviceId, AdmissionError> {
+        if let Some(d) = self.claim_least_loaded(candidates) {
             self.admitted.fetch_add(1, Ordering::Relaxed);
-            return Ok(device);
+            return Ok(d);
         }
         self.try_admit()
+    }
+
+    /// Blocking analogue of [`Self::try_admit_prefer_any`]: park until
+    /// one of `candidates` frees a slot (never falls back to a
+    /// non-candidate — the caller picked them because executing anywhere
+    /// else pays a copy).
+    pub fn admit_wait_any(&self, candidates: &[DeviceId]) -> DeviceId {
+        assert!(!candidates.is_empty(), "admit_wait_any needs a candidate");
+        if let Some(d) = self.claim_least_loaded(candidates) {
+            self.admitted.fetch_add(1, Ordering::Relaxed);
+            return d;
+        }
+        self.waited.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.gate.lock().unwrap();
+        loop {
+            if let Some(d) = self.claim_least_loaded(candidates) {
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                return d;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
     }
 
     /// Like [`Self::try_admit`] but pinned to one device (data-residency
@@ -376,6 +417,52 @@ mod tests {
         a.complete(DeviceId(1));
         assert_eq!(waiter.join().unwrap(), DeviceId(1));
         assert_eq!(a.waited.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn prefer_any_picks_least_loaded_candidate() {
+        let a = AdmissionController::new(
+            3,
+            AdmissionConfig {
+                max_inflight_per_device: 2,
+            },
+        );
+        // load dev0 so the replica set {0, 2} resolves to dev2
+        assert!(a.try_admit_to(DeviceId(0)).is_ok());
+        let cands = [DeviceId(0), DeviceId(2)];
+        assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(2));
+        // now both carry 1 → tie breaks toward the lowest id
+        assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(0));
+        // candidates full → falls back to the rest of the fleet
+        assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(2));
+        assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(1));
+        assert_eq!(a.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn admit_wait_any_parks_until_a_candidate_frees() {
+        let a = std::sync::Arc::new(AdmissionController::new(
+            3,
+            AdmissionConfig {
+                max_inflight_per_device: 1,
+            },
+        ));
+        assert_eq!(a.admit_wait_any(&[DeviceId(1), DeviceId(2)]), DeviceId(1));
+        assert_eq!(a.admit_wait_any(&[DeviceId(1), DeviceId(2)]), DeviceId(2));
+        let waiter = {
+            let a = std::sync::Arc::clone(&a);
+            std::thread::spawn(move || a.admit_wait_any(&[DeviceId(1), DeviceId(2)]))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        // freeing a non-candidate must not release the waiter
+        assert_eq!(a.try_admit_to(DeviceId(0)).unwrap(), DeviceId(0));
+        a.complete(DeviceId(0));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(a.inflight(DeviceId(1)), 1, "waiter still parked");
+        a.complete(DeviceId(2));
+        assert_eq!(waiter.join().unwrap(), DeviceId(2));
+        assert_eq!(a.waited.load(Ordering::Relaxed), 1);
+        assert_eq!(a.shed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -17,13 +17,30 @@
 //! the busiest device including that movement — the quantity the locality
 //! ablation compares against pure compute makespan.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::MetricsSnapshot;
 use crate::util::stats::{fmt_ns, fmt_rate, Summary};
 
-use super::residency::CopyCharge;
+use super::residency::{CopyCharge, RegionId};
+
+/// One region's routed traffic within the current observation window —
+/// the signal the replication policy plans from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionUse {
+    /// the region referenced by routed requests
+    pub region: RegionId,
+    /// routed requests that referenced the region in the window
+    pub uses: u64,
+    /// uses that executed on a device holding no replica (copy-charged).
+    /// The default policy amortizes against the *worst-case* miss stream
+    /// rather than this observed count (spreading hot hit-traffic is as
+    /// valuable as cutting misses); surfaced for observability and for
+    /// miss-driven custom policies.
+    pub misses: u64,
+}
 
 /// Merge per-device snapshots into one fleet view (see module docs for
 /// which fields sum vs max).
@@ -76,9 +93,15 @@ pub struct FleetMetrics {
     pub resident_hits: AtomicU64,
     /// placement-routed requests charged a non-zero copy cost
     pub resident_misses: AtomicU64,
+    /// replicas created by the replication policy
+    pub replications: AtomicU64,
+    /// migrations performed by the replication policy
+    pub migrations: AtomicU64,
     /// simulated copy nanoseconds charged to each device (index = DeviceId)
     copy_ns: Vec<AtomicU64>,
     queue_wait_ns: Mutex<Summary>,
+    /// per-region `(uses, misses)` since the window was last drained
+    region_window: Mutex<HashMap<u64, (u64, u64)>>,
 }
 
 impl FleetMetrics {
@@ -91,8 +114,11 @@ impl FleetMetrics {
             copy_cycles: AtomicU64::new(0),
             resident_hits: AtomicU64::new(0),
             resident_misses: AtomicU64::new(0),
+            replications: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
             copy_ns: (0..devices).map(|_| AtomicU64::new(0)).collect(),
             queue_wait_ns: Mutex::new(Summary::default()),
+            region_window: Mutex::new(HashMap::new()),
         }
     }
 
@@ -115,6 +141,48 @@ impl FleetMetrics {
             self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
             self.copy_ns[device].fetch_add(charge.ns.round() as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Account a policy-driven placement stream (replication/migration
+    /// copy) against the destination device: copy traffic, but *not* a
+    /// resident miss — placement copies are investments, not penalties,
+    /// and must not dilute the hit-rate signal.
+    pub fn record_placement_copy(&self, device: usize, charge: &CopyCharge) {
+        if charge.is_free() {
+            return;
+        }
+        self.copied_bytes.fetch_add(charge.bytes, Ordering::Relaxed);
+        self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
+        self.copy_ns[device].fetch_add(charge.ns.round() as u64, Ordering::Relaxed);
+    }
+
+    /// Count one routed use of `region` by its executing device (`hit` =
+    /// a replica was already there). Feeds the replication policy's
+    /// observation window.
+    pub fn record_region_use(&self, region: RegionId, hit: bool) {
+        let mut w = self.region_window.lock().unwrap();
+        let e = w.entry(region.0).or_insert((0, 0));
+        e.0 += 1;
+        if !hit {
+            e.1 += 1;
+        }
+    }
+
+    /// Drain the observation window: per-region traffic since the last
+    /// call, hottest first (ties toward the lowest region id, so policy
+    /// decisions are deterministic).
+    pub fn take_region_window(&self) -> Vec<RegionUse> {
+        let mut w = self.region_window.lock().unwrap();
+        let mut out: Vec<RegionUse> = w
+            .drain()
+            .map(|(r, (uses, misses))| RegionUse {
+                region: RegionId(r),
+                uses,
+                misses,
+            })
+            .collect();
+        out.sort_by(|a, b| b.uses.cmp(&a.uses).then(a.region.cmp(&b.region)));
+        out
     }
 
     /// Simulated copy nanoseconds charged per device so far.
@@ -154,6 +222,14 @@ pub struct FleetSnapshot {
     pub resident_hits: u64,
     /// placement-routed requests charged a non-zero copy cost
     pub resident_misses: u64,
+    /// replica evictions performed by the registry's capacity policy
+    pub evictions: u64,
+    /// registrations/replications/migrations refused by capacity limits
+    pub capacity_refusals: u64,
+    /// replicas created by the replication policy
+    pub replications: u64,
+    /// migrations performed by the replication policy
+    pub migrations: u64,
     /// simulated copy nanoseconds charged per device (index = DeviceId)
     pub copy_ns_per_device: Vec<u64>,
     /// host-side wait between admission and a worker picking the task up
@@ -188,7 +264,9 @@ impl FleetSnapshot {
             "fleet: {} devices  admitted: {}  shed: {}  waited: {}  \
              completed: {}  steals: {}  mean queue wait: {}\n\
              copy traffic: {} B  ({} bus cycles)  resident hits: {}  \
-             misses: {}  makespan incl copy: {}\n",
+             misses: {}  makespan incl copy: {}\n\
+             residency: evictions: {}  refusals: {}  replications: {}  \
+             migrations: {}\n",
             self.devices(),
             self.admitted,
             self.shed,
@@ -201,6 +279,10 @@ impl FleetSnapshot {
             self.resident_hits,
             self.resident_misses,
             fmt_ns(self.makespan_with_copy_ns() as f64),
+            self.evictions,
+            self.capacity_refusals,
+            self.replications,
+            self.migrations,
         );
         for (i, d) in self.per_device.iter().enumerate() {
             s.push_str(&format!(
@@ -302,6 +384,10 @@ mod tests {
             copy_cycles: 8,
             resident_hits: 4,
             resident_misses: 1,
+            evictions: 3,
+            capacity_refusals: 1,
+            replications: 2,
+            migrations: 1,
             copy_ns_per_device: vec![30],
             mean_queue_wait_ns: 1000.0,
         };
@@ -309,6 +395,8 @@ mod tests {
         assert!(r.contains("shed: 2"), "{r}");
         assert!(r.contains("dev0"), "{r}");
         assert!(r.contains("resident hits: 4"), "{r}");
+        assert!(r.contains("evictions: 3"), "{r}");
+        assert!(r.contains("replications: 2"), "{r}");
         // makespan incl copy = sim 10 + copy 30
         assert_eq!(snapshot.makespan_with_copy_ns(), 40);
     }
@@ -345,5 +433,59 @@ mod tests {
         assert_eq!(f.copied_bytes.load(Ordering::Relaxed), 384);
         assert_eq!(f.copy_cycles.load(Ordering::Relaxed), 48);
         assert_eq!(f.copy_ns_per_device(), vec![0, 45]);
+    }
+
+    #[test]
+    fn placement_copies_count_as_traffic_not_misses() {
+        let f = FleetMetrics::new(2);
+        f.record_placement_copy(
+            1,
+            &CopyCharge {
+                bytes: 256,
+                ns: 15.0,
+                cycles: 16,
+            },
+        );
+        // a free charge (already-resident target) records nothing
+        f.record_placement_copy(0, &CopyCharge::free());
+        assert_eq!(f.copied_bytes.load(Ordering::Relaxed), 256);
+        assert_eq!(f.copy_cycles.load(Ordering::Relaxed), 16);
+        assert_eq!(f.copy_ns_per_device(), vec![0, 15]);
+        assert_eq!(f.resident_hits.load(Ordering::Relaxed), 0);
+        assert_eq!(f.resident_misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn region_window_accumulates_and_drains_hottest_first() {
+        let f = FleetMetrics::new(1);
+        assert!(f.take_region_window().is_empty());
+        f.record_region_use(RegionId(7), true);
+        f.record_region_use(RegionId(7), false);
+        f.record_region_use(RegionId(3), true);
+        f.record_region_use(RegionId(9), true);
+        f.record_region_use(RegionId(9), true);
+        let w = f.take_region_window();
+        assert_eq!(
+            w,
+            vec![
+                RegionUse {
+                    region: RegionId(7),
+                    uses: 2,
+                    misses: 1
+                },
+                RegionUse {
+                    region: RegionId(9),
+                    uses: 2,
+                    misses: 0
+                },
+                RegionUse {
+                    region: RegionId(3),
+                    uses: 1,
+                    misses: 0
+                },
+            ]
+        );
+        // draining resets the window
+        assert!(f.take_region_window().is_empty());
     }
 }

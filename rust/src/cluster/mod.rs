@@ -18,19 +18,23 @@
 //!   shedding: when every queue is full the fleet says so instead of
 //!   letting latency grow without bound.
 //! * [`residency`] — operand residency and placement-aware routing: a
-//!   registry mapping operand regions to owning devices, requests that
-//!   reference operands by resident handle instead of carrying them, and
-//!   an inter-device copy-cost model (derived from the DDR burst/channel
-//!   timing) charged whenever operands must move to the executor.
+//!   registry mapping operand regions to the devices holding replicas,
+//!   requests that reference operands by resident handle instead of
+//!   carrying them, an inter-device copy-cost model (derived from the DDR
+//!   burst/channel timing) charged whenever operands must move to the
+//!   executor, per-device capacity enforcement with pluggable eviction
+//!   (LRU / cost-aware / fail-fast), and a cost-driven replication/
+//!   migration policy that spreads hot regions across channels.
 //! * [`metrics`]   — fleet aggregation: merge per-device
 //!   [`crate::coordinator::MetricsSnapshot`]s (counters sum, simulated
 //!   makespan is the busiest device) plus cluster-only counters (shed,
 //!   steals, queue wait, copied bytes / copy cycles).
 //!
 //! [`DrimCluster`] is the facade gluing these together; `drim serve
-//! --devices N`, `drim cluster` (and its `--locality` sweep),
-//! examples/e2e_cluster.rs, benches/ablate_devices.rs and
-//! benches/ablate_locality.rs all sit on it.
+//! --devices N`, `drim cluster` (and its `--locality` and `--capacity`
+//! sweeps), examples/e2e_cluster.rs, benches/ablate_devices.rs,
+//! benches/ablate_locality.rs and benches/ablate_capacity.rs all sit on
+//! it.
 
 pub mod admission;
 pub mod metrics;
@@ -40,14 +44,18 @@ pub mod topology;
 pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
-pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot};
+pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot, RegionUse};
 pub use residency::{
-    ClusterRequest, CopyCharge, CopyCostModel, LocalityModel, OperandRef,
-    Placement, RegionId, ResidencyRegistry, RouteError,
+    CapacityConfig, CapacityError, ClusterRequest, CopyCharge, CopyCostModel,
+    EvictOutcome, EvictionPolicy, LocalityModel, OperandRef, Placement,
+    PlacementAction, RegionId, ReplicationConfig, ReplicationPolicy,
+    ResidencyRegistry, ResidentSpan, RouteError,
 };
 pub use scheduler::{Scheduler, ShardState};
 pub use topology::{DeviceDesc, DeviceId, Topology};
 pub use worker::{ClusterResponse, ClusterTask};
+
+pub use crate::dram::geometry::DeviceCapacity;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -61,13 +69,17 @@ use crate::coordinator::{
 use crate::dram::timing::TimingParams;
 use crate::isa::program::BulkOp;
 use crate::util::bitrow::BitRow;
-use crate::util::rng::Rng;
+use crate::util::rng::{zipf_cdf, Rng};
 
 /// Fleet construction knobs.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     pub topology: Topology,
     pub admission: AdmissionConfig,
+    /// Per-device residency capacity and the eviction policy applied
+    /// when a registration does not fit (unbounded + fail-fast by
+    /// default, the pre-capacity behaviour).
+    pub capacity: CapacityConfig,
     /// Allow idle workers to drain other devices' queues. On by default;
     /// the scaling ablation turns it off to measure pure sharding.
     pub steal: bool,
@@ -79,6 +91,7 @@ impl ClusterConfig {
         ClusterConfig {
             topology: Topology::uniform(n, service),
             admission: AdmissionConfig::default(),
+            capacity: CapacityConfig::default(),
             steal: true,
         }
     }
@@ -131,7 +144,11 @@ impl DrimCluster {
         let sched = Arc::new(Scheduler::new(n));
         let admission = Arc::new(AdmissionController::new(n, cfg.admission));
         let fleet = Arc::new(FleetMetrics::new(n));
-        let registry = Arc::new(ResidencyRegistry::for_fleet(n));
+        let registry = Arc::new(ResidencyRegistry::with_capacity(
+            n,
+            cfg.capacity,
+            CopyCostModel::new(TimingParams::default()),
+        ));
         let locality = Arc::new(LocalityModel::from_topology(
             &cfg.topology,
             TimingParams::default(),
@@ -193,9 +210,21 @@ impl DrimCluster {
 
     /// Register a payload as resident on `device`; the returned handle can
     /// be used in [`ClusterRequest`] operands from then on. Panics if
-    /// `device` is outside the fleet (the registry is fleet-bounded).
+    /// `device` is outside the fleet (the registry is fleet-bounded) or
+    /// if a capacity-bounded fleet refuses the registration — capacity-
+    /// aware callers use [`Self::try_register_resident`].
     pub fn register_resident(&self, device: DeviceId, payload: Payload) -> RegionId {
         self.registry.register(device, payload)
+    }
+
+    /// Capacity-checked registration: fits, evicts under the fleet's
+    /// [`EvictionPolicy`], or fails fast with the [`CapacityError`].
+    pub fn try_register_resident(
+        &self,
+        device: DeviceId,
+        payload: Payload,
+    ) -> Result<RegionId, CapacityError> {
+        self.registry.try_register(device, payload)
     }
 
     fn enqueue(
@@ -281,18 +310,21 @@ impl DrimCluster {
     }
 
     /// Placement-aware admit-or-shed submission: resident operands pull
-    /// the request toward their owning device (falling back to any
-    /// unsaturated device when the owner is full — the worker then charges
-    /// the copy), and the executing worker records the copy cost in the
-    /// fleet metrics.
+    /// the request toward the devices holding their replicas — the
+    /// least-loaded replica holder wins, so replicated hot regions spread
+    /// over their copies (falling back to any unsaturated device when
+    /// every holder is full — the worker then charges the copy), and the
+    /// executing worker records the copy cost in the fleet metrics.
     pub fn try_submit_routed(
         &self,
         req: ClusterRequest,
     ) -> Result<Receiver<ClusterResponse>, RouteError> {
         let placement = self.registry.placement_of(&req)?;
-        let home = match placement.preferred() {
-            Some(d) => self.admission.try_admit_prefer(d)?,
-            None => self.admission.try_admit()?,
+        let candidates = placement.candidates();
+        let home = if candidates.is_empty() {
+            self.admission.try_admit()?
+        } else {
+            self.admission.try_admit_prefer_any(&candidates)?
         };
         let (bulk, placement) = self.resolve_admitted(home, &req)?;
         Ok(self.enqueue(home, bulk, Some(placement)))
@@ -312,17 +344,19 @@ impl DrimCluster {
         Ok(self.enqueue(home, bulk, Some(placement)))
     }
 
-    /// Placement-aware blocking submission: parks on the preferred owner's
-    /// admission (or anywhere, for all-inline requests) instead of
-    /// shedding.
+    /// Placement-aware blocking submission: parks on the replica holders'
+    /// admission (least-loaded holder wins; or anywhere, for all-inline
+    /// requests) instead of shedding.
     pub fn submit_routed_blocking(
         &self,
         req: ClusterRequest,
     ) -> Result<Receiver<ClusterResponse>, RouteError> {
         let placement = self.registry.placement_of(&req)?;
-        let home = match placement.preferred() {
-            Some(d) => self.admission.admit_wait_to(d),
-            None => self.admission.admit_wait(),
+        let candidates = placement.candidates();
+        let home = if candidates.is_empty() {
+            self.admission.admit_wait()
+        } else {
+            self.admission.admit_wait_any(&candidates)
         };
         let (bulk, placement) = self.resolve_admitted(home, &req)?;
         Ok(self.enqueue(home, bulk, Some(placement)))
@@ -404,6 +438,155 @@ impl DrimCluster {
         }
     }
 
+    /// Apply one round of the replication/migration `policy`: drain the
+    /// per-region traffic window, plan placement actions against the
+    /// current footprints and queue depths, and execute them through the
+    /// registry — charging every replica/migration stream to the
+    /// destination device at the modeled copy cost. Returns the actions
+    /// taken (call sites sweep this periodically; the fleet never
+    /// rebalances behind the caller's back).
+    pub fn rebalance(&self, policy: &ReplicationPolicy) -> Vec<PlacementAction> {
+        let window = self.fleet.take_region_window();
+        let depths = self.sched.depths();
+        let actions = policy.plan(&window, &self.registry, &self.locality, &depths);
+        for a in &actions {
+            match *a {
+                PlacementAction::Replicate { region, to } => {
+                    let (Some(sources), Some(bits)) =
+                        (self.registry.replicas(region), self.registry.bits(region))
+                    else {
+                        continue;
+                    };
+                    let charge = self.locality.cheapest_copy(bits as u64, &sources, to);
+                    if self.registry.replicate(region, to) == Ok(true) {
+                        self.fleet.record_placement_copy(to.0, &charge);
+                        self.fleet.replications.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                PlacementAction::Migrate { region, to } => {
+                    let (Some(sources), Some(bits)) =
+                        (self.registry.replicas(region), self.registry.bits(region))
+                    else {
+                        continue;
+                    };
+                    let charge = self.locality.cheapest_copy(bits as u64, &sources, to);
+                    if self.registry.migrate(region, to) == Ok(true) {
+                        self.fleet.record_placement_copy(to.0, &charge);
+                        self.fleet.migrations.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        actions
+    }
+
+    /// Drive the shared capacity/replication workload: `regions` resident
+    /// operand rows registered round-robin across the fleet, then
+    /// `requests` bulk NOT requests sampling regions by a Zipf(`theta`)
+    /// popularity law (rank 0 hottest), placement-routed and blocking.
+    /// With `rebalance = Some((policy, every))` the fleet re-plans
+    /// placement after every `every` completed requests, so hot regions
+    /// replicate across channels mid-run.
+    ///
+    /// Capacity is enforced throughout: a registration beyond capacity
+    /// evicts under the fleet's policy or fails fast, in which case the
+    /// affected slot degrades to carried payloads. A request whose region
+    /// was evicted mid-flight observes the defined [`RouteError::Evicted`]
+    /// signal and is requeued — re-registered and resubmitted, falling
+    /// back to a carried payload after repeated evictions (degrade, don't
+    /// collapse). Returns the number of requeues.
+    ///
+    /// One definition shared by `drim cluster --capacity` and
+    /// benches/ablate_capacity.rs so the two ablations measure the same
+    /// workload and cannot drift.
+    pub fn pump_capacity(
+        &self,
+        regions: usize,
+        requests: usize,
+        bits: usize,
+        theta: f64,
+        rebalance: Option<(&ReplicationPolicy, usize)>,
+        seed: u64,
+    ) -> u64 {
+        assert!(regions > 0, "the Zipf workload needs at least one region");
+        let devices = self.devices();
+        let mut rng = Rng::new(seed);
+        let mut values: Vec<BitRow> = Vec::with_capacity(regions);
+        let mut slots: Vec<Option<RegionId>> = Vec::with_capacity(regions);
+        for i in 0..regions {
+            let row = BitRow::random(bits, &mut rng);
+            let slot = self
+                .registry
+                .try_register(DeviceId(i % devices), Payload::Bits(row.clone()))
+                .ok();
+            values.push(row);
+            slots.push(slot);
+        }
+        let cdf = zipf_cdf(regions, theta);
+        let batch = match rebalance {
+            Some((_, every)) => every.max(1),
+            None => requests.max(1),
+        };
+        let mut requeues = 0u64;
+        let mut done = 0usize;
+        while done < requests {
+            let n = batch.min(requests - done);
+            let mut pending = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = rng.sample_cdf(&cdf);
+                let mut attempts = 0;
+                let rx = loop {
+                    match slots[rank] {
+                        Some(r) if attempts < 3 => {
+                            let req = ClusterRequest::resident(BulkOp::Not, vec![r]);
+                            match self.submit_routed_blocking(req) {
+                                Ok(rx) => break rx,
+                                Err(RouteError::Evicted(_) | RouteError::UnknownRegion(_)) => {
+                                    // the defined shed/requeue path:
+                                    // re-register and resubmit
+                                    requeues += 1;
+                                    attempts += 1;
+                                    slots[rank] = self
+                                        .registry
+                                        .try_register(
+                                            DeviceId(rank % devices),
+                                            Payload::Bits(values[rank].clone()),
+                                        )
+                                        .ok();
+                                }
+                                Err(RouteError::Admission(_)) => {
+                                    unreachable!("blocking routed submit never sheds")
+                                }
+                            }
+                        }
+                        // no resident slot (capacity refused it, or it
+                        // keeps getting evicted): degrade to carried
+                        _ => {
+                            let req = ClusterRequest::carried(BulkRequest::bitwise(
+                                BulkOp::Not,
+                                vec![values[rank].clone()],
+                            ));
+                            break self
+                                .submit_routed_blocking(req)
+                                .expect("carried requests always resolve");
+                        }
+                    }
+                };
+                pending.push(rx);
+            }
+            for rx in pending {
+                rx.recv().expect("response");
+            }
+            done += n;
+            if let Some((policy, _)) = rebalance {
+                if done < requests {
+                    self.rebalance(policy);
+                }
+            }
+        }
+        requeues
+    }
+
     pub fn snapshot(&self) -> FleetSnapshot {
         let per_device: Vec<_> =
             self.device_metrics.iter().map(|m| m.snapshot()).collect();
@@ -419,6 +602,10 @@ impl DrimCluster {
             copy_cycles: self.fleet.copy_cycles.load(Ordering::Relaxed),
             resident_hits: self.fleet.resident_hits.load(Ordering::Relaxed),
             resident_misses: self.fleet.resident_misses.load(Ordering::Relaxed),
+            evictions: self.registry.evictions(),
+            capacity_refusals: self.registry.capacity_refusals(),
+            replications: self.fleet.replications.load(Ordering::Relaxed),
+            migrations: self.fleet.migrations.load(Ordering::Relaxed),
             copy_ns_per_device: self.fleet.copy_ns_per_device(),
             mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
         }
@@ -546,5 +733,98 @@ mod tests {
         let snap = c.shutdown();
         assert_eq!(snap.admitted, 0, "no admission ticket may leak");
         assert_eq!(snap.shed, 0);
+    }
+
+    #[test]
+    fn any_replica_is_a_zero_copy_hit() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            ..ClusterConfig::tiny(4)
+        });
+        let mut rng = Rng::new(61);
+        let a = BitRow::random(1024, &mut rng);
+        let r = c.register_resident(DeviceId(0), Payload::Bits(a.clone()));
+        assert!(c.registry().replicate(r, DeviceId(2)).unwrap());
+        // pinned to the replica, not the primary: still free
+        let req = ClusterRequest::resident(BulkOp::Not, vec![r]);
+        let resp = c
+            .submit_routed_blocking_to(DeviceId(2), req)
+            .unwrap()
+            .recv()
+            .expect("routed response");
+        assert_eq!(resp.device, DeviceId(2));
+        let mut want = BitRow::zeros(1024);
+        want.not_from(&a);
+        match resp.inner.result {
+            Payload::Bits(got) => assert_eq!(got, want),
+            _ => panic!("wrong payload kind"),
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.resident_hits, 1, "a replica holder is a hit");
+        assert_eq!(snap.resident_misses, 0);
+        assert_eq!(snap.copied_bytes, 0);
+    }
+
+    #[test]
+    fn rebalance_replicates_hot_region_and_charges_the_stream() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            ..ClusterConfig::tiny(4)
+        });
+        let mut rng = Rng::new(62);
+        let a = BitRow::random(2048, &mut rng);
+        let r = c.register_resident(DeviceId(0), Payload::Bits(a));
+        // drive routed traffic so the window sees a hot region
+        for _ in 0..4 {
+            c.run_routed(ClusterRequest::resident(BulkOp::Not, vec![r]))
+                .unwrap();
+        }
+        let policy = ReplicationPolicy::new(ReplicationConfig {
+            hot_uses: 3,
+            amortize_factor: 1.0,
+            ..ReplicationConfig::default()
+        });
+        let actions = c.rebalance(&policy);
+        assert!(
+            actions
+                .iter()
+                .any(|x| matches!(x, PlacementAction::Replicate { region, .. } if *region == r)),
+            "{actions:?}"
+        );
+        let reps = c.registry().replicas(r).unwrap();
+        assert_eq!(reps.len(), 2, "{reps:?}");
+        // replica landed on the other channel, and the stream was charged
+        let loc = c.locality();
+        assert!(!loc.same_channel(reps[0], reps[1]));
+        let snap = c.shutdown();
+        assert_eq!(snap.replications, 1);
+        assert!(snap.copied_bytes > 0, "replication stream must be charged");
+        assert_eq!(snap.resident_hits, 4, "placement copies are not misses");
+        assert_eq!(snap.resident_misses, 0);
+    }
+
+    #[test]
+    fn capacity_bounded_fleet_evicts_and_requeues_gracefully() {
+        let bits = 1024usize;
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            capacity: CapacityConfig {
+                // each device holds exactly one region: every extra
+                // registration evicts the incumbent
+                capacity: DeviceCapacity::of_bits(bits as u64),
+                policy: EvictionPolicy::Lru,
+            },
+            ..ClusterConfig::tiny(2)
+        });
+        let requeues = c.pump_capacity(6, 24, bits, 1.2, None, 63);
+        for d in 0..2 {
+            assert!(c.registry().resident_bits_on(DeviceId(d)) <= bits as u64);
+        }
+        c.registry().check_invariants().expect("registry invariants");
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 24, "every request completes (no collapse)");
+        assert!(snap.evictions > 0, "3 regions per 1-region device must evict");
+        // requeues are the defined recovery path, not an error
+        let _ = requeues;
     }
 }

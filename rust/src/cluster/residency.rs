@@ -1,47 +1,58 @@
-//! Operand residency: which device owns which operand region, and what it
-//! costs to move operands that are not where the computation runs.
+//! Operand residency: which devices hold which operand region, what it
+//! costs to move operands that are not where the computation runs, and —
+//! since capacity became first-class — which regions a full device must
+//! evict and which hot regions are worth replicating.
 //!
 //! DRIM computes X(N)OR between operands stored *in the same bit-line*, so
 //! which device holds an operand is not a scheduling detail — it is the
 //! premise of the whole platform (cf. RowClone/Ambit in-DRAM copy,
-//! SIMDRAM's allocation-aware framework). PR 1's fleet routed requests
-//! that *carry* their payloads, letting any device serve any request; this
-//! module models the data instead:
+//! SIMDRAM's allocation-aware framework). This module models the data:
 //!
-//! * [`ResidencyRegistry`] maps [`RegionId`] handles to the
-//!   [`DeviceId`] that owns them (and holds the simulated payload so
-//!   routed requests can be materialized for execution).
+//! * [`ResidencyRegistry`] maps [`RegionId`] handles to the devices
+//!   holding a replica (and holds the simulated payload so routed requests
+//!   can be materialized for execution). Each device's resident footprint
+//!   is enforced against a [`DeviceCapacity`] under a pluggable
+//!   [`EvictionPolicy`]: registration, replication and migration either
+//!   fit, evict colder regions to make room, or fail fast with a
+//!   [`CapacityError`].
 //! * [`ClusterRequest`] lets each operand be either carried
 //!   ([`OperandRef::Inline`]) or referenced by resident handle
 //!   ([`OperandRef::Resident`]).
-//! * [`CopyCostModel`] prices the movement of operands that are *not*
-//!   resident on the executing device, from the DDR burst/channel timing
-//!   parameters (`dram::timing`): a host-carried operand is one streamed
-//!   transfer into the device; an operand resident on another device is a
+//! * [`CopyCostModel`] prices operand movement from the DDR burst/channel
+//!   timing parameters (`dram::timing`): a host-carried operand is one
+//!   streamed transfer into the device; an operand resident elsewhere is a
 //!   read-out plus write-in, which serializes (2×) when source and
 //!   destination share a channel and overlaps when they do not.
 //! * [`LocalityModel`] binds the cost model to a concrete fleet topology
 //!   and computes the [`CopyCharge`] of executing a placed request on a
 //!   given device. The charge is computed against the device that
 //!   *actually executes* (fleet workers call it with their own id), so
-//!   the accounting stays correct under work stealing.
+//!   the accounting stays correct under work stealing. Any replica counts
+//!   as a hit; a miss streams from the cheapest replica.
+//! * [`ReplicationPolicy`] turns the fleet's per-region traffic window
+//!   (`cluster::metrics`) into [`PlacementAction`]s: hot regions gain
+//!   replicas on uncovered channels once the window's traffic amortizes
+//!   the modeled copy, and overloaded devices shed cold regions.
 //!
-//! A request whose operands are all resident on the executing device is a
-//! *resident hit*: zero copied bytes, zero copy cycles. Everything else is
-//! a miss and is charged; the fleet metrics surface copied bytes and copy
-//! cycles alongside the makespan so the `ablate_locality` bench and the
-//! `drim cluster --locality` sweep can ablate placement policies.
+//! Eviction is tombstoned: a handle whose last replica was evicted yields
+//! the *defined* [`RouteError::Evicted`] signal from every lookup — the
+//! caller re-registers and resubmits (shed/requeue), never panics, and is
+//! never silently downgraded to an inline payload. Requests already past
+//! [`ResidencyRegistry::resolve`] carry materialized payloads, so eviction
+//! can never dangle a queued request.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 use crate::coordinator::{BulkRequest, Payload};
+use crate::dram::geometry::DeviceCapacity;
 use crate::dram::timing::TimingParams;
 use crate::isa::program::BulkOp;
 
 use super::admission::AdmissionError;
+use super::metrics::RegionUse;
 use super::topology::{DeviceId, Topology};
 
 /// Handle to a registered operand region (dense, fleet-wide, never reused).
@@ -61,7 +72,7 @@ pub enum OperandRef {
     /// streamed transfer no matter where it executes.
     Inline(Payload),
     /// Operand resident on some device — free when the request executes
-    /// there, charged as an inter-device copy otherwise.
+    /// on any replica holder, charged as an inter-device copy otherwise.
     Resident(RegionId),
 }
 
@@ -71,7 +82,9 @@ pub enum OperandRef {
 /// legacy payload-carrying paths keep accepting plain [`BulkRequest`]s.
 #[derive(Clone, Debug)]
 pub struct ClusterRequest {
+    /// the bulk operation to run
     pub op: BulkOp,
+    /// operands, inline or resident, in operand order
     pub operands: Vec<OperandRef>,
 }
 
@@ -100,9 +113,13 @@ impl ClusterRequest {
 /// Why a routed submission was refused.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum RouteError {
-    /// A resident handle references a region the registry does not know
-    /// (never registered, or dropped).
+    /// A resident handle references a region the registry never issued,
+    /// or one explicitly dropped by its owner (`remove`).
     UnknownRegion(RegionId),
+    /// The region's last replica was evicted by the capacity policy —
+    /// the defined shed/requeue signal: re-register the operand and
+    /// resubmit (or degrade to a carried payload).
+    Evicted(RegionId),
     /// Admission control refused the request (fleet or device saturated).
     Admission(AdmissionError),
 }
@@ -112,6 +129,9 @@ impl fmt::Display for RouteError {
         match self {
             RouteError::UnknownRegion(r) => {
                 write!(f, "unknown operand {r}: not in the residency registry")
+            }
+            RouteError::Evicted(r) => {
+                write!(f, "operand {r} evicted by the capacity policy: re-register and resubmit")
             }
             RouteError::Admission(e) => write!(f, "{e}"),
         }
@@ -124,78 +144,308 @@ impl From<AdmissionError> for RouteError {
     }
 }
 
-/// Where a routed request's operand bits live, summarized for the worker
-/// that will execute it. Resident bits are grouped per owning device (one
-/// streamed transfer per source device); inline bits are the payloads the
+/// Why a registration, replication, or migration was refused by capacity
+/// enforcement.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum CapacityError {
+    /// The payload alone exceeds the per-device capacity — no amount of
+    /// eviction can make it fit.
+    RegionTooLarge {
+        /// device the registration targeted
+        device: DeviceId,
+        /// payload size that was refused
+        bits: u64,
+        /// the per-device capacity it exceeded
+        capacity_bits: u64,
+    },
+    /// The device is full and the eviction policy would not free enough
+    /// (fail-fast policy, or cost-aware eviction refused every victim).
+    DeviceFull {
+        /// device the registration targeted
+        device: DeviceId,
+        /// bits the newcomer needed
+        needed_bits: u64,
+        /// the per-device capacity
+        capacity_bits: u64,
+    },
+}
+
+impl fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CapacityError::RegionTooLarge {
+                device,
+                bits,
+                capacity_bits,
+            } => write!(
+                f,
+                "{bits}-bit region exceeds {device}'s {capacity_bits}-bit \
+                 residency capacity outright"
+            ),
+            CapacityError::DeviceFull {
+                device,
+                needed_bits,
+                capacity_bits,
+            } => write!(
+                f,
+                "{device} full: {needed_bits} bits needed, {capacity_bits}-bit \
+                 capacity and the eviction policy freed nothing"
+            ),
+        }
+    }
+}
+
+/// How a full device makes room for a new registration.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum EvictionPolicy {
+    /// Never evict: registrations beyond capacity fail fast with
+    /// [`CapacityError::DeviceFull`].
+    FailFast,
+    /// Evict least-recently-hit regions (by last routed use) until the
+    /// newcomer fits.
+    Lru,
+    /// LRU, but refuse to evict a region whose re-copy cost exceeds the
+    /// idle savings it has accrued: a victim is only evictable once
+    /// `idle_ticks × rent_ns_per_tick ≥ host_to_device_ns(bits)` — a
+    /// region that would immediately be streamed back in is cheaper to
+    /// keep resident than to thrash.
+    CostAware {
+        /// simulated nanoseconds of "rent" one idle logical tick earns
+        /// toward paying off the region's re-copy stream
+        rent_ns_per_tick: f64,
+    },
+}
+
+/// Per-device residency capacity plus the policy applied when it runs out.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CapacityConfig {
+    /// resident bits each device may hold
+    pub capacity: DeviceCapacity,
+    /// what to do when a registration does not fit
+    pub policy: EvictionPolicy,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        CapacityConfig {
+            capacity: DeviceCapacity::unbounded(),
+            policy: EvictionPolicy::FailFast,
+        }
+    }
+}
+
+/// Outcome of an explicit [`ResidencyRegistry::evict_from`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EvictOutcome {
+    /// One replica dropped; the region is still resident elsewhere.
+    ReplicaDropped,
+    /// That was the last replica: the region is gone and tombstoned, and
+    /// later lookups get the defined [`RouteError::Evicted`] signal.
+    RegionEvicted,
+    /// The region is unknown or holds no replica on that device.
+    NotResident,
+}
+
+/// One resident operand of a routed request: its size and every device
+/// holding a replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidentSpan {
+    /// the registry handle (per-region traffic counters key off it)
+    pub region: RegionId,
+    /// operand size in bits
+    pub bits: u64,
+    /// devices holding a replica (never empty for registry-built spans)
+    pub replicas: Vec<DeviceId>,
+}
+
+/// Where a routed request's operand bits live, summarized for routing and
+/// for the worker that will execute it. Resident operands keep their full
+/// replica set (any replica is a hit); inline bits are the payloads the
 /// request carried from the host.
 #[derive(Clone, Debug, Default)]
 pub struct Placement {
-    /// total resident operand bits per owning device
-    pub resident_bits: Vec<(DeviceId, u64)>,
+    /// one span per resident operand, in operand order
+    pub resident: Vec<ResidentSpan>,
     /// operand bits carried inline with the request
     pub inline_bits: u64,
 }
 
 impl Placement {
-    /// Accumulate `bits` of residency on `device`.
-    pub fn add_resident(&mut self, device: DeviceId, bits: u64) {
-        if let Some(e) = self.resident_bits.iter_mut().find(|(d, _)| *d == device) {
-            e.1 += bits;
-        } else {
-            self.resident_bits.push((device, bits));
+    /// Record one resident operand replicated on `replicas`.
+    pub fn add_resident(&mut self, region: RegionId, bits: u64, replicas: Vec<DeviceId>) {
+        self.resident.push(ResidentSpan {
+            region,
+            bits,
+            replicas,
+        });
+    }
+
+    /// Resident operand bits available per device — an operand counts
+    /// toward every device holding one of its replicas. Sorted by device
+    /// id.
+    pub fn resident_bits_per_device(&self) -> Vec<(DeviceId, u64)> {
+        let mut per: Vec<(DeviceId, u64)> = Vec::new();
+        for span in &self.resident {
+            for &d in &span.replicas {
+                match per.iter_mut().find(|(e, _)| *e == d) {
+                    Some(e) => e.1 += span.bits,
+                    None => per.push((d, span.bits)),
+                }
+            }
         }
+        per.sort_by_key(|&(d, _)| d);
+        per
     }
 
-    /// The device owning the most resident operand bits (ties broken
-    /// toward the lowest id), if any operand is resident at all. This is
-    /// the placement the router prefers: executing there moves the fewest
-    /// bytes.
+    /// Devices tied for the most resident operand bits — the executors
+    /// the router may pick freely (any replica is a hit; the admission
+    /// layer picks the least-loaded). Empty when every operand is inline.
+    pub fn candidates(&self) -> Vec<DeviceId> {
+        let per = self.resident_bits_per_device();
+        let Some(best) = per.iter().map(|&(_, b)| b).max() else {
+            return Vec::new();
+        };
+        per.into_iter()
+            .filter(|&(_, b)| b == best)
+            .map(|(d, _)| d)
+            .collect()
+    }
+
+    /// The lowest-id device among [`Self::candidates`], if any operand is
+    /// resident at all: executing there moves the fewest bytes.
     pub fn preferred(&self) -> Option<DeviceId> {
-        self.resident_bits
-            .iter()
-            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
-            .map(|&(d, _)| d)
+        self.candidates().into_iter().next()
     }
 
-    /// Total resident operand bits across all owning devices.
+    /// Total resident operand bits across all resident operands.
     pub fn total_resident_bits(&self) -> u64 {
-        self.resident_bits.iter().map(|&(_, b)| b).sum()
+        self.resident.iter().map(|s| s.bits).sum()
     }
 }
 
 struct Region {
-    device: DeviceId,
+    /// devices holding a replica; never empty, `homes[0]` is the primary
+    homes: Vec<DeviceId>,
     payload: Payload,
+    /// logical clock value at the last routed use (or registration)
+    last_hit: u64,
+    /// routed uses since registration
+    hits: u64,
 }
 
-/// Registry mapping operand regions to the devices that own them.
+#[derive(Default)]
+struct Inner {
+    regions: HashMap<u64, Region>,
+    /// resident bits per device (index = `DeviceId`); maintained in
+    /// lock-step with `regions` so capacity checks never rescan the map
+    footprint: Vec<u64>,
+    /// ids evicted by the capacity policy (never reused), so a racing
+    /// lookup gets the defined `Evicted` error instead of `UnknownRegion`
+    evicted: HashSet<u64>,
+}
+
+/// Registry mapping operand regions to the devices holding their replicas,
+/// with per-device footprint enforcement.
 ///
 /// In the simulator the registry also holds the payload itself, so a
 /// routed request can be materialized into an executable [`BulkRequest`]
 /// wherever it lands; on real hardware the payload would be the row range
 /// and only the coordinates would live here.
-#[derive(Default)]
+///
+/// All bookkeeping (footprint counters, eviction, tombstones) happens
+/// under one write lock, so "footprint ≤ capacity on every device" holds
+/// at every instant, not just between operations — the concurrency stress
+/// suite polls it mid-flight.
 pub struct ResidencyRegistry {
-    inner: RwLock<HashMap<u64, Region>>,
+    inner: RwLock<Inner>,
     next: AtomicU64,
     /// devices this registry may reference (`None` = standalone/unbounded)
     bound: Option<usize>,
+    capacity: DeviceCapacity,
+    policy: EvictionPolicy,
+    /// prices the re-copy stream for cost-aware eviction decisions
+    cost: CopyCostModel,
+    /// logical LRU clock, bumped on registration and every resolve
+    clock: AtomicU64,
+    evictions: AtomicU64,
+    capacity_refusals: AtomicU64,
+}
+
+impl Default for ResidencyRegistry {
+    fn default() -> Self {
+        ResidencyRegistry {
+            inner: RwLock::new(Inner::default()),
+            next: AtomicU64::new(0),
+            bound: None,
+            capacity: DeviceCapacity::unbounded(),
+            policy: EvictionPolicy::FailFast,
+            cost: CopyCostModel::default(),
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            capacity_refusals: AtomicU64::new(0),
+        }
+    }
 }
 
 impl ResidencyRegistry {
     /// Unbounded registry (standalone use; fleet-owned registries are
-    /// created with [`Self::for_fleet`] so a bad `DeviceId` fails at
-    /// registration time, not deep inside routing).
+    /// created with [`Self::for_fleet`] or [`Self::with_capacity`] so a
+    /// bad `DeviceId` fails at registration time, not deep inside
+    /// routing).
     pub fn new() -> Self {
         ResidencyRegistry::default()
     }
 
-    /// Registry whose regions may only reference devices `0..devices`.
+    /// Registry whose regions may only reference devices `0..devices`,
+    /// with unbounded capacity (the pre-capacity behaviour).
     pub fn for_fleet(devices: usize) -> Self {
         ResidencyRegistry {
             bound: Some(devices),
+            inner: RwLock::new(Inner {
+                footprint: vec![0; devices],
+                ..Inner::default()
+            }),
             ..ResidencyRegistry::default()
         }
+    }
+
+    /// Fleet-bounded registry enforcing `cfg.capacity` per device under
+    /// `cfg.policy`; `cost` prices the re-copy stream cost-aware eviction
+    /// weighs against idle savings.
+    pub fn with_capacity(devices: usize, cfg: CapacityConfig, cost: CopyCostModel) -> Self {
+        ResidencyRegistry {
+            bound: Some(devices),
+            capacity: cfg.capacity,
+            policy: cfg.policy,
+            cost,
+            inner: RwLock::new(Inner {
+                footprint: vec![0; devices],
+                ..Inner::default()
+            }),
+            ..ResidencyRegistry::default()
+        }
+    }
+
+    /// The per-device capacity this registry enforces.
+    pub fn capacity(&self) -> DeviceCapacity {
+        self.capacity
+    }
+
+    /// The eviction policy applied when a device runs out of capacity.
+    pub fn eviction_policy(&self) -> EvictionPolicy {
+        self.policy
+    }
+
+    /// Replica evictions performed by the capacity policy (including
+    /// explicit [`Self::evict_from`] calls) since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Registrations/replications/migrations refused by capacity
+    /// enforcement since construction.
+    pub fn capacity_refusals(&self) -> u64 {
+        self.capacity_refusals.load(Ordering::Relaxed)
     }
 
     fn check(&self, device: DeviceId) {
@@ -204,21 +454,154 @@ impl ResidencyRegistry {
         }
     }
 
-    /// Register a payload as resident on `device`; returns its handle.
-    /// Panics if `device` is outside a fleet-bounded registry's range.
-    pub fn register(&self, device: DeviceId, payload: Payload) -> RegionId {
-        self.check(device);
-        let id = self.next.fetch_add(1, Ordering::Relaxed);
-        self.inner
-            .write()
-            .unwrap()
-            .insert(id, Region { device, payload });
-        RegionId(id)
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Owning device of a region, if registered.
+    fn grow(inner: &mut Inner, device: DeviceId) {
+        if inner.footprint.len() <= device.0 {
+            inner.footprint.resize(device.0 + 1, 0);
+        }
+    }
+
+    /// Pick the policy's eviction victim among regions resident on
+    /// `device` (excluding `exclude`), or `None` when nothing is
+    /// evictable. LRU order: minimum `last_hit`, ties toward the lowest
+    /// id for determinism.
+    fn pick_victim(&self, inner: &Inner, device: DeviceId, exclude: Option<u64>) -> Option<u64> {
+        let now = self.clock.load(Ordering::Relaxed);
+        inner
+            .regions
+            .iter()
+            .filter(|(id, r)| {
+                if Some(**id) == exclude || !r.homes.contains(&device) {
+                    return false;
+                }
+                match self.policy {
+                    EvictionPolicy::FailFast => false,
+                    EvictionPolicy::Lru => true,
+                    EvictionPolicy::CostAware { rent_ns_per_tick } => {
+                        let idle = now.saturating_sub(r.last_hit) as f64;
+                        let recopy = self.cost.host_to_device_ns(r.payload.bits() as u64);
+                        recopy <= idle * rent_ns_per_tick
+                    }
+                }
+            })
+            .min_by_key(|(id, r)| (r.last_hit, **id))
+            .map(|(id, _)| *id)
+    }
+
+    /// Drop `id`'s replica on `from`, tombstoning the region if that was
+    /// its last replica. Counts one eviction event.
+    fn evict_locked(&self, inner: &mut Inner, id: u64, from: DeviceId) {
+        let Some(r) = inner.regions.get_mut(&id) else {
+            return;
+        };
+        let Some(pos) = r.homes.iter().position(|&h| h == from) else {
+            return;
+        };
+        r.homes.remove(pos);
+        let bits = r.payload.bits() as u64;
+        let emptied = r.homes.is_empty();
+        inner.footprint[from.0] -= bits;
+        if emptied {
+            inner.regions.remove(&id);
+            inner.evicted.insert(id);
+        }
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Ensure `bits` fit on `device`, evicting under the policy. The
+    /// region `exclude` (the one being placed) is never a victim.
+    fn make_room(
+        &self,
+        inner: &mut Inner,
+        device: DeviceId,
+        bits: u64,
+        exclude: Option<u64>,
+    ) -> Result<(), CapacityError> {
+        let cap = self.capacity.resident_bits;
+        if bits > cap {
+            self.capacity_refusals.fetch_add(1, Ordering::Relaxed);
+            return Err(CapacityError::RegionTooLarge {
+                device,
+                bits,
+                capacity_bits: cap,
+            });
+        }
+        loop {
+            let used = inner.footprint.get(device.0).copied().unwrap_or(0);
+            if bits <= cap.saturating_sub(used) {
+                return Ok(());
+            }
+            match self.pick_victim(inner, device, exclude) {
+                Some(victim) => self.evict_locked(inner, victim, device),
+                None => {
+                    self.capacity_refusals.fetch_add(1, Ordering::Relaxed);
+                    return Err(CapacityError::DeviceFull {
+                        device,
+                        needed_bits: bits,
+                        capacity_bits: cap,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Register a payload as resident on `device`, evicting under the
+    /// policy if the device is full; returns its handle or the capacity
+    /// refusal. Panics if `device` is outside a fleet-bounded registry's
+    /// range.
+    pub fn try_register(
+        &self,
+        device: DeviceId,
+        payload: Payload,
+    ) -> Result<RegionId, CapacityError> {
+        self.check(device);
+        let bits = payload.bits() as u64;
+        let mut inner = self.inner.write().unwrap();
+        Self::grow(&mut inner, device);
+        self.make_room(&mut inner, device, bits, None)?;
+        let id = self.next.fetch_add(1, Ordering::Relaxed);
+        inner.footprint[device.0] += bits;
+        let now = self.tick();
+        inner.regions.insert(
+            id,
+            Region {
+                homes: vec![device],
+                payload,
+                last_hit: now,
+                hits: 0,
+            },
+        );
+        Ok(RegionId(id))
+    }
+
+    /// [`Self::try_register`] for callers that treat a capacity refusal
+    /// as a bug (unbounded registries, tests): panics on refusal.
+    pub fn register(&self, device: DeviceId, payload: Payload) -> RegionId {
+        self.try_register(device, payload)
+            .unwrap_or_else(|e| panic!("register: {e}"))
+    }
+
+    /// Primary owner of a region (its first replica), if registered.
     pub fn owner(&self, region: RegionId) -> Option<DeviceId> {
-        self.inner.read().unwrap().get(&region.0).map(|r| r.device)
+        self.inner
+            .read()
+            .unwrap()
+            .regions
+            .get(&region.0)
+            .map(|r| r.homes[0])
+    }
+
+    /// Every device holding a replica of `region`, if registered.
+    pub fn replicas(&self, region: RegionId) -> Option<Vec<DeviceId>> {
+        self.inner
+            .read()
+            .unwrap()
+            .regions
+            .get(&region.0)
+            .map(|r| r.homes.clone())
     }
 
     /// Payload size of a region in bits, if registered.
@@ -226,61 +609,211 @@ impl ResidencyRegistry {
         self.inner
             .read()
             .unwrap()
+            .regions
             .get(&region.0)
             .map(|r| r.payload.bits())
     }
 
-    /// Owner and a copy of the payload, if registered.
+    /// Routed uses and last-use clock of a region (LRU inputs), if
+    /// registered.
+    pub fn hit_stats(&self, region: RegionId) -> Option<(u64, u64)> {
+        self.inner
+            .read()
+            .unwrap()
+            .regions
+            .get(&region.0)
+            .map(|r| (r.hits, r.last_hit))
+    }
+
+    /// Primary owner and a copy of the payload, if registered.
     pub fn lookup(&self, region: RegionId) -> Option<(DeviceId, Payload)> {
         self.inner
             .read()
             .unwrap()
+            .regions
             .get(&region.0)
-            .map(|r| (r.device, r.payload.clone()))
+            .map(|r| (r.homes[0], r.payload.clone()))
     }
 
-    /// Re-home a region onto another device (an explicit migration —
-    /// future requests routed by this handle will prefer `to`). Returns
-    /// false if the region is unknown; panics if `to` is outside a
-    /// fleet-bounded registry's range.
-    pub fn migrate(&self, region: RegionId, to: DeviceId) -> bool {
+    /// Add a replica of `region` on `to`. Replication is opportunistic
+    /// and **never evicts**: it only consumes free capacity, refusing
+    /// with [`CapacityError::DeviceFull`] otherwise — a replica is an
+    /// optimization and must not push out a region someone registered.
+    /// `Ok(true)` = replicated (or already there), `Ok(false)` = unknown
+    /// region. Panics if `to` is outside a fleet-bounded registry's
+    /// range.
+    pub fn replicate(&self, region: RegionId, to: DeviceId) -> Result<bool, CapacityError> {
         self.check(to);
-        match self.inner.write().unwrap().get_mut(&region.0) {
-            Some(r) => {
-                r.device = to;
-                true
+        let mut inner = self.inner.write().unwrap();
+        let (bits, already) = match inner.regions.get(&region.0) {
+            None => return Ok(false),
+            Some(r) => (r.payload.bits() as u64, r.homes.contains(&to)),
+        };
+        if already {
+            return Ok(true);
+        }
+        Self::grow(&mut inner, to);
+        let cap = self.capacity.resident_bits;
+        let used = inner.footprint[to.0];
+        if bits > cap.saturating_sub(used) {
+            self.capacity_refusals.fetch_add(1, Ordering::Relaxed);
+            return Err(CapacityError::DeviceFull {
+                device: to,
+                needed_bits: bits,
+                capacity_bits: cap,
+            });
+        }
+        inner.footprint[to.0] += bits;
+        inner
+            .regions
+            .get_mut(&region.0)
+            .expect("excluded from eviction")
+            .homes
+            .push(to);
+        Ok(true)
+    }
+
+    /// Re-home a region onto exactly `to`, dropping every other replica —
+    /// the coherence point: after a migration there is one authoritative
+    /// copy, so stale replicas can never serve. `Ok(true)` = migrated,
+    /// `Ok(false)` = unknown region; capacity on `to` is enforced under
+    /// the policy. Panics if `to` is outside a fleet-bounded registry's
+    /// range.
+    pub fn migrate(&self, region: RegionId, to: DeviceId) -> Result<bool, CapacityError> {
+        self.check(to);
+        let mut inner = self.inner.write().unwrap();
+        let (bits, homes) = match inner.regions.get(&region.0) {
+            None => return Ok(false),
+            Some(r) => (r.payload.bits() as u64, r.homes.clone()),
+        };
+        if !homes.contains(&to) {
+            Self::grow(&mut inner, to);
+            self.make_room(&mut inner, to, bits, Some(region.0))?;
+            inner.footprint[to.0] += bits;
+        }
+        for h in &homes {
+            if *h != to {
+                inner.footprint[h.0] -= bits;
             }
-            None => false,
+        }
+        inner
+            .regions
+            .get_mut(&region.0)
+            .expect("excluded from eviction")
+            .homes = vec![to];
+        Ok(true)
+    }
+
+    /// Explicitly drop `region`'s replica on `from` (policy engines and
+    /// tests; the capacity path evicts through the same bookkeeping).
+    pub fn evict_from(&self, region: RegionId, from: DeviceId) -> EvictOutcome {
+        let mut inner = self.inner.write().unwrap();
+        let (present, last) = match inner.regions.get(&region.0) {
+            None => return EvictOutcome::NotResident,
+            Some(r) => (r.homes.contains(&from), r.homes.len() == 1),
+        };
+        if !present {
+            return EvictOutcome::NotResident;
+        }
+        self.evict_locked(&mut inner, region.0, from);
+        if last {
+            EvictOutcome::RegionEvicted
+        } else {
+            EvictOutcome::ReplicaDropped
         }
     }
 
-    /// Drop a region; returns its payload if it was registered.
+    /// Drop a region everywhere; returns its payload if it was
+    /// registered. An owner-initiated drop is *not* an eviction: later
+    /// lookups see [`RouteError::UnknownRegion`].
     pub fn remove(&self, region: RegionId) -> Option<Payload> {
-        self.inner
-            .write()
-            .unwrap()
-            .remove(&region.0)
-            .map(|r| r.payload)
+        let mut inner = self.inner.write().unwrap();
+        let r = inner.regions.remove(&region.0)?;
+        for h in &r.homes {
+            inner.footprint[h.0] -= r.payload.bits() as u64;
+        }
+        Some(r.payload)
     }
 
     /// Number of registered regions.
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().len()
+        self.inner.read().unwrap().regions.len()
     }
 
+    /// True when no region is registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
     /// Total bits resident on one device (capacity/balance reporting).
+    /// O(1): reads the maintained footprint counter.
     pub fn resident_bits_on(&self, device: DeviceId) -> u64 {
         self.inner
             .read()
             .unwrap()
-            .values()
-            .filter(|r| r.device == device)
-            .map(|r| r.payload.bits() as u64)
-            .sum()
+            .footprint
+            .get(device.0)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// `(region, bits, replica count)` for every region with a replica on
+    /// `device`, sorted by id (deterministic input for policy decisions).
+    pub fn regions_on(&self, device: DeviceId) -> Vec<(RegionId, u64, usize)> {
+        let inner = self.inner.read().unwrap();
+        let mut out: Vec<(RegionId, u64, usize)> = inner
+            .regions
+            .iter()
+            .filter(|(_, r)| r.homes.contains(&device))
+            .map(|(id, r)| (RegionId(*id), r.payload.bits() as u64, r.homes.len()))
+            .collect();
+        out.sort_by_key(|&(id, _, _)| id);
+        out
+    }
+
+    /// Recompute the per-device footprint from the region map and verify
+    /// the maintained counters match, every region has a non-empty
+    /// duplicate-free in-bounds replica set, no live region is
+    /// tombstoned, and no device exceeds its capacity. Returns the first
+    /// violation. Debug aid for the concurrency and property suites.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let inner = self.inner.read().unwrap();
+        let cap = self.capacity.resident_bits;
+        let mut recomputed = vec![0u64; inner.footprint.len()];
+        for (id, r) in &inner.regions {
+            if r.homes.is_empty() {
+                return Err(format!("region{id} has no replica"));
+            }
+            let mut seen = r.homes.clone();
+            seen.sort();
+            seen.dedup();
+            if seen.len() != r.homes.len() {
+                return Err(format!("region{id} lists a device twice: {:?}", r.homes));
+            }
+            if inner.evicted.contains(id) {
+                return Err(format!("region{id} both live and tombstoned"));
+            }
+            for h in &r.homes {
+                if let Some(n) = self.bound {
+                    if h.0 >= n {
+                        return Err(format!("region{id} on out-of-fleet {h}"));
+                    }
+                }
+                if h.0 >= recomputed.len() {
+                    return Err(format!("region{id} on {h} beyond the footprint vector"));
+                }
+                recomputed[h.0] += r.payload.bits() as u64;
+            }
+        }
+        for (d, (&want, &have)) in recomputed.iter().zip(inner.footprint.iter()).enumerate() {
+            if want != have {
+                return Err(format!("dev{d} footprint {have} != recomputed {want}"));
+            }
+            if have > cap {
+                return Err(format!("dev{d} footprint {have} exceeds capacity {cap}"));
+            }
+        }
+        Ok(())
     }
 
     /// Summarize where a request's operand bits live *without* cloning any
@@ -293,9 +826,18 @@ impl ResidencyRegistry {
             match o {
                 OperandRef::Inline(p) => placement.inline_bits += p.bits() as u64,
                 OperandRef::Resident(r) => {
-                    let region =
-                        inner.get(&r.0).ok_or(RouteError::UnknownRegion(*r))?;
-                    placement.add_resident(region.device, region.payload.bits() as u64);
+                    if inner.evicted.contains(&r.0) {
+                        return Err(RouteError::Evicted(*r));
+                    }
+                    let region = inner
+                        .regions
+                        .get(&r.0)
+                        .ok_or(RouteError::UnknownRegion(*r))?;
+                    placement.add_resident(
+                        *r,
+                        region.payload.bits() as u64,
+                        region.homes.clone(),
+                    );
                 }
             }
         }
@@ -303,16 +845,22 @@ impl ResidencyRegistry {
     }
 
     /// Materialize a [`ClusterRequest`] into an executable [`BulkRequest`]
-    /// plus the [`Placement`] summary the copy accounting charges from.
+    /// plus the [`Placement`] summary the copy accounting charges from,
+    /// bumping each resident region's LRU clock and hit counter (this is
+    /// the one call per submitted request).
+    ///
+    /// A region evicted between routing and here yields the defined
+    /// [`RouteError::Evicted`]; once this returns `Ok`, the request
+    /// carries materialized payloads and later evictions cannot dangle
+    /// it.
     ///
     /// Panics if materialized operands disagree in bit length (the same
     /// contract `BulkRequest::bitwise` enforces for carried payloads).
-    pub fn resolve(
-        &self,
-        req: &ClusterRequest,
-    ) -> Result<(BulkRequest, Placement), RouteError> {
+    pub fn resolve(&self, req: &ClusterRequest) -> Result<(BulkRequest, Placement), RouteError> {
         let mut operands = Vec::with_capacity(req.operands.len());
         let mut placement = Placement::default();
+        let mut inner = self.inner.write().unwrap();
+        let now = self.tick();
         for o in &req.operands {
             match o {
                 OperandRef::Inline(p) => {
@@ -320,13 +868,25 @@ impl ResidencyRegistry {
                     operands.push(p.clone());
                 }
                 OperandRef::Resident(r) => {
-                    let (device, payload) =
-                        self.lookup(*r).ok_or(RouteError::UnknownRegion(*r))?;
-                    placement.add_resident(device, payload.bits() as u64);
-                    operands.push(payload);
+                    if inner.evicted.contains(&r.0) {
+                        return Err(RouteError::Evicted(*r));
+                    }
+                    let region = inner
+                        .regions
+                        .get_mut(&r.0)
+                        .ok_or(RouteError::UnknownRegion(*r))?;
+                    region.last_hit = now;
+                    region.hits += 1;
+                    placement.add_resident(
+                        *r,
+                        region.payload.bits() as u64,
+                        region.homes.clone(),
+                    );
+                    operands.push(region.payload.clone());
                 }
             }
         }
+        drop(inner);
         if let Some(first) = operands.first() {
             let bits = first.bits();
             assert!(
@@ -352,10 +912,12 @@ impl ResidencyRegistry {
 /// `t_ck_ns` (one burst = 4 clocks at DDR4-2133).
 #[derive(Clone, Debug)]
 pub struct CopyCostModel {
+    /// the DDR timing parameters costs derive from
     pub timing: TimingParams,
 }
 
 impl CopyCostModel {
+    /// Bind the model to `timing`.
     pub fn new(timing: TimingParams) -> Self {
         CopyCostModel { timing }
     }
@@ -408,6 +970,15 @@ impl CopyCharge {
     pub fn is_free(&self) -> bool {
         self.bytes == 0
     }
+
+    /// The zero charge (hits, already-resident replicas).
+    pub fn free() -> Self {
+        CopyCharge {
+            bytes: 0,
+            ns: 0.0,
+            cycles: 0,
+        }
+    }
 }
 
 /// The copy-cost model bound to a concrete fleet topology: knows which
@@ -415,6 +986,7 @@ impl CopyCharge {
 /// device into a [`CopyCharge`].
 pub struct LocalityModel {
     channel_of: Vec<usize>,
+    /// the underlying burst/clock cost model
     pub model: CopyCostModel,
 }
 
@@ -427,25 +999,57 @@ impl LocalityModel {
         }
     }
 
+    /// Number of devices in the bound topology.
+    pub fn devices(&self) -> usize {
+        self.channel_of.len()
+    }
+
+    /// DDR channel coordinate of one device.
+    pub fn channel(&self, d: DeviceId) -> usize {
+        self.channel_of[d.0]
+    }
+
     /// Do two devices sit on the same DDR channel?
     pub fn same_channel(&self, a: DeviceId, b: DeviceId) -> bool {
         self.channel_of[a.0] == self.channel_of[b.0]
     }
 
+    /// Charge for landing one `bits`-sized copy on `to`, streamed from
+    /// the cheapest of `sources`: free if `to` already holds one, a
+    /// host→device stream if `sources` is empty (inline staging), else
+    /// the cheapest device→device stream. Prices replication and
+    /// migration as well as per-operand miss charges.
+    pub fn cheapest_copy(&self, bits: u64, sources: &[DeviceId], to: DeviceId) -> CopyCharge {
+        if bits == 0 || sources.contains(&to) {
+            return CopyCharge::free();
+        }
+        let ns = sources
+            .iter()
+            .map(|&s| self.model.device_to_device_ns(bits, self.same_channel(s, to)))
+            .fold(f64::INFINITY, f64::min);
+        let ns = if ns.is_finite() {
+            ns
+        } else {
+            self.model.host_to_device_ns(bits)
+        };
+        CopyCharge {
+            bytes: bits.div_ceil(8),
+            ns,
+            cycles: self.model.cycles_for(ns),
+        }
+    }
+
     /// Charge for executing a request with placement `p` on `executor`:
-    /// resident bits already on `executor` are free; resident bits on
-    /// other devices pay the device→device stream (per source device);
-    /// inline bits pay the host→device stream.
+    /// a resident operand with a replica on `executor` is free; one
+    /// resident elsewhere streams from its cheapest replica; inline bits
+    /// pay the host→device stream.
     pub fn charge(&self, p: &Placement, executor: DeviceId) -> CopyCharge {
         let mut ns = 0.0;
         let mut bytes = 0u64;
-        for &(device, bits) in &p.resident_bits {
-            if device != executor && bits > 0 {
-                ns += self
-                    .model
-                    .device_to_device_ns(bits, self.same_channel(device, executor));
-                bytes += bits.div_ceil(8);
-            }
+        for span in &p.resident {
+            let c = self.cheapest_copy(span.bits, &span.replicas, executor);
+            ns += c.ns;
+            bytes += c.bytes;
         }
         if p.inline_bits > 0 {
             ns += self.model.host_to_device_ns(p.inline_bits);
@@ -459,6 +1063,198 @@ impl LocalityModel {
     }
 }
 
+/// Knobs for [`ReplicationPolicy`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicationConfig {
+    /// routed uses within one observation window before a region counts
+    /// as hot (replication candidate)
+    pub hot_uses: u64,
+    /// the window's projected savings must cover this many times the
+    /// one-time replica stream before the copy counts as amortized
+    pub amortize_factor: f64,
+    /// replicas per region, counting the primary (bounded by the channel
+    /// count regardless — replicas only go to uncovered channels)
+    pub max_replicas: usize,
+    /// window uses at or below which a region counts as cold (migration
+    /// candidate when its device runs hot)
+    pub cold_uses: u64,
+    /// footprint fraction above which a device sheds cold regions
+    pub high_watermark: f64,
+}
+
+impl Default for ReplicationConfig {
+    fn default() -> Self {
+        ReplicationConfig {
+            hot_uses: 3,
+            amortize_factor: 2.0,
+            max_replicas: 2,
+            cold_uses: 0,
+            high_watermark: 0.95,
+        }
+    }
+}
+
+/// One planned placement change (executed by `DrimCluster::rebalance`,
+/// which streams the copy at the modeled cost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementAction {
+    /// Add a replica of `region` on `to` (hot-region spread across
+    /// channels; routing then treats either copy as a hit).
+    Replicate {
+        /// region gaining a replica
+        region: RegionId,
+        /// destination device
+        to: DeviceId,
+    },
+    /// Collapse `region` onto `to` alone (cold-region shed off an
+    /// overloaded device; drops every other replica — the coherence
+    /// point).
+    Migrate {
+        /// region being re-homed
+        region: RegionId,
+        /// destination device
+        to: DeviceId,
+    },
+}
+
+/// Cost-driven replication/migration policy over the fleet's per-region
+/// traffic window (see [`Self::plan`] for the decision rules).
+#[derive(Clone, Debug, Default)]
+pub struct ReplicationPolicy {
+    /// policy knobs
+    pub cfg: ReplicationConfig,
+}
+
+impl ReplicationPolicy {
+    /// Policy with explicit knobs.
+    pub fn new(cfg: ReplicationConfig) -> Self {
+        ReplicationPolicy { cfg }
+    }
+
+    /// Plan one rebalance round from the drained traffic `window`
+    /// (hottest region first, as `FleetMetrics::take_region_window`
+    /// returns it), the registry's current replica sets and footprints,
+    /// and the per-device `queue_depths`.
+    ///
+    /// Decisions, applied against a local footprint model so one round
+    /// never overshoots capacity:
+    ///
+    /// 1. **Replicate hot regions across channels.** A region with at
+    ///    least `hot_uses` routed uses in the window gains a replica on a
+    ///    channel that holds none, once the window's traffic amortizes
+    ///    the stream: `uses × miss_stream_ns ≥ amortize_factor ×
+    ///    replica_stream_ns`, where the miss stream is the worst-case
+    ///    serialized same-channel pull and the replica stream comes from
+    ///    the cheapest existing copy (both priced by the fleet's
+    ///    [`CopyCostModel`]). The target is the device with the most free
+    ///    capacity (ties: shallower queue, then lower id). Replication
+    ///    only uses free space — it never evicts.
+    /// 2. **Migrate cold regions off overloaded devices.** A device above
+    ///    `high_watermark × capacity` sheds its largest single-replica
+    ///    region with at most `cold_uses` window uses to the emptiest
+    ///    device with room (ties: shallower queue, then lower id).
+    pub fn plan(
+        &self,
+        window: &[RegionUse],
+        registry: &ResidencyRegistry,
+        locality: &LocalityModel,
+        queue_depths: &[usize],
+    ) -> Vec<PlacementAction> {
+        let devices = locality.devices();
+        let cap = registry.capacity().resident_bits;
+        let mut footprint: Vec<u64> = (0..devices)
+            .map(|d| registry.resident_bits_on(DeviceId(d)))
+            .collect();
+        let depth = |d: usize| queue_depths.get(d).copied().unwrap_or(0);
+        let mut actions = Vec::new();
+        let mut replicated: HashSet<u64> = HashSet::new();
+
+        // 1. hot-region replication across channels
+        for u in window {
+            if u.uses < self.cfg.hot_uses {
+                continue;
+            }
+            let Some(reps) = registry.replicas(u.region) else {
+                continue;
+            };
+            if reps.len() >= self.cfg.max_replicas {
+                continue;
+            }
+            let Some(bits) = registry.bits(u.region) else {
+                continue;
+            };
+            let bits = bits as u64;
+            let covered: Vec<usize> = reps.iter().map(|&d| locality.channel(d)).collect();
+            let target = (0..devices)
+                .map(DeviceId)
+                .filter(|d| !covered.contains(&locality.channel(*d)))
+                .filter(|d| bits <= cap.saturating_sub(footprint[d.0]))
+                .min_by_key(|d| {
+                    (
+                        std::cmp::Reverse(cap.saturating_sub(footprint[d.0])),
+                        depth(d.0),
+                        d.0,
+                    )
+                });
+            let Some(to) = target else {
+                continue;
+            };
+            // amortization, both sides priced by the DDR burst model: a
+            // use that cannot land on a replica holder pays the
+            // worst-case serialized pull (same-channel read-out +
+            // write-in), while the one-time replica stream comes from the
+            // cheapest existing copy (usually a cross-channel overlap).
+            // The window's traffic must cover the stream
+            // `amortize_factor` times over before the copy is worth it.
+            let miss_ns = locality.model.device_to_device_ns(bits, true);
+            let copy = locality.cheapest_copy(bits, &reps, to);
+            if (u.uses as f64) * miss_ns < self.cfg.amortize_factor * copy.ns {
+                continue;
+            }
+            footprint[to.0] += bits;
+            replicated.insert(u.region.0);
+            actions.push(PlacementAction::Replicate {
+                region: u.region,
+                to,
+            });
+        }
+
+        // 2. cold-region migration off overloaded devices
+        if cap < u64::MAX {
+            let uses_of: HashMap<u64, u64> =
+                window.iter().map(|u| (u.region.0, u.uses)).collect();
+            for d in 0..devices {
+                if (footprint[d] as f64) <= self.cfg.high_watermark * cap as f64 {
+                    continue;
+                }
+                let victim = registry
+                    .regions_on(DeviceId(d))
+                    .into_iter()
+                    .filter(|&(id, _, replica_count)| {
+                        replica_count == 1
+                            && !replicated.contains(&id.0)
+                            && uses_of.get(&id.0).copied().unwrap_or(0) <= self.cfg.cold_uses
+                    })
+                    .max_by_key(|&(id, bits, _)| (bits, std::cmp::Reverse(id)));
+                let Some((region, bits, _)) = victim else {
+                    continue;
+                };
+                let target = (0..devices)
+                    .map(DeviceId)
+                    .filter(|t| t.0 != d)
+                    .filter(|t| bits <= cap.saturating_sub(footprint[t.0]))
+                    .min_by_key(|t| (footprint[t.0], depth(t.0), t.0));
+                if let Some(to) = target {
+                    footprint[d] -= bits;
+                    footprint[to.0] += bits;
+                    actions.push(PlacementAction::Migrate { region, to });
+                }
+            }
+        }
+        actions
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -468,32 +1264,48 @@ mod tests {
         Payload::Bits(BitRow::zeros(bits))
     }
 
+    fn lru_registry(devices: usize, cap_bits: u64) -> ResidencyRegistry {
+        ResidencyRegistry::with_capacity(
+            devices,
+            CapacityConfig {
+                capacity: DeviceCapacity::of_bits(cap_bits),
+                policy: EvictionPolicy::Lru,
+            },
+            CopyCostModel::default(),
+        )
+    }
+
     #[test]
     fn register_lookup_migrate_remove() {
         let reg = ResidencyRegistry::new();
         assert!(reg.is_empty());
         let r = reg.register(DeviceId(1), payload(1000));
         assert_eq!(reg.owner(r), Some(DeviceId(1)));
+        assert_eq!(reg.replicas(r), Some(vec![DeviceId(1)]));
         assert_eq!(reg.bits(r), Some(1000));
         assert_eq!(reg.len(), 1);
         assert_eq!(reg.resident_bits_on(DeviceId(1)), 1000);
         assert_eq!(reg.resident_bits_on(DeviceId(0)), 0);
-        assert!(reg.migrate(r, DeviceId(0)));
+        assert!(reg.migrate(r, DeviceId(0)).unwrap());
         assert_eq!(reg.owner(r), Some(DeviceId(0)));
+        assert_eq!(reg.resident_bits_on(DeviceId(1)), 0);
+        assert_eq!(reg.resident_bits_on(DeviceId(0)), 1000);
         assert!(reg.remove(r).is_some());
         assert_eq!(reg.owner(r), None);
-        assert!(!reg.migrate(r, DeviceId(1)));
+        assert!(!reg.migrate(r, DeviceId(1)).unwrap());
         assert!(reg.remove(r).is_none());
+        reg.check_invariants().unwrap();
     }
 
     #[test]
     fn fleet_bounded_registry_rejects_foreign_devices() {
         let reg = ResidencyRegistry::for_fleet(2);
         let r = reg.register(DeviceId(1), payload(8));
-        assert!(reg.migrate(r, DeviceId(0)));
+        assert!(reg.migrate(r, DeviceId(0)).unwrap());
         // unbounded registries accept anything (standalone use)
         let free = ResidencyRegistry::new();
         free.register(DeviceId(99), payload(8));
+        free.check_invariants().unwrap();
     }
 
     #[test]
@@ -507,7 +1319,171 @@ mod tests {
     fn fleet_bounded_migrate_panics_out_of_range() {
         let reg = ResidencyRegistry::for_fleet(2);
         let r = reg.register(DeviceId(0), payload(8));
-        reg.migrate(r, DeviceId(5));
+        let _ = reg.migrate(r, DeviceId(5));
+    }
+
+    #[test]
+    fn fail_fast_refuses_beyond_capacity() {
+        let reg = ResidencyRegistry::with_capacity(
+            2,
+            CapacityConfig {
+                capacity: DeviceCapacity::of_bits(1000),
+                policy: EvictionPolicy::FailFast,
+            },
+            CopyCostModel::default(),
+        );
+        let a = reg.try_register(DeviceId(0), payload(600)).unwrap();
+        // 600 + 600 > 1000 and fail-fast never evicts
+        match reg.try_register(DeviceId(0), payload(600)) {
+            Err(CapacityError::DeviceFull {
+                device,
+                needed_bits,
+                capacity_bits,
+            }) => {
+                assert_eq!(device, DeviceId(0));
+                assert_eq!(needed_bits, 600);
+                assert_eq!(capacity_bits, 1000);
+            }
+            other => panic!("expected DeviceFull, got {other:?}"),
+        }
+        // the other device has its own budget
+        reg.try_register(DeviceId(1), payload(600)).unwrap();
+        // a region larger than the whole capacity is refused outright
+        match reg.try_register(DeviceId(1), payload(2000)) {
+            Err(CapacityError::RegionTooLarge { bits, .. }) => assert_eq!(bits, 2000),
+            other => panic!("expected RegionTooLarge, got {other:?}"),
+        }
+        assert_eq!(reg.capacity_refusals(), 2);
+        assert_eq!(reg.evictions(), 0);
+        assert_eq!(reg.owner(a), Some(DeviceId(0)), "incumbent untouched");
+        assert!(reg.resident_bits_on(DeviceId(0)) <= 1000);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_hit_first() {
+        let reg = lru_registry(1, 2048);
+        let a = reg.register(DeviceId(0), payload(1024));
+        let b = reg.register(DeviceId(0), payload(1024));
+        // touch `a` so `b` becomes the LRU victim
+        let _ = reg
+            .resolve(&ClusterRequest::resident(BulkOp::Not, vec![a]))
+            .unwrap();
+        let c = reg.register(DeviceId(0), payload(1024));
+        assert_eq!(reg.owner(a), Some(DeviceId(0)), "recently hit survives");
+        assert_eq!(reg.owner(b), None, "LRU region evicted");
+        assert_eq!(reg.owner(c), Some(DeviceId(0)));
+        assert_eq!(reg.evictions(), 1);
+        assert!(reg.resident_bits_on(DeviceId(0)) <= 2048);
+        // the evicted handle yields the defined error, not UnknownRegion
+        let stale = ClusterRequest::resident(BulkOp::Not, vec![b]);
+        assert_eq!(
+            reg.placement_of(&stale).unwrap_err(),
+            RouteError::Evicted(b)
+        );
+        assert_eq!(reg.resolve(&stale).unwrap_err(), RouteError::Evicted(b));
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cost_aware_refuses_to_thrash_fresh_regions() {
+        let reg = ResidencyRegistry::with_capacity(
+            2,
+            CapacityConfig {
+                capacity: DeviceCapacity::of_bits(1024),
+                policy: EvictionPolicy::CostAware {
+                    rent_ns_per_tick: 2.0,
+                },
+            },
+            CopyCostModel::default(),
+        );
+        let a = reg.register(DeviceId(0), payload(1024));
+        // `a` has accrued no idle time: its re-copy cost (7.5 ns for two
+        // bursts) exceeds 0 × rent, so eviction is refused
+        assert!(matches!(
+            reg.try_register(DeviceId(0), payload(1024)),
+            Err(CapacityError::DeviceFull { .. })
+        ));
+        assert_eq!(reg.owner(a), Some(DeviceId(0)));
+        // let the clock advance (registrations elsewhere tick it): after
+        // enough idle ticks the rent covers the re-copy stream
+        for _ in 0..4 {
+            reg.register(DeviceId(1), payload(8));
+        }
+        let b = reg.try_register(DeviceId(0), payload(1024)).unwrap();
+        assert_eq!(reg.owner(a), None, "idle region finally evictable");
+        assert_eq!(reg.owner(b), Some(DeviceId(0)));
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn replicate_then_migrate_collapses_coherently() {
+        let reg = ResidencyRegistry::for_fleet(4);
+        let r = reg.register(DeviceId(0), payload(512));
+        assert!(reg.replicate(r, DeviceId(2)).unwrap());
+        // replicating twice is idempotent
+        assert!(reg.replicate(r, DeviceId(2)).unwrap());
+        assert_eq!(reg.replicas(r), Some(vec![DeviceId(0), DeviceId(2)]));
+        assert_eq!(reg.resident_bits_on(DeviceId(0)), 512);
+        assert_eq!(reg.resident_bits_on(DeviceId(2)), 512);
+        // migration collapses every replica onto the target
+        assert!(reg.migrate(r, DeviceId(3)).unwrap());
+        assert_eq!(reg.replicas(r), Some(vec![DeviceId(3)]));
+        assert_eq!(reg.resident_bits_on(DeviceId(0)), 0);
+        assert_eq!(reg.resident_bits_on(DeviceId(2)), 0);
+        assert_eq!(reg.resident_bits_on(DeviceId(3)), 512);
+        // unknown regions replicate to Ok(false)
+        assert!(!reg.replicate(RegionId(404), DeviceId(0)).unwrap());
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn replication_never_evicts_incumbents() {
+        let reg = lru_registry(2, 1024);
+        let incumbent = reg.register(DeviceId(1), payload(1024));
+        let hot = reg.register(DeviceId(0), payload(512));
+        // dev1 is full: replication must refuse rather than evict,
+        // even under an eviction-capable policy
+        match reg.replicate(hot, DeviceId(1)) {
+            Err(CapacityError::DeviceFull { device, .. }) => assert_eq!(device, DeviceId(1)),
+            other => panic!("expected DeviceFull, got {other:?}"),
+        }
+        assert_eq!(reg.owner(incumbent), Some(DeviceId(1)), "incumbent survives");
+        assert_eq!(reg.replicas(hot), Some(vec![DeviceId(0)]));
+        assert_eq!(reg.evictions(), 0);
+        assert_eq!(reg.capacity_refusals(), 1);
+        // registration (unlike replication) may evict to make room
+        let fresh = reg.register(DeviceId(1), payload(1024));
+        assert_eq!(reg.owner(incumbent), None);
+        assert_eq!(reg.owner(fresh), Some(DeviceId(1)));
+        assert_eq!(reg.evictions(), 1);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_from_drops_replicas_then_tombstones() {
+        let reg = ResidencyRegistry::for_fleet(3);
+        let r = reg.register(DeviceId(0), payload(256));
+        assert!(reg.replicate(r, DeviceId(1)).unwrap());
+        assert_eq!(reg.evict_from(r, DeviceId(2)), EvictOutcome::NotResident);
+        assert_eq!(reg.evict_from(r, DeviceId(0)), EvictOutcome::ReplicaDropped);
+        assert_eq!(reg.owner(r), Some(DeviceId(1)), "replica still serves");
+        assert_eq!(reg.evict_from(r, DeviceId(1)), EvictOutcome::RegionEvicted);
+        assert_eq!(reg.owner(r), None);
+        assert_eq!(reg.evict_from(r, DeviceId(1)), EvictOutcome::NotResident);
+        assert_eq!(reg.evictions(), 2);
+        // tombstoned, not unknown
+        let stale = ClusterRequest::resident(BulkOp::Not, vec![r]);
+        assert_eq!(reg.resolve(&stale).unwrap_err(), RouteError::Evicted(r));
+        // an owner-initiated remove is NOT an eviction
+        let q = reg.register(DeviceId(0), payload(256));
+        reg.remove(q);
+        let gone = ClusterRequest::resident(BulkOp::Not, vec![q]);
+        assert_eq!(
+            reg.resolve(&gone).unwrap_err(),
+            RouteError::UnknownRegion(q)
+        );
+        reg.check_invariants().unwrap();
     }
 
     #[test]
@@ -523,7 +1499,7 @@ mod tests {
         );
         let cheap = reg.placement_of(&req).unwrap();
         let (_, full) = reg.resolve(&req).unwrap();
-        assert_eq!(cheap.resident_bits, full.resident_bits);
+        assert_eq!(cheap.resident, full.resident);
         assert_eq!(cheap.inline_bits, full.inline_bits);
         assert_eq!(cheap.preferred(), full.preferred());
         let bogus = ClusterRequest::resident(BulkOp::Not, vec![RegionId(404)]);
@@ -557,9 +1533,14 @@ mod tests {
         assert_eq!(bulk.operands.len(), 2);
         assert_eq!(bulk.payload_bits(), 2048);
         assert_eq!(place.inline_bits, 2048);
-        assert_eq!(place.resident_bits, vec![(DeviceId(1), 2048)]);
+        assert_eq!(
+            place.resident_bits_per_device(),
+            vec![(DeviceId(1), 2048)]
+        );
         assert_eq!(place.preferred(), Some(DeviceId(1)));
         assert_eq!(place.total_resident_bits(), 2048);
+        // resolve counted the routed use
+        assert_eq!(reg.hit_stats(ra).unwrap().0, 1);
     }
 
     #[test]
@@ -589,16 +1570,24 @@ mod tests {
     }
 
     #[test]
-    fn preferred_picks_biggest_owner_lowest_id_on_tie() {
+    fn placement_prefers_biggest_owner_and_spreads_over_replicas() {
         let mut p = Placement::default();
         assert_eq!(p.preferred(), None);
-        p.add_resident(DeviceId(2), 100);
-        p.add_resident(DeviceId(0), 300);
-        p.add_resident(DeviceId(2), 100); // merges: dev2 now 200
-        assert_eq!(p.resident_bits.len(), 2);
+        assert!(p.candidates().is_empty());
+        p.add_resident(RegionId(0), 100, vec![DeviceId(2)]);
+        p.add_resident(RegionId(1), 300, vec![DeviceId(0)]);
+        p.add_resident(RegionId(2), 100, vec![DeviceId(2)]);
         assert_eq!(p.preferred(), Some(DeviceId(0)));
-        p.add_resident(DeviceId(2), 100); // tie at 300 → lowest id wins
+        p.add_resident(RegionId(3), 100, vec![DeviceId(2)]);
+        // tie at 300 → both are candidates, lowest id preferred
+        assert_eq!(p.candidates(), vec![DeviceId(0), DeviceId(2)]);
         assert_eq!(p.preferred(), Some(DeviceId(0)));
+        assert_eq!(p.total_resident_bits(), 600);
+        // a replicated operand counts toward every holder
+        let mut q = Placement::default();
+        q.add_resident(RegionId(9), 512, vec![DeviceId(1), DeviceId(3)]);
+        assert_eq!(q.candidates(), vec![DeviceId(1), DeviceId(3)]);
+        assert_eq!(q.total_resident_bits(), 512);
     }
 
     #[test]
@@ -617,11 +1606,13 @@ mod tests {
     fn locality_charge_hits_and_misses() {
         let topo = Topology::tiny(4); // two ranks per channel
         let loc = LocalityModel::from_topology(&topo, TimingParams::default());
+        assert_eq!(loc.devices(), 4);
         assert!(loc.same_channel(DeviceId(0), DeviceId(1)));
         assert!(!loc.same_channel(DeviceId(1), DeviceId(2)));
+        assert_eq!(loc.channel(DeviceId(3)), 1);
 
         let mut p = Placement::default();
-        p.add_resident(DeviceId(0), 2048);
+        p.add_resident(RegionId(0), 2048, vec![DeviceId(0)]);
         // executing on the owner: free
         let hit = loc.charge(&p, DeviceId(0));
         assert!(hit.is_free());
@@ -646,14 +1637,96 @@ mod tests {
     }
 
     #[test]
+    fn replicas_make_misses_cheaper_and_hits_wider() {
+        let topo = Topology::tiny(4);
+        let loc = LocalityModel::from_topology(&topo, TimingParams::default());
+        let mut p = Placement::default();
+        // replicated on both channels: dev0 (channel 0) and dev2 (channel 1)
+        p.add_resident(RegionId(0), 2048, vec![DeviceId(0), DeviceId(2)]);
+        // both replica holders are free
+        assert!(loc.charge(&p, DeviceId(0)).is_free());
+        assert!(loc.charge(&p, DeviceId(2)).is_free());
+        // dev1 shares channel 0 with dev0 (30 ns serialized) but can pull
+        // from dev2 across channels for 15 ns — the cheapest replica wins
+        let c = loc.charge(&p, DeviceId(1));
+        assert!((c.ns - 15.0).abs() < 1e-9);
+        // replication/migration streams price the same way
+        let rep = loc.cheapest_copy(2048, &[DeviceId(0)], DeviceId(2));
+        assert!((rep.ns - 15.0).abs() < 1e-9);
+        assert_eq!(rep.bytes, 256);
+        // already resident → free; no sources → host stream
+        assert!(loc
+            .cheapest_copy(2048, &[DeviceId(0)], DeviceId(0))
+            .is_free());
+        let host = loc.cheapest_copy(2048, &[], DeviceId(1));
+        assert!((host.ns - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn replication_policy_replicates_hot_and_migrates_cold() {
+        let topo = Topology::tiny(4);
+        let loc = LocalityModel::from_topology(&topo, TimingParams::default());
+        let reg = lru_registry(4, 4096);
+        let hot = reg.register(DeviceId(0), payload(1024));
+        let cold = reg.register(DeviceId(0), payload(3000));
+        let policy = ReplicationPolicy::new(ReplicationConfig {
+            hot_uses: 3,
+            amortize_factor: 1.0,
+            max_replicas: 2,
+            cold_uses: 0,
+            high_watermark: 0.9,
+        });
+        let window = [RegionUse {
+            region: hot,
+            uses: 5,
+            misses: 2,
+        }];
+        let actions = policy.plan(&window, &reg, &loc, &[0, 0, 0, 0]);
+        // dev0 sits at 4024/4096 > 0.9 → sheds its cold region; the hot
+        // one gains a replica on channel 1
+        assert!(actions.iter().any(|a| matches!(
+            a,
+            PlacementAction::Replicate { region, to }
+                if *region == hot && (to.0 == 2 || to.0 == 3)
+        )));
+        assert!(actions.iter().any(|a| matches!(
+            a,
+            PlacementAction::Migrate { region, .. } if *region == cold
+        )));
+        // below the hot threshold nothing replicates
+        let quiet = [RegionUse {
+            region: hot,
+            uses: 1,
+            misses: 0,
+        }];
+        reg.remove(cold);
+        let none = policy.plan(&quiet, &reg, &loc, &[0, 0, 0, 0]);
+        assert!(none.is_empty(), "{none:?}");
+    }
+
+    #[test]
     fn route_error_messages() {
         let e = RouteError::UnknownRegion(RegionId(9));
         assert!(e.to_string().contains("region9"), "{e}");
+        let ev = RouteError::Evicted(RegionId(4));
+        assert!(ev.to_string().contains("evicted"), "{ev}");
         let a: RouteError = AdmissionError::Overloaded {
             devices: 2,
             max_inflight_per_device: 1,
         }
         .into();
         assert!(a.to_string().contains("overloaded"), "{a}");
+        let c = CapacityError::DeviceFull {
+            device: DeviceId(1),
+            needed_bits: 64,
+            capacity_bits: 32,
+        };
+        assert!(c.to_string().contains("dev1"), "{c}");
+        let big = CapacityError::RegionTooLarge {
+            device: DeviceId(0),
+            bits: 128,
+            capacity_bits: 64,
+        };
+        assert!(big.to_string().contains("outright"), "{big}");
     }
 }

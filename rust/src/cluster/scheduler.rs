@@ -104,6 +104,12 @@ impl<T> Scheduler<T> {
         self.shards[shard].queue.lock().unwrap().len()
     }
 
+    /// Per-shard queue depths (racy snapshot; the replication policy uses
+    /// them as a load tie-breaker when picking placement targets).
+    pub fn depths(&self) -> Vec<usize> {
+        (0..self.shards.len()).map(|i| self.depth(i)).collect()
+    }
+
     /// Enqueue a task on a device queue and mark the shard ready.
     pub fn submit(&self, shard: usize, task: T) {
         self.shards[shard].queue.lock().unwrap().push_back(task);
@@ -219,6 +225,15 @@ mod tests {
         assert_eq!(s.try_acquire(9, true), Some(2));
         assert_eq!(s.try_acquire(9, true), Some(0));
         assert_eq!(s.try_acquire(9, true), None);
+    }
+
+    #[test]
+    fn depths_snapshot_all_shards() {
+        let s: Scheduler<u32> = Scheduler::new(3);
+        s.submit(1, 10);
+        s.submit(1, 11);
+        s.submit(2, 20);
+        assert_eq!(s.depths(), vec![0, 2, 1]);
     }
 
     #[test]

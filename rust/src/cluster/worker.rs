@@ -85,6 +85,11 @@ pub(crate) fn worker_loop<D: Device>(
                     // charge operand movement against the device that
                     // actually executes (correct under stealing)
                     fleet.record_copy(me.0, &locality.charge(p, me));
+                    // per-region traffic feeds the replication policy's
+                    // observation window (hit = a replica was here)
+                    for span in &p.resident {
+                        fleet.record_region_use(span.region, span.replicas.contains(&me));
+                    }
                 }
                 let rx = device.submit(task.req);
                 (task.seq, task.home, task.reply, rx)

@@ -20,6 +20,11 @@ impl Payload {
         }
     }
 
+    /// Size in whole bytes — the unit the cluster's residency layer
+    /// meters copy traffic and capacity footprints in.
+    pub fn bytes(&self) -> u64 {
+        (self.bits() as u64).div_ceil(8)
+    }
 }
 
 /// One bulk in-memory operation over arbitrary-size payloads.
@@ -120,5 +125,12 @@ mod tests {
         let r = BulkRequest::add32(vec![1, 2, 3], vec![4, 5, 6]);
         assert_eq!(r.payload_bits(), 96);
         assert_eq!(r.operand_bits(), 192);
+    }
+
+    #[test]
+    fn payload_bytes_round_up() {
+        assert_eq!(Payload::Bits(BitRow::zeros(9)).bytes(), 2);
+        assert_eq!(Payload::Bits(BitRow::zeros(16)).bytes(), 2);
+        assert_eq!(Payload::U32(vec![0; 2]).bytes(), 8);
     }
 }

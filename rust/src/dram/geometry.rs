@@ -70,6 +70,54 @@ impl DramGeometry {
     }
 }
 
+/// Residency capacity of one device: how many operand bits the cluster's
+/// residency layer may keep resident on it.
+///
+/// Derived from the device's data space ([`DramGeometry::data_bits_total`],
+/// i.e. banks × [`DramGeometry::data_bits_per_bank`]) minus a configurable
+/// fraction reserved for staging/wave rows — operands mid-flight through
+/// the X(N)OR pipeline are written into rows the residency layer must not
+/// hand out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeviceCapacity {
+    /// resident operand bits the device may hold (`u64::MAX` = unbounded)
+    pub resident_bits: u64,
+}
+
+impl DeviceCapacity {
+    /// No enforcement (the pre-capacity behaviour; standalone registries).
+    pub fn unbounded() -> Self {
+        DeviceCapacity {
+            resident_bits: u64::MAX,
+        }
+    }
+
+    /// Explicit bit budget (tests and capacity ablations).
+    pub fn of_bits(bits: u64) -> Self {
+        DeviceCapacity {
+            resident_bits: bits,
+        }
+    }
+
+    /// Derive from a geometry, reserving `staging_fraction` ∈ [0, 1) of
+    /// the data space for staging/wave rows.
+    pub fn from_geometry(g: &DramGeometry, staging_fraction: f64) -> Self {
+        assert!(
+            (0.0..1.0).contains(&staging_fraction),
+            "staging fraction must be in [0, 1), got {staging_fraction}"
+        );
+        let usable = g.data_bits_total() as f64 * (1.0 - staging_fraction);
+        DeviceCapacity {
+            resident_bits: usable as u64,
+        }
+    }
+
+    /// True when no bound is enforced.
+    pub fn is_unbounded(&self) -> bool {
+        self.resident_bits == u64::MAX
+    }
+}
+
 /// Physical location of a data row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PhysAddr {
@@ -168,5 +216,24 @@ mod tests {
     fn compute_width() {
         let g = DramGeometry::default();
         assert_eq!(g.compute_width_bits(), 8 * 32 * 8192);
+    }
+
+    #[test]
+    fn device_capacity_reserves_staging_fraction() {
+        let g = DramGeometry::tiny();
+        let total = g.data_bits_total() as u64;
+        let full = DeviceCapacity::from_geometry(&g, 0.0);
+        assert_eq!(full.resident_bits, total);
+        assert!(!full.is_unbounded());
+        let quarter_reserved = DeviceCapacity::from_geometry(&g, 0.25);
+        assert_eq!(quarter_reserved.resident_bits, total * 3 / 4);
+        assert!(DeviceCapacity::unbounded().is_unbounded());
+        assert_eq!(DeviceCapacity::of_bits(512).resident_bits, 512);
+    }
+
+    #[test]
+    #[should_panic(expected = "staging fraction")]
+    fn device_capacity_rejects_full_reservation() {
+        DeviceCapacity::from_geometry(&DramGeometry::tiny(), 1.0);
     }
 }

@@ -14,7 +14,10 @@
 use drim::analog::montecarlo::{run_montecarlo, TABLE3_CORNERS, TABLE3_PAPER};
 use drim::analog::params as aparams;
 use drim::analog::transient as rtransient;
-use drim::cluster::{AdmissionConfig, ClusterConfig, DrimCluster, FleetSnapshot};
+use drim::cluster::{
+    AdmissionConfig, CapacityConfig, ClusterConfig, DeviceCapacity, DrimCluster,
+    EvictionPolicy, FleetSnapshot, ReplicationPolicy,
+};
 use drim::controller::enables;
 use drim::coordinator::{BatchPolicy, BulkRequest, DrimService, Payload, ServiceConfig};
 use drim::dram::geometry::DramGeometry;
@@ -70,10 +73,14 @@ COMMANDS:
                                the fleet honors --queue-cap / --no-steal)
   cluster [--devices N] [--requests N] [--bits N] [--seed S] [--queue-cap N]
           [--no-steal] [--sweep] [--locality]
+          [--capacity] [--regions N] [--theta X]
                               multi-device scale-out workload + fleet
                               metrics (--sweep ablates 1/2/4/8 devices;
                                --locality ablates resident vs carried
-                               operand placement and the copy traffic)
+                               operand placement and the copy traffic;
+                               --capacity ablates footprint enforcement,
+                               eviction and hot-region replication under a
+                               Zipf(--theta) popularity law)
 ";
 
 fn cmd_isa(args: &Args) {
@@ -322,8 +329,10 @@ fn cmd_demo(args: &Args) {
         _ => unreachable!(),
     };
     println!(
-        "  executed {} AAPs, simulated latency {:.2} µs, DRAM energy {:.2} µJ",
+        "  executed {} AAPs for {} result bytes, simulated latency {:.2} µs, \
+         DRAM energy {:.2} µJ",
         resp.stats.aaps,
+        resp.result.bytes(),
         resp.sim_latency_ns / 1e3,
         resp.stats.energy_pj / 1e6
     );
@@ -427,6 +436,10 @@ fn serve_fleet(args: &Args, per_device: ServiceConfig, devices: usize, n: usize,
 fn cmd_cluster(args: &Args) {
     if args.has("locality") {
         cmd_cluster_locality(args);
+        return;
+    }
+    if args.has("capacity") {
+        cmd_cluster_capacity(args);
         return;
     }
     let requests = args.usize("requests", 128);
@@ -535,5 +548,82 @@ fn cmd_cluster_locality(args: &Args) {
         "\n→ resident placement eliminates operand movement; carried \
          payloads pay the host→device stream on every request, and \
          misses pay the inter-device copy (2× on a shared channel)"
+    );
+}
+
+/// `cluster --capacity`: footprint enforcement, eviction and hot-region
+/// replication under a Zipf-skewed popularity law. Per-device capacity is
+/// expressed relative to each device's share of the working set; the
+/// workload driver is `DrimCluster::pump_capacity`, shared with
+/// benches/ablate_capacity.rs.
+fn cmd_cluster_capacity(args: &Args) {
+    let devices = args.usize("devices", 4);
+    let regions = args.usize("regions", 24);
+    let requests = args.usize("requests", 96);
+    let bits = args.usize("bits", 65_536);
+    let theta = args.f64("theta", 1.2);
+    let seed = args.u64("seed", 3);
+    let working_set_bits = (regions * bits) as u64;
+    let share = working_set_bits / devices as u64;
+    println!(
+        "capacity ablation: {requests} requests over {regions} Zipf({theta}) \
+         regions × {bits} bits, {devices} devices \
+         (working set {} KB, per-device share {} KB, steal off)\n",
+        working_set_bits / 8192,
+        share / 8192,
+    );
+    let mut t = Table::new(&[
+        "capacity",
+        "policy",
+        "evictions",
+        "requeues",
+        "hits",
+        "misses",
+        "copied KB",
+        "makespan (+copy)",
+    ]);
+    // (capacity label, policy label, per-device capacity as a fraction of
+    // the share, eviction policy, run the replication policy mid-run)
+    type Row = (&'static str, &'static str, f64, EvictionPolicy, bool);
+    let rows: &[Row] = &[
+        ("unbounded", "single-copy", f64::INFINITY, EvictionPolicy::FailFast, false),
+        ("unbounded", "replicate", f64::INFINITY, EvictionPolicy::FailFast, true),
+        ("1.0x share", "lru evict", 1.0, EvictionPolicy::Lru, false),
+        ("0.5x share", "lru evict", 0.5, EvictionPolicy::Lru, false),
+    ];
+    for &(label, policy_label, frac, policy, replicate) in rows {
+        let capacity = if frac.is_finite() {
+            DeviceCapacity::of_bits((share as f64 * frac) as u64)
+        } else {
+            DeviceCapacity::unbounded()
+        };
+        let cluster = DrimCluster::new(ClusterConfig {
+            admission: AdmissionConfig {
+                max_inflight_per_device: args.usize("queue-cap", 64),
+            },
+            steal: false,
+            capacity: CapacityConfig { capacity, policy },
+            ..ClusterConfig::uniform(devices, ServiceConfig::default())
+        });
+        let rep = ReplicationPolicy::default();
+        let rebalance = replicate.then_some((&rep, 16));
+        let requeues = cluster.pump_capacity(regions, requests, bits, theta, rebalance, seed);
+        let snap = cluster.shutdown();
+        t.row(&[
+            label.to_string(),
+            policy_label.to_string(),
+            format!("{}", snap.evictions),
+            format!("{requeues}"),
+            format!("{}", snap.resident_hits),
+            format!("{}", snap.resident_misses),
+            format!("{:.1}", snap.copied_bytes as f64 / 1024.0),
+            format!("{:.2} µs", snap.makespan_with_copy_ns() as f64 / 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n→ replication spreads hot regions across channels once the \
+         window's traffic amortizes the stream; bounded capacity evicts \
+         LRU regions and requeues their requests instead of collapsing"
     );
 }

@@ -31,6 +31,19 @@ pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng) -> CaseResult) {
     }
 }
 
+/// Run `f` once per explicitly-listed seed — a fixed seed matrix. The
+/// concurrency stress suites use this instead of [`check`] so every CI
+/// run exercises the same interleaving-provoking seeds, and a failure
+/// still reports which seed to replay.
+pub fn check_seeds(name: &str, seeds: &[u64], mut f: impl FnMut(&mut Rng) -> CaseResult) {
+    for &seed in seeds {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
 /// Assert helper producing `CaseResult`s.
 #[macro_export]
 macro_rules! prop_assert {
@@ -71,5 +84,23 @@ mod tests {
                 Err(format!("x={x}"))
             }
         });
+    }
+
+    #[test]
+    fn seed_matrix_runs_each_seed_once() {
+        let mut seen = Vec::new();
+        check_seeds("matrix", &[7, 11, 13], |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[0], Rng::new(7).next_u64());
+        assert_eq!(seen[2], Rng::new(13).next_u64());
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed 0x2a")]
+    fn seed_matrix_failure_names_the_seed() {
+        check_seeds("names_seed", &[42], |_| Err("boom".into()));
     }
 }

@@ -89,6 +89,34 @@ impl Rng {
             *w = self.next_u64();
         }
     }
+
+    /// Sample an index from a cumulative distribution (ascending, last
+    /// element ≈ 1.0) by inverse-CDF binary search — pair with
+    /// [`zipf_cdf`] for skewed-popularity workloads.
+    pub fn sample_cdf(&mut self, cdf: &[f64]) -> usize {
+        assert!(!cdf.is_empty());
+        let u = self.f64();
+        let i = cdf.partition_point(|&c| c <= u);
+        i.min(cdf.len() - 1)
+    }
+}
+
+/// Cumulative distribution of a Zipf(`theta`) popularity law over ranks
+/// `0..n` (rank 0 most popular): weight(k) ∝ 1/(k+1)^theta. `theta = 0`
+/// is uniform; larger values skew harder toward the head — the shape the
+/// capacity/replication ablations use to model hot operand regions.
+pub fn zipf_cdf(n: usize, theta: f64) -> Vec<f64> {
+    assert!(n > 0, "a Zipf law needs at least one rank");
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for k in 0..n {
+        acc += 1.0 / ((k + 1) as f64).powf(theta);
+        cdf.push(acc);
+    }
+    for c in &mut cdf {
+        *c /= acc;
+    }
+    cdf
 }
 
 #[cfg(test)]
@@ -148,5 +176,35 @@ mod tests {
         for _ in 0..10_000 {
             assert!(r.below(17) < 17);
         }
+    }
+
+    #[test]
+    fn zipf_cdf_is_normalized_and_monotone() {
+        let cdf = zipf_cdf(8, 1.2);
+        assert_eq!(cdf.len(), 8);
+        assert!((cdf[7] - 1.0).abs() < 1e-12);
+        for w in cdf.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // theta = 0 degenerates to uniform
+        let flat = zipf_cdf(4, 0.0);
+        assert!((flat[0] - 0.25).abs() < 1e-12);
+        assert!((flat[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zipf_sampling_skews_toward_the_head() {
+        let cdf = zipf_cdf(16, 1.5);
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 16];
+        for _ in 0..20_000 {
+            let i = r.sample_cdf(&cdf);
+            assert!(i < 16);
+            counts[i] += 1;
+        }
+        assert!(counts[0] > counts[1], "{counts:?}");
+        assert!(counts[1] > counts[4], "{counts:?}");
+        // head mass: rank 0 holds ≈ 42% of a 16-rank Zipf(1.5) law
+        assert!(counts[0] > 7000, "{counts:?}");
     }
 }

@@ -1,0 +1,144 @@
+//! Golden regression for the `drim cluster` reporting tables: pins the
+//! header set, row labels, and row *shape* of the `--locality` and
+//! `--capacity` sweeps so CLI reporting cannot silently drift. Timings
+//! and counters are deliberately NOT pinned — only structure.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_drim"))
+        .args(args)
+        .output()
+        .expect("spawn drim");
+    assert!(
+        out.status.success(),
+        "drim {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).expect("utf8 stdout")
+}
+
+/// Split one fixed-width table line into cells (columns are separated by
+/// runs of ≥2 spaces; within-cell text only ever has single spaces).
+fn cells(line: &str) -> Vec<String> {
+    line.split("  ")
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Locate the table whose header line starts with `first_header` (and is
+/// followed by the dash rule, distinguishing it from prose mentioning the
+/// same word) and return (header cells, data-row cells).
+fn table_of(out: &str, first_header: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let lines: Vec<&str> = out.lines().collect();
+    let hdr = (0..lines.len().saturating_sub(1))
+        .find(|&i| {
+            lines[i].trim_start().starts_with(first_header)
+                && lines[i + 1].trim_start().starts_with('-')
+        })
+        .unwrap_or_else(|| panic!("no `{first_header}` table in:\n{out}"));
+    let rows = lines[hdr + 2..]
+        .iter()
+        .take_while(|l| !l.trim().is_empty() && !l.trim_start().starts_with('→'))
+        .map(|l| cells(l))
+        .collect();
+    (cells(lines[hdr]), rows)
+}
+
+#[test]
+fn cluster_locality_table_shape_is_pinned() {
+    let out = run(&[
+        "cluster",
+        "--locality",
+        "--devices",
+        "2",
+        "--requests",
+        "8",
+        "--bits",
+        "2048",
+        "--seed",
+        "1",
+    ]);
+    let (headers, rows) = table_of(&out, "placement");
+    assert_eq!(
+        headers,
+        vec![
+            "placement",
+            "hits",
+            "misses",
+            "copied KB",
+            "copy cycles",
+            "makespan (compute)",
+            "makespan (+copy)",
+        ],
+        "locality table headers drifted:\n{out}"
+    );
+    let labels: Vec<&str> = rows.iter().map(|r| r[0].as_str()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "carried (round-robin)",
+            "resident 50%",
+            "resident 80%",
+            "resident 100%",
+        ],
+        "locality row labels drifted:\n{out}"
+    );
+    for r in &rows {
+        assert_eq!(r.len(), headers.len(), "ragged locality row {r:?}:\n{out}");
+        assert!(r[6].ends_with("µs"), "makespan cell {r:?} lost its unit");
+    }
+}
+
+#[test]
+fn cluster_capacity_table_shape_is_pinned() {
+    let out = run(&[
+        "cluster",
+        "--capacity",
+        "--devices",
+        "2",
+        "--regions",
+        "6",
+        "--requests",
+        "12",
+        "--bits",
+        "4096",
+        "--seed",
+        "1",
+    ]);
+    let (headers, rows) = table_of(&out, "capacity");
+    assert_eq!(
+        headers,
+        vec![
+            "capacity",
+            "policy",
+            "evictions",
+            "requeues",
+            "hits",
+            "misses",
+            "copied KB",
+            "makespan (+copy)",
+        ],
+        "capacity table headers drifted:\n{out}"
+    );
+    let labels: Vec<(&str, &str)> = rows
+        .iter()
+        .map(|r| (r[0].as_str(), r[1].as_str()))
+        .collect();
+    assert_eq!(
+        labels,
+        vec![
+            ("unbounded", "single-copy"),
+            ("unbounded", "replicate"),
+            ("1.0x share", "lru evict"),
+            ("0.5x share", "lru evict"),
+        ],
+        "capacity row labels drifted:\n{out}"
+    );
+    for r in &rows {
+        assert_eq!(r.len(), headers.len(), "ragged capacity row {r:?}:\n{out}");
+        assert!(r[7].ends_with("µs"), "makespan cell {r:?} lost its unit");
+    }
+}

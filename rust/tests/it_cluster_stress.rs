@@ -1,0 +1,266 @@
+//! Concurrency stress for the capacity-governed residency layer: routed
+//! submits from several producer threads with work stealing ON while a
+//! chaos thread migrates, evicts, and replicates regions concurrently.
+//!
+//! Invariants checked across a fixed seed matrix (`util::prop::check_seeds`):
+//!   * no lost request — every submitted request completes with the
+//!     correct result — and no double execution (a receiver never yields
+//!     a second response);
+//!   * metrics counters sum exactly: completed = merged requests =
+//!     verified responses, hits + misses cover every routed request, and
+//!     admission tickets reconcile with requeue-returned tickets;
+//!   * copy charges land on the executing device (a device that executed
+//!     nothing is charged nothing);
+//!   * footprint on every device stays within its `DeviceCapacity` at
+//!     every instant (polled mid-flight by the chaos thread), and the
+//!     registry bookkeeping stays internally consistent;
+//!   * a resident lookup racing with eviction yields the *defined*
+//!     `RouteError::Evicted` signal — producers recover by re-register +
+//!     resubmit (requeue), never by panicking.
+
+mod common;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use common::{bits_of, host_op};
+use drim::cluster::{
+    CapacityConfig, ClusterConfig, ClusterRequest, DeviceCapacity, DeviceId,
+    DrimCluster, EvictOutcome, EvictionPolicy, RegionId, RouteError,
+};
+use drim::coordinator::Payload;
+use drim::isa::program::BulkOp;
+use drim::util::bitrow::BitRow;
+use drim::util::prop;
+use drim::util::rng::Rng;
+
+const DEVICES: usize = 4;
+const PRODUCERS: usize = 4;
+const PER_PRODUCER: usize = 24;
+const BITS: usize = 1024;
+const CHAOS_OPS: usize = 400;
+const SEEDS: [u64; 3] = [0xA11CE, 0xB0B5EED, 0xC0FFEE];
+
+#[test]
+fn routed_stress_with_stealing_migration_and_eviction() {
+    prop::check_seeds("cluster_stress", &SEEDS, |rng| stress_once(rng.next_u64()));
+}
+
+fn stress_once(seed: u64) -> Result<(), String> {
+    let cap = DeviceCapacity::of_bits((6 * BITS) as u64);
+    let cluster = DrimCluster::new(ClusterConfig {
+        capacity: CapacityConfig {
+            capacity: cap,
+            policy: EvictionPolicy::Lru,
+        },
+        steal: true,
+        ..ClusterConfig::tiny(DEVICES)
+    });
+    let max_id = AtomicU64::new(0);
+    let requeues = AtomicU64::new(0);
+    let verified = AtomicU64::new(0);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        // chaos: migrate/evict/replicate recently issued regions while
+        // routed traffic flows, polling the capacity bound every step
+        {
+            let cluster = &cluster;
+            let max_id = &max_id;
+            let errors = &errors;
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ 0xC4A05);
+                for _ in 0..CHAOS_OPS {
+                    let hi = max_id.load(Ordering::Relaxed);
+                    let region = RegionId(rng.below(hi + 1));
+                    let dev = DeviceId(rng.below(DEVICES as u64) as usize);
+                    match rng.below(3) {
+                        0 => {
+                            let _ = cluster.registry().migrate(region, dev);
+                        }
+                        1 => {
+                            let _: EvictOutcome = cluster.registry().evict_from(region, dev);
+                        }
+                        _ => {
+                            let _ = cluster.registry().replicate(region, dev);
+                        }
+                    }
+                    // the capacity bound must hold at every instant
+                    for d in 0..DEVICES {
+                        let bits = cluster.registry().resident_bits_on(DeviceId(d));
+                        if bits > cap.resident_bits {
+                            errors
+                                .lock()
+                                .unwrap()
+                                .push(format!("dev{d} over capacity mid-flight: {bits}"));
+                            return;
+                        }
+                    }
+                    if let Err(e) = cluster.registry().check_invariants() {
+                        errors.lock().unwrap().push(e);
+                        return;
+                    }
+                    std::thread::yield_now();
+                }
+            });
+        }
+        for p in 0..PRODUCERS {
+            let cluster = &cluster;
+            let max_id = &max_id;
+            let requeues = &requeues;
+            let verified = &verified;
+            let errors = &errors;
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ (p as u64 + 1).wrapping_mul(0x9E37));
+                let fail = |msg: String| errors.lock().unwrap().push(msg);
+                for i in 0..PER_PRODUCER {
+                    let a = BitRow::random(BITS, &mut rng);
+                    let owner = DeviceId((p + i) % DEVICES);
+                    let mut attempts = 0;
+                    loop {
+                        // (re-)register; LRU always makes room for a
+                        // BITS-sized region
+                        let r = match cluster
+                            .try_register_resident(owner, Payload::Bits(a.clone()))
+                        {
+                            Ok(r) => r,
+                            Err(e) => {
+                                fail(format!("producer {p} register refused: {e}"));
+                                return;
+                            }
+                        };
+                        max_id.fetch_max(r.0, Ordering::Relaxed);
+                        let req = ClusterRequest::resident(BulkOp::Not, vec![r]);
+                        match cluster.submit_routed_blocking(req) {
+                            Ok(rx) => {
+                                let resp = match rx.recv() {
+                                    Ok(resp) => resp,
+                                    Err(_) => {
+                                        fail(format!("producer {p} channel closed"));
+                                        return;
+                                    }
+                                };
+                                if *bits_of(&resp.inner.result) != host_op(BulkOp::Not, &[&a]) {
+                                    fail(format!("producer {p} request {i}: wrong result"));
+                                    return;
+                                }
+                                // exactly-once: a second response on the
+                                // same receiver would be a double execution
+                                if rx.try_recv().is_ok() {
+                                    fail(format!("producer {p} request {i}: double response"));
+                                    return;
+                                }
+                                verified.fetch_add(1, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(RouteError::Evicted(_)) => {
+                                // the defined shed/requeue signal
+                                requeues.fetch_add(1, Ordering::Relaxed);
+                                attempts += 1;
+                                if attempts > 50 {
+                                    fail(format!("producer {p} request {i}: requeue livelock"));
+                                    return;
+                                }
+                            }
+                            Err(e) => {
+                                // UnknownRegion here would mean eviction
+                                // skipped its tombstone; Admission means a
+                                // blocking path shed — both are bugs
+                                fail(format!("producer {p} request {i}: undefined error {e:?}"));
+                                return;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let found = errors.into_inner().unwrap();
+    if !found.is_empty() {
+        return Err(found.join("; "));
+    }
+    let requeues = requeues.load(Ordering::Relaxed);
+    let verified = verified.load(Ordering::Relaxed);
+    let snap = cluster.shutdown();
+    let total = (PRODUCERS * PER_PRODUCER) as u64;
+    if verified != total {
+        return Err(format!("verified {verified} of {total} requests"));
+    }
+    // counters sum exactly: every verified request completed exactly once
+    if snap.completed != total {
+        return Err(format!("completed {} != {total}", snap.completed));
+    }
+    if snap.merged.requests != total {
+        return Err(format!("device requests {} != {total}", snap.merged.requests));
+    }
+    if snap.resident_hits + snap.resident_misses != total {
+        return Err(format!(
+            "hits {} + misses {} != {total}",
+            snap.resident_hits, snap.resident_misses
+        ));
+    }
+    // admission reconciles: a requeued attempt may have won (and
+    // returned) a ticket before resolution observed the eviction
+    if snap.admitted < total || snap.admitted - total > requeues {
+        return Err(format!(
+            "admitted {} outside [{total}, {total} + {requeues}]",
+            snap.admitted
+        ));
+    }
+    if snap.shed != 0 {
+        return Err(format!("blocking submits shed {} requests", snap.shed));
+    }
+    // copy charges land on the executing device only
+    for (d, per) in snap.per_device.iter().enumerate() {
+        if per.requests == 0 && snap.copy_ns_per_device[d] != 0 {
+            return Err(format!(
+                "dev{d} executed nothing but was charged {} ns of copy",
+                snap.copy_ns_per_device[d]
+            ));
+        }
+    }
+    // the final state still satisfies every registry invariant
+    cluster.registry().check_invariants()?;
+    Ok(())
+}
+
+/// A queued request holds materialized payloads, not handles: evicting its
+/// region after admission must not dangle it — and the *next* use of the
+/// stale handle gets the defined error without burning a ticket.
+#[test]
+fn eviction_after_submit_does_not_dangle() {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        capacity: CapacityConfig {
+            capacity: DeviceCapacity::of_bits((4 * BITS) as u64),
+            policy: EvictionPolicy::Lru,
+        },
+        ..ClusterConfig::tiny(2)
+    });
+    let mut rng = Rng::new(71);
+    let a = BitRow::random(BITS, &mut rng);
+    let r = cluster
+        .try_register_resident(DeviceId(1), Payload::Bits(a.clone()))
+        .unwrap();
+    let rx = cluster
+        .submit_routed_blocking(ClusterRequest::resident(BulkOp::Not, vec![r]))
+        .unwrap();
+    // evict while the request is in flight: it was materialized at
+    // resolve time, so it still completes correctly
+    assert_eq!(
+        cluster.registry().evict_from(r, DeviceId(1)),
+        EvictOutcome::RegionEvicted
+    );
+    let resp = rx.recv().expect("in-flight request survives eviction");
+    assert_eq!(*bits_of(&resp.inner.result), host_op(BulkOp::Not, &[&a]));
+    // the stale handle now yields the defined error, ticket-free
+    match cluster.try_submit_routed(ClusterRequest::resident(BulkOp::Not, vec![r])) {
+        Err(RouteError::Evicted(rr)) => assert_eq!(rr, r),
+        other => panic!("expected Evicted, got {other:?}"),
+    }
+    let snap = cluster.shutdown();
+    assert_eq!(snap.admitted, 1, "the stale resubmit must not take a ticket");
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.evictions, 1);
+}

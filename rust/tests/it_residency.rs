@@ -80,9 +80,10 @@ fn forced_miss_is_charged_exactly() {
     let req = ClusterRequest::resident(BulkOp::Xnor2, vec![ra, rb]);
 
     // what the model says executing on dev1 should cost: both operands
-    // stream from dev0, merged into one per-source transfer
+    // stream from their dev0 replica
     let mut placement = Placement::default();
-    placement.add_resident(DeviceId(0), 2 * bits);
+    placement.add_resident(ra, bits, vec![DeviceId(0)]);
+    placement.add_resident(rb, bits, vec![DeviceId(0)]);
     let want = cluster.locality().charge(&placement, DeviceId(1));
     assert!(want.bytes > 0 && want.cycles > 0);
 
@@ -175,7 +176,7 @@ fn migration_moves_the_preferred_executor() {
     let ra = cluster.register_resident(DeviceId(0), Payload::Bits(a.clone()));
     let req = ClusterRequest::resident(BulkOp::Not, vec![ra]);
     assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(0)));
-    assert!(cluster.registry().migrate(ra, DeviceId(1)));
+    assert!(cluster.registry().migrate(ra, DeviceId(1)).unwrap());
     assert_eq!(cluster.route(&req).unwrap(), Some(DeviceId(1)));
     let resp = cluster.run_routed(req).unwrap();
     assert_eq!(resp.device, DeviceId(1));

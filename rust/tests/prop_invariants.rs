@@ -1,10 +1,14 @@
 //! Property-based invariants across the stack (mini-proptest harness from
 //! util::prop; every failure reports a replayable seed).
 
+use drim::cluster::{
+    CapacityConfig, ClusterRequest, CopyCostModel, DeviceId, EvictionPolicy,
+    RegionId, ResidencyRegistry, RouteError,
+};
 use drim::controller::{Controller, RowAllocator};
-use drim::coordinator::{BatchPolicy, Router, ServiceConfig};
+use drim::coordinator::{BatchPolicy, Payload, Router, ServiceConfig};
 use drim::dram::command::RowId::{self, *};
-use drim::dram::geometry::DramGeometry;
+use drim::dram::geometry::{DeviceCapacity, DramGeometry};
 use drim::isa::program::BulkOp;
 use drim::util::bitrow::BitRow;
 use drim::util::prop;
@@ -236,6 +240,127 @@ fn prop_wave_latency_monotone() {
         }
         if (im.sim_latency_ns(op, &[a]) - single).abs() > 1e-9 {
             return Err("policies differ for a single request".into());
+        }
+        Ok(())
+    });
+}
+
+/// Residency registry bookkeeping: after ANY interleaving of register /
+/// migrate / replicate / evict / remove on a capacity-bounded registry,
+/// the per-device footprint counters equal the recomputed sum over
+/// regions, every device stays within capacity, and no region loses its
+/// last replica without being tombstoned (all folded into
+/// `check_invariants`, re-verified after every single step).
+#[test]
+fn prop_residency_footprint_consistent_under_interleaving() {
+    prop::check("residency_footprint", 25, |rng| {
+        let devices = 3;
+        let cap = DeviceCapacity::of_bits(4096);
+        let reg = ResidencyRegistry::with_capacity(
+            devices,
+            CapacityConfig {
+                capacity: cap,
+                policy: EvictionPolicy::Lru,
+            },
+            CopyCostModel::default(),
+        );
+        let mut live: Vec<RegionId> = Vec::new();
+        for step in 0..150 {
+            let dev = DeviceId(rng.below(devices as u64) as usize);
+            match rng.below(6) {
+                0 | 1 => {
+                    let bits = 64 * (1 + rng.below(8)) as usize;
+                    match reg.try_register(dev, Payload::Bits(BitRow::zeros(bits))) {
+                        Ok(r) => live.push(r),
+                        // LRU always makes room for a region that fits
+                        Err(e) => return Err(format!("step {step}: register refused: {e}")),
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let r = live[rng.below(live.len() as u64) as usize];
+                    reg.migrate(r, dev)
+                        .map_err(|e| format!("step {step}: migrate refused: {e}"))?;
+                }
+                3 if !live.is_empty() => {
+                    let r = live[rng.below(live.len() as u64) as usize];
+                    // replication never evicts, so a full target refusing
+                    // (DeviceFull) is a defined outcome, not a failure
+                    let _ = reg.replicate(r, dev);
+                }
+                4 if !live.is_empty() => {
+                    let r = live[rng.below(live.len() as u64) as usize];
+                    let _ = reg.evict_from(r, dev);
+                }
+                5 if !live.is_empty() => {
+                    let r = live.swap_remove(rng.below(live.len() as u64) as usize);
+                    let _ = reg.remove(r);
+                }
+                _ => {}
+            }
+            reg.check_invariants()
+                .map_err(|e| format!("step {step}: {e}"))?;
+            for d in 0..devices {
+                let bits = reg.resident_bits_on(DeviceId(d));
+                if bits > cap.resident_bits {
+                    return Err(format!("step {step}: dev{d} over capacity ({bits})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Eviction never dangles a handle: every handle the registry ever issued
+/// either resolves (region live, with a non-empty replica set) or yields
+/// the defined `Evicted` error — never a panic, never `UnknownRegion`
+/// (that would mean the tombstone was skipped), never a silent fallback.
+#[test]
+fn prop_evicted_handles_stay_defined() {
+    prop::check("evicted_handles_defined", 25, |rng| {
+        let devices = 2;
+        let reg = ResidencyRegistry::with_capacity(
+            devices,
+            CapacityConfig {
+                capacity: DeviceCapacity::of_bits(2048),
+                policy: EvictionPolicy::Lru,
+            },
+            CopyCostModel::default(),
+        );
+        // handles "queued" by clients that may outlive their regions
+        let mut queued: Vec<RegionId> = Vec::new();
+        for step in 0..40 {
+            let dev = DeviceId(rng.below(devices as u64) as usize);
+            let bits = 256 * (1 + rng.below(4)) as usize;
+            match reg.try_register(dev, Payload::Bits(BitRow::zeros(bits))) {
+                Ok(r) => queued.push(r),
+                Err(e) => return Err(format!("step {step}: register refused: {e}")),
+            }
+            for &r in &queued {
+                let req = ClusterRequest::resident(BulkOp::Not, vec![r]);
+                match reg.placement_of(&req) {
+                    Ok(p) => {
+                        if p.total_resident_bits() == 0 {
+                            return Err(format!("step {step}: {r} resolved with no span"));
+                        }
+                        if p.resident.iter().any(|s| s.replicas.is_empty()) {
+                            return Err(format!("step {step}: {r} has an empty replica set"));
+                        }
+                    }
+                    Err(RouteError::Evicted(rr)) => {
+                        if rr != r {
+                            return Err(format!("step {step}: wrong region in Evicted"));
+                        }
+                    }
+                    Err(e) => {
+                        return Err(format!("step {step}: {r} undefined error {e:?}"));
+                    }
+                }
+            }
+        }
+        // by the end the 2048-bit devices must have evicted something,
+        // or the property never exercised its subject
+        if reg.evictions() == 0 {
+            return Err("no eviction ever happened".into());
         }
         Ok(())
     });
