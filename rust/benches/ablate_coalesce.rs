@@ -1,0 +1,158 @@
+//! Coalescing ablation: fleet-wide wave packing of sub-wave requests,
+//! ON vs OFF, on the same fleet and workload.
+//!
+//! The wave model charges one full wave per `ceil(chunks / wave_slots)`
+//! no matter how empty the wave is, so a burst of one-chunk requests
+//! dispatched individually burns `requests` waves while filling
+//! `requests / wave_slots` waves' worth of slots. The coalescer packs
+//! compatible sub-wave requests into shared waves before dispatch;
+//! this bench gates that the packing actually pays:
+//!
+//!   * **sub-wave-heavy workload, 4 devices**: coalescing ON must
+//!     achieve *strictly lower* simulated makespan and *strictly
+//!     higher* slot occupancy than OFF, while per-request results stay
+//!     byte-identical;
+//!   * **wave-filling workload**: coalescing ON must be a no-op — same
+//!     makespan, same occupancy, nothing coalesced (wave-filling
+//!     requests bypass staging entirely).
+//!
+//! Stealing is off and the coalescer runs in strict mode with the
+//! burst driver flushing at the end, so group membership — and with it
+//! every gated number — depends only on submission order.
+
+use drim::cluster::{ClusterConfig, CoalesceConfig, DrimCluster, FleetSnapshot};
+use drim::coordinator::{Payload, ServiceConfig};
+use drim::dram::geometry::DramGeometry;
+use drim::util::bench::section;
+use drim::util::stats::fmt_ns;
+use drim::util::table::Table;
+
+const DEVICES: usize = 4;
+const SEED: u64 = 0xC0A1E5CE;
+/// sub-wave burst: one chunk per request (cols = 1024 bits)
+const SUBWAVE_REQUESTS: usize = 128;
+const SUBWAVE_BITS: usize = 1024;
+/// wave-filling burst: exactly one full wave per request (16 chunks)
+const WAVEFILL_REQUESTS: usize = 16;
+const WAVEFILL_BITS: usize = 16 * 1024;
+
+/// Bench-sized device (same geometry as ablate_devices/ablate_locality):
+/// 4 banks × 4 active sub-arrays = 16 wave slots, 1024-bit rows.
+fn bench_service() -> ServiceConfig {
+    ServiceConfig {
+        geometry: DramGeometry {
+            banks: 4,
+            subarrays_per_bank: 8,
+            cols: 1024,
+            active_subarrays: 4,
+        },
+        workers: 2,
+        ..ServiceConfig::default()
+    }
+}
+
+fn run(coalesce: CoalesceConfig, requests: usize, bits: usize) -> (FleetSnapshot, Vec<Payload>) {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        coalesce,
+        ..ClusterConfig::uniform(DEVICES, bench_service())
+    });
+    // the workload driver is shared with `drim cluster --coalesce`
+    let results = cluster.pump_coalesce(requests, bits, SEED);
+    (cluster.shutdown(), results)
+}
+
+fn main() {
+    section("fleet wave coalescing — packed vs private wave sets");
+    println!(
+        "{SUBWAVE_REQUESTS} sub-wave requests × 2 × {SUBWAVE_BITS} bits and \
+         {WAVEFILL_REQUESTS} wave-filling requests × 2 × {WAVEFILL_BITS} bits \
+         over {DEVICES} devices (steal off, strict staging, burst driver)\n"
+    );
+    let strict = CoalesceConfig::strict(u64::MAX);
+    let (sub_off, sub_off_results) =
+        run(CoalesceConfig::off(), SUBWAVE_REQUESTS, SUBWAVE_BITS);
+    let (sub_on, sub_on_results) = run(strict, SUBWAVE_REQUESTS, SUBWAVE_BITS);
+    let (fill_off, fill_off_results) =
+        run(CoalesceConfig::off(), WAVEFILL_REQUESTS, WAVEFILL_BITS);
+    let (fill_on, fill_on_results) = run(strict, WAVEFILL_REQUESTS, WAVEFILL_BITS);
+
+    let mut t = Table::new(&[
+        "workload",
+        "mode",
+        "waves",
+        "occupancy",
+        "coalesced",
+        "waves saved",
+        "makespan",
+    ]);
+    for (workload, mode, snap) in [
+        ("sub-wave", "off", &sub_off),
+        ("sub-wave", "on", &sub_on),
+        ("wave-filling", "off", &fill_off),
+        ("wave-filling", "on", &fill_on),
+    ] {
+        t.row(&[
+            workload.to_string(),
+            mode.to_string(),
+            format!("{}", snap.merged.waves),
+            format!("{:.1}%", 100.0 * snap.slot_occupancy()),
+            format!("{}", snap.coalesced_requests),
+            format!("{}", snap.waves_saved),
+            fmt_ns(snap.merged.sim_ns as f64),
+        ]);
+    }
+    t.print();
+
+    // --- gates -----------------------------------------------------------
+    // byte-exact results: packing must never change what a request computes
+    assert_eq!(
+        sub_on_results, sub_off_results,
+        "coalescing changed sub-wave results"
+    );
+    assert_eq!(
+        fill_on_results, fill_off_results,
+        "coalescing changed wave-filling results"
+    );
+    // sub-wave: ON beats OFF on makespan AND slot occupancy, strictly
+    assert!(
+        sub_on.merged.sim_ns < sub_off.merged.sim_ns,
+        "makespan: on {} vs off {}",
+        sub_on.merged.sim_ns,
+        sub_off.merged.sim_ns
+    );
+    assert!(
+        sub_on.slot_occupancy() > sub_off.slot_occupancy(),
+        "occupancy: on {} vs off {}",
+        sub_on.slot_occupancy(),
+        sub_off.slot_occupancy()
+    );
+    assert!(sub_on.coalesced_requests > 0, "nothing coalesced");
+    assert!(sub_on.waves_saved > 0, "no waves saved");
+    assert_eq!(sub_off.coalesced_requests, 0);
+    // every request completed in both modes
+    assert_eq!(sub_on.completed as usize, SUBWAVE_REQUESTS);
+    assert_eq!(sub_off.completed as usize, SUBWAVE_REQUESTS);
+    // wave-filling: coalescing is a no-op — identical wave economy
+    assert_eq!(fill_on.merged.waves, fill_off.merged.waves);
+    assert_eq!(fill_on.merged.sim_ns, fill_off.merged.sim_ns);
+    assert_eq!(fill_on.coalesced_requests, 0, "full waves must bypass");
+    assert_eq!(fill_on.waves_saved, 0);
+    assert!(
+        (fill_on.slot_occupancy() - fill_off.slot_occupancy()).abs() < 1e-12,
+        "wave-filling occupancy drifted"
+    );
+
+    println!(
+        "\n→ coalescing ON: {} waves ({:.1}% occupancy) vs OFF {} waves \
+         ({:.1}%), makespan {} vs {}, {} waves saved, results byte-identical",
+        sub_on.merged.waves,
+        100.0 * sub_on.slot_occupancy(),
+        sub_off.merged.waves,
+        100.0 * sub_off.slot_occupancy(),
+        fmt_ns(sub_on.merged.sim_ns as f64),
+        fmt_ns(sub_off.merged.sim_ns as f64),
+        sub_on.waves_saved,
+    );
+    println!("\nablate_coalesce bench OK");
+}

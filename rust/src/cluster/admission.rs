@@ -116,9 +116,21 @@ impl AdmissionController {
     fn claim(&self, device: usize) -> bool {
         self.inflight[device]
             .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
-                (v < self.cfg.max_inflight_per_device).then(|| v + 1)
+                (v < self.cfg.max_inflight_per_device).then_some(v + 1)
             })
             .is_ok()
+    }
+
+    /// Is `device`'s whole ticket pool claimed right now? The submission
+    /// pipeline's coalescer uses this as its queue-depth flush trigger:
+    /// staged items hold admission tickets, and staging must never sit on
+    /// a device's *last* tickets while an `admit_wait` caller is parked —
+    /// the parked caller generates no submissions, so nothing else would
+    /// ever advance the hold horizon. (Racy snapshot, like
+    /// [`Self::inflight`]: a false reading only flushes early or one push
+    /// late, never strands.)
+    pub fn is_saturated(&self, device: DeviceId) -> bool {
+        self.inflight(device) >= self.cfg.max_inflight_per_device
     }
 
     /// Claim a slot on the first unsaturated device, starting from the
@@ -463,6 +475,24 @@ mod tests {
         assert_eq!(waiter.join().unwrap(), DeviceId(2));
         assert_eq!(a.waited.load(Ordering::Relaxed), 1);
         assert_eq!(a.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn saturation_probe_tracks_the_ticket_pool() {
+        let a = AdmissionController::new(
+            2,
+            AdmissionConfig {
+                max_inflight_per_device: 2,
+            },
+        );
+        assert!(!a.is_saturated(DeviceId(0)));
+        a.try_admit_to(DeviceId(0)).unwrap();
+        assert!(!a.is_saturated(DeviceId(0)));
+        a.try_admit_to(DeviceId(0)).unwrap();
+        assert!(a.is_saturated(DeviceId(0)));
+        assert!(!a.is_saturated(DeviceId(1)), "per-device, not fleet-wide");
+        a.complete(DeviceId(0));
+        assert!(!a.is_saturated(DeviceId(0)));
     }
 
     #[test]

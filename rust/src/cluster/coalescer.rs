@@ -1,0 +1,449 @@
+//! The fleet-level wave coalescer: stage 2 of the submission pipeline
+//! (admission → **coalesce** → drain → reassemble).
+//!
+//! DRIM's throughput comes from filling every bank × sub-array row slot
+//! each wave, but a stream of sub-wave requests dispatched one per wave
+//! set leaves most of the fleet's `Topology::total_wave_slots` empty —
+//! exactly the utilization loss the wave model penalizes (SIMDRAM makes
+//! the same point for bit-serial operation packing, Ambit for rows
+//! activated per command). The coalescer closes the gap *before*
+//! dispatch: admitted requests are normalized into wave units
+//! (`BulkRequest::wave_units`) and compatible sub-wave items are packed
+//! into full waves, one [`ClusterTask`] group per wave, which the worker
+//! then executes through `Device::submit_batch` as a single co-scheduled
+//! wave set.
+//!
+//! **Compatibility.** Items pack together only when they share the same
+//! home device and the same [`BulkOp`], and every resident operand holds
+//! a replica on that home (inline operands always qualify). An
+//! incompatible or wave-filling item bypasses staging as a singleton
+//! group — in particular a placement miss executes uncoalesced and is
+//! charged its copy cost exactly as before. Groups never exceed one
+//! wave's slots, so *packed items ≤ wave slots* is an invariant the
+//! property suite checks.
+//!
+//! **Flush policy** — a staged item leaves the coalescer when:
+//! 1. its bucket reaches a full wave (`Σ chunks == wave_slots`, or the
+//!    next item would overflow it);
+//! 2. the queue-depth trigger fires: the home device's whole admission
+//!    ticket pool is claimed (staging must never sit on the fleet's last
+//!    tickets while an `admit_wait` caller is parked), or — in eager
+//!    mode — the home's queue is empty, so holding would idle the device;
+//! 3. the max-hold horizon expires: every fleet submission ticks a
+//!    logical clock, and no bucket may hold an item for more than
+//!    `max_hold_submissions` ticks — latency never degrades unboundedly;
+//! 4. the owner flushes explicitly (`DrimCluster::flush_coalesced`, used
+//!    by burst drivers for deterministic packing, and by shutdown).
+//!
+//! In eager mode ([`CoalesceConfig::opportunistic`]) the fleet workers
+//! add a safety leg: a worker that drains its queue dry dispatches the
+//! device's staged items before parking, so a held item can never
+//! outlive the backlog that justified holding it. Strict mode
+//! ([`CoalesceConfig::strict`]) disables both eager legs for burst
+//! drivers that flush explicitly — group membership then depends only on
+//! submission order, which is what the ablation gates pin.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::isa::program::BulkOp;
+
+use super::topology::DeviceId;
+use super::worker::{ClusterTask, TaskItem};
+
+/// Staging knobs for the fleet coalescer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoalesceConfig {
+    /// route admitted sub-wave requests through the staging buckets at
+    /// all (off = the pre-coalescing pipeline: every request is its own
+    /// singleton group)
+    pub enabled: bool,
+    /// max fleet submissions a staged item may wait before its bucket
+    /// force-flushes (the hold horizon; ≥ 1)
+    pub max_hold_submissions: u64,
+    /// flush a device's buckets whenever holding would idle it: at push
+    /// when its queue is empty, and from its worker when the queue runs
+    /// dry. Disable (strict mode) for burst drivers that flush
+    /// explicitly and want fully deterministic packing.
+    pub eager_when_idle: bool,
+}
+
+impl CoalesceConfig {
+    /// Coalescing disabled (the default; every request dispatches alone).
+    pub fn off() -> Self {
+        CoalesceConfig {
+            enabled: false,
+            max_hold_submissions: 32,
+            eager_when_idle: true,
+        }
+    }
+
+    /// Strand-free staging for live traffic: holds only while the home
+    /// device has backlog, bounded by the default hold horizon.
+    pub fn opportunistic() -> Self {
+        CoalesceConfig {
+            enabled: true,
+            max_hold_submissions: 32,
+            eager_when_idle: true,
+        }
+    }
+
+    /// Deterministic staging for burst drivers: items are held until a
+    /// full wave, the hold horizon, admission saturation, or an explicit
+    /// `DrimCluster::flush_coalesced` — never flushed early by idleness.
+    pub fn strict(max_hold_submissions: u64) -> Self {
+        CoalesceConfig {
+            enabled: true,
+            max_hold_submissions,
+            eager_when_idle: false,
+        }
+    }
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig::off()
+    }
+}
+
+/// One staging bucket: compatible items bound for the same (device, op),
+/// never holding more than one wave's worth of chunks.
+#[derive(Default)]
+struct Bucket {
+    items: Vec<TaskItem>,
+    chunks: usize,
+    /// logical-clock reading when the oldest held item entered
+    oldest_tick: u64,
+}
+
+struct Inner {
+    /// logical clock: one tick per fleet submission routed through the
+    /// coalescer (the hold horizon's time base)
+    tick: u64,
+    buckets: HashMap<(usize, BulkOp), Bucket>,
+}
+
+/// The staging stage itself: per-(device, op) buckets of admitted
+/// sub-wave items, flushed as [`ClusterTask`] wave groups. Thread-safe;
+/// owned by the `DrimCluster` and shared with its workers.
+pub struct Coalescer {
+    cfg: CoalesceConfig,
+    /// wave slots per device (index = `DeviceId`)
+    slots: Vec<usize>,
+    inner: Mutex<Inner>,
+}
+
+impl Coalescer {
+    /// Coalescer for a fleet whose device `d` exposes `wave_slots[d]`
+    /// row slots per wave.
+    pub fn new(cfg: CoalesceConfig, wave_slots: Vec<usize>) -> Self {
+        assert!(
+            cfg.max_hold_submissions >= 1,
+            "a zero hold horizon would flush every push"
+        );
+        assert!(
+            wave_slots.iter().all(|&s| s > 0),
+            "every device needs at least one wave slot"
+        );
+        Coalescer {
+            cfg,
+            slots: wave_slots,
+            inner: Mutex::new(Inner {
+                tick: 0,
+                buckets: HashMap::new(),
+            }),
+        }
+    }
+
+    /// The staging knobs this coalescer runs under.
+    pub fn config(&self) -> CoalesceConfig {
+        self.cfg
+    }
+
+    /// Wave slots of one device.
+    pub fn wave_slots(&self, device: DeviceId) -> usize {
+        self.slots[device.0]
+    }
+
+    /// Stage one admitted item bound for `home` (`chunks` = its wave
+    /// units there) and return every wave group that became due — the
+    /// caller submits them to the scheduler. `flush_home` is the
+    /// saturation leg of the queue-depth trigger: when set, `home`'s
+    /// buckets flush after the item lands (the cluster passes admission
+    /// saturation here; eager mode's idle-home leg instead re-checks the
+    /// queue depth *after* the push and calls [`Self::flush_device`], so
+    /// it can never race a worker's drain-dry flush into stranding the
+    /// item).
+    ///
+    /// An item bypasses staging as a singleton group when coalescing is
+    /// disabled, the item is empty or wave-filling (`chunks == 0` or
+    /// `chunks ≥ wave_slots(home)` — packing cannot save it a wave), or a
+    /// resident operand has no replica on `home` (a miss keeps its
+    /// private wave set and its copy charge).
+    pub fn push(
+        &self,
+        home: DeviceId,
+        item: TaskItem,
+        chunks: usize,
+        flush_home: bool,
+    ) -> Vec<ClusterTask> {
+        let slots = self.slots[home.0];
+        let co_resident = match &item.placement {
+            Some(p) => p.co_resident_on(home),
+            None => true,
+        };
+        let eligible = self.cfg.enabled && chunks > 0 && chunks < slots && co_resident;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let now = inner.tick;
+        let mut due = Vec::new();
+        if !eligible {
+            due.push(ClusterTask::single(home, item));
+        } else {
+            let bucket = inner.buckets.entry((home.0, item.req.op)).or_default();
+            // slot conservation: a bucket never holds more than one wave
+            if !bucket.items.is_empty() && bucket.chunks + chunks > slots {
+                due.push(Self::seal(home, bucket));
+            }
+            if bucket.items.is_empty() {
+                bucket.oldest_tick = now;
+            }
+            bucket.chunks += chunks;
+            bucket.items.push(item);
+            if bucket.chunks == slots {
+                due.push(Self::seal(home, bucket));
+            }
+        }
+        if flush_home {
+            Self::flush_device_locked(&mut inner, home, &mut due);
+        }
+        // hold horizon: no bucket may hold an item older than the bound
+        let horizon = self.cfg.max_hold_submissions;
+        for (&(dev, _), bucket) in inner.buckets.iter_mut() {
+            if !bucket.items.is_empty() && now - bucket.oldest_tick >= horizon {
+                due.push(Self::seal(DeviceId(dev), bucket));
+            }
+        }
+        due
+    }
+
+    /// Flush every bucket staged for `device` (the worker's idle leg).
+    pub fn flush_device(&self, device: DeviceId) -> Vec<ClusterTask> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut due = Vec::new();
+        Self::flush_device_locked(&mut inner, device, &mut due);
+        due
+    }
+
+    /// Flush everything (shutdown, and burst drivers' end-of-burst
+    /// `DrimCluster::flush_coalesced`).
+    pub fn flush_all(&self) -> Vec<ClusterTask> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut due = Vec::new();
+        for (&(dev, _), bucket) in inner.buckets.iter_mut() {
+            if !bucket.items.is_empty() {
+                due.push(Self::seal(DeviceId(dev), bucket));
+            }
+        }
+        due
+    }
+
+    /// Items currently staged (diagnostics and the property suite).
+    pub fn held(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.buckets.values().map(|b| b.items.len()).sum()
+    }
+
+    /// Age of the oldest staged item in submission ticks (0 when empty) —
+    /// the quantity the hold-horizon property bounds.
+    pub fn max_held_age(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .values()
+            .filter(|b| !b.items.is_empty())
+            .map(|b| inner.tick - b.oldest_tick)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn flush_device_locked(inner: &mut Inner, device: DeviceId, due: &mut Vec<ClusterTask>) {
+        for (&(dev, _), bucket) in inner.buckets.iter_mut() {
+            if dev == device.0 && !bucket.items.is_empty() {
+                due.push(Self::seal(device, bucket));
+            }
+        }
+    }
+
+    /// Empty a bucket into one wave-group task.
+    fn seal(home: DeviceId, bucket: &mut Bucket) -> ClusterTask {
+        bucket.chunks = 0;
+        ClusterTask {
+            home,
+            items: std::mem::take(&mut bucket.items),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::residency::Placement;
+    use crate::coordinator::BulkRequest;
+    use crate::util::bitrow::BitRow;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    const COLS: usize = 256;
+    const SLOTS: usize = 4;
+
+    fn item(seq: u64, chunks: usize) -> TaskItem {
+        item_op(seq, chunks, BulkOp::Not)
+    }
+
+    fn item_op(seq: u64, chunks: usize, op: BulkOp) -> TaskItem {
+        let (tx, _rx) = channel();
+        let operands: Vec<BitRow> = (0..op.arity())
+            .map(|_| BitRow::zeros(chunks * COLS))
+            .collect();
+        TaskItem {
+            seq,
+            req: BulkRequest::bitwise(op, operands),
+            placement: None,
+            reply: tx,
+            admitted_at: Instant::now(),
+        }
+    }
+
+    fn coalescer(cfg: CoalesceConfig, devices: usize) -> Coalescer {
+        Coalescer::new(cfg, vec![SLOTS; devices])
+    }
+
+    #[test]
+    fn packs_sub_wave_items_into_one_full_wave() {
+        let c = coalescer(CoalesceConfig::strict(64), 1);
+        let d = DeviceId(0);
+        assert!(c.push(d, item(1, 1), 1, false).is_empty());
+        assert!(c.push(d, item(2, 1), 1, false).is_empty());
+        assert!(c.push(d, item(3, 1), 1, false).is_empty());
+        assert_eq!(c.held(), 3);
+        // the fourth chunk completes the wave
+        let due = c.push(d, item(4, 1), 1, false);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].home, d);
+        assert_eq!(due[0].requests(), 4);
+        assert_eq!(due[0].wave_units(COLS), SLOTS);
+        assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    fn overflow_seals_the_bucket_before_adding() {
+        let c = coalescer(CoalesceConfig::strict(64), 1);
+        let d = DeviceId(0);
+        assert!(c.push(d, item(1, 3), 3, false).is_empty());
+        // 3 + 2 > 4: the held 3-chunk group flushes, the 2-chunk stays
+        let due = c.push(d, item(2, 2), 2, false);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].wave_units(COLS), 3);
+        assert_eq!(c.held(), 1);
+    }
+
+    #[test]
+    fn wave_filling_and_empty_items_bypass_staging() {
+        let c = coalescer(CoalesceConfig::strict(64), 1);
+        let d = DeviceId(0);
+        for chunks in [SLOTS, SLOTS + 3, 0] {
+            let due = c.push(d, item(9, chunks), chunks, false);
+            assert_eq!(due.len(), 1, "{chunks} chunks must bypass");
+            assert_eq!(due[0].requests(), 1);
+        }
+        assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    fn disabled_coalescer_dispatches_singletons() {
+        let c = coalescer(CoalesceConfig::off(), 1);
+        let due = c.push(DeviceId(0), item(1, 1), 1, false);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests(), 1);
+        assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    fn ops_and_devices_bucket_separately() {
+        let c = coalescer(CoalesceConfig::strict(64), 2);
+        c.push(DeviceId(0), item_op(1, 1, BulkOp::Not), 1, false);
+        c.push(DeviceId(0), item_op(2, 1, BulkOp::Xnor2), 1, false);
+        c.push(DeviceId(1), item_op(3, 1, BulkOp::Not), 1, false);
+        assert_eq!(c.held(), 3);
+        // flushing one device leaves the other's staging intact
+        let due = c.flush_device(DeviceId(0));
+        assert_eq!(due.len(), 2, "one group per op bucket");
+        assert!(due.iter().all(|t| t.home == DeviceId(0)));
+        assert!(due.iter().all(|t| t.requests() == 1));
+        assert_eq!(c.held(), 1);
+        let rest = c.flush_all();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].home, DeviceId(1));
+    }
+
+    #[test]
+    fn non_co_resident_items_are_never_staged() {
+        let c = coalescer(CoalesceConfig::strict(64), 2);
+        // resident on dev1 only, routed home dev0: a miss — bypasses
+        let mut p = Placement::default();
+        p.add_resident(
+            crate::cluster::residency::RegionId(7),
+            COLS as u64,
+            vec![DeviceId(1)],
+        );
+        let mut it = item(1, 1);
+        it.placement = Some(p);
+        let due = c.push(DeviceId(0), it, 1, false);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests(), 1);
+        assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    fn hold_horizon_bounds_staging_age() {
+        let c = coalescer(CoalesceConfig::strict(3), 2);
+        // one lonely item on dev0, then unrelated traffic on dev1
+        assert!(c.push(DeviceId(0), item(1, 1), 1, false).is_empty());
+        assert!(c.push(DeviceId(1), item(2, 1), 1, false).is_empty());
+        assert!(c.push(DeviceId(1), item(3, 1), 1, false).is_empty());
+        assert!(c.max_held_age() < 3);
+        // the fourth submission pushes dev0's item to age 3 = horizon:
+        // it flushes even though its own bucket saw no traffic
+        let due = c.push(DeviceId(1), item(4, 1), 1, false);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].home, DeviceId(0));
+        assert_eq!(due[0].requests(), 1);
+        assert!(c.max_held_age() < 3);
+        assert_eq!(c.held(), 3, "dev1's younger items stay staged");
+    }
+
+    #[test]
+    fn queue_depth_trigger_flushes_the_home_bucket() {
+        let c = coalescer(CoalesceConfig::opportunistic(), 2);
+        assert!(c.push(DeviceId(0), item(1, 1), 1, false).is_empty());
+        // saturation / idle-home hint: the bucket flushes with the item
+        let due = c.push(DeviceId(0), item(2, 1), 1, true);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests(), 2);
+        assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "hold horizon")]
+    fn zero_horizon_rejected() {
+        Coalescer::new(
+            CoalesceConfig {
+                enabled: true,
+                max_hold_submissions: 0,
+                eager_when_idle: false,
+            },
+            vec![4],
+        );
+    }
+}

@@ -52,6 +52,9 @@ pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         aaps: 0,
         sim_ns: 0,
         wall_ns: 0,
+        waves: 0,
+        wave_slots_filled: 0,
+        wave_slots_total: 0,
         mean_latency_ns: 0.0,
         max_latency_ns: 0.0,
         sim_throughput_bits_per_sec: 0.0,
@@ -64,6 +67,11 @@ pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         out.aaps += p.aaps;
         out.sim_ns = out.sim_ns.max(p.sim_ns);
         out.wall_ns += p.wall_ns;
+        // waves and their slots sum: occupancy of the merged view is
+        // filled-over-exposed across every device's wave sets
+        out.waves += p.waves;
+        out.wave_slots_filled += p.wave_slots_filled;
+        out.wave_slots_total += p.wave_slots_total;
         latency_mass += p.mean_latency_ns * p.requests as f64;
         out.max_latency_ns = out.max_latency_ns.max(p.max_latency_ns);
     }
@@ -97,6 +105,11 @@ pub struct FleetMetrics {
     pub replications: AtomicU64,
     /// migrations performed by the replication policy
     pub migrations: AtomicU64,
+    /// requests that executed inside a shared wave group (≥ 2 members)
+    pub coalesced_requests: AtomicU64,
+    /// waves the coalescer's packing saved vs. per-request round-ups,
+    /// evaluated against the executing device's wave slots
+    pub waves_saved: AtomicU64,
     /// simulated copy nanoseconds charged to each device (index = DeviceId)
     copy_ns: Vec<AtomicU64>,
     queue_wait_ns: Mutex<Summary>,
@@ -116,6 +129,8 @@ impl FleetMetrics {
             resident_misses: AtomicU64::new(0),
             replications: AtomicU64::new(0),
             migrations: AtomicU64::new(0),
+            coalesced_requests: AtomicU64::new(0),
+            waves_saved: AtomicU64::new(0),
             copy_ns: (0..devices).map(|_| AtomicU64::new(0)).collect(),
             queue_wait_ns: Mutex::new(Summary::default()),
             region_window: Mutex::new(HashMap::new()),
@@ -128,6 +143,13 @@ impl FleetMetrics {
 
     pub fn record_steal(&self) {
         self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one executed wave group of `requests` (≥ 2) members that
+    /// saved `waves_saved` waves over per-request round-ups.
+    pub fn record_coalesced(&self, requests: u64, waves_saved: u64) {
+        self.coalesced_requests.fetch_add(requests, Ordering::Relaxed);
+        self.waves_saved.fetch_add(waves_saved, Ordering::Relaxed);
     }
 
     /// Account one placement-routed request's copy charge against the
@@ -230,9 +252,15 @@ pub struct FleetSnapshot {
     pub replications: u64,
     /// migrations performed by the replication policy
     pub migrations: u64,
+    /// requests that executed inside a shared wave group (≥ 2 members)
+    pub coalesced_requests: u64,
+    /// waves the coalescer's packing saved vs. per-request round-ups
+    pub waves_saved: u64,
     /// simulated copy nanoseconds charged per device (index = DeviceId)
     pub copy_ns_per_device: Vec<u64>,
     /// host-side wait between admission and a worker picking the task up
+    /// (for a coalesced request this includes time staged in the
+    /// coalescer — the hold the flush horizon bounds)
     pub mean_queue_wait_ns: f64,
 }
 
@@ -244,6 +272,13 @@ impl FleetSnapshot {
     /// Fleet simulated throughput (total bits / busiest-device makespan).
     pub fn sim_throughput_bits_per_sec(&self) -> f64 {
         self.merged.sim_throughput_bits_per_sec
+    }
+
+    /// Fleet-wide wave slot occupancy: chunks carried over row slots
+    /// exposed, across every device's executed wave sets — the
+    /// utilization the coalescing ablation gates on.
+    pub fn slot_occupancy(&self) -> f64 {
+        self.merged.slot_occupancy()
     }
 
     /// Fleet makespan including operand movement: the busiest device's
@@ -266,7 +301,9 @@ impl FleetSnapshot {
              copy traffic: {} B  ({} bus cycles)  resident hits: {}  \
              misses: {}  makespan incl copy: {}\n\
              residency: evictions: {}  refusals: {}  replications: {}  \
-             migrations: {}\n",
+             migrations: {}\n\
+             waves: {}  slot occupancy: {:.1}%  coalesced requests: {}  \
+             waves saved: {}\n",
             self.devices(),
             self.admitted,
             self.shed,
@@ -283,6 +320,10 @@ impl FleetSnapshot {
             self.capacity_refusals,
             self.replications,
             self.migrations,
+            self.merged.waves,
+            100.0 * self.slot_occupancy(),
+            self.coalesced_requests,
+            self.waves_saved,
         );
         for (i, d) in self.per_device.iter().enumerate() {
             s.push_str(&format!(
@@ -313,6 +354,9 @@ mod tests {
             aaps: requests * 3,
             sim_ns,
             wall_ns: 10,
+            waves: requests,
+            wave_slots_filled: requests * 2,
+            wave_slots_total: requests * 4,
             mean_latency_ns: mean_lat,
             max_latency_ns: mean_lat * 2.0,
             sim_throughput_bits_per_sec: 0.0,
@@ -328,6 +372,11 @@ mod tests {
         assert_eq!(m.aaps, 48);
         assert_eq!(m.sim_ns, 300); // max, not sum: devices run in parallel
         assert_eq!(m.wall_ns, 20); // sum: host really spent it
+        // wave counters sum; occupancy is filled over exposed fleet-wide
+        assert_eq!(m.waves, 16);
+        assert_eq!(m.wave_slots_filled, 32);
+        assert_eq!(m.wave_slots_total, 64);
+        assert!((m.slot_occupancy() - 0.5).abs() < 1e-12);
         // request-weighted mean: (4·50 + 12·150) / 16
         assert!((m.mean_latency_ns - 125.0).abs() < 1e-9);
         assert!((m.max_latency_ns - 300.0).abs() < 1e-9);
@@ -388,6 +437,8 @@ mod tests {
             capacity_refusals: 1,
             replications: 2,
             migrations: 1,
+            coalesced_requests: 4,
+            waves_saved: 3,
             copy_ns_per_device: vec![30],
             mean_queue_wait_ns: 1000.0,
         };
@@ -397,8 +448,19 @@ mod tests {
         assert!(r.contains("resident hits: 4"), "{r}");
         assert!(r.contains("evictions: 3"), "{r}");
         assert!(r.contains("replications: 2"), "{r}");
+        assert!(r.contains("coalesced requests: 4"), "{r}");
+        assert!(r.contains("waves saved: 3"), "{r}");
         // makespan incl copy = sim 10 + copy 30
         assert_eq!(snapshot.makespan_with_copy_ns(), 40);
+    }
+
+    #[test]
+    fn coalesced_counters_accumulate() {
+        let f = FleetMetrics::new(1);
+        f.record_coalesced(4, 3);
+        f.record_coalesced(2, 1);
+        assert_eq!(f.coalesced_requests.load(Ordering::Relaxed), 6);
+        assert_eq!(f.waves_saved.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -6,14 +6,29 @@
 //! scheduling bulk X(N)OR traffic *across* devices (channels/ranks in
 //! lock-step, as Ambit's rank-level operation motivates).
 //!
+//! Submission is a staged pipeline — **admission → coalesce → drain →
+//! reassemble**: every request buys an admission ticket, is normalized
+//! into wave units, optionally staged in the fleet coalescer (which
+//! packs compatible sub-wave requests into full waves), drained from its
+//! device queue in wave-unit-budgeted batches, executed as a shared wave
+//! set, and reassembled into per-request responses whose simulated
+//! latency is the wave set's completion.
+//!
 //! * [`topology`]  — which devices exist (channel/rank coordinates, per-
 //!   device [`ServiceConfig`]).
 //! * [`scheduler`] — per-device FIFO queues behind one shared ready list,
 //!   with an atomic Idle→Pending→Running shard state machine so a device
 //!   queue is never double-enqueued (and never drained by two workers).
+//! * [`coalescer`] — the fleet-level wave coalescer: packs admitted
+//!   sub-wave requests (same op, co-resident or inline operands, one
+//!   home) into full-wave groups before dispatch, under a flush policy
+//!   (full wave / queue-depth trigger / max-hold horizon) that bounds
+//!   added latency.
 //! * [`worker`]    — one OS thread per device, each owning a
 //!   [`Device`] (a [`DrimService`] by default), draining its own queue
-//!   first and work-stealing backlogged ones.
+//!   first and work-stealing backlogged ones; wave groups dispatch
+//!   through `Device::submit_batch` so packed requests really share
+//!   waves.
 //! * [`admission`] — bounded per-device in-flight tickets with load
 //!   shedding: when every queue is full the fleet says so instead of
 //!   letting latency grow without bound.
@@ -31,12 +46,14 @@
 //!   steals, queue wait, copied bytes / copy cycles).
 //!
 //! [`DrimCluster`] is the facade gluing these together; `drim serve
-//! --devices N`, `drim cluster` (and its `--locality` and `--capacity`
-//! sweeps), examples/e2e_cluster.rs, benches/ablate_devices.rs,
-//! benches/ablate_locality.rs and benches/ablate_capacity.rs all sit on
+//! --devices N`, `drim cluster` (and its `--locality`, `--capacity` and
+//! `--coalesce` sweeps), examples/e2e_cluster.rs,
+//! benches/ablate_devices.rs, benches/ablate_locality.rs,
+//! benches/ablate_capacity.rs and benches/ablate_coalesce.rs all sit on
 //! it.
 
 pub mod admission;
+pub mod coalescer;
 pub mod metrics;
 pub mod residency;
 pub mod scheduler;
@@ -44,6 +61,7 @@ pub mod topology;
 pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
+pub use coalescer::{CoalesceConfig, Coalescer};
 pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot, RegionUse};
 pub use residency::{
     CapacityConfig, CapacityError, ClusterRequest, CopyCharge, CopyCostModel,
@@ -53,15 +71,17 @@ pub use residency::{
 };
 pub use scheduler::{Scheduler, ShardState};
 pub use topology::{DeviceDesc, DeviceId, Topology};
-pub use worker::{ClusterResponse, ClusterTask};
+pub use worker::{ClusterResponse, ClusterTask, TaskItem};
 
 pub use crate::dram::geometry::DeviceCapacity;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use worker::WorkerCtx;
 
 use crate::coordinator::{
     BulkRequest, Device, DrimService, Metrics, Payload, ServiceConfig,
@@ -80,6 +100,14 @@ pub struct ClusterConfig {
     /// when a registration does not fit (unbounded + fail-fast by
     /// default, the pre-capacity behaviour).
     pub capacity: CapacityConfig,
+    /// Fleet-level wave coalescing: pack admitted sub-wave requests into
+    /// full waves before dispatch (off by default — every request keeps
+    /// its own wave set; the coalescing ablation turns it on).
+    pub coalesce: CoalesceConfig,
+    /// Fleet-owned background rebalancing: a maintenance thread sweeping
+    /// [`DrimCluster::rebalance`] on an epoch/queue-depth trigger instead
+    /// of caller-driven pumping. Off (`None`) by default.
+    pub rebalance: Option<RebalanceConfig>,
     /// Allow idle workers to drain other devices' queues. On by default;
     /// the scaling ablation turns it off to measure pure sharding.
     pub steal: bool,
@@ -92,6 +120,8 @@ impl ClusterConfig {
             topology: Topology::uniform(n, service),
             admission: AdmissionConfig::default(),
             capacity: CapacityConfig::default(),
+            coalesce: CoalesceConfig::off(),
+            rebalance: None,
             steal: true,
         }
     }
@@ -99,6 +129,33 @@ impl ClusterConfig {
     /// `n` test-sized devices.
     pub fn tiny(n: usize) -> Self {
         Self::uniform(n, ServiceConfig::tiny())
+    }
+}
+
+/// Background rebalancing knobs (see [`ClusterConfig::rebalance`]): the
+/// fleet owns a maintenance thread that wakes every `epoch`, checks the
+/// queue-depth trigger, and applies one [`DrimCluster::rebalance`] round
+/// under `policy`. Caller-driven `rebalance` calls keep working alongside
+/// it — both funnel through the same registry bookkeeping.
+#[derive(Clone, Debug)]
+pub struct RebalanceConfig {
+    /// the replication/migration policy each sweep plans with
+    pub policy: ReplicationPolicy,
+    /// how often the maintenance thread wakes to consider a sweep
+    pub epoch: Duration,
+    /// skip the sweep unless some device queue is at least this deep —
+    /// rebalancing is worth a bus stream only when backlog exists
+    /// (0 = sweep every epoch)
+    pub min_queue_depth: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig {
+            policy: ReplicationPolicy::default(),
+            epoch: Duration::from_millis(5),
+            min_queue_depth: 0,
+        }
     }
 }
 
@@ -110,9 +167,14 @@ pub struct DrimCluster {
     fleet: Arc<FleetMetrics>,
     registry: Arc<ResidencyRegistry>,
     locality: Arc<LocalityModel>,
+    coalescer: Arc<Coalescer>,
     /// per-device metrics handles (outlive the devices themselves)
     device_metrics: Vec<Arc<Metrics>>,
     workers: Vec<JoinHandle<()>>,
+    /// the background rebalancer, when configured
+    maintenance: Option<JoinHandle<()>>,
+    /// stop flag + wakeup for the maintenance thread
+    maintenance_stop: Arc<(Mutex<bool>, Condvar)>,
     next_seq: AtomicU64,
 }
 
@@ -153,30 +215,65 @@ impl DrimCluster {
             &cfg.topology,
             TimingParams::default(),
         ));
+        let coalescer = Arc::new(Coalescer::new(
+            cfg.coalesce,
+            cfg.topology
+                .devices
+                .iter()
+                .map(|d| d.service.geometry.banks * d.service.geometry.active_subarrays)
+                .collect(),
+        ));
         let device_metrics: Vec<Arc<Metrics>> =
             devices.iter().map(|d| d.metrics()).collect();
         let workers = devices
             .into_iter()
             .enumerate()
             .map(|(i, dev)| {
-                let sched = Arc::clone(&sched);
-                let admission = Arc::clone(&admission);
-                let fleet = Arc::clone(&fleet);
-                let locality = Arc::clone(&locality);
-                let steal = cfg.steal;
-                std::thread::spawn(move || {
-                    worker::worker_loop(
-                        DeviceId(i),
-                        dev,
-                        sched,
-                        admission,
-                        fleet,
-                        locality,
-                        steal,
-                    )
-                })
+                let ctx = WorkerCtx {
+                    sched: Arc::clone(&sched),
+                    admission: Arc::clone(&admission),
+                    fleet: Arc::clone(&fleet),
+                    locality: Arc::clone(&locality),
+                    registry: Arc::clone(&registry),
+                    coalescer: Arc::clone(&coalescer),
+                    steal: cfg.steal,
+                };
+                std::thread::spawn(move || worker::worker_loop(DeviceId(i), dev, ctx))
             })
             .collect();
+        let maintenance_stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let maintenance = cfg.rebalance.clone().map(|rb| {
+            let stop = Arc::clone(&maintenance_stop);
+            let fleet = Arc::clone(&fleet);
+            let sched = Arc::clone(&sched);
+            let registry = Arc::clone(&registry);
+            let locality = Arc::clone(&locality);
+            std::thread::spawn(move || {
+                let (lock, cv) = &*stop;
+                loop {
+                    let stopped = lock.lock().unwrap();
+                    // re-check before parking: a stop raised mid-sweep
+                    // must not cost another whole epoch
+                    if *stopped {
+                        break;
+                    }
+                    let (stopped, timeout) = cv.wait_timeout(stopped, rb.epoch).unwrap();
+                    if *stopped {
+                        break;
+                    }
+                    drop(stopped);
+                    if !timeout.timed_out() {
+                        // spurious wakeup: re-park for a fresh epoch
+                        continue;
+                    }
+                    let depths = sched.depths();
+                    if depths.iter().copied().max().unwrap_or(0) < rb.min_queue_depth {
+                        continue;
+                    }
+                    rebalance_parts(&fleet, &sched, &registry, &locality, &rb.policy);
+                }
+            })
+        });
         DrimCluster {
             cfg,
             sched,
@@ -184,8 +281,11 @@ impl DrimCluster {
             fleet,
             registry,
             locality,
+            coalescer,
             device_metrics,
             workers,
+            maintenance,
+            maintenance_stop,
             next_seq: AtomicU64::new(1),
         }
     }
@@ -208,6 +308,22 @@ impl DrimCluster {
         &self.locality
     }
 
+    /// The fleet's wave coalescer (staging stage of the submission
+    /// pipeline).
+    pub fn coalescer(&self) -> &Coalescer {
+        &self.coalescer
+    }
+
+    /// Dispatch everything still staged in the coalescer. Burst drivers
+    /// running under [`CoalesceConfig::strict`] call this at the end of
+    /// a burst (packing then depends only on submission order); a no-op
+    /// when nothing is staged.
+    pub fn flush_coalesced(&self) {
+        for task in self.coalescer.flush_all() {
+            self.sched.submit(task.home.0, task);
+        }
+    }
+
     /// Register a payload as resident on `device`; the returned handle can
     /// be used in [`ClusterRequest`] operands from then on. Panics if
     /// `device` is outside the fleet (the registry is fleet-bounded) or
@@ -227,6 +343,12 @@ impl DrimCluster {
         self.registry.try_register(device, payload)
     }
 
+    /// Stage 2+3 of the submission pipeline: wrap the admitted request as
+    /// a wave-unit task item and either stage it in the coalescer or
+    /// enqueue it directly as a singleton wave group. The flush hint
+    /// implements the queue-depth trigger — a saturated ticket pool (or,
+    /// in eager mode, an idle home queue) dispatches the home's staged
+    /// items immediately rather than holding them.
     fn enqueue(
         &self,
         home: DeviceId,
@@ -235,17 +357,37 @@ impl DrimCluster {
     ) -> Receiver<ClusterResponse> {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
-        self.sched.submit(
-            home.0,
-            ClusterTask {
-                seq,
-                home,
-                req,
-                placement,
-                reply: tx,
-                admitted_at: Instant::now(),
-            },
-        );
+        let item = TaskItem {
+            seq,
+            req,
+            placement,
+            reply: tx,
+            admitted_at: Instant::now(),
+        };
+        if self.coalescer.config().enabled {
+            let cols = self.cfg.topology.devices[home.0].service.geometry.cols;
+            let chunks = item.req.wave_units(cols);
+            let flush_home = self.admission.is_saturated(home);
+            for task in self.coalescer.push(home, item, chunks, flush_home) {
+                self.sched.submit(task.home.0, task);
+            }
+            // Eager queue-depth trigger, checked AFTER the item is staged:
+            // checking before the push races the worker's drain-dry flush
+            // (the worker could drain, flush an empty coalescer, and park
+            // between a pre-push depth read and the push, stranding the
+            // item). Post-push, either this sees the empty queue and
+            // flushes, or a task observed here is drained later and the
+            // worker's own idle flush runs after our item is visible.
+            if self.coalescer.config().eager_when_idle
+                && self.sched.depth(home.0) == 0
+            {
+                for task in self.coalescer.flush_device(home) {
+                    self.sched.submit(task.home.0, task);
+                }
+            }
+        } else {
+            self.sched.submit(home.0, ClusterTask::single(home, item));
+        }
         rx
     }
 
@@ -438,46 +580,48 @@ impl DrimCluster {
         }
     }
 
+    /// Drive the shared coalescing-ablation workload: `requests` XNOR2
+    /// requests of 2 × `bits` random operand bits each, submitted as one
+    /// burst through the blocking admission path, the coalescer flushed
+    /// at the end of the burst, and every response collected. Returns
+    /// the result payloads in submission order — the byte-exactness gate
+    /// compares them across coalescing modes.
+    ///
+    /// One definition shared by `drim cluster --coalesce` and
+    /// benches/ablate_coalesce.rs so the two ablations measure the same
+    /// workload and cannot drift.
+    pub fn pump_coalesce(&self, requests: usize, bits: usize, seed: u64) -> Vec<Payload> {
+        let mut rng = Rng::new(seed);
+        let pending: Vec<_> = (0..requests)
+            .map(|_| {
+                let a = BitRow::random(bits, &mut rng);
+                let b = BitRow::random(bits, &mut rng);
+                self.submit_blocking(BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]))
+            })
+            .collect();
+        self.flush_coalesced();
+        pending
+            .into_iter()
+            .map(|rx| rx.recv().expect("response").inner.result)
+            .collect()
+    }
+
     /// Apply one round of the replication/migration `policy`: drain the
     /// per-region traffic window, plan placement actions against the
     /// current footprints and queue depths, and execute them through the
     /// registry — charging every replica/migration stream to the
     /// destination device at the modeled copy cost. Returns the actions
-    /// taken (call sites sweep this periodically; the fleet never
-    /// rebalances behind the caller's back).
+    /// taken. Call sites may sweep this periodically, or configure
+    /// [`ClusterConfig::rebalance`] to let a fleet-owned maintenance
+    /// thread do the sweeping (both funnel through the same bookkeeping).
     pub fn rebalance(&self, policy: &ReplicationPolicy) -> Vec<PlacementAction> {
-        let window = self.fleet.take_region_window();
-        let depths = self.sched.depths();
-        let actions = policy.plan(&window, &self.registry, &self.locality, &depths);
-        for a in &actions {
-            match *a {
-                PlacementAction::Replicate { region, to } => {
-                    let (Some(sources), Some(bits)) =
-                        (self.registry.replicas(region), self.registry.bits(region))
-                    else {
-                        continue;
-                    };
-                    let charge = self.locality.cheapest_copy(bits as u64, &sources, to);
-                    if self.registry.replicate(region, to) == Ok(true) {
-                        self.fleet.record_placement_copy(to.0, &charge);
-                        self.fleet.replications.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                PlacementAction::Migrate { region, to } => {
-                    let (Some(sources), Some(bits)) =
-                        (self.registry.replicas(region), self.registry.bits(region))
-                    else {
-                        continue;
-                    };
-                    let charge = self.locality.cheapest_copy(bits as u64, &sources, to);
-                    if self.registry.migrate(region, to) == Ok(true) {
-                        self.fleet.record_placement_copy(to.0, &charge);
-                        self.fleet.migrations.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-            }
-        }
-        actions
+        rebalance_parts(
+            &self.fleet,
+            &self.sched,
+            &self.registry,
+            &self.locality,
+            policy,
+        )
     }
 
     /// Drive the shared capacity/replication workload: `regions` resident
@@ -606,6 +750,8 @@ impl DrimCluster {
             capacity_refusals: self.registry.capacity_refusals(),
             replications: self.fleet.replications.load(Ordering::Relaxed),
             migrations: self.fleet.migrations.load(Ordering::Relaxed),
+            coalesced_requests: self.fleet.coalesced_requests.load(Ordering::Relaxed),
+            waves_saved: self.fleet.waves_saved.load(Ordering::Relaxed),
             copy_ns_per_device: self.fleet.copy_ns_per_device(),
             mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
         }
@@ -621,6 +767,19 @@ impl DrimCluster {
     }
 
     fn shutdown_now(&mut self) {
+        // stop the maintenance thread first so a mid-sweep rebalance
+        // never races device teardown
+        {
+            let (lock, cv) = &*self.maintenance_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(m) = self.maintenance.take() {
+            let _ = m.join();
+        }
+        // dispatch anything still staged in the coalescer so its clients'
+        // receivers resolve during the drain instead of disconnecting
+        self.flush_coalesced();
         self.sched.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -632,6 +791,60 @@ impl Drop for DrimCluster {
     fn drop(&mut self) {
         self.shutdown_now();
     }
+}
+
+/// One rebalance round over explicit fleet parts — shared by the
+/// caller-driven [`DrimCluster::rebalance`] and the background
+/// maintenance thread (which holds only the `Arc`ed parts, not the
+/// cluster itself).
+fn rebalance_parts(
+    fleet: &FleetMetrics,
+    sched: &Scheduler<ClusterTask>,
+    registry: &ResidencyRegistry,
+    locality: &LocalityModel,
+    policy: &ReplicationPolicy,
+) -> Vec<PlacementAction> {
+    let window = fleet.take_region_window();
+    let depths = sched.depths();
+    let actions = policy.plan(&window, registry, locality, &depths);
+    for a in &actions {
+        match *a {
+            PlacementAction::Replicate { region, to } => {
+                let (Some(sources), Some(bits)) =
+                    (registry.replicas(region), registry.bits(region))
+                else {
+                    continue;
+                };
+                // A concurrent sweep (background rebalancer + a caller-
+                // driven round) may have landed this replica already:
+                // `replicate` is idempotent-Ok then, but counting it
+                // again would over-report replications. (`cheapest_copy`
+                // is already free when `to` holds a replica, so no
+                // phantom stream is charged either way.)
+                if sources.contains(&to) {
+                    continue;
+                }
+                let charge = locality.cheapest_copy(bits as u64, &sources, to);
+                if registry.replicate(region, to) == Ok(true) {
+                    fleet.record_placement_copy(to.0, &charge);
+                    fleet.replications.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            PlacementAction::Migrate { region, to } => {
+                let (Some(sources), Some(bits)) =
+                    (registry.replicas(region), registry.bits(region))
+                else {
+                    continue;
+                };
+                let charge = locality.cheapest_copy(bits as u64, &sources, to);
+                if registry.migrate(region, to) == Ok(true) {
+                    fleet.record_placement_copy(to.0, &charge);
+                    fleet.migrations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+    actions
 }
 
 #[cfg(test)]
@@ -801,6 +1014,106 @@ mod tests {
         assert!(snap.copied_bytes > 0, "replication stream must be charged");
         assert_eq!(snap.resident_hits, 4, "placement copies are not misses");
         assert_eq!(snap.resident_misses, 0);
+    }
+
+    #[test]
+    fn coalesced_subwave_burst_shares_waves_and_stays_correct() {
+        let c = DrimCluster::new(ClusterConfig {
+            coalesce: CoalesceConfig::strict(64),
+            steal: false,
+            ..ClusterConfig::tiny(2)
+        });
+        // tiny geometry: 4 slots per wave; 8 one-chunk requests split
+        // round-robin over 2 devices = exactly one full wave per device
+        let mut rng = Rng::new(77);
+        let operands: Vec<(BitRow, BitRow)> = (0..8)
+            .map(|_| (BitRow::random(200, &mut rng), BitRow::random(200, &mut rng)))
+            .collect();
+        let pending: Vec<_> = operands
+            .iter()
+            .map(|(a, b)| {
+                c.submit_blocking(BulkRequest::bitwise(
+                    BulkOp::Xnor2,
+                    vec![a.clone(), b.clone()],
+                ))
+            })
+            .collect();
+        c.flush_coalesced();
+        for (rx, (a, b)) in pending.into_iter().zip(&operands) {
+            let resp = rx.recv().expect("coalesced response");
+            assert_eq!(resp.inner.batched_with, 4, "four 1-chunk items per wave");
+            let mut want = BitRow::zeros(200);
+            want.apply2(a, b, |x, y| !(x ^ y));
+            match resp.inner.result {
+                Payload::Bits(got) => assert_eq!(got, want),
+                _ => panic!("wrong payload kind"),
+            }
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 8);
+        assert_eq!(snap.coalesced_requests, 8);
+        // each device packed 4 private waves into 1: 3 saved apiece
+        assert_eq!(snap.waves_saved, 6);
+        assert_eq!(snap.merged.waves, 2);
+        assert!((snap.slot_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coalescing_off_keeps_private_wave_sets() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            ..ClusterConfig::tiny(2)
+        });
+        let mut rng = Rng::new(78);
+        let pending: Vec<_> = (0..4)
+            .map(|_| {
+                let a = BitRow::random(200, &mut rng);
+                c.submit_blocking(BulkRequest::bitwise(BulkOp::Not, vec![a]))
+            })
+            .collect();
+        for rx in pending {
+            assert_eq!(rx.recv().unwrap().inner.batched_with, 1);
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.coalesced_requests, 0);
+        assert_eq!(snap.waves_saved, 0);
+        assert_eq!(snap.merged.waves, 4, "one private wave per request");
+    }
+
+    #[test]
+    fn background_rebalancer_replicates_hot_regions_unprompted() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            rebalance: Some(RebalanceConfig {
+                policy: ReplicationPolicy::new(ReplicationConfig {
+                    hot_uses: 3,
+                    amortize_factor: 1.0,
+                    ..ReplicationConfig::default()
+                }),
+                epoch: std::time::Duration::from_millis(2),
+                min_queue_depth: 0,
+            }),
+            ..ClusterConfig::tiny(4)
+        });
+        let mut rng = Rng::new(91);
+        let a = BitRow::random(2048, &mut rng);
+        let r = c.register_resident(DeviceId(0), Payload::Bits(a));
+        // keep the region hot until a background sweep replicates it —
+        // no rebalance() call anywhere in this test
+        let t0 = std::time::Instant::now();
+        while c.registry().replicas(r).map(|v| v.len()).unwrap_or(0) < 2 {
+            c.run_routed(ClusterRequest::resident(BulkOp::Not, vec![r]))
+                .unwrap();
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(20),
+                "maintenance thread never replicated the hot region"
+            );
+        }
+        let reps = c.registry().replicas(r).unwrap();
+        assert!(!c.locality().same_channel(reps[0], reps[1]));
+        let snap = c.shutdown();
+        assert_eq!(snap.replications, 1);
+        assert!(snap.copied_bytes > 0, "replication stream must be charged");
     }
 
     #[test]

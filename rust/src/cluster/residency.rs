@@ -321,6 +321,16 @@ impl Placement {
     pub fn total_resident_bits(&self) -> u64 {
         self.resident.iter().map(|s| s.bits).sum()
     }
+
+    /// True when every resident operand holds a replica on `device`, so
+    /// executing there pays no copy for resident spans (inline bits still
+    /// stream from the host). The fleet coalescer's co-residency
+    /// eligibility: only such items may pack into `device`'s shared
+    /// waves — a placement miss keeps its private wave set and its copy
+    /// charge. Vacuously true for all-inline placements.
+    pub fn co_resident_on(&self, device: DeviceId) -> bool {
+        self.resident.iter().all(|s| s.replicas.contains(&device))
+    }
 }
 
 struct Region {
@@ -331,6 +341,10 @@ struct Region {
     last_hit: u64,
     /// routed uses since registration
     hits: u64,
+    /// resolved requests referencing this region that are still queued or
+    /// executing (admission-aware eviction refuses such victims; the
+    /// executing worker releases the pin on completion)
+    queued: u64,
 }
 
 #[derive(Default)]
@@ -468,13 +482,21 @@ impl ResidencyRegistry {
     /// `device` (excluding `exclude`), or `None` when nothing is
     /// evictable. LRU order: minimum `last_hit`, ties toward the lowest
     /// id for determinism.
+    ///
+    /// Admission-aware: a region with queued (resolved, not yet executed)
+    /// requests is never a victim under `Lru`/`CostAware` — evicting it
+    /// would only bounce the next lookup into the `Evicted` requeue path
+    /// and stream the payload straight back in. This is a finer signal
+    /// than the scheduler's per-device queue depths: it pins exactly the
+    /// regions the queued work references, not everything on a busy
+    /// device.
     fn pick_victim(&self, inner: &Inner, device: DeviceId, exclude: Option<u64>) -> Option<u64> {
         let now = self.clock.load(Ordering::Relaxed);
         inner
             .regions
             .iter()
             .filter(|(id, r)| {
-                if Some(**id) == exclude || !r.homes.contains(&device) {
+                if Some(**id) == exclude || !r.homes.contains(&device) || r.queued > 0 {
                     return false;
                 }
                 match self.policy {
@@ -572,6 +594,7 @@ impl ResidencyRegistry {
                 payload,
                 last_hit: now,
                 hits: 0,
+                queued: 0,
             },
         );
         Ok(RegionId(id))
@@ -623,6 +646,30 @@ impl ResidencyRegistry {
             .regions
             .get(&region.0)
             .map(|r| (r.hits, r.last_hit))
+    }
+
+    /// Resolved-but-not-yet-executed requests referencing `region` (the
+    /// admission-aware eviction pin), if registered.
+    pub fn queued_requests(&self, region: RegionId) -> Option<u64> {
+        self.inner
+            .read()
+            .unwrap()
+            .regions
+            .get(&region.0)
+            .map(|r| r.queued)
+    }
+
+    /// Release the queued-request pins a successful [`Self::resolve`]
+    /// placed on `placement`'s resident regions. Fleet workers call this
+    /// once the request has executed; a region evicted or removed in the
+    /// meantime is skipped (its pin died with it).
+    pub fn release_queued(&self, placement: &Placement) {
+        let mut inner = self.inner.write().unwrap();
+        for span in &placement.resident {
+            if let Some(r) = inner.regions.get_mut(&span.region.0) {
+                r.queued = r.queued.saturating_sub(1);
+            }
+        }
     }
 
     /// Primary owner and a copy of the payload, if registered.
@@ -847,7 +894,10 @@ impl ResidencyRegistry {
     /// Materialize a [`ClusterRequest`] into an executable [`BulkRequest`]
     /// plus the [`Placement`] summary the copy accounting charges from,
     /// bumping each resident region's LRU clock and hit counter (this is
-    /// the one call per submitted request).
+    /// the one call per submitted request). Each resident region is also
+    /// pinned as *queued* — admission-aware eviction refuses pinned
+    /// victims — until the executing worker calls
+    /// [`Self::release_queued`] with the returned placement.
     ///
     /// A region evicted between routing and here yields the defined
     /// [`RouteError::Evicted`]; once this returns `Ok`, the request
@@ -884,6 +934,14 @@ impl ResidencyRegistry {
                     );
                     operands.push(region.payload.clone());
                 }
+            }
+        }
+        // Commit the queued-request pins only now that every operand
+        // resolved: an Evicted/Unknown error mid-loop must not leave the
+        // earlier regions pinned forever.
+        for span in &placement.resident {
+            if let Some(r) = inner.regions.get_mut(&span.region.0) {
+                r.queued += 1;
             }
         }
         drop(inner);
@@ -1414,6 +1472,81 @@ mod tests {
         assert_eq!(reg.owner(a), None, "idle region finally evictable");
         assert_eq!(reg.owner(b), Some(DeviceId(0)));
         reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn queued_regions_are_never_eviction_victims() {
+        let reg = lru_registry(1, 2048);
+        let a = reg.register(DeviceId(0), payload(1024));
+        let b = reg.register(DeviceId(0), payload(1024));
+        // resolve pins `a`; resolving and releasing `b` leaves `b` the
+        // only unpinned victim even though `a` has the older last-hit
+        let (_, pa) = reg
+            .resolve(&ClusterRequest::resident(BulkOp::Not, vec![a]))
+            .unwrap();
+        let (_, pb) = reg
+            .resolve(&ClusterRequest::resident(BulkOp::Not, vec![b]))
+            .unwrap();
+        reg.release_queued(&pb);
+        assert_eq!(reg.queued_requests(a), Some(1));
+        assert_eq!(reg.queued_requests(b), Some(0));
+        let c = reg.register(DeviceId(0), payload(1024));
+        assert_eq!(reg.owner(a), Some(DeviceId(0)), "pinned region survives");
+        assert_eq!(reg.owner(b), None, "unpinned region evicted instead");
+        assert_eq!(reg.owner(c), Some(DeviceId(0)));
+        // once the worker releases the pin, `a` is evictable again
+        reg.release_queued(&pa);
+        assert_eq!(reg.queued_requests(a), Some(0));
+        let d = reg.register(DeviceId(0), payload(1024));
+        assert_eq!(reg.owner(a), None, "released region evicts normally");
+        assert_eq!(reg.owner(d), Some(DeviceId(0)));
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn all_victims_queued_fails_fast_instead_of_thrashing() {
+        let reg = lru_registry(1, 1024);
+        let a = reg.register(DeviceId(0), payload(1024));
+        let (_, pa) = reg
+            .resolve(&ClusterRequest::resident(BulkOp::Not, vec![a]))
+            .unwrap();
+        // every byte of capacity is pinned by queued work: the newcomer
+        // is refused instead of bouncing the queued request into the
+        // Evicted requeue path
+        assert!(matches!(
+            reg.try_register(DeviceId(0), payload(1024)),
+            Err(CapacityError::DeviceFull { .. })
+        ));
+        assert_eq!(reg.owner(a), Some(DeviceId(0)));
+        reg.release_queued(&pa);
+        reg.try_register(DeviceId(0), payload(1024)).unwrap();
+        assert_eq!(reg.owner(a), None);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn failed_resolve_leaves_no_pins_behind() {
+        let reg = lru_registry(2, 4096);
+        let a = reg.register(DeviceId(0), payload(512));
+        let b = reg.register(DeviceId(1), payload(512));
+        assert_eq!(reg.evict_from(b, DeviceId(1)), EvictOutcome::RegionEvicted);
+        // `a` resolves first in operand order, then `b` errors: the
+        // half-resolved request must not pin `a`
+        let req = ClusterRequest::resident(BulkOp::Xnor2, vec![a, b]);
+        assert_eq!(reg.resolve(&req).unwrap_err(), RouteError::Evicted(b));
+        assert_eq!(reg.queued_requests(a), Some(0));
+    }
+
+    #[test]
+    fn co_residency_follows_replicas() {
+        let mut p = Placement::default();
+        // all-inline: co-resident anywhere
+        assert!(p.co_resident_on(DeviceId(0)));
+        p.add_resident(RegionId(0), 100, vec![DeviceId(1), DeviceId(2)]);
+        p.add_resident(RegionId(1), 100, vec![DeviceId(1)]);
+        assert!(p.co_resident_on(DeviceId(1)), "replica on every span");
+        assert!(!p.co_resident_on(DeviceId(2)), "span 1 misses on dev2");
+        assert!(!p.co_resident_on(DeviceId(0)));
     }
 
     #[test]

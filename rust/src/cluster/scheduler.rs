@@ -182,6 +182,31 @@ impl<T> Scheduler<T> {
         q.drain(..n).collect()
     }
 
+    /// Batch-aware drain: pop tasks in FIFO order while the running
+    /// `cost` total stays within `budget`, up to `max` tasks — but always
+    /// at least one, so an oversized task can never wedge its queue. The
+    /// fleet workers budget drains in *wave units*, bounding the chunk
+    /// footprint one acquisition puts in flight on a device regardless of
+    /// how many requests the coalescer packed per task.
+    pub fn drain_budgeted<F>(&self, shard: usize, max: usize, budget: usize, cost: F) -> Vec<T>
+    where
+        F: Fn(&T) -> usize,
+    {
+        let mut q = self.shards[shard].queue.lock().unwrap();
+        let mut out = Vec::new();
+        let mut spent = 0usize;
+        while out.len() < max {
+            let Some(front) = q.front() else { break };
+            let c = cost(front);
+            if !out.is_empty() && spent + c > budget {
+                break;
+            }
+            spent += c;
+            out.push(q.pop_front().expect("front() just succeeded"));
+        }
+        out
+    }
+
     /// `Running → Idle`, re-enqueueing the shard if tasks arrived after the
     /// drain. Must be called by the worker that acquired the shard.
     pub fn release(&self, shard: usize) {
@@ -268,6 +293,46 @@ mod tests {
         // queue empty → back to Idle, not ready
         assert_eq!(s.state(0), ShardState::Idle);
         assert_eq!(s.try_acquire(0, true), None);
+    }
+
+    #[test]
+    fn budgeted_drain_stops_at_the_cost_bound() {
+        let s: Scheduler<u32> = Scheduler::new(1);
+        for t in [3u32, 2, 2, 1] {
+            s.submit(0, t);
+        }
+        assert_eq!(s.try_acquire(0, true), Some(0));
+        // cost = the task value itself; budget 5 fits 3 + 2, not the next 2
+        assert_eq!(s.drain_budgeted(0, 16, 5, |&t| t as usize), vec![3, 2]);
+        // FIFO continues where the budget stopped
+        assert_eq!(s.drain_budgeted(0, 16, 5, |&t| t as usize), vec![2, 1]);
+        s.release(0);
+        assert_eq!(s.state(0), ShardState::Idle);
+    }
+
+    #[test]
+    fn budgeted_drain_always_takes_one_oversized_task() {
+        let s: Scheduler<u32> = Scheduler::new(1);
+        s.submit(0, 100);
+        s.submit(0, 1);
+        assert_eq!(s.try_acquire(0, true), Some(0));
+        // 100 > budget 4, but the head must move anyway
+        assert_eq!(s.drain_budgeted(0, 16, 4, |&t| t as usize), vec![100]);
+        assert_eq!(s.drain_budgeted(0, 16, 4, |&t| t as usize), vec![1]);
+        assert!(s.drain_budgeted(0, 16, 4, |&t| t as usize).is_empty());
+        s.release(0);
+    }
+
+    #[test]
+    fn budgeted_drain_respects_max_items() {
+        let s: Scheduler<u32> = Scheduler::new(1);
+        for _ in 0..5 {
+            s.submit(0, 0);
+        }
+        assert_eq!(s.try_acquire(0, true), Some(0));
+        assert_eq!(s.drain_budgeted(0, 3, usize::MAX, |_| 0).len(), 3);
+        assert_eq!(s.drain_budgeted(0, 3, usize::MAX, |_| 0).len(), 2);
+        s.release(0);
     }
 
     #[test]

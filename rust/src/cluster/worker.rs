@@ -9,105 +9,217 @@
 //! stealing converts fleet-level imbalance into extra utilization instead
 //! of tail latency.
 //!
+//! Tasks are *wave groups*: one or more requests the submission pipeline
+//! decided should execute as one co-scheduled wave set (a singleton group
+//! is the uncoalesced case). Drains are batch-aware — budgeted in wave
+//! units rather than task count — and each group is dispatched through
+//! [`Device::submit_batch`], so a coalesced group's chunks pack into
+//! shared waves and every member's response reports the shared wave set's
+//! completion.
+//!
 //! Copy accounting happens here, not at submit time: a placement-routed
-//! task carries its [`Placement`] summary, and the worker charges the
+//! item carries its [`Placement`] summary, and the worker charges the
 //! [`LocalityModel`] against *its own* device id — so a stolen task is
 //! charged for the operands its new executor has to pull, and a task that
-//! landed on its operands' owner is charged nothing.
+//! landed on its operands' owner is charged nothing. This holds per item
+//! inside a wave group: coalescing never changes what a request pays for
+//! operand movement.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::{BulkRequest, BulkResponse, Device};
+use crate::coordinator::{BatchPolicy, BulkRequest, BulkResponse, Device};
 
 use super::admission::AdmissionController;
+use super::coalescer::Coalescer;
 use super::metrics::FleetMetrics;
-use super::residency::{LocalityModel, Placement};
+use super::residency::{LocalityModel, Placement, ResidencyRegistry};
 use super::scheduler::Scheduler;
 use super::topology::DeviceId;
 
-/// One admitted request in flight through the fleet.
-pub struct ClusterTask {
+/// One admitted request flowing through the fleet (a member of a
+/// [`ClusterTask`] wave group).
+pub struct TaskItem {
     /// fleet-wide submission sequence number
     pub seq: u64,
-    /// device whose admission ticket this request holds
-    pub home: DeviceId,
+    /// the materialized request
     pub req: BulkRequest,
     /// operand-residency summary for placement-routed requests (`None`
     /// for the legacy payload-carrying paths, which are not copy-charged)
     pub placement: Option<Placement>,
+    /// where the response goes
     pub reply: Sender<ClusterResponse>,
+    /// when the admission ticket was bought (queue-wait accounting; for a
+    /// coalesced item this includes time staged in the coalescer)
     pub admitted_at: Instant,
+}
+
+/// One schedulable unit on a device queue: a group of admitted requests
+/// that execute as one co-scheduled wave set. A singleton group is the
+/// ordinary uncoalesced request; a larger group was packed by the fleet
+/// [`Coalescer`] (same op, co-resident or inline operands, one home).
+pub struct ClusterTask {
+    /// device whose admission tickets every item in the group holds
+    pub home: DeviceId,
+    /// the grouped requests, in admission order (never empty)
+    pub items: Vec<TaskItem>,
+}
+
+impl ClusterTask {
+    /// Wrap a single request as its own wave group.
+    pub fn single(home: DeviceId, item: TaskItem) -> Self {
+        ClusterTask {
+            home,
+            items: vec![item],
+        }
+    }
+
+    /// Requests in the group.
+    pub fn requests(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Total wave units (row chunks on a `cols`-column device) the group
+    /// occupies — the cost the batch-aware drain budgets against.
+    pub fn wave_units(&self, cols: usize) -> usize {
+        self.items.iter().map(|i| i.req.wave_units(cols)).sum()
+    }
 }
 
 /// A fleet response: the single-device [`BulkResponse`] plus where it ran.
 #[derive(Clone, Debug)]
 pub struct ClusterResponse {
+    /// fleet-wide submission sequence number
     pub seq: u64,
     /// device that executed the request (≠ `home` when stolen)
     pub device: DeviceId,
+    /// device whose queue the request entered
     pub home: DeviceId,
+    /// the device-level response (`inner.batched_with > 1` ⇔ coalesced)
     pub inner: BulkResponse,
 }
 
-/// Tasks drained per scheduler acquisition. Small enough that a stolen
-/// batch doesn't starve the home worker when it comes back, large enough
-/// to amortize ready-list traffic.
+/// Wave groups drained per scheduler acquisition. Small enough that a
+/// stolen batch doesn't starve the home worker when it comes back, large
+/// enough to amortize ready-list traffic.
 pub const DRAIN_BATCH: usize = 8;
+
+/// Wave-unit budget per drain, in multiples of the executor's wave slots:
+/// a drain stops early once the drained groups would occupy this many
+/// waves, so one acquisition's in-flight chunk footprint stays bounded no
+/// matter how many requests were packed per group.
+pub const DRAIN_WAVE_BUDGET: usize = 8;
+
+/// Shared fleet handles a worker drives its device with (grouped so the
+/// thread spawn site stays readable).
+pub(crate) struct WorkerCtx {
+    pub sched: Arc<Scheduler<ClusterTask>>,
+    pub admission: Arc<AdmissionController>,
+    pub fleet: Arc<FleetMetrics>,
+    pub locality: Arc<LocalityModel>,
+    pub registry: Arc<ResidencyRegistry>,
+    pub coalescer: Arc<Coalescer>,
+    pub steal: bool,
+}
 
 /// Body of a fleet worker thread. Runs until the scheduler is closed and
 /// drained, then shuts the device down.
-pub(crate) fn worker_loop<D: Device>(
-    me: DeviceId,
-    mut device: D,
-    sched: Arc<Scheduler<ClusterTask>>,
-    admission: Arc<AdmissionController>,
-    fleet: Arc<FleetMetrics>,
-    locality: Arc<LocalityModel>,
-    steal: bool,
-) {
-    while let Some(shard) = sched.acquire(me.0, steal) {
+pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx) {
+    let geom = device.service_config().geometry.clone();
+    // an Immediate-policy device never shares waves (its submit_batch
+    // degrades to per-request attribution), so no saving may be recorded
+    let shares_waves = device.service_config().policy == BatchPolicy::Coalesce;
+    let cols = geom.cols;
+    let slots = (geom.banks * geom.active_subarrays).max(1);
+    while let Some(shard) = ctx.sched.acquire(me.0, ctx.steal) {
         if shard != me.0 {
-            fleet.record_steal();
+            ctx.fleet.record_steal();
         }
-        // Submit the whole batch before collecting: the device sees up to
-        // DRAIN_BATCH requests in flight at once, so its internal workers
-        // overlap chunk execution across requests (blocking run() per task
-        // would serialize them and waste the device's own parallelism).
-        // Collecting in drain order keeps per-queue FIFO responses.
-        let batch = sched.drain(shard, DRAIN_BATCH);
-        let inflight: Vec<_> = batch
-            .into_iter()
-            .map(|task| {
-                fleet.record_queue_wait_ns(task.admitted_at.elapsed().as_nanos() as f64);
-                if let Some(p) = &task.placement {
+        // Submit every drained group before collecting: the device sees
+        // the whole drain in flight at once, so its internal workers
+        // overlap chunk execution across requests (blocking run() per
+        // group would serialize them and waste the device's own
+        // parallelism). Collecting in drain order keeps per-queue FIFO
+        // responses.
+        let batch = ctx.sched.drain_budgeted(
+            shard,
+            DRAIN_BATCH,
+            DRAIN_WAVE_BUDGET * slots,
+            |t: &ClusterTask| t.wave_units(cols),
+        );
+        let mut inflight = Vec::with_capacity(batch.len());
+        for task in batch {
+            if shares_waves && task.items.len() > 1 {
+                // the group shares one wave set on *this* executor:
+                // account the waves its members' private round-ups
+                // would have burned
+                let counts: Vec<usize> =
+                    task.items.iter().map(|i| i.req.wave_units(cols)).collect();
+                let separate: u64 =
+                    counts.iter().map(|&c| c.div_ceil(slots) as u64).sum();
+                let packed = counts.iter().sum::<usize>().div_ceil(slots) as u64;
+                ctx.fleet.record_coalesced(
+                    task.items.len() as u64,
+                    separate.saturating_sub(packed),
+                );
+            }
+            let home = task.home;
+            let mut reqs = Vec::with_capacity(task.items.len());
+            let mut metas = Vec::with_capacity(task.items.len());
+            for item in task.items {
+                ctx.fleet
+                    .record_queue_wait_ns(item.admitted_at.elapsed().as_nanos() as f64);
+                if let Some(p) = &item.placement {
                     // charge operand movement against the device that
                     // actually executes (correct under stealing)
-                    fleet.record_copy(me.0, &locality.charge(p, me));
+                    ctx.fleet.record_copy(me.0, &ctx.locality.charge(p, me));
                     // per-region traffic feeds the replication policy's
                     // observation window (hit = a replica was here)
                     for span in &p.resident {
-                        fleet.record_region_use(span.region, span.replicas.contains(&me));
+                        ctx.fleet
+                            .record_region_use(span.region, span.replicas.contains(&me));
                     }
                 }
-                let rx = device.submit(task.req);
-                (task.seq, task.home, task.reply, rx)
-            })
-            .collect();
-        for (seq, home, reply, rx) in inflight {
-            let inner = rx.recv().expect("device dropped mid-request");
-            admission.complete(home);
-            fleet.record_completed();
-            // a dropped receiver just means the client went away
-            let _ = reply.send(ClusterResponse {
-                seq,
-                device: me,
-                home,
-                inner,
-            });
+                reqs.push(item.req);
+                metas.push((item.seq, item.placement, item.reply));
+            }
+            let rxs = device.submit_batch(reqs);
+            inflight.push((home, metas, rxs));
         }
-        sched.release(shard);
+        for (home, metas, rxs) in inflight {
+            for ((seq, placement, reply), rx) in metas.into_iter().zip(rxs) {
+                let inner = rx.recv().expect("device dropped mid-request");
+                if let Some(p) = &placement {
+                    // the request no longer pins its resident regions
+                    // against admission-aware eviction
+                    ctx.registry.release_queued(p);
+                }
+                ctx.admission.complete(home);
+                ctx.fleet.record_completed();
+                // a dropped receiver just means the client went away
+                let _ = reply.send(ClusterResponse {
+                    seq,
+                    device: me,
+                    home,
+                    inner,
+                });
+            }
+        }
+        ctx.sched.release(shard);
+        // The drained queue ran dry: anything still staged for this
+        // device would otherwise sit while the device idles — the eager
+        // leg of the coalescer's flush policy dispatches it now. (Strict
+        // staging leaves holds to the horizon / an explicit flush so
+        // burst drivers get deterministic packing.)
+        if ctx.coalescer.config().enabled
+            && ctx.coalescer.config().eager_when_idle
+            && ctx.sched.depth(shard) == 0
+        {
+            for task in ctx.coalescer.flush_device(DeviceId(shard)) {
+                ctx.sched.submit(shard, task);
+            }
+        }
     }
     device.shutdown();
 }

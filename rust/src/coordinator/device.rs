@@ -19,6 +19,17 @@ pub trait Device: Send {
     /// Enqueue a request; the receiver yields exactly one response.
     fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse>;
 
+    /// Enqueue a group of requests intended to execute as one
+    /// co-scheduled wave set (the fleet coalescer's dispatch unit).
+    /// Receivers are returned in request order. The default falls back to
+    /// per-request submission — correct everywhere, but without shared
+    /// wave attribution; `DrimService` overrides it to pack the group's
+    /// chunks into shared waves and report each response's latency as the
+    /// wave set's completion.
+    fn submit_batch(&self, reqs: Vec<BulkRequest>) -> Vec<Receiver<BulkResponse>> {
+        reqs.into_iter().map(|r| self.submit(r)).collect()
+    }
+
     /// Submit and block for the response.
     fn run(&self, req: BulkRequest) -> BulkResponse {
         self.submit(req).recv().expect("device dropped mid-request")
@@ -43,6 +54,10 @@ pub trait Device: Send {
 impl Device for DrimService {
     fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse> {
         DrimService::submit(self, req)
+    }
+
+    fn submit_batch(&self, reqs: Vec<BulkRequest>) -> Vec<Receiver<BulkResponse>> {
+        DrimService::submit_batch(self, reqs)
     }
 
     fn metrics(&self) -> Arc<Metrics> {

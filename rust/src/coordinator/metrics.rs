@@ -15,6 +15,12 @@ pub struct Metrics {
     pub sim_ns: AtomicU64,
     /// host nanoseconds spent in workers
     pub wall_ns: AtomicU64,
+    /// waves issued by executed wave sets
+    pub waves: AtomicU64,
+    /// row slots that carried a chunk across those waves
+    pub wave_slots_filled: AtomicU64,
+    /// row slots the issued waves exposed (waves × wave_slots)
+    pub wave_slots_total: AtomicU64,
     latency: Mutex<Summary>,
 }
 
@@ -32,6 +38,16 @@ impl Metrics {
 
     pub fn record_sim_ns(&self, ns: f64) {
         self.sim_ns.fetch_add(ns as u64, Ordering::Relaxed);
+    }
+
+    /// Account one executed wave set (solo request or coalesced batch):
+    /// how many waves it issued, how many row slots they exposed, and how
+    /// many carried a chunk. Recorded at submission time — the wave plan
+    /// is fixed the moment the set is scheduled.
+    pub fn record_waves(&self, waves: u64, slots_filled: u64, slots_total: u64) {
+        self.waves.fetch_add(waves, Ordering::Relaxed);
+        self.wave_slots_filled.fetch_add(slots_filled, Ordering::Relaxed);
+        self.wave_slots_total.fetch_add(slots_total, Ordering::Relaxed);
     }
 
     pub fn record_wall_ns(&self, ns: u64) {
@@ -53,6 +69,9 @@ impl Metrics {
             aaps: self.aaps.load(Ordering::Relaxed),
             sim_ns,
             wall_ns: self.wall_ns.load(Ordering::Relaxed),
+            waves: self.waves.load(Ordering::Relaxed),
+            wave_slots_filled: self.wave_slots_filled.load(Ordering::Relaxed),
+            wave_slots_total: self.wave_slots_total.load(Ordering::Relaxed),
             mean_latency_ns: lat.mean(),
             max_latency_ns: if lat.count() > 0 { lat.max() } else { 0.0 },
             sim_throughput_bits_per_sec: if sim_ns > 0 {
@@ -72,17 +91,37 @@ pub struct MetricsSnapshot {
     pub aaps: u64,
     pub sim_ns: u64,
     pub wall_ns: u64,
+    /// waves issued by executed wave sets
+    pub waves: u64,
+    /// row slots that carried a chunk across those waves
+    pub wave_slots_filled: u64,
+    /// row slots the issued waves exposed
+    pub wave_slots_total: u64,
     pub mean_latency_ns: f64,
     pub max_latency_ns: f64,
     pub sim_throughput_bits_per_sec: f64,
 }
 
 impl MetricsSnapshot {
+    /// Fraction of exposed wave row slots that carried work (0..1). A
+    /// device that issued no waves is vacuously fully occupied — the
+    /// counters viewed as one aggregate [`super::router::WavePlan`], so
+    /// the convention stays defined in exactly one place.
+    pub fn slot_occupancy(&self) -> f64 {
+        super::router::WavePlan {
+            waves: self.waves,
+            slots_filled: self.wave_slots_filled,
+            slots_total: self.wave_slots_total,
+        }
+        .occupancy()
+    }
+
     pub fn report(&self) -> String {
         use crate::util::stats::{fmt_ns, fmt_rate};
         format!(
             "requests: {}  chunks: {}  result bits: {}  AAPs: {}\n\
              simulated time: {}  (throughput {}bit/s)\n\
+             waves: {}  slot occupancy: {:.1}%\n\
              host wall time: {}  mean sim latency: {}  max: {}",
             self.requests,
             self.chunks,
@@ -90,6 +129,8 @@ impl MetricsSnapshot {
             self.aaps,
             fmt_ns(self.sim_ns as f64),
             fmt_rate(self.sim_throughput_bits_per_sec),
+            self.waves,
+            100.0 * self.slot_occupancy(),
             fmt_ns(self.wall_ns as f64),
             fmt_ns(self.mean_latency_ns),
             fmt_ns(self.max_latency_ns),
@@ -123,5 +164,22 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.sim_throughput_bits_per_sec, 0.0);
+        // no waves issued → vacuously fully occupied (utilization convention)
+        assert_eq!(s.waves, 0);
+        assert!((s.slot_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_counters_accumulate_into_occupancy() {
+        let m = Metrics::new();
+        // one full wave of 4 slots, then a lone chunk in its own wave
+        m.record_waves(1, 4, 4);
+        m.record_waves(1, 1, 4);
+        let s = m.snapshot();
+        assert_eq!(s.waves, 2);
+        assert_eq!(s.wave_slots_filled, 5);
+        assert_eq!(s.wave_slots_total, 8);
+        assert!((s.slot_occupancy() - 0.625).abs() < 1e-12);
+        assert!(s.report().contains("slot occupancy"), "{}", s.report());
     }
 }

@@ -31,5 +31,5 @@ pub mod service;
 pub use device::Device;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{BulkRequest, BulkResponse, Payload};
-pub use router::{BatchPolicy, Router, ServiceConfig};
+pub use router::{BatchPolicy, Router, ServiceConfig, WavePlan};
 pub use service::DrimService;

@@ -72,6 +72,20 @@ impl BulkRequest {
         self.operands[0].bits()
     }
 
+    /// Wave-unit form of the request: how many wave slots (row chunks)
+    /// its payload occupies on a device with `cols`-bit rows — the
+    /// quantity the fleet coalescer packs against `Router::wave_slots`
+    /// and the scheduler budgets drains in. Bit-wise payloads occupy one
+    /// slot per `cols` bits; 32-bit element payloads occupy one slot per
+    /// `cols` elements (each slot runs the bit-serial plane program).
+    /// Empty payloads occupy zero slots.
+    pub fn wave_units(&self, cols: usize) -> usize {
+        match &self.operands[0] {
+            Payload::Bits(b) => b.len().div_ceil(cols),
+            Payload::U32(v) => v.len().div_ceil(cols),
+        }
+    }
+
     /// Total bits across *all* operands — the quantity that has to move
     /// when none of them is resident where the request executes (the
     /// cluster's locality ablation charges carried requests exactly this).
@@ -91,6 +105,10 @@ pub struct BulkResponse {
     pub sim_latency_ns: f64,
     /// host wall-clock spent simulating
     pub wall_ns: u64,
+    /// requests that shared this request's wave set (1 = executed alone;
+    /// >1 = the request was coalesced and `sim_latency_ns` is the shared
+    /// wave set's completion, not a private `ceil(chunks/slots)` round-up)
+    pub batched_with: usize,
 }
 
 #[cfg(test)]
@@ -125,6 +143,22 @@ mod tests {
         let r = BulkRequest::add32(vec![1, 2, 3], vec![4, 5, 6]);
         assert_eq!(r.payload_bits(), 96);
         assert_eq!(r.operand_bits(), 192);
+    }
+
+    #[test]
+    fn wave_units_round_up_per_payload_kind() {
+        let cols = 256;
+        let bitwise = |bits: usize| {
+            BulkRequest::bitwise(BulkOp::Not, vec![BitRow::zeros(bits)])
+        };
+        assert_eq!(bitwise(1).wave_units(cols), 1);
+        assert_eq!(bitwise(cols).wave_units(cols), 1);
+        assert_eq!(bitwise(cols + 1).wave_units(cols), 2);
+        assert_eq!(bitwise(5 * cols).wave_units(cols), 5);
+        // element vectors: one slot per `cols` elements, not per bit
+        let add = BulkRequest::add32(vec![0; cols + 1], vec![0; cols + 1]);
+        assert_eq!(add.wave_units(cols), 2);
+        assert_eq!(BulkRequest::add32(vec![1], vec![2]).wave_units(cols), 1);
     }
 
     #[test]

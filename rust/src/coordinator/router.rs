@@ -80,6 +80,33 @@ pub struct Chunk {
     pub bits: usize,
 }
 
+/// Wave-packing summary of a co-scheduled queue of chunk counts: how many
+/// waves the device issues, how many row slots those waves expose, and how
+/// many of them are filled. [`Router::plan`] computes it under the
+/// configured [`BatchPolicy`]; the service records it per executed wave
+/// set so slot occupancy is observable end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WavePlan {
+    /// waves the device issues for the queue
+    pub waves: u64,
+    /// row slots actually carrying a chunk
+    pub slots_filled: u64,
+    /// row slots the issued waves expose (`waves × wave_slots`)
+    pub slots_total: u64,
+}
+
+impl WavePlan {
+    /// Fraction of exposed row slots that carried work (0..1). An empty
+    /// plan (no waves) is vacuously fully utilized, matching
+    /// [`Router::utilization`]'s convention.
+    pub fn occupancy(&self) -> f64 {
+        if self.slots_total == 0 {
+            return 1.0;
+        }
+        self.slots_filled as f64 / self.slots_total as f64
+    }
+}
+
 /// Pure sharding/wave math (the part worth unit-testing exhaustively).
 pub struct Router {
     pub cfg: ServiceConfig,
@@ -109,6 +136,25 @@ impl Router {
             .collect()
     }
 
+    /// Wave-packing plan for a queue of chunk counts under the configured
+    /// policy: `Immediate` rounds every request up to whole waves on its
+    /// own; `Coalesce` packs the queue's chunks into shared waves.
+    pub fn plan(&self, queue: &[usize]) -> WavePlan {
+        let slots = self.wave_slots();
+        let work: usize = queue.iter().sum();
+        let waves: u64 = match self.cfg.policy {
+            BatchPolicy::Immediate => {
+                queue.iter().map(|&c| c.div_ceil(slots) as u64).sum()
+            }
+            BatchPolicy::Coalesce => work.div_ceil(slots) as u64,
+        };
+        WavePlan {
+            waves,
+            slots_filled: work as u64,
+            slots_total: waves * slots as u64,
+        }
+    }
+
     /// Simulated latency of executing `chunks` row-operations of `op`,
     /// given the batching policy. `queue` is the list of chunk counts of
     /// the co-scheduled requests (Coalesce packs them together).
@@ -119,34 +165,12 @@ impl Router {
             } else {
                 1.0
             };
-        let slots = self.wave_slots() as f64;
-        let waves: f64 = match self.cfg.policy {
-            BatchPolicy::Immediate => queue
-                .iter()
-                .map(|&c| (c as f64 / slots).ceil())
-                .sum(),
-            BatchPolicy::Coalesce => {
-                (queue.iter().sum::<usize>() as f64 / slots).ceil()
-            }
-        };
-        waves * seq
+        self.plan(queue).waves as f64 * seq
     }
 
     /// Wave utilization (0..1) for a queue under the configured policy.
     pub fn utilization(&self, queue: &[usize]) -> f64 {
-        let slots = self.wave_slots() as f64;
-        let work: usize = queue.iter().sum();
-        let waves: f64 = match self.cfg.policy {
-            BatchPolicy::Immediate => queue
-                .iter()
-                .map(|&c| (c as f64 / slots).ceil())
-                .sum(),
-            BatchPolicy::Coalesce => (work as f64 / slots).ceil(),
-        };
-        if waves == 0.0 {
-            return 1.0;
-        }
-        work as f64 / (waves * slots)
+        self.plan(queue).occupancy()
     }
 }
 
@@ -226,6 +250,28 @@ mod tests {
         let slots = r.wave_slots();
         let t = r.sim_latency_ns(BulkOp::Xnor2, &[slots]);
         assert!((t - 270.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wave_plan_counts_waves_and_slots() {
+        // tiny geometry: 2 banks × 2 active sub-arrays = 4 slots per wave
+        let co = tiny_router(BatchPolicy::Coalesce);
+        let im = tiny_router(BatchPolicy::Immediate);
+        // four sub-wave requests: Coalesce packs one full wave
+        let p = co.plan(&[1, 1, 1, 1]);
+        assert_eq!(p, WavePlan { waves: 1, slots_filled: 4, slots_total: 4 });
+        assert!((p.occupancy() - 1.0).abs() < 1e-12);
+        // Immediate burns a wave each
+        let p = im.plan(&[1, 1, 1, 1]);
+        assert_eq!(p, WavePlan { waves: 4, slots_filled: 4, slots_total: 16 });
+        assert!((p.occupancy() - 0.25).abs() < 1e-12);
+        // empty plan: vacuously full (no waves issued)
+        let p = co.plan(&[]);
+        assert_eq!(p.waves, 0);
+        assert!((p.occupancy() - 1.0).abs() < 1e-12);
+        // ragged tail: 5 chunks over 4 slots → 2 waves, 5/8 filled
+        let p = co.plan(&[5]);
+        assert_eq!(p, WavePlan { waves: 2, slots_filled: 5, slots_total: 8 });
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::util::bitrow::BitRow;
 
 use super::metrics::Metrics;
 use super::request::{BulkRequest, BulkResponse, Payload};
-use super::router::{Router, ServiceConfig};
+use super::router::{BatchPolicy, Router, ServiceConfig};
 
 /// Staging rows used by the streaming path (outside the allocator range is
 /// unnecessary — streaming rows are scratch and recycled per chunk).
@@ -57,6 +57,21 @@ enum Job {
 
 /// Chunks per queue message.
 const JOB_GROUP: usize = 16;
+
+/// Latency attribution of one request within its wave set. A solo request
+/// owns its wave set (`record_sim_ns == sim_latency_ns`, `batched_with ==
+/// 1`); a coalesced request reports the shared wave set's completion, and
+/// exactly one member of the batch advances the device makespan counter.
+#[derive(Clone, Copy, Debug)]
+struct Attribution {
+    /// simulated completion reported in the response (and the latency
+    /// summary)
+    sim_latency_ns: f64,
+    /// contribution to the device's cumulative `sim_ns` makespan counter
+    record_sim_ns: f64,
+    /// requests sharing the wave set (≥ 1)
+    batched_with: usize,
+}
 
 pub struct DrimService {
     cfg: ServiceConfig,
@@ -107,13 +122,68 @@ impl DrimService {
     pub fn submit(&self, req: BulkRequest) -> Receiver<BulkResponse> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (done_tx, done_rx) = channel();
-        match (&req.op, &req.operands[0]) {
-            (BulkOp::Add | BulkOp::Sub, Payload::U32(_)) => {
-                self.submit_add32(id, req, done_tx)
-            }
-            _ => self.submit_bitwise(id, req, done_tx),
-        }
+        let units = req.wave_units(self.cfg.geometry.cols);
+        let plan = self.router.plan(&[units]);
+        self.metrics
+            .record_waves(plan.waves, plan.slots_filled, plan.slots_total);
+        let latency = self.router.sim_latency_ns(req.op, &[units]);
+        self.dispatch(
+            id,
+            req,
+            done_tx,
+            Attribution {
+                sim_latency_ns: latency,
+                record_sim_ns: latency,
+                batched_with: 1,
+            },
+        );
         done_rx
+    }
+
+    /// Submit a group of same-op requests that execute as *one*
+    /// co-scheduled wave set: chunks from every request pack into shared
+    /// waves, each response reports the wave set's completion as its
+    /// simulated latency (the coalesced attribution — not a private
+    /// `ceil(chunks/slots)` round-up), the device's makespan advances by
+    /// the shared wave time exactly once, and `batched_with` tells each
+    /// caller how many requests shared the set. Receivers are returned in
+    /// request order. A mixed-op or single-request batch degrades to
+    /// per-request submission.
+    pub fn submit_batch(&self, reqs: Vec<BulkRequest>) -> Vec<Receiver<BulkResponse>> {
+        let same_op = reqs.windows(2).all(|w| w[0].op == w[1].op);
+        // An Immediate-policy device never shares waves: under that router
+        // the "shared" latency would be the SUM of every member's private
+        // round-up — so degrade to honest per-request attribution.
+        if reqs.len() <= 1 || !same_op || self.cfg.policy == BatchPolicy::Immediate {
+            return reqs.into_iter().map(|r| self.submit(r)).collect();
+        }
+        let cols = self.cfg.geometry.cols;
+        let op = reqs[0].op;
+        let counts: Vec<usize> = reqs.iter().map(|r| r.wave_units(cols)).collect();
+        let plan = self.router.plan(&counts);
+        self.metrics
+            .record_waves(plan.waves, plan.slots_filled, plan.slots_total);
+        let shared = self.router.sim_latency_ns(op, &counts);
+        let batched_with = reqs.len();
+        reqs.into_iter()
+            .enumerate()
+            .map(|(i, req)| {
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let (done_tx, done_rx) = channel();
+                self.dispatch(
+                    id,
+                    req,
+                    done_tx,
+                    Attribution {
+                        sim_latency_ns: shared,
+                        // the batch's wave time advances the makespan once
+                        record_sim_ns: if i == 0 { shared } else { 0.0 },
+                        batched_with,
+                    },
+                );
+                done_rx
+            })
+            .collect()
     }
 
     /// Submit and wait.
@@ -121,14 +191,32 @@ impl DrimService {
         self.submit(req).recv().expect("service dropped")
     }
 
-    fn submit_bitwise(&self, id: u64, req: BulkRequest, done: Sender<BulkResponse>) {
+    fn dispatch(
+        &self,
+        id: u64,
+        req: BulkRequest,
+        done: Sender<BulkResponse>,
+        attr: Attribution,
+    ) {
+        match (&req.op, &req.operands[0]) {
+            (BulkOp::Add | BulkOp::Sub, Payload::U32(_)) => {
+                self.submit_add32(id, req, done, attr)
+            }
+            _ => self.submit_bitwise(id, req, done, attr),
+        }
+    }
+
+    fn submit_bitwise(
+        &self,
+        id: u64,
+        req: BulkRequest,
+        done: Sender<BulkResponse>,
+        attr: Attribution,
+    ) {
         let cols = self.cfg.geometry.cols;
         let bits = req.payload_bits();
         let chunks = self.router.shard(id, bits);
         let n_chunks = chunks.len();
-        let sim_latency = self
-            .router
-            .sim_latency_ns(req.op, &[n_chunks]);
         let (ctx, crx) = channel();
         let rows: Vec<&BitRow> = req
             .operands
@@ -160,7 +248,6 @@ impl DrimService {
         }
         drop(ctx);
         let metrics = Arc::clone(&self.metrics);
-        let op = req.op;
         std::thread::spawn(move || {
             let t0 = Instant::now();
             let mut parts: Vec<Option<(BitRow, ExecStats)>> = vec![None; n_chunks];
@@ -178,21 +265,27 @@ impl DrimService {
             }
             let wall = t0.elapsed().as_nanos() as u64;
             metrics.record_request(bits as u64, n_chunks as u64, total.aaps);
-            metrics.record_sim_ns(sim_latency);
+            metrics.record_sim_ns(attr.record_sim_ns);
             metrics.record_wall_ns(wall);
-            metrics.record_latency_ns(sim_latency);
+            metrics.record_latency_ns(attr.sim_latency_ns);
             let _ = done.send(BulkResponse {
                 id,
                 result: Payload::Bits(out),
                 stats: total,
-                sim_latency_ns: sim_latency,
+                sim_latency_ns: attr.sim_latency_ns,
                 wall_ns: wall,
+                batched_with: attr.batched_with,
             });
-            let _ = op;
         });
     }
 
-    fn submit_add32(&self, id: u64, req: BulkRequest, done: Sender<BulkResponse>) {
+    fn submit_add32(
+        &self,
+        id: u64,
+        req: BulkRequest,
+        done: Sender<BulkResponse>,
+        attr: Attribution,
+    ) {
         let cols = self.cfg.geometry.cols;
         let (a, b) = match (&req.operands[0], &req.operands[1]) {
             (Payload::U32(a), Payload::U32(b)) => (a.clone(), b.clone()),
@@ -201,7 +294,6 @@ impl DrimService {
         let n = a.len();
         let elems_per_chunk = cols;
         let n_chunks = n.div_ceil(elems_per_chunk);
-        let sim_latency = self.router.sim_latency_ns(req.op, &[n_chunks]);
         let (ctx, crx) = channel();
         for ci in 0..n_chunks {
             let lo = ci * elems_per_chunk;
@@ -260,15 +352,16 @@ impl DrimService {
             }
             let wall = t0.elapsed().as_nanos() as u64;
             metrics.record_request((n * 32) as u64, n_chunks as u64, total.aaps);
-            metrics.record_sim_ns(sim_latency);
+            metrics.record_sim_ns(attr.record_sim_ns);
             metrics.record_wall_ns(wall);
-            metrics.record_latency_ns(sim_latency);
+            metrics.record_latency_ns(attr.sim_latency_ns);
             let _ = done.send(BulkResponse {
                 id,
                 result: Payload::U32(out),
                 stats: total,
-                sim_latency_ns: sim_latency,
+                sim_latency_ns: attr.sim_latency_ns,
                 wall_ns: wall,
+                batched_with: attr.batched_with,
             });
         });
     }
@@ -464,6 +557,73 @@ mod tests {
         }
         let snap = s.metrics.snapshot();
         assert_eq!(snap.requests, 8);
+    }
+
+    #[test]
+    fn batch_shares_one_wave_set_and_stays_correct() {
+        // tiny geometry: 2 banks × 2 active sub-arrays = 4 slots per wave,
+        // cols = 256 → four 256-bit requests pack into exactly one wave
+        let s = service();
+        let mut rng = Rng::new(7);
+        let operands: Vec<(BitRow, BitRow)> = (0..4)
+            .map(|_| (BitRow::random(256, &mut rng), BitRow::random(256, &mut rng)))
+            .collect();
+        let reqs: Vec<BulkRequest> = operands
+            .iter()
+            .map(|(a, b)| {
+                BulkRequest::bitwise(BulkOp::Xnor2, vec![a.clone(), b.clone()])
+            })
+            .collect();
+        let pending = s.submit_batch(reqs);
+        assert_eq!(pending.len(), 4);
+        for (rx, (a, b)) in pending.into_iter().zip(&operands) {
+            let resp = rx.recv().unwrap();
+            // shared attribution: one wave's time, reported by everyone
+            assert!((resp.sim_latency_ns - 270.0).abs() < 1e-9);
+            assert_eq!(resp.batched_with, 4);
+            let got = match resp.result {
+                Payload::Bits(r) => r,
+                _ => panic!("wrong payload kind"),
+            };
+            let mut want = BitRow::zeros(256);
+            want.apply2(a, b, |x, y| !(x ^ y));
+            assert_eq!(got, want);
+        }
+        let snap = s.metrics.snapshot();
+        assert_eq!(snap.requests, 4);
+        // the batch advanced the makespan by ONE wave, not four
+        assert_eq!(snap.sim_ns, 270);
+        assert_eq!(snap.waves, 1);
+        assert!((snap.slot_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solo_submission_owns_its_wave_set() {
+        let s = service();
+        let mut rng = Rng::new(8);
+        let a = BitRow::random(100, &mut rng);
+        let resp = s.run(BulkRequest::bitwise(BulkOp::Not, vec![a]));
+        assert_eq!(resp.batched_with, 1);
+        let snap = s.metrics.snapshot();
+        // one sub-wave request = one wave, 1 of 4 slots filled
+        assert_eq!(snap.waves, 1);
+        assert!((snap.slot_occupancy() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mixed_op_batch_degrades_to_solo_attribution() {
+        let s = service();
+        let mut rng = Rng::new(9);
+        let a = BitRow::random(100, &mut rng);
+        let b = BitRow::random(100, &mut rng);
+        let reqs = vec![
+            BulkRequest::bitwise(BulkOp::Not, vec![a.clone()]),
+            BulkRequest::bitwise(BulkOp::Xnor2, vec![a, b]),
+        ];
+        for rx in s.submit_batch(reqs) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.batched_with, 1, "mixed ops cannot share a wave");
+        }
     }
 
     #[test]

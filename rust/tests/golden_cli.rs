@@ -93,6 +93,46 @@ fn cluster_locality_table_shape_is_pinned() {
 }
 
 #[test]
+fn cluster_coalesce_table_shape_is_pinned() {
+    let out = run(&[
+        "cluster",
+        "--coalesce",
+        "--devices",
+        "2",
+        "--requests",
+        "12",
+        "--bits",
+        "4096",
+        "--seed",
+        "1",
+    ]);
+    let (headers, rows) = table_of(&out, "mode");
+    assert_eq!(
+        headers,
+        vec![
+            "mode",
+            "waves",
+            "occupancy",
+            "coalesced",
+            "waves saved",
+            "makespan",
+        ],
+        "coalesce table headers drifted:\n{out}"
+    );
+    let labels: Vec<&str> = rows.iter().map(|r| r[0].as_str()).collect();
+    assert_eq!(
+        labels,
+        vec!["coalesce off", "coalesce on"],
+        "coalesce row labels drifted:\n{out}"
+    );
+    for r in &rows {
+        assert_eq!(r.len(), headers.len(), "ragged coalesce row {r:?}:\n{out}");
+        assert!(r[2].ends_with('%'), "occupancy cell {r:?} lost its unit");
+        assert!(r[5].ends_with("µs"), "makespan cell {r:?} lost its unit");
+    }
+}
+
+#[test]
 fn cluster_capacity_table_shape_is_pinned() {
     let out = run(&[
         "cluster",

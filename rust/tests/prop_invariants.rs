@@ -2,11 +2,12 @@
 //! util::prop; every failure reports a replayable seed).
 
 use drim::cluster::{
-    CapacityConfig, ClusterRequest, CopyCostModel, DeviceId, EvictionPolicy,
-    RegionId, ResidencyRegistry, RouteError,
+    CapacityConfig, ClusterConfig, ClusterRequest, ClusterTask, CoalesceConfig,
+    Coalescer, CopyCostModel, DeviceId, DrimCluster, EvictionPolicy, RegionId,
+    ResidencyRegistry, RouteError, TaskItem,
 };
 use drim::controller::{Controller, RowAllocator};
-use drim::coordinator::{BatchPolicy, Payload, Router, ServiceConfig};
+use drim::coordinator::{BatchPolicy, BulkRequest, Payload, Router, ServiceConfig};
 use drim::dram::command::RowId::{self, *};
 use drim::dram::geometry::{DeviceCapacity, DramGeometry};
 use drim::isa::program::BulkOp;
@@ -361,6 +362,152 @@ fn prop_evicted_handles_stay_defined() {
         // or the property never exercised its subject
         if reg.evictions() == 0 {
             return Err("no eviction ever happened".into());
+        }
+        Ok(())
+    });
+}
+
+/// What one coalescer push recorded, keyed by the item's fleet sequence
+/// number (the coalescer packing properties replay groups against it).
+type PushedMap = std::collections::HashMap<u64, (usize, BulkOp, usize)>;
+
+/// Verify a batch of emitted wave groups against the push log: every
+/// item emerges exactly once, never packed across devices, multi-item
+/// groups are single-op and conserve slots (≤ one wave), and the group's
+/// wave-unit accounting matches the pushed chunk counts.
+fn verify_groups(
+    groups: &[ClusterTask],
+    pushed: &PushedMap,
+    emitted: &mut std::collections::HashSet<u64>,
+    slots: usize,
+    cols: usize,
+) -> Result<(), String> {
+    for g in groups {
+        if g.items.is_empty() {
+            return Err("empty wave group emitted".into());
+        }
+        let mut total = 0usize;
+        let mut ops = Vec::new();
+        for it in &g.items {
+            let &(home, op, chunks) = pushed
+                .get(&it.seq)
+                .ok_or_else(|| format!("seq {} never pushed", it.seq))?;
+            if home != g.home.0 {
+                return Err(format!(
+                    "seq {} pushed for dev{home} emerged on {}",
+                    it.seq, g.home
+                ));
+            }
+            if !emitted.insert(it.seq) {
+                return Err(format!("seq {} emitted twice", it.seq));
+            }
+            total += chunks;
+            ops.push(op);
+        }
+        if g.items.len() > 1 {
+            if total > slots {
+                return Err(format!(
+                    "group of {total} chunks exceeds the {slots}-slot wave"
+                ));
+            }
+            if ops.iter().any(|&o| o != ops[0]) {
+                return Err("mixed ops packed into one wave group".into());
+            }
+        }
+        if g.wave_units(cols) != total {
+            return Err(format!(
+                "group wave_units {} != pushed chunk total {total}",
+                g.wave_units(cols)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Coalescer packing invariants over arbitrary push sequences: slot
+/// conservation (a packed group never exceeds one wave), no cross-device
+/// or cross-op packing, the flush-horizon bound honored after every
+/// push, and exactly-once emission once the coalescer is flushed.
+#[test]
+fn prop_coalescer_packing_invariants() {
+    prop::check("coalescer_packing", 30, |rng| {
+        let devices = 1 + rng.below(3) as usize;
+        let slots = 2 + rng.below(7) as usize;
+        let horizon = 1 + rng.below(12);
+        let cols = 64usize;
+        let coal = Coalescer::new(
+            CoalesceConfig::strict(horizon),
+            vec![slots; devices],
+        );
+        let mut pushed: PushedMap = PushedMap::new();
+        let mut emitted = std::collections::HashSet::new();
+        for seq in 0..60u64 {
+            let home = DeviceId(rng.below(devices as u64) as usize);
+            let op = if rng.bool() { BulkOp::Not } else { BulkOp::Xnor2 };
+            // 0 = empty payload (bypasses), up to slots+1 (wave-filling
+            // items bypass too)
+            let chunks = rng.below(slots as u64 + 2) as usize;
+            let operands: Vec<BitRow> = (0..op.arity())
+                .map(|_| BitRow::zeros(chunks * cols))
+                .collect();
+            let (reply, _keep) = std::sync::mpsc::channel();
+            let item = TaskItem {
+                seq,
+                req: BulkRequest::bitwise(op, operands),
+                placement: None,
+                reply,
+                admitted_at: std::time::Instant::now(),
+            };
+            pushed.insert(seq, (home.0, op, chunks));
+            let due = coal.push(home, item, chunks, false);
+            verify_groups(&due, &pushed, &mut emitted, slots, cols)?;
+            if coal.max_held_age() >= horizon {
+                return Err(format!(
+                    "held age {} breached the {horizon}-submission horizon",
+                    coal.max_held_age()
+                ));
+            }
+        }
+        let rest = coal.flush_all();
+        verify_groups(&rest, &pushed, &mut emitted, slots, cols)?;
+        if emitted.len() != pushed.len() {
+            return Err(format!(
+                "{} of {} pushed items ever emerged",
+                emitted.len(),
+                pushed.len()
+            ));
+        }
+        if coal.held() != 0 {
+            return Err("items still staged after flush_all".into());
+        }
+        Ok(())
+    });
+}
+
+/// Coalescing must be invisible in the results: the same seeded burst
+/// through the same fleet yields byte-identical payloads with the
+/// coalescer off, in strict staging, and in opportunistic staging —
+/// across a fixed seed matrix.
+#[test]
+fn prop_coalesce_results_byte_exact() {
+    prop::check_seeds("coalesce_byte_exact", &[0x1DEA, 0xBEEF, 0xC0A1], |rng| {
+        let seed = rng.next_u64();
+        let run = |coalesce: CoalesceConfig| -> Vec<Payload> {
+            let c = DrimCluster::new(ClusterConfig {
+                coalesce,
+                steal: false,
+                ..ClusterConfig::tiny(2)
+            });
+            c.pump_coalesce(12, 200, seed)
+        };
+        let off = run(CoalesceConfig::off());
+        let strict = run(CoalesceConfig::strict(64));
+        if strict != off {
+            return Err("strict coalescing changed request results".into());
+        }
+        let opportunistic = run(CoalesceConfig::opportunistic());
+        if opportunistic != off {
+            return Err("opportunistic coalescing changed request results".into());
         }
         Ok(())
     });
