@@ -23,7 +23,7 @@
 use drim::cluster::{ClusterConfig, CoalesceConfig, DrimCluster, FleetSnapshot};
 use drim::coordinator::{Payload, ServiceConfig};
 use drim::dram::geometry::DramGeometry;
-use drim::util::bench::section;
+use drim::util::bench::{section, BenchReport};
 use drim::util::stats::fmt_ns;
 use drim::util::table::Table;
 
@@ -104,7 +104,50 @@ fn main() {
     }
     t.print();
 
-    // --- gates -----------------------------------------------------------
+    let mut report = BenchReport::new("ablate_coalesce");
+    report
+        .config("devices", DEVICES)
+        .config("subwave_requests", SUBWAVE_REQUESTS)
+        .config("subwave_bits", SUBWAVE_BITS)
+        .config("wavefill_requests", WAVEFILL_REQUESTS)
+        .config("wavefill_bits", WAVEFILL_BITS)
+        .config("seed", SEED);
+    for (tag, snap) in [
+        ("subwave_off", &sub_off),
+        ("subwave_on", &sub_on),
+        ("wavefill_off", &fill_off),
+        ("wavefill_on", &fill_on),
+    ] {
+        report.metric(&format!("{tag}_waves"), snap.merged.waves);
+        report.metric(&format!("{tag}_slot_occupancy"), snap.slot_occupancy());
+        report.metric(&format!("{tag}_sim_makespan_ns"), snap.merged.sim_ns);
+        report.metric(&format!("{tag}_waves_saved"), snap.waves_saved);
+    }
+
+    // --- gates (recorded first so a failing run still leaves the artifact)
+    let results_identical =
+        sub_on_results == sub_off_results && fill_on_results == fill_off_results;
+    let subwave_faster = sub_on.merged.sim_ns < sub_off.merged.sim_ns;
+    let subwave_denser = sub_on.slot_occupancy() > sub_off.slot_occupancy();
+    let subwave_packs = sub_on.coalesced_requests > 0
+        && sub_on.waves_saved > 0
+        && sub_off.coalesced_requests == 0;
+    let all_completed = sub_on.completed as usize == SUBWAVE_REQUESTS
+        && sub_off.completed as usize == SUBWAVE_REQUESTS;
+    let wavefill_noop = fill_on.merged.waves == fill_off.merged.waves
+        && fill_on.merged.sim_ns == fill_off.merged.sim_ns
+        && fill_on.coalesced_requests == 0
+        && fill_on.waves_saved == 0
+        && (fill_on.slot_occupancy() - fill_off.slot_occupancy()).abs() < 1e-12;
+    report
+        .gate("results_byte_identical", results_identical)
+        .gate("subwave_on_faster", subwave_faster)
+        .gate("subwave_on_denser", subwave_denser)
+        .gate("subwave_on_packs", subwave_packs)
+        .gate("no_request_lost", all_completed)
+        .gate("wavefill_noop", wavefill_noop);
+    report.write();
+
     // byte-exact results: packing must never change what a request computes
     assert_eq!(
         sub_on_results, sub_off_results,
@@ -116,32 +159,22 @@ fn main() {
     );
     // sub-wave: ON beats OFF on makespan AND slot occupancy, strictly
     assert!(
-        sub_on.merged.sim_ns < sub_off.merged.sim_ns,
+        subwave_faster,
         "makespan: on {} vs off {}",
         sub_on.merged.sim_ns,
         sub_off.merged.sim_ns
     );
     assert!(
-        sub_on.slot_occupancy() > sub_off.slot_occupancy(),
+        subwave_denser,
         "occupancy: on {} vs off {}",
         sub_on.slot_occupancy(),
         sub_off.slot_occupancy()
     );
-    assert!(sub_on.coalesced_requests > 0, "nothing coalesced");
-    assert!(sub_on.waves_saved > 0, "no waves saved");
-    assert_eq!(sub_off.coalesced_requests, 0);
+    assert!(subwave_packs, "coalescing packed nothing");
     // every request completed in both modes
-    assert_eq!(sub_on.completed as usize, SUBWAVE_REQUESTS);
-    assert_eq!(sub_off.completed as usize, SUBWAVE_REQUESTS);
+    assert!(all_completed, "requests lost");
     // wave-filling: coalescing is a no-op — identical wave economy
-    assert_eq!(fill_on.merged.waves, fill_off.merged.waves);
-    assert_eq!(fill_on.merged.sim_ns, fill_off.merged.sim_ns);
-    assert_eq!(fill_on.coalesced_requests, 0, "full waves must bypass");
-    assert_eq!(fill_on.waves_saved, 0);
-    assert!(
-        (fill_on.slot_occupancy() - fill_off.slot_occupancy()).abs() < 1e-12,
-        "wave-filling occupancy drifted"
-    );
+    assert!(wavefill_noop, "wave-filling run was not a no-op");
 
     println!(
         "\n→ coalescing ON: {} waves ({:.1}% occupancy) vs OFF {} waves \

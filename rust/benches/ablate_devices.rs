@@ -16,7 +16,7 @@ use drim::cluster::{ClusterConfig, DrimCluster};
 use drim::coordinator::{BulkRequest, ServiceConfig};
 use drim::dram::geometry::DramGeometry;
 use drim::isa::program::BulkOp;
-use drim::util::bench::section;
+use drim::util::bench::{section, BenchReport};
 use drim::util::bitrow::BitRow;
 use drim::util::rng::Rng;
 use drim::util::stats::fmt_rate;
@@ -66,7 +66,10 @@ fn run_fleet(devices: usize, steal: bool, skewed: bool, seed: u64) -> (f64, f64,
     )
 }
 
-fn sweep(steal: bool, skewed: bool) {
+/// Run the 1/2/4/8 sweep, printing the table and recording each point's
+/// simulated makespan and throughput into the report under `tag`.
+/// Returns `(devices, sim_ns, throughput)` per point.
+fn sweep(steal: bool, skewed: bool, report: &mut BenchReport, tag: &str) -> Vec<(usize, f64, f64)> {
     let mut t = Table::new(&[
         "devices",
         "sim makespan",
@@ -75,6 +78,7 @@ fn sweep(steal: bool, skewed: bool) {
         "host wall",
     ]);
     let mut base = 0.0;
+    let mut out = Vec::new();
     for devices in [1usize, 2, 4, 8] {
         let (sim_ns, tp, wall) = run_fleet(devices, steal, skewed, 0xAB1A7E);
         if base == 0.0 {
@@ -91,13 +95,25 @@ fn sweep(steal: bool, skewed: bool) {
             },
             format!("{wall:?}"),
         ]);
+        report.metric(&format!("{tag}_dev{devices}_sim_makespan_ns"), sim_ns);
+        report.metric(&format!("{tag}_dev{devices}_throughput_bits_per_sec"), tp);
+        out.push((devices, sim_ns, tp));
     }
     t.print();
+    out
 }
 
 fn main() {
+    let mut report = BenchReport::new("ablate_devices");
+    report
+        .config("requests", 64u64)
+        .config("device_counts", "1/2/4/8")
+        .config("uniform_bits", 1u64 << 18)
+        .config("skewed_bits", 1u64 << 22)
+        .config("seed", 0xAB1A7Eu64);
+
     section("device scaling — uniform requests, steal off (pure sharding)");
-    sweep(false, false);
+    let uniform = sweep(false, false, &mut report, "uniform");
     println!(
         "→ round-robin sharding: makespan divides by the device count \
          while payloads keep every wave full"
@@ -105,12 +121,32 @@ fn main() {
 
     section("device scaling — skewed requests, steal off vs on");
     println!("steal off (stragglers bound the makespan):");
-    sweep(false, true);
+    let skew_off = sweep(false, true, &mut report, "skew_nosteal");
     println!("steal on (idle workers drain the straggler's queue):");
-    sweep(true, true);
+    let skew_on = sweep(true, true, &mut report, "skew_steal");
     println!(
         "→ stealing narrows the gap between busiest and idlest device \
          when request sizes are skewed"
+    );
+
+    // --- gates (recorded first so a failing run still leaves the artifact)
+    // uniform round-robin with full waves is deterministic: 8 devices
+    // must scale well past 2× over 1 device
+    let scaling_8x = uniform[3].2 / uniform[0].2.max(f64::MIN_POSITIVE);
+    report.metric("uniform_scaling_8x", scaling_8x);
+    let scales = scaling_8x >= 2.0;
+    report.gate("uniform_scaling_improves", scales);
+    // stealing is timing-dependent, so the gate has 10% slack: it must
+    // not make the skewed 8-device makespan meaningfully worse
+    let steal_ok = skew_on[3].1 <= skew_off[3].1 * 1.10;
+    report.metric("skew_dev8_makespan_ratio", skew_on[3].1 / skew_off[3].1.max(1.0));
+    report.gate("steal_not_worse_under_skew", steal_ok);
+    report.write();
+    assert!(scales, "8-device scaling only {scaling_8x:.2}x");
+    assert!(
+        steal_ok,
+        "stealing degraded the skewed makespan: {} vs {}",
+        skew_on[3].1, skew_off[3].1
     );
 
     println!("\nablate_devices bench OK");

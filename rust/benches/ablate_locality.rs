@@ -20,7 +20,7 @@
 use drim::cluster::{ClusterConfig, DrimCluster, FleetSnapshot};
 use drim::coordinator::ServiceConfig;
 use drim::dram::geometry::DramGeometry;
-use drim::util::bench::section;
+use drim::util::bench::{section, BenchReport};
 use drim::util::stats::fmt_ns;
 use drim::util::table::Table;
 
@@ -91,8 +91,14 @@ fn main() {
         Strategy(Some(5)),
         Strategy(Some(0)),
     ];
+    let mut report = BenchReport::new("ablate_locality");
+    report
+        .config("devices", DEVICES)
+        .config("requests", REQUESTS)
+        .config("bits", BITS)
+        .config("seed", 0x10CA117u64);
     let mut snaps = Vec::new();
-    for s in strategies {
+    for (i, s) in strategies.into_iter().enumerate() {
         let snap = run(s, 0x10CA117);
         t.row(&[
             s.label(),
@@ -103,41 +109,56 @@ fn main() {
             fmt_ns(snap.merged.sim_ns as f64),
             fmt_ns(snap.makespan_with_copy_ns() as f64),
         ]);
+        let tag = ["carried", "resident50", "resident80", "resident100"][i];
+        report.metric(&format!("{tag}_copied_bytes"), snap.copied_bytes);
+        report.metric(&format!("{tag}_copy_cycles"), snap.copy_cycles);
+        report.metric(
+            &format!("{tag}_makespan_with_copy_ns"),
+            snap.makespan_with_copy_ns(),
+        );
         snaps.push(snap);
     }
     t.print();
 
     let (carried, r80, r100) = (&snaps[0], &snaps[2], &snaps[3]);
 
-    // --- gates -----------------------------------------------------------
-    // fully resident placement moves nothing
-    assert_eq!(r100.copied_bytes, 0, "resident 100% must be zero-copy");
-    assert_eq!(r100.copy_cycles, 0);
-    assert_eq!(r100.makespan_with_copy_ns(), r100.merged.sim_ns);
-    // the 80%-hit run really is ≥80% hits
+    // --- gates (recorded first so a failing run still leaves the artifact)
     let total = r80.resident_hits + r80.resident_misses;
-    assert!(
-        r80.resident_hits * 5 >= total * 4,
-        "hit rate below 80%: {}/{total}",
-        r80.resident_hits
-    );
+    let zero_copy = r100.copied_bytes == 0
+        && r100.copy_cycles == 0
+        && r100.makespan_with_copy_ns() == r100.merged.sim_ns;
+    let hit_rate = r80.resident_hits * 5 >= total * 4;
+    let fewer_cycles = r80.copy_cycles < carried.copy_cycles;
+    let faster = r80.makespan_with_copy_ns() < carried.makespan_with_copy_ns();
+    let carried_all_miss =
+        carried.resident_hits == 0 && carried.resident_misses as usize == REQUESTS;
+    report
+        .gate("resident100_zero_copy", zero_copy)
+        .gate("resident80_hit_rate", hit_rate)
+        .gate("resident80_fewer_copy_cycles", fewer_cycles)
+        .gate("resident80_faster_with_copy", faster)
+        .gate("carried_pays_every_request", carried_all_miss);
+    report.write();
+
+    // fully resident placement moves nothing
+    assert!(zero_copy, "resident 100% must be zero-copy");
+    // the 80%-hit run really is ≥80% hits
+    assert!(hit_rate, "hit rate below 80%: {}/{total}", r80.resident_hits);
     // locality-aware routing beats payload-carrying round-robin
     assert!(
-        r80.copy_cycles < carried.copy_cycles,
+        fewer_cycles,
         "copy cycles: resident80 {} vs carried {}",
-        r80.copy_cycles,
-        carried.copy_cycles
+        r80.copy_cycles, carried.copy_cycles
     );
     assert!(
-        r80.makespan_with_copy_ns() < carried.makespan_with_copy_ns(),
+        faster,
         "makespan incl copy: resident80 {} vs carried {}",
         r80.makespan_with_copy_ns(),
         carried.makespan_with_copy_ns()
     );
     // both policies do the same compute on the same fleet — the win is
     // operand movement, and carried pays it on every single request
-    assert_eq!(carried.resident_hits, 0);
-    assert_eq!(carried.resident_misses as usize, REQUESTS);
+    assert!(carried_all_miss);
 
     println!(
         "\n→ resident routing at ≥80% hits: {} copy cycles vs carried {} \

@@ -1,0 +1,104 @@
+//! Tracing-overhead bench: the fleet serving workload with the tracer
+//! idle (sampling off), and — when the `trace` feature is compiled in —
+//! with full sampling, to price what recording actually costs.
+//!
+//! The CI overhead gate builds this binary twice, with default features
+//! (`trace` on) and with `--no-default-features` (`trace` compiled out),
+//! and compares the `pump_idle` min_ns across the two artifacts
+//! (`BENCH_obs_overhead.json` vs `BENCH_obs_overhead_untraced.json`):
+//! the trace feature with sampling off must stay within 5% of the
+//! compiled-out baseline — the hot-path cost of an idle tracer is one
+//! relaxed atomic load per event site.
+
+use drim::cluster::{ClusterConfig, DrimCluster};
+use drim::coordinator::{BulkRequest, ServiceConfig};
+use drim::dram::geometry::DramGeometry;
+use drim::isa::program::BulkOp;
+use drim::util::bench::{section, BenchReport, Bencher};
+use drim::util::bitrow::BitRow;
+use drim::util::rng::Rng;
+
+const DEVICES: usize = 4;
+const REQUESTS: usize = 256;
+/// small requests so per-request pipeline overhead dominates the run
+const BITS: usize = 4096;
+const SEED: u64 = 0x0B5EA7;
+
+/// Bench-sized device (same geometry as the ablation benches).
+fn bench_service() -> ServiceConfig {
+    ServiceConfig {
+        geometry: DramGeometry {
+            banks: 4,
+            subarrays_per_bank: 8,
+            cols: 1024,
+            active_subarrays: 4,
+        },
+        workers: 2,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Pump the serving mix through a fresh fleet with the given sampling
+/// interval (0 = tracer idle).
+fn pump(sampling: u32) {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        ..ClusterConfig::uniform(DEVICES, bench_service())
+    });
+    cluster.tracer().set_sampling(sampling);
+    let mut rng = Rng::new(SEED);
+    let pending: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let op = [BulkOp::Xnor2, BulkOp::Xor2, BulkOp::And2, BulkOp::Not][i % 4];
+            let operands: Vec<BitRow> = (0..op.arity())
+                .map(|_| BitRow::random(BITS, &mut rng))
+                .collect();
+            cluster.submit_blocking(BulkRequest::bitwise(op, operands))
+        })
+        .collect();
+    for p in pending {
+        p.recv().expect("response");
+    }
+    cluster.shutdown();
+}
+
+fn main() {
+    let traced = cfg!(feature = "trace");
+    section(if traced {
+        "tracing overhead — `trace` feature ON"
+    } else {
+        "tracing overhead — `trace` feature compiled OUT"
+    });
+    println!("{REQUESTS} requests × {BITS} bits over {DEVICES} devices (steal off)\n");
+    let b = Bencher {
+        warmup_iters: 1,
+        iters: 5,
+    };
+    // two artifact names so the CI gate can diff the feature-on and
+    // feature-off builds side by side
+    let mut report = BenchReport::new(if traced {
+        "obs_overhead"
+    } else {
+        "obs_overhead_untraced"
+    });
+    report
+        .config("devices", DEVICES)
+        .config("requests", REQUESTS)
+        .config("bits", BITS)
+        .config("seed", SEED)
+        .config("trace_feature", traced);
+
+    let idle = b.run("pump_idle", REQUESTS as f64, || pump(0));
+    report.measurement(&idle);
+
+    if traced {
+        let sampled = b.run("pump_sampled", REQUESTS as f64, || pump(1));
+        report.measurement(&sampled);
+        report.metric(
+            "sampled_over_idle_ratio",
+            sampled.min_ns / idle.min_ns.max(1.0),
+        );
+    }
+    report.write();
+    println!("\nobs_overhead bench OK");
+}

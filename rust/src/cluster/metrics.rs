@@ -22,7 +22,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::MetricsSnapshot;
-use crate::util::stats::{fmt_ns, fmt_rate, Summary};
+use crate::obs::json::Json;
+use crate::obs::Histogram;
+use crate::util::stats::{fmt_ns, fmt_rate};
 
 use super::residency::{CopyCharge, RegionId};
 
@@ -58,6 +60,7 @@ pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         mean_latency_ns: 0.0,
         max_latency_ns: 0.0,
         sim_throughput_bits_per_sec: 0.0,
+        latency: Histogram::new(),
     };
     let mut latency_mass = 0.0;
     for p in parts {
@@ -72,6 +75,10 @@ pub fn merge_snapshots(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         out.waves += p.waves;
         out.wave_slots_filled += p.wave_slots_filled;
         out.wave_slots_total += p.wave_slots_total;
+        // the histogram folds bucket-wise; mean/max stay derived from the
+        // scalar fields so hand-built snapshots (tests, tools) merge
+        // consistently even without a populated histogram
+        out.latency.merge(&p.latency);
         latency_mass += p.mean_latency_ns * p.requests as f64;
         out.max_latency_ns = out.max_latency_ns.max(p.max_latency_ns);
     }
@@ -112,7 +119,9 @@ pub struct FleetMetrics {
     pub waves_saved: AtomicU64,
     /// simulated copy nanoseconds charged to each device (index = DeviceId)
     copy_ns: Vec<AtomicU64>,
-    queue_wait_ns: Mutex<Summary>,
+    /// host-side admission→pickup sojourn per *home* device (index =
+    /// DeviceId of the queue the task was admitted to)
+    queue_wait: Vec<Mutex<Histogram>>,
     /// per-region `(uses, misses)` since the window was last drained
     region_window: Mutex<HashMap<u64, (u64, u64)>>,
 }
@@ -132,7 +141,9 @@ impl FleetMetrics {
             coalesced_requests: AtomicU64::new(0),
             waves_saved: AtomicU64::new(0),
             copy_ns: (0..devices).map(|_| AtomicU64::new(0)).collect(),
-            queue_wait_ns: Mutex::new(Summary::default()),
+            queue_wait: (0..devices.max(1))
+                .map(|_| Mutex::new(Histogram::new()))
+                .collect(),
             region_window: Mutex::new(HashMap::new()),
         }
     }
@@ -215,12 +226,35 @@ impl FleetMetrics {
             .collect()
     }
 
-    pub fn record_queue_wait_ns(&self, ns: f64) {
-        self.queue_wait_ns.lock().unwrap().add(ns);
+    /// Record one admission→pickup sojourn against the task's home
+    /// device (the queue it was admitted to, not the worker that drained
+    /// it — sojourn attributes queueing pressure, not execution).
+    pub fn record_queue_wait_ns(&self, home: usize, ns: f64) {
+        self.queue_wait[home.min(self.queue_wait.len() - 1)]
+            .lock()
+            .unwrap()
+            .record(ns.max(0.0).round() as u64);
+    }
+
+    /// Per-home-device sojourn distributions (index = DeviceId).
+    pub fn queue_wait_histograms(&self) -> Vec<Histogram> {
+        self.queue_wait
+            .iter()
+            .map(|h| h.lock().unwrap().clone())
+            .collect()
+    }
+
+    /// Fleet-wide sojourn distribution (all devices folded together).
+    pub fn queue_wait_merged(&self) -> Histogram {
+        let mut out = Histogram::new();
+        for h in &self.queue_wait {
+            out.merge(&h.lock().unwrap());
+        }
+        out
     }
 
     pub fn mean_queue_wait_ns(&self) -> f64 {
-        self.queue_wait_ns.lock().unwrap().mean()
+        self.queue_wait_merged().mean()
     }
 }
 
@@ -262,6 +296,13 @@ pub struct FleetSnapshot {
     /// (for a coalesced request this includes time staged in the
     /// coalescer — the hold the flush horizon bounds)
     pub mean_queue_wait_ns: f64,
+    /// fleet-wide sojourn distribution (all home devices folded)
+    pub queue_wait: Histogram,
+    /// sojourn distribution per home device (index = DeviceId)
+    pub queue_wait_per_device: Vec<Histogram>,
+    /// acknowledged eviction tombstones reclaimed by the residency
+    /// registry's compaction (see `cluster/residency.rs`)
+    pub tombstones_compacted: u64,
 }
 
 impl FleetSnapshot {
@@ -294,14 +335,61 @@ impl FleetSnapshot {
             .unwrap_or(0)
     }
 
+    /// Stable JSON form — the payload behind `drim cluster --json`
+    /// (schema: see docs/ARCHITECTURE.md § Observability).
+    pub fn to_json(&self) -> Json {
+        let per_device = self
+            .per_device
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let sojourn = self
+                    .queue_wait_per_device
+                    .get(i)
+                    .cloned()
+                    .unwrap_or_default();
+                d.to_json()
+                    .field("device", i)
+                    .field("copy_ns", *self.copy_ns_per_device.get(i).unwrap_or(&0))
+                    .field("queue_sojourn_ns", sojourn.summary_json())
+            })
+            .collect::<Vec<_>>();
+        Json::obj()
+            .field("schema", 1u64)
+            .field("devices", self.devices())
+            .field("admitted", self.admitted)
+            .field("shed", self.shed)
+            .field("waited", self.waited)
+            .field("completed", self.completed)
+            .field("steals", self.steals)
+            .field("copied_bytes", self.copied_bytes)
+            .field("copy_cycles", self.copy_cycles)
+            .field("resident_hits", self.resident_hits)
+            .field("resident_misses", self.resident_misses)
+            .field("evictions", self.evictions)
+            .field("capacity_refusals", self.capacity_refusals)
+            .field("replications", self.replications)
+            .field("migrations", self.migrations)
+            .field("coalesced_requests", self.coalesced_requests)
+            .field("waves_saved", self.waves_saved)
+            .field("tombstones_compacted", self.tombstones_compacted)
+            .field("makespan_ns", self.merged.sim_ns)
+            .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
+            .field("queue_sojourn_ns", self.queue_wait.summary_json())
+            .field("fleet", self.merged.to_json())
+            .field("per_device", Json::Arr(per_device))
+    }
+
     pub fn report(&self) -> String {
+        let (qp50, qp95, qp99) = self.queue_wait.p50_p95_p99();
         let mut s = format!(
             "fleet: {} devices  admitted: {}  shed: {}  waited: {}  \
              completed: {}  steals: {}  mean queue wait: {}\n\
+             queue sojourn p50: {}  p95: {}  p99: {}\n\
              copy traffic: {} B  ({} bus cycles)  resident hits: {}  \
              misses: {}  makespan incl copy: {}\n\
              residency: evictions: {}  refusals: {}  replications: {}  \
-             migrations: {}\n\
+             migrations: {}  tombstones compacted: {}\n\
              waves: {}  slot occupancy: {:.1}%  coalesced requests: {}  \
              waves saved: {}\n",
             self.devices(),
@@ -311,6 +399,9 @@ impl FleetSnapshot {
             self.completed,
             self.steals,
             fmt_ns(self.mean_queue_wait_ns),
+            fmt_ns(qp50),
+            fmt_ns(qp95),
+            fmt_ns(qp99),
             self.copied_bytes,
             self.copy_cycles,
             self.resident_hits,
@@ -320,6 +411,7 @@ impl FleetSnapshot {
             self.capacity_refusals,
             self.replications,
             self.migrations,
+            self.tombstones_compacted,
             self.merged.waves,
             100.0 * self.slot_occupancy(),
             self.coalesced_requests,
@@ -347,6 +439,10 @@ mod tests {
     use super::*;
 
     fn snap(requests: u64, bits: u64, sim_ns: u64, mean_lat: f64) -> MetricsSnapshot {
+        let mut latency = Histogram::new();
+        for _ in 0..requests {
+            latency.record(mean_lat.round() as u64);
+        }
         MetricsSnapshot {
             requests,
             chunks: requests * 2,
@@ -360,6 +456,7 @@ mod tests {
             mean_latency_ns: mean_lat,
             max_latency_ns: mean_lat * 2.0,
             sim_throughput_bits_per_sec: 0.0,
+            latency,
         }
     }
 
@@ -380,6 +477,9 @@ mod tests {
         // request-weighted mean: (4·50 + 12·150) / 16
         assert!((m.mean_latency_ns - 125.0).abs() < 1e-9);
         assert!((m.max_latency_ns - 300.0).abs() < 1e-9);
+        // the distribution merged bucket-wise alongside the scalars
+        assert_eq!(m.latency.count(), 16);
+        assert!((m.latency.mean() - 125.0).abs() < 1e-9);
         // throughput over the makespan
         let want = 12_000.0 / (300.0 * 1e-9);
         assert!((m.sim_throughput_bits_per_sec - want).abs() / want < 1e-12);
@@ -418,9 +518,10 @@ mod tests {
         let f = FleetMetrics::new(1);
         f.record_completed();
         f.record_steal();
-        f.record_queue_wait_ns(500.0);
-        f.record_queue_wait_ns(1500.0);
+        f.record_queue_wait_ns(0, 500.0);
+        f.record_queue_wait_ns(0, 1500.0);
         assert!((f.mean_queue_wait_ns() - 1000.0).abs() < 1e-9);
+        assert_eq!(f.queue_wait_merged().count(), 2);
         let snapshot = FleetSnapshot {
             per_device: vec![snap(1, 100, 10, 5.0)],
             merged: merge_snapshots(&[snap(1, 100, 10, 5.0)]),
@@ -441,6 +542,9 @@ mod tests {
             waves_saved: 3,
             copy_ns_per_device: vec![30],
             mean_queue_wait_ns: 1000.0,
+            queue_wait: f.queue_wait_merged(),
+            queue_wait_per_device: f.queue_wait_histograms(),
+            tombstones_compacted: 5,
         };
         let r = snapshot.report();
         assert!(r.contains("shed: 2"), "{r}");
@@ -450,8 +554,23 @@ mod tests {
         assert!(r.contains("replications: 2"), "{r}");
         assert!(r.contains("coalesced requests: 4"), "{r}");
         assert!(r.contains("waves saved: 3"), "{r}");
+        assert!(r.contains("queue sojourn p50"), "{r}");
+        assert!(r.contains("tombstones compacted: 5"), "{r}");
         // makespan incl copy = sim 10 + copy 30
         assert_eq!(snapshot.makespan_with_copy_ns(), 40);
+
+        // --json payload: parseable, schema-tagged, percentiles present
+        let doc = Json::parse(&snapshot.to_json().to_string_compact()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("devices").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("tombstones_compacted").unwrap().as_f64(), Some(5.0));
+        let sojourn = doc.get("queue_sojourn_ns").unwrap();
+        assert_eq!(sojourn.get("count").unwrap().as_f64(), Some(2.0));
+        assert!(sojourn.get("p99").unwrap().as_f64().unwrap() >= 500.0);
+        let devs = doc.get("per_device").unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 1);
+        assert!(devs[0].get("latency_ns").unwrap().get("p50").is_some());
+        assert!(devs[0].get("queue_sojourn_ns").unwrap().get("p95").is_some());
     }
 
     #[test]

@@ -88,8 +88,14 @@ use crate::coordinator::{
 };
 use crate::dram::timing::TimingParams;
 use crate::isa::program::BulkOp;
+use crate::obs::trace::{Stage, Tracer};
 use crate::util::bitrow::BitRow;
 use crate::util::rng::{zipf_cdf, Rng};
+
+/// Trace ring capacity per lane (one lane per device + one frontend
+/// lane). Big enough to hold a full ablation run at sampling 1; overflow
+/// drops oldest events and is reported in the collected trace.
+const TRACE_LANE_CAPACITY: usize = 8192;
 
 /// Fleet construction knobs.
 #[derive(Clone, Debug)]
@@ -168,6 +174,7 @@ pub struct DrimCluster {
     registry: Arc<ResidencyRegistry>,
     locality: Arc<LocalityModel>,
     coalescer: Arc<Coalescer>,
+    tracer: Arc<Tracer>,
     /// per-device metrics handles (outlive the devices themselves)
     device_metrics: Vec<Arc<Metrics>>,
     workers: Vec<JoinHandle<()>>,
@@ -223,6 +230,8 @@ impl DrimCluster {
                 .map(|d| d.service.geometry.banks * d.service.geometry.active_subarrays)
                 .collect(),
         ));
+        let tracer = Arc::new(Tracer::new(n + 1, TRACE_LANE_CAPACITY));
+        registry.set_tracer(Arc::clone(&tracer));
         let device_metrics: Vec<Arc<Metrics>> =
             devices.iter().map(|d| d.metrics()).collect();
         let workers = devices
@@ -236,6 +245,7 @@ impl DrimCluster {
                     locality: Arc::clone(&locality),
                     registry: Arc::clone(&registry),
                     coalescer: Arc::clone(&coalescer),
+                    tracer: Arc::clone(&tracer),
                     steal: cfg.steal,
                 };
                 std::thread::spawn(move || worker::worker_loop(DeviceId(i), dev, ctx))
@@ -248,6 +258,7 @@ impl DrimCluster {
             let sched = Arc::clone(&sched);
             let registry = Arc::clone(&registry);
             let locality = Arc::clone(&locality);
+            let tracer = Arc::clone(&tracer);
             std::thread::spawn(move || {
                 let (lock, cv) = &*stop;
                 loop {
@@ -270,7 +281,7 @@ impl DrimCluster {
                     if depths.iter().copied().max().unwrap_or(0) < rb.min_queue_depth {
                         continue;
                     }
-                    rebalance_parts(&fleet, &sched, &registry, &locality, &rb.policy);
+                    rebalance_parts(&fleet, &sched, &registry, &locality, &tracer, &rb.policy);
                 }
             })
         });
@@ -282,6 +293,7 @@ impl DrimCluster {
             registry,
             locality,
             coalescer,
+            tracer,
             device_metrics,
             workers,
             maintenance,
@@ -312,6 +324,22 @@ impl DrimCluster {
     /// pipeline).
     pub fn coalescer(&self) -> &Coalescer {
         &self.coalescer
+    }
+
+    /// The fleet's structured event tracer. Recording is off until
+    /// [`Tracer::set_sampling`] enables it (and compiles out entirely
+    /// without the `trace` cargo feature); `drim trace` turns it on and
+    /// renders the collected timeline.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// A shared handle on the tracer that survives [`Self::shutdown`] —
+    /// `drim trace` collects the timeline after the workers have joined,
+    /// so every span of the run (including the final reassembles) is
+    /// present in the merge.
+    pub fn trace_handle(&self) -> Arc<Tracer> {
+        Arc::clone(&self.tracer)
     }
 
     /// Dispatch everything still staged in the coalescer. Burst drivers
@@ -356,6 +384,8 @@ impl DrimCluster {
         placement: Option<Placement>,
     ) -> Receiver<ClusterResponse> {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let lane = self.tracer.frontend_lane();
+        self.tracer.instant(lane, Stage::Admit, seq, home.0 as u64);
         let (tx, rx) = channel();
         let item = TaskItem {
             seq,
@@ -367,6 +397,7 @@ impl DrimCluster {
         if self.coalescer.config().enabled {
             let cols = self.cfg.topology.devices[home.0].service.geometry.cols;
             let chunks = item.req.wave_units(cols);
+            self.tracer.instant(lane, Stage::Coalesce, seq, chunks as u64);
             let flush_home = self.admission.is_saturated(home);
             for task in self.coalescer.push(home, item, chunks, flush_home) {
                 self.sched.submit(task.home.0, task);
@@ -620,6 +651,7 @@ impl DrimCluster {
             &self.sched,
             &self.registry,
             &self.locality,
+            &self.tracer,
             policy,
         )
     }
@@ -754,6 +786,9 @@ impl DrimCluster {
             waves_saved: self.fleet.waves_saved.load(Ordering::Relaxed),
             copy_ns_per_device: self.fleet.copy_ns_per_device(),
             mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
+            queue_wait: self.fleet.queue_wait_merged(),
+            queue_wait_per_device: self.fleet.queue_wait_histograms(),
+            tombstones_compacted: self.registry.tombstones_compacted(),
         }
     }
 
@@ -802,6 +837,7 @@ fn rebalance_parts(
     sched: &Scheduler<ClusterTask>,
     registry: &ResidencyRegistry,
     locality: &LocalityModel,
+    tracer: &Tracer,
     policy: &ReplicationPolicy,
 ) -> Vec<PlacementAction> {
     let window = fleet.take_region_window();
@@ -828,6 +864,13 @@ fn rebalance_parts(
                 if registry.replicate(region, to) == Ok(true) {
                     fleet.record_placement_copy(to.0, &charge);
                     fleet.replications.fetch_add(1, Ordering::Relaxed);
+                    tracer.instant_with_dur(
+                        tracer.frontend_lane(),
+                        Stage::Replicate,
+                        region.0,
+                        charge.ns.round() as u64,
+                        to.0 as u64,
+                    );
                 }
             }
             PlacementAction::Migrate { region, to } => {
@@ -840,6 +883,13 @@ fn rebalance_parts(
                 if registry.migrate(region, to) == Ok(true) {
                     fleet.record_placement_copy(to.0, &charge);
                     fleet.migrations.fetch_add(1, Ordering::Relaxed);
+                    tracer.instant_with_dur(
+                        tracer.frontend_lane(),
+                        Stage::Migrate,
+                        region.0,
+                        charge.ns.round() as u64,
+                        to.0 as u64,
+                    );
                 }
             }
         }

@@ -40,11 +40,22 @@
 //! never silently downgraded to an inline payload. Requests already past
 //! [`ResidencyRegistry::resolve`] carry materialized payloads, so eviction
 //! can never dangle a queued request.
+//!
+//! Tombstones are *bounded*: once a lookup has observed a tombstone (the
+//! routing layer acknowledged the eviction), the entry is compactable —
+//! [`ResidencyRegistry::compact_tombstones`] reclaims acknowledged
+//! tombstones, and the set self-compacts past a threshold so a
+//! long-running fleet under eviction churn never grows it without bound.
+//! After compaction a stale handle degrades from [`RouteError::Evicted`]
+//! to [`RouteError::UnknownRegion`]; callers already treat the two
+//! identically (both mean "re-register and resubmit").
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::obs::trace::{Stage, Tracer};
 
 use crate::coordinator::{BulkRequest, Payload};
 use crate::dram::geometry::DeviceCapacity;
@@ -347,6 +358,12 @@ struct Region {
     queued: u64,
 }
 
+/// Tombstones kept in the registry before a self-compaction sweep runs.
+/// Acknowledged entries are reclaimed the next time an eviction pushes
+/// the set past this size (explicit [`ResidencyRegistry::compact_tombstones`]
+/// calls reclaim earlier).
+const TOMBSTONE_COMPACT_THRESHOLD: usize = 256;
+
 #[derive(Default)]
 struct Inner {
     regions: HashMap<u64, Region>,
@@ -354,8 +371,10 @@ struct Inner {
     /// lock-step with `regions` so capacity checks never rescan the map
     footprint: Vec<u64>,
     /// ids evicted by the capacity policy (never reused), so a racing
-    /// lookup gets the defined `Evicted` error instead of `UnknownRegion`
-    evicted: HashSet<u64>,
+    /// lookup gets the defined `Evicted` error instead of `UnknownRegion`.
+    /// The value records acknowledgement: `true` once some lookup has
+    /// observed the tombstone, making it safe to compact away.
+    evicted: HashMap<u64, bool>,
 }
 
 /// Registry mapping operand regions to the devices holding their replicas,
@@ -383,6 +402,10 @@ pub struct ResidencyRegistry {
     clock: AtomicU64,
     evictions: AtomicU64,
     capacity_refusals: AtomicU64,
+    /// acknowledged tombstones reclaimed by compaction since construction
+    tombstones_compacted: AtomicU64,
+    /// fleet tracer for eviction events (absent in standalone use)
+    tracer: OnceLock<Arc<Tracer>>,
 }
 
 impl Default for ResidencyRegistry {
@@ -397,6 +420,8 @@ impl Default for ResidencyRegistry {
             clock: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             capacity_refusals: AtomicU64::new(0),
+            tombstones_compacted: AtomicU64::new(0),
+            tracer: OnceLock::new(),
         }
     }
 }
@@ -460,6 +485,49 @@ impl ResidencyRegistry {
     /// enforcement since construction.
     pub fn capacity_refusals(&self) -> u64 {
         self.capacity_refusals.load(Ordering::Relaxed)
+    }
+
+    /// Acknowledged tombstones reclaimed by compaction since construction
+    /// (explicit [`Self::compact_tombstones`] calls plus self-compaction).
+    pub fn tombstones_compacted(&self) -> u64 {
+        self.tombstones_compacted.load(Ordering::Relaxed)
+    }
+
+    /// Attach the fleet tracer so evictions emit [`Stage::Evict`] events.
+    /// First caller wins; later calls are ignored (the registry is wired
+    /// once at fleet construction).
+    pub fn set_tracer(&self, tracer: Arc<Tracer>) {
+        let _ = self.tracer.set(tracer);
+    }
+
+    /// Reclaim tombstones the routing layer has acknowledged (a lookup
+    /// returned [`RouteError::Evicted`] for them). Returns how many were
+    /// dropped. Unacknowledged tombstones always survive, so a racing
+    /// lookup still gets the defined `Evicted` signal at least once.
+    pub fn compact_tombstones(&self) -> usize {
+        let mut inner = self.inner.write().unwrap();
+        self.compact_tombstones_locked(&mut inner)
+    }
+
+    /// Mark `id`'s tombstone as observed by the routing layer (needs the
+    /// write lock — read-path lookups drop their read lock and call this
+    /// before returning `Evicted`).
+    fn ack_tombstone(&self, id: u64) {
+        let mut inner = self.inner.write().unwrap();
+        if let Some(acked) = inner.evicted.get_mut(&id) {
+            *acked = true;
+        }
+    }
+
+    fn compact_tombstones_locked(&self, inner: &mut Inner) -> usize {
+        let before = inner.evicted.len();
+        inner.evicted.retain(|_, acked| !*acked);
+        let dropped = before - inner.evicted.len();
+        if dropped > 0 {
+            self.tombstones_compacted
+                .fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+        dropped
     }
 
     fn check(&self, device: DeviceId) {
@@ -528,9 +596,15 @@ impl ResidencyRegistry {
         inner.footprint[from.0] -= bits;
         if emptied {
             inner.regions.remove(&id);
-            inner.evicted.insert(id);
+            inner.evicted.insert(id, false);
+            if inner.evicted.len() > TOMBSTONE_COMPACT_THRESHOLD {
+                self.compact_tombstones_locked(inner);
+            }
         }
         self.evictions.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = self.tracer.get() {
+            t.instant(t.frontend_lane(), Stage::Evict, id, from.0 as u64);
+        }
     }
 
     /// Ensure `bits` fit on `device`, evicting under the policy. The
@@ -837,7 +911,7 @@ impl ResidencyRegistry {
             if seen.len() != r.homes.len() {
                 return Err(format!("region{id} lists a device twice: {:?}", r.homes));
             }
-            if inner.evicted.contains(id) {
+            if inner.evicted.contains_key(id) {
                 return Err(format!("region{id} both live and tombstoned"));
             }
             for h in &r.homes {
@@ -873,7 +947,12 @@ impl ResidencyRegistry {
             match o {
                 OperandRef::Inline(p) => placement.inline_bits += p.bits() as u64,
                 OperandRef::Resident(r) => {
-                    if inner.evicted.contains(&r.0) {
+                    if inner.evicted.contains_key(&r.0) {
+                        // acknowledging needs the write lock; the routing
+                        // layer has now observed the eviction, so the
+                        // tombstone becomes compactable
+                        drop(inner);
+                        self.ack_tombstone(r.0);
                         return Err(RouteError::Evicted(*r));
                     }
                     let region = inner
@@ -918,7 +997,10 @@ impl ResidencyRegistry {
                     operands.push(p.clone());
                 }
                 OperandRef::Resident(r) => {
-                    if inner.evicted.contains(&r.0) {
+                    if let Some(acked) = inner.evicted.get_mut(&r.0) {
+                        // already under the write lock: acknowledge the
+                        // tombstone inline so it becomes compactable
+                        *acked = true;
                         return Err(RouteError::Evicted(*r));
                     }
                     let region = inner
@@ -1440,6 +1522,75 @@ mod tests {
             RouteError::Evicted(b)
         );
         assert_eq!(reg.resolve(&stale).unwrap_err(), RouteError::Evicted(b));
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn acknowledged_tombstones_compact_and_degrade_to_unknown() {
+        let reg = lru_registry(1, 1024);
+        let a = reg.register(DeviceId(0), payload(1024));
+        let _b = reg.register(DeviceId(0), payload(1024)); // evicts `a`
+        assert_eq!(reg.owner(a), None);
+        // unacknowledged tombstone: compaction must not touch it, so the
+        // first lookup still sees the defined Evicted signal
+        assert_eq!(reg.compact_tombstones(), 0);
+        assert_eq!(reg.tombstones_compacted(), 0);
+        let stale = ClusterRequest::resident(BulkOp::Not, vec![a]);
+        assert_eq!(
+            reg.placement_of(&stale).unwrap_err(),
+            RouteError::Evicted(a)
+        );
+        // the lookup acknowledged it; now it is reclaimable
+        assert_eq!(reg.compact_tombstones(), 1);
+        assert_eq!(reg.tombstones_compacted(), 1);
+        // post-compaction the stale handle degrades to UnknownRegion —
+        // callers treat both as "re-register and resubmit"
+        assert_eq!(
+            reg.placement_of(&stale).unwrap_err(),
+            RouteError::UnknownRegion(a)
+        );
+        assert_eq!(
+            reg.resolve(&stale).unwrap_err(),
+            RouteError::UnknownRegion(a)
+        );
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn resolve_acknowledges_tombstones_too() {
+        let reg = lru_registry(1, 1024);
+        let a = reg.register(DeviceId(0), payload(1024));
+        let _b = reg.register(DeviceId(0), payload(1024));
+        let stale = ClusterRequest::resident(BulkOp::Not, vec![a]);
+        assert_eq!(reg.resolve(&stale).unwrap_err(), RouteError::Evicted(a));
+        assert_eq!(reg.compact_tombstones(), 1, "resolve acked the tombstone");
+        assert_eq!(reg.tombstones_compacted(), 1);
+        reg.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tombstone_set_self_compacts_under_eviction_churn() {
+        let reg = lru_registry(1, 1024);
+        let mut handles = Vec::new();
+        // each registration evicts its predecessor; acknowledging every
+        // tombstone keeps the whole backlog reclaimable, so churn well
+        // past the threshold must trigger self-compaction
+        for i in 0..(2 * TOMBSTONE_COMPACT_THRESHOLD + 8) {
+            let h = reg.register(DeviceId(0), payload(1024));
+            if let Some(prev) = handles.last() {
+                let stale = ClusterRequest::resident(BulkOp::Not, vec![*prev]);
+                let err = reg.placement_of(&stale).unwrap_err();
+                assert!(
+                    matches!(err, RouteError::Evicted(_) | RouteError::UnknownRegion(_)),
+                    "churn step {i}: {err:?}"
+                );
+            }
+            handles.push(h);
+        }
+        assert!(
+            reg.tombstones_compacted() > 0,
+            "self-compaction never fired under churn"
+        );
         reg.check_invariants().unwrap();
     }
 

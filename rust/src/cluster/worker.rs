@@ -30,6 +30,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::{BatchPolicy, BulkRequest, BulkResponse, Device};
+use crate::obs::trace::{Stage, Tracer};
 
 use super::admission::AdmissionController;
 use super::coalescer::Coalescer;
@@ -120,6 +121,7 @@ pub(crate) struct WorkerCtx {
     pub locality: Arc<LocalityModel>,
     pub registry: Arc<ResidencyRegistry>,
     pub coalescer: Arc<Coalescer>,
+    pub tracer: Arc<Tracer>,
     pub steal: bool,
 }
 
@@ -142,12 +144,19 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
         // group would serialize them and waste the device's own
         // parallelism). Collecting in drain order keeps per-queue FIFO
         // responses.
+        let t_drain = if ctx.tracer.active() { ctx.tracer.now_ns() } else { 0 };
         let batch = ctx.sched.drain_budgeted(
             shard,
             DRAIN_BATCH,
             DRAIN_WAVE_BUDGET * slots,
             |t: &ClusterTask| t.wave_units(cols),
         );
+        if let Some(first) = batch.first().and_then(|t| t.items.first()) {
+            // the drain span is correlated with its first member so it
+            // samples together with that request's other stages
+            ctx.tracer
+                .span(me.0 as u32, Stage::Drain, first.seq, t_drain, batch.len() as u64);
+        }
         let mut inflight = Vec::with_capacity(batch.len());
         for task in batch {
             if shares_waves && task.items.len() > 1 {
@@ -165,15 +174,34 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
                 );
             }
             let home = task.home;
+            let group_seq = task.items[0].seq;
+            let group_waves = task.wave_units(cols).div_ceil(slots) as u64;
             let mut reqs = Vec::with_capacity(task.items.len());
             let mut metas = Vec::with_capacity(task.items.len());
             for item in task.items {
-                ctx.fleet
-                    .record_queue_wait_ns(item.admitted_at.elapsed().as_nanos() as f64);
+                // sojourn attributes queueing pressure to the *home*
+                // queue (not the executor — a stolen task waited on its
+                // home device's backlog)
+                ctx.fleet.record_queue_wait_ns(
+                    home.0,
+                    item.admitted_at.elapsed().as_nanos() as f64,
+                );
                 if let Some(p) = &item.placement {
                     // charge operand movement against the device that
                     // actually executes (correct under stealing)
-                    ctx.fleet.record_copy(me.0, &ctx.locality.charge(p, me));
+                    let charge = ctx.locality.charge(p, me);
+                    if !charge.is_free() {
+                        // dur is the *simulated* transfer time, stamped
+                        // at the host instant the copy was charged
+                        ctx.tracer.instant_with_dur(
+                            me.0 as u32,
+                            Stage::Copy,
+                            item.seq,
+                            charge.ns.round() as u64,
+                            charge.bytes,
+                        );
+                    }
+                    ctx.fleet.record_copy(me.0, &charge);
                     // per-region traffic feeds the replication policy's
                     // observation window (hit = a replica was here)
                     for span in &p.resident {
@@ -184,12 +212,23 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
                 reqs.push(item.req);
                 metas.push((item.seq, item.placement, item.reply));
             }
+            let t_submit = if ctx.tracer.active() { ctx.tracer.now_ns() } else { 0 };
             let rxs = device.submit_batch(reqs);
-            inflight.push((home, metas, rxs));
+            inflight.push((home, metas, rxs, t_submit, group_seq, group_waves));
         }
-        for (home, metas, rxs) in inflight {
-            for ((seq, placement, reply), rx) in metas.into_iter().zip(rxs) {
-                let inner = rx.recv().expect("device dropped mid-request");
+        for (home, metas, rxs, t_submit, group_seq, group_waves) in inflight {
+            // collect the whole group before forwarding, so the
+            // wave-execute span ends at the group's last response and the
+            // reassemble span covers only the forwarding work
+            let members = metas.len();
+            let mut responses = Vec::with_capacity(members);
+            for rx in rxs {
+                responses.push(rx.recv().expect("device dropped mid-request"));
+            }
+            ctx.tracer
+                .span(me.0 as u32, Stage::WaveExecute, group_seq, t_submit, group_waves);
+            let t_reassemble = if ctx.tracer.active() { ctx.tracer.now_ns() } else { 0 };
+            for ((seq, placement, reply), inner) in metas.into_iter().zip(responses) {
                 if let Some(p) = &placement {
                     // the request no longer pins its resident regions
                     // against admission-aware eviction
@@ -205,6 +244,13 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
                     inner,
                 });
             }
+            ctx.tracer.span(
+                me.0 as u32,
+                Stage::Reassemble,
+                group_seq,
+                t_reassemble,
+                members as u64,
+            );
         }
         ctx.sched.release(shard);
         // The drained queue ran dry: anything still staged for this

@@ -1,9 +1,16 @@
 //! Service metrics: requests, bits, simulated vs wall time, utilization.
+//!
+//! Latency is tracked in a mergeable log-bucketed
+//! [`Histogram`](crate::obs::Histogram) (not a flat mean/max
+//! accumulator), so snapshots carry the full sim-latency distribution —
+//! p50/p95/p99 per device, and fleet-wide after
+//! [`crate::cluster::merge_snapshots`] folds the buckets together.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::util::stats::Summary;
+use crate::obs::json::Json;
+use crate::obs::Histogram;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -21,7 +28,7 @@ pub struct Metrics {
     pub wave_slots_filled: AtomicU64,
     /// row slots the issued waves exposed (waves × wave_slots)
     pub wave_slots_total: AtomicU64,
-    latency: Mutex<Summary>,
+    latency: Mutex<Histogram>,
 }
 
 impl Metrics {
@@ -55,11 +62,11 @@ impl Metrics {
     }
 
     pub fn record_latency_ns(&self, ns: f64) {
-        self.latency.lock().unwrap().add(ns);
+        self.latency.lock().unwrap().record(ns.max(0.0).round() as u64);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latency.lock().unwrap();
+        let lat = self.latency.lock().unwrap().clone();
         let sim_ns = self.sim_ns.load(Ordering::Relaxed);
         let bits = self.result_bits.load(Ordering::Relaxed);
         MetricsSnapshot {
@@ -73,12 +80,13 @@ impl Metrics {
             wave_slots_filled: self.wave_slots_filled.load(Ordering::Relaxed),
             wave_slots_total: self.wave_slots_total.load(Ordering::Relaxed),
             mean_latency_ns: lat.mean(),
-            max_latency_ns: if lat.count() > 0 { lat.max() } else { 0.0 },
+            max_latency_ns: lat.max() as f64,
             sim_throughput_bits_per_sec: if sim_ns > 0 {
                 bits as f64 / (sim_ns as f64 * 1e-9)
             } else {
                 0.0
             },
+            latency: lat,
         }
     }
 }
@@ -100,6 +108,9 @@ pub struct MetricsSnapshot {
     pub mean_latency_ns: f64,
     pub max_latency_ns: f64,
     pub sim_throughput_bits_per_sec: f64,
+    /// full sim-latency distribution (per request, nanoseconds); merge
+    /// with other devices' histograms for a fleet-wide view
+    pub latency: Histogram,
 }
 
 impl MetricsSnapshot {
@@ -116,13 +127,30 @@ impl MetricsSnapshot {
         .occupancy()
     }
 
+    /// Stable JSON form (schema: see docs/ARCHITECTURE.md § Observability).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("requests", self.requests)
+            .field("chunks", self.chunks)
+            .field("result_bits", self.result_bits)
+            .field("aaps", self.aaps)
+            .field("sim_ns", self.sim_ns)
+            .field("wall_ns", self.wall_ns)
+            .field("waves", self.waves)
+            .field("slot_occupancy", self.slot_occupancy())
+            .field("throughput_bits_per_sec", self.sim_throughput_bits_per_sec)
+            .field("latency_ns", self.latency.summary_json())
+    }
+
     pub fn report(&self) -> String {
         use crate::util::stats::{fmt_ns, fmt_rate};
+        let (p50, p95, p99) = self.latency.p50_p95_p99();
         format!(
             "requests: {}  chunks: {}  result bits: {}  AAPs: {}\n\
              simulated time: {}  (throughput {}bit/s)\n\
              waves: {}  slot occupancy: {:.1}%\n\
-             host wall time: {}  mean sim latency: {}  max: {}",
+             host wall time: {}  mean sim latency: {}  max: {}\n\
+             sim latency p50: {}  p95: {}  p99: {}",
             self.requests,
             self.chunks,
             self.result_bits,
@@ -134,6 +162,9 @@ impl MetricsSnapshot {
             fmt_ns(self.wall_ns as f64),
             fmt_ns(self.mean_latency_ns),
             fmt_ns(self.max_latency_ns),
+            fmt_ns(p50),
+            fmt_ns(p95),
+            fmt_ns(p99),
         )
     }
 }
@@ -155,8 +186,11 @@ mod tests {
         assert_eq!(s.result_bits, 16384);
         assert_eq!(s.aaps, 6);
         assert!((s.mean_latency_ns - 540.0).abs() < 1e-9);
+        assert!((s.max_latency_ns - 810.0).abs() < 1e-9);
+        assert_eq!(s.latency.count(), 2);
         assert!(s.sim_throughput_bits_per_sec > 0.0);
         assert!(s.report().contains("requests: 2"));
+        assert!(s.report().contains("p99"), "{}", s.report());
     }
 
     #[test]
@@ -164,6 +198,8 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.sim_throughput_bits_per_sec, 0.0);
+        assert_eq!(s.max_latency_ns, 0.0);
+        assert!(s.latency.is_empty());
         // no waves issued → vacuously fully occupied (utilization convention)
         assert_eq!(s.waves, 0);
         assert!((s.slot_occupancy() - 1.0).abs() < 1e-12);
@@ -181,5 +217,19 @@ mod tests {
         assert_eq!(s.wave_slots_total, 8);
         assert!((s.slot_occupancy() - 0.625).abs() < 1e-12);
         assert!(s.report().contains("slot occupancy"), "{}", s.report());
+    }
+
+    #[test]
+    fn snapshot_json_is_parseable_and_stable() {
+        let m = Metrics::new();
+        m.record_request(1024, 1, 3);
+        m.record_sim_ns(270.0);
+        m.record_latency_ns(270.0);
+        let doc = m.snapshot().to_json();
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("requests").unwrap().as_f64(), Some(1.0));
+        let lat = parsed.get("latency_ns").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(1.0));
+        assert!(lat.get("p99").unwrap().as_f64().unwrap() >= 1.0);
     }
 }

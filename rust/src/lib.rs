@@ -28,6 +28,10 @@
 //!   (golden checks, Monte-Carlo, Fig. 6 transients).
 //! * [`apps`] — library-level applications (DNA matching, XOR cipher,
 //!   bit-serial vector math).
+//! * [`obs`] — observability: structured pipeline tracing (feature
+//!   `trace`, on by default), mergeable latency histograms, and the
+//!   dependency-free JSON exporter behind `drim cluster --json`,
+//!   `drim trace`, and the `BENCH_*.json` trajectory artifacts.
 
 pub mod analog;
 pub mod apps;
@@ -37,6 +41,7 @@ pub mod coordinator;
 pub mod dram;
 pub mod energy;
 pub mod isa;
+pub mod obs;
 pub mod platforms;
 pub mod runtime;
 pub mod subarray;

@@ -23,12 +23,13 @@ use drim::coordinator::{BatchPolicy, BulkRequest, DrimService, Payload, ServiceC
 use drim::dram::geometry::DramGeometry;
 use drim::isa::program::BulkOp;
 use drim::isa::{assemble, program};
+use drim::obs::Json;
 use drim::platforms::{all_platforms, FIG8_OPS};
 use drim::subarray::area::AreaBreakdown;
 use drim::util::bitrow::BitRow;
 use drim::util::cli::Args;
 use drim::util::rng::Rng;
-use drim::util::stats::fmt_rate;
+use drim::util::stats::{fmt_ns, fmt_rate};
 use drim::util::table::Table;
 
 fn main() {
@@ -44,6 +45,7 @@ fn main() {
         "demo" => cmd_demo(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
+        "trace" => cmd_trace(&args),
         _ => {
             println!("{}", HELP);
         }
@@ -72,10 +74,13 @@ COMMANDS:
                               (--devices > 1 routes through the fleet layer;
                                the fleet honors --queue-cap / --no-steal)
   cluster [--devices N] [--requests N] [--bits N] [--seed S] [--queue-cap N]
-          [--no-steal] [--sweep] [--locality]
+          [--no-steal] [--sweep] [--json] [--locality]
           [--capacity] [--regions N] [--theta X] [--coalesce]
                               multi-device scale-out workload + fleet
                               metrics (--sweep ablates 1/2/4/8 devices;
+                               --json emits the machine-readable snapshot
+                               with fleet + per-device latency/sojourn
+                               percentiles instead of the tables;
                                --locality ablates resident vs carried
                                operand placement and the copy traffic;
                                --capacity ablates footprint enforcement,
@@ -83,6 +88,15 @@ COMMANDS:
                                Zipf(--theta) popularity law;
                                --coalesce ablates fleet-wide wave
                                coalescing of sub-wave requests)
+  trace [--devices N] [--requests N] [--bits N] [--seed S] [--sample K]
+        [--top N] [--coalesce] [--chrome FILE] [--json]
+                              run the fleet workload with the structured
+                              tracer on and render the merged timeline:
+                              per-stage breakdown + top-N slowest waves
+                              (--sample K records every Kth request;
+                               --chrome writes a chrome://tracing /
+                               Perfetto trace_event file; --json emits
+                               the machine-readable summary)
 ";
 
 fn cmd_isa(args: &Args) {
@@ -455,6 +469,53 @@ fn cmd_cluster(args: &Args) {
     } else {
         vec![args.usize("devices", 4)]
     };
+    let runs: Vec<(usize, std::time::Duration, FleetSnapshot)> = device_counts
+        .iter()
+        .map(|&devices| {
+            let (wall, snap) =
+                pump_fleet(args, devices, ServiceConfig::default(), requests, bits);
+            (devices, wall, snap)
+        })
+        .collect();
+    if args.has("json") {
+        let base_tp = runs
+            .first()
+            .map(|(_, _, s)| s.sim_throughput_bits_per_sec())
+            .unwrap_or(0.0);
+        let entries = runs
+            .iter()
+            .map(|(devices, wall, snap)| {
+                let tp = snap.sim_throughput_bits_per_sec();
+                Json::obj()
+                    .field("devices", *devices as u64)
+                    .field("host_wall_ns", wall.as_nanos() as u64)
+                    .field("throughput_bits_per_sec", tp)
+                    .field(
+                        "scaling",
+                        if base_tp > 0.0 {
+                            Json::from(tp / base_tp)
+                        } else {
+                            Json::Null
+                        },
+                    )
+                    .field("snapshot", snap.to_json())
+            })
+            .collect::<Vec<_>>();
+        let out = Json::obj()
+            .field("schema", 1u64)
+            .field("command", "cluster")
+            .field(
+                "config",
+                Json::obj()
+                    .field("requests", requests as u64)
+                    .field("bits", bits as u64)
+                    .field("steal", !args.has("no-steal"))
+                    .field("queue_cap", args.usize("queue-cap", 64) as u64),
+            )
+            .field("runs", Json::Arr(entries));
+        println!("{}", out.to_string_pretty());
+        return;
+    }
     let mut t = Table::new(&[
         "devices",
         "host wall",
@@ -463,10 +524,7 @@ fn cmd_cluster(args: &Args) {
         "scaling",
     ]);
     let mut base_tp = 0.0;
-    let mut last_snapshot = None;
-    for &devices in &device_counts {
-        let (wall, snap) =
-            pump_fleet(args, devices, ServiceConfig::default(), requests, bits);
+    for (devices, wall, snap) in &runs {
         let tp = snap.sim_throughput_bits_per_sec();
         if base_tp == 0.0 {
             base_tp = tp;
@@ -484,7 +542,6 @@ fn cmd_cluster(args: &Args) {
                 "-".to_string()
             },
         ]);
-        last_snapshot = Some(snap);
     }
     println!(
         "fleet scale-out: {requests} requests × {bits} bits \
@@ -493,7 +550,7 @@ fn cmd_cluster(args: &Args) {
         args.usize("queue-cap", 64)
     );
     t.print();
-    if let Some(snap) = last_snapshot {
+    if let Some((_, _, snap)) = runs.last() {
         println!("\nlast fleet in detail:\n{}", snap.report());
     }
 }
@@ -691,4 +748,113 @@ fn cmd_cluster_capacity(args: &Args) {
          window's traffic amortizes the stream; bounded capacity evicts \
          LRU regions and requeues their requests instead of collapsing"
     );
+}
+
+/// `drim trace`: the synthetic fleet workload with the structured tracer
+/// enabled, rendered as a per-stage breakdown plus the top-N slowest wave
+/// executions. `--chrome FILE` exports the timeline in Chrome
+/// `trace_event` format (chrome://tracing / Perfetto); `--json` emits the
+/// machine-readable summary instead of the tables.
+fn cmd_trace(args: &Args) {
+    use drim::obs::Stage;
+    let devices = args.usize("devices", 4);
+    let requests = args.usize("requests", 64);
+    let bits = args.usize("bits", 65_536);
+    let seed = args.u64("seed", 3);
+    let top = args.usize("top", 5);
+    let sample = args.usize("sample", 1).max(1) as u32;
+    let coalesce = if args.has("coalesce") {
+        // strand-free staging: safe with blocking submission (strict
+        // staging would hold the whole burst until an explicit flush)
+        CoalesceConfig::opportunistic()
+    } else {
+        CoalesceConfig::off()
+    };
+    let cluster = DrimCluster::new(ClusterConfig {
+        admission: AdmissionConfig {
+            max_inflight_per_device: args.usize("queue-cap", 64),
+        },
+        steal: !args.has("no-steal"),
+        coalesce,
+        ..ClusterConfig::uniform(devices, ServiceConfig::default())
+    });
+    let tracer = cluster.trace_handle();
+    tracer.set_sampling(sample);
+    if !tracer.active() {
+        println!(
+            "note: the `trace` cargo feature is compiled out — \
+             no events will be recorded"
+        );
+    }
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = synth_workload(requests, bits, &mut rng)
+        .into_iter()
+        .map(|req| cluster.submit_blocking(req))
+        .collect();
+    for p in pending {
+        p.recv().expect("response");
+    }
+    let wall = t0.elapsed();
+    let snap = cluster.shutdown();
+    // collect only after shutdown: the workers have joined, so every
+    // span of the run (including the final reassembles) is in the merge
+    let trace = tracer.collect();
+    if let Some(path) = args.get("chrome") {
+        std::fs::write(path, trace.to_chrome_json().to_string_compact())
+            .expect("write chrome trace");
+        println!("wrote {} trace events to {path}", trace.events.len());
+    }
+    if args.has("json") {
+        let out = Json::obj()
+            .field("schema", 1u64)
+            .field("command", "trace")
+            .field(
+                "config",
+                Json::obj()
+                    .field("devices", devices as u64)
+                    .field("requests", requests as u64)
+                    .field("bits", bits as u64)
+                    .field("sample", sample as u64)
+                    .field("coalesce", args.has("coalesce")),
+            )
+            .field("host_wall_ns", wall.as_nanos() as u64)
+            .field("trace", trace.summary_json(top))
+            .field("snapshot", snap.to_json());
+        println!("{}", out.to_string_pretty());
+        return;
+    }
+    println!(
+        "trace: {requests} requests × {bits} bits over {devices} devices \
+         (sampling 1/{sample}, {} events, {} dropped)\n",
+        trace.events.len(),
+        trace.dropped
+    );
+    let mut t = Table::new(&["stage", "events", "total", "mean", "max"]);
+    for (stage, s) in trace.stage_breakdown() {
+        t.row(&[
+            stage.name().to_string(),
+            format!("{}", s.count),
+            fmt_ns(s.total_dur_ns as f64),
+            fmt_ns(s.total_dur_ns as f64 / s.count as f64),
+            fmt_ns(s.max_dur_ns as f64),
+        ]);
+    }
+    t.print();
+    let slowest = trace.slowest(Stage::WaveExecute, top);
+    if !slowest.is_empty() {
+        println!("\nslowest wave executions:");
+        let mut t = Table::new(&["seq", "device", "start", "duration", "waves"]);
+        for e in slowest {
+            t.row(&[
+                format!("{}", e.seq),
+                format!("dev{}", e.lane),
+                fmt_ns(e.ts_ns as f64),
+                fmt_ns(e.dur_ns as f64),
+                format!("{}", e.detail),
+            ]);
+        }
+        t.print();
+    }
+    println!("\nfleet after the run:\n{}", snap.report());
 }

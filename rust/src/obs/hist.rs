@@ -1,0 +1,329 @@
+//! Log-linear (HDR-lite) latency histograms: mergeable, bounded error.
+//!
+//! The coordinator used to keep a single Welford [`crate::util::stats::Summary`]
+//! per latency stream, which can answer "mean/max" but not "p99" — and the
+//! paper's claims are tail-latency claims. This histogram records values
+//! into log-spaced buckets subdivided linearly ([`SUB_BITS`] sub-buckets
+//! per power of two), giving ≤ 1/2^SUB_BITS = 12.5% relative quantile
+//! error over the full `u64` nanosecond range with a few KB of counters.
+//!
+//! Two properties the fleet layer depends on:
+//! - **Mergeable**: bucket-wise addition, so per-device histograms fold
+//!   into a fleet histogram without re-observing samples (merge is
+//!   associative and commutative — pinned by tests).
+//! - **Monotone percentiles**: `percentile(p)` is non-decreasing in `p`
+//!   and clamped to the observed `[min, max]`, so `p50 ≤ p95 ≤ p99 ≤ max`
+//!   always holds in reports.
+
+use super::json::Json;
+
+/// Linear sub-bucket resolution: 2^3 = 8 sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+const SUBS: usize = 1 << SUB_BITS;
+
+/// Mergeable log-linear histogram over `u64` values (nanoseconds here,
+/// but the type is unit-agnostic).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket counts, grown lazily to the highest touched index.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    /// Same as [`Histogram::new`] (a derived default would start `min`
+    /// at 0 and poison every later [`Histogram::record`]).
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Bucket index for a value: identity below `SUBS`, then 8 linear
+/// sub-buckets per power of two.
+fn bucket_index(n: u64) -> usize {
+    if n < SUBS as u64 {
+        return n as usize;
+    }
+    let exp = 63 - n.leading_zeros(); // n >= 8, so exp >= 3
+    let sub = ((n >> (exp - SUB_BITS)) as usize) & (SUBS - 1);
+    (((exp - SUB_BITS + 1) as usize) << SUB_BITS) + sub
+}
+
+/// Inclusive lower bound of a bucket (exact inverse of [`bucket_index`]
+/// for the bucket's first member).
+fn bucket_low(index: usize) -> u64 {
+    if index < SUBS {
+        return index as u64;
+    }
+    let base = (index >> SUB_BITS) as u32; // >= 1
+    let sub = (index & (SUBS - 1)) as u64;
+    (SUBS as u64 + sub) << (base - 1)
+}
+
+/// Exclusive upper bound of a bucket.
+fn bucket_high(index: usize) -> u64 {
+    if index < SUBS {
+        return index as u64 + 1;
+    }
+    let base = (index >> SUB_BITS) as u32;
+    bucket_low(index) + (1u64 << (base - 1))
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: Vec::new(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, value: u64) {
+        let idx = bucket_index(value);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Fold another histogram into this one (bucket-wise addition).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (the sum is tracked exactly, not reconstructed from
+    /// bucket midpoints).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile estimate for `p` in `[0, 100]`: walk the cumulative
+    /// bucket counts to the bucket containing the p-th sample and return
+    /// its midpoint, clamped to the observed `[min, max]` so estimates
+    /// never exceed a value that was actually recorded.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let mid = (bucket_low(idx) + bucket_high(idx)) as f64 / 2.0;
+                return mid.clamp(self.min as f64, self.max as f64);
+            }
+        }
+        self.max as f64
+    }
+
+    /// The standard report triple.
+    pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
+        (
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+        )
+    }
+
+    /// Summary JSON (count, mean, min/max, p50/p95/p99) — the stable
+    /// schema every exporter emits for a latency distribution. Raw
+    /// bucket counts deliberately stay internal.
+    pub fn summary_json(&self) -> Json {
+        let (p50, p95, p99) = self.p50_p95_p99();
+        Json::obj()
+            .field("count", self.count)
+            .field("mean", self.mean())
+            .field("min", self.min())
+            .field("max", self.max())
+            .field("p50", p50)
+            .field("p95", p95)
+            .field("p99", p99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_inverses() {
+        // every value maps into a bucket whose [low, high) range holds it,
+        // and bucket bounds tile the line without gaps or overlaps
+        for n in (0u64..4096).chain([u64::MAX, u64::MAX - 1, 1 << 40, (1 << 40) + 1]) {
+            let idx = bucket_index(n);
+            assert!(
+                bucket_low(idx) <= n && (idx < SUBS || n < bucket_high(idx)),
+                "n={n} idx={idx} low={} high={}",
+                bucket_low(idx),
+                bucket_high(idx)
+            );
+        }
+        for idx in 1..2000 {
+            assert_eq!(
+                bucket_high(idx - 1),
+                bucket_low(idx),
+                "gap between buckets {} and {}",
+                idx - 1,
+                idx
+            );
+            assert_eq!(bucket_index(bucket_low(idx)), idx);
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..8u64 {
+            h.record(v);
+        }
+        // below SUBS each value has its own bucket → percentiles are exact
+        assert_eq!(h.percentile(100.0), 7.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 7);
+        assert_eq!(h.mean(), 3.5);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        let mut h = Histogram::new();
+        let v = 1_000_000u64;
+        h.record(v);
+        let p = h.percentile(50.0);
+        // single sample: estimate is clamped to [min,max] = [v,v]
+        assert_eq!(p, v as f64);
+
+        let mut h2 = Histogram::new();
+        for x in [900_000u64, 1_000_000, 1_100_000] {
+            h2.record(x);
+        }
+        let p50 = h2.percentile(50.0);
+        assert!(
+            (p50 - 1_000_000.0).abs() / 1_000_000.0 <= 0.125,
+            "p50={p50} off by more than one sub-bucket"
+        );
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_combined_stream() {
+        let streams: [&[u64]; 3] = [
+            &[1, 5, 9, 130, 70_000],
+            &[2, 2, 2, 1_000_000_000],
+            &[42, 43, 44, 45, 12_345_678],
+        ];
+        let mut hists: Vec<Histogram> = streams
+            .iter()
+            .map(|s| {
+                let mut h = Histogram::new();
+                for &v in *s {
+                    h.record(v);
+                }
+                h
+            })
+            .collect();
+
+        // (a ⊕ b) ⊕ c
+        let mut left = hists[0].clone();
+        left.merge(&hists[1]);
+        left.merge(&hists[2]);
+        // a ⊕ (b ⊕ c)
+        let mut bc = hists[1].clone();
+        bc.merge(&hists[2]);
+        let mut right = hists[0].clone();
+        right.merge(&bc);
+
+        // one histogram fed the concatenated stream
+        let mut all = Histogram::new();
+        for s in streams {
+            for &v in s {
+                all.record(v);
+            }
+        }
+
+        for h in [&left, &right] {
+            assert_eq!(h.count(), all.count());
+            assert_eq!(h.min(), all.min());
+            assert_eq!(h.max(), all.max());
+            assert_eq!(h.mean(), all.mean());
+            for p in [50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(h.percentile(p), all.percentile(p), "p{p}");
+            }
+        }
+        hists.clear();
+    }
+
+    #[test]
+    fn percentiles_are_monotone() {
+        let mut h = Histogram::new();
+        let mut x = 3u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+            h.record(x >> 34); // spread over ~2^30 range
+        }
+        let mut prev = 0.0;
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let v = h.percentile(p);
+            assert!(v >= prev, "p{p}={v} < previous {prev}");
+            prev = v;
+        }
+        assert!(prev <= h.max() as f64 + 0.5);
+        let (p50, p95, p99) = h.p50_p95_p99();
+        assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max() as f64);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Fleet observability: structured tracing, latency histograms, JSON export.
+//!
+//! This module is the instrumentation spine of the simulator. It owns
+//! three building blocks, each usable on its own:
+//!
+//! - [`hist::Histogram`] — mergeable log-bucketed latency histograms
+//!   (p50/p95/p99 with ≤12.5% relative error). These back the
+//!   per-device sim-latency and queue-sojourn distributions in
+//!   [`crate::coordinator::MetricsSnapshot`] and
+//!   [`crate::cluster::FleetSnapshot`].
+//! - [`trace::Tracer`] — a lock-cheap, runtime-sampled, compile-out-able
+//!   (cargo feature `trace`, on by default) event recorder with one ring
+//!   buffer per device plus a frontend lane. [`trace::Tracer::collect`]
+//!   merges the lanes into a causally-ordered [`trace::Trace`] timeline
+//!   with per-stage breakdowns, top-N slowest waves, and Chrome
+//!   `trace_event` export.
+//! - [`json::Json`] — a dependency-free JSON document type with stable
+//!   key order (writer + strict parser), used by `drim cluster --json`,
+//!   `drim trace`, and the `BENCH_*.json` trajectory artifacts written
+//!   by [`crate::util::bench::BenchReport`].
+//!
+//! See `docs/ARCHITECTURE.md` § Observability for the event taxonomy and
+//! the JSON schemas.
+
+pub mod hist;
+pub mod json;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use json::Json;
+pub use trace::{Stage, StageStats, Trace, TraceEvent, Tracer};

@@ -1,0 +1,468 @@
+//! Structured pipeline tracer: fixed-capacity per-lane ring buffers of
+//! typed span events, merged into a causally-ordered fleet timeline.
+//!
+//! Every stage of the submission pipeline (admit → coalesce-stage →
+//! drain → wave-execute → reassemble) and every residency action (copy,
+//! evict, replicate, migrate) can emit a [`TraceEvent`] tagged with the
+//! request/wave sequence number it belongs to, so a single request can
+//! be followed across the frontend, the scheduler queue, and the worker
+//! that executed it.
+//!
+//! Cost model — the tracer must be safe to leave compiled in:
+//! - **Compile-out**: with the `trace` cargo feature disabled every
+//!   record call degenerates to a statically-false branch and the event
+//!   body is never evaluated.
+//! - **Runtime sampling**: recording is keyed on the event's sequence
+//!   number (`seq % sample_every == 0`), not a global counter, so all
+//!   stages of a sampled request are kept together and spans stay
+//!   coherent. `sample_every == 0` disables recording entirely behind a
+//!   single relaxed atomic load — the only hot-path cost when idle.
+//! - **Bounded memory**: each lane (one per device, plus one frontend
+//!   lane) is a fixed-capacity ring; overflow drops the *oldest* events
+//!   and counts the drops rather than blocking or reallocating.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::json::Json;
+
+/// Pipeline / residency stage a trace event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Request accepted by fleet admission (instant, frontend lane).
+    Admit,
+    /// Request parked in a coalescer staging bucket (instant, frontend).
+    Coalesce,
+    /// Worker pulled a wave group off its queue (span: queue drain).
+    Drain,
+    /// Device executed a wave set (span: submit → response).
+    WaveExecute,
+    /// Responses forwarded back to submitters (span).
+    Reassemble,
+    /// Operand bytes copied onto a device (duration = *simulated* ns).
+    Copy,
+    /// Region replica evicted by capacity enforcement (instant).
+    Evict,
+    /// Region replicated to an additional device (instant).
+    Replicate,
+    /// Region migrated between devices (instant).
+    Migrate,
+}
+
+/// All stages, in pipeline order — used by reports so the per-stage
+/// breakdown always renders in causal order.
+pub const STAGES: [Stage; 9] = [
+    Stage::Admit,
+    Stage::Coalesce,
+    Stage::Drain,
+    Stage::WaveExecute,
+    Stage::Reassemble,
+    Stage::Copy,
+    Stage::Evict,
+    Stage::Replicate,
+    Stage::Migrate,
+];
+
+impl Stage {
+    /// Stable lowercase name used in reports and JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Coalesce => "coalesce",
+            Stage::Drain => "drain",
+            Stage::WaveExecute => "wave_execute",
+            Stage::Reassemble => "reassemble",
+            Stage::Copy => "copy",
+            Stage::Evict => "evict",
+            Stage::Replicate => "replicate",
+            Stage::Migrate => "migrate",
+        }
+    }
+}
+
+/// One recorded event. `dur_ns == 0` marks an instant; otherwise the
+/// event is a span covering `[ts_ns, ts_ns + dur_ns)` in host time
+/// relative to the tracer's epoch (except [`Stage::Copy`], whose
+/// duration is simulated device time — see the field docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Host-clock offset from [`Tracer`] creation, nanoseconds.
+    pub ts_ns: u64,
+    /// Span length in ns (0 = instant). For `Copy` events this is the
+    /// *simulated* transfer time, recorded at the host instant the copy
+    /// was charged.
+    pub dur_ns: u64,
+    /// Writer lane: device index, or the frontend lane (last index).
+    pub lane: u32,
+    /// Pipeline stage.
+    pub stage: Stage,
+    /// Correlation id: request sequence number, or region id for
+    /// residency events (`Copy`/`Evict`/`Replicate`/`Migrate`).
+    pub seq: u64,
+    /// Stage-specific payload: bytes for `Admit`/`Copy`, wave count for
+    /// `WaveExecute`, batch size for `Drain`, device for residency moves.
+    pub detail: u64,
+}
+
+struct Ring {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+}
+
+/// Lock-cheap multi-lane event recorder. One `Mutex<Ring>` per lane:
+/// each worker writes only its own lane, so the mutex is uncontended in
+/// steady state and exists only to make `collect()` safe.
+pub struct Tracer {
+    epoch: Instant,
+    sample_every: AtomicU32,
+    lanes: Vec<Mutex<Ring>>,
+}
+
+impl Tracer {
+    /// `lanes` ring buffers of `capacity` events each. Convention in the
+    /// cluster: lane `d` belongs to device `d`, the final lane to the
+    /// submission frontend ([`Tracer::frontend_lane`]).
+    pub fn new(lanes: usize, capacity: usize) -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            sample_every: AtomicU32::new(0),
+            lanes: (0..lanes.max(1))
+                .map(|_| {
+                    Mutex::new(Ring {
+                        buf: VecDeque::with_capacity(capacity.min(1024)),
+                        cap: capacity.max(1),
+                        dropped: 0,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Index of the frontend (submission-side) lane.
+    pub fn frontend_lane(&self) -> u32 {
+        (self.lanes.len() - 1) as u32
+    }
+
+    /// Set the sampling interval: record events whose `seq % every == 0`.
+    /// `0` disables recording; `1` records everything.
+    pub fn set_sampling(&self, every: u32) {
+        self.sample_every.store(every, Ordering::Relaxed);
+    }
+
+    /// Whether an event with this correlation id should be recorded.
+    /// This is the hot-path gate: one relaxed load, and statically false
+    /// when the `trace` feature is compiled out.
+    #[inline]
+    pub fn sampled(&self, seq: u64) -> bool {
+        if !cfg!(feature = "trace") {
+            return false;
+        }
+        let every = self.sample_every.load(Ordering::Relaxed);
+        every != 0 && seq % every as u64 == 0
+    }
+
+    /// Whether any recording is enabled at all — callers use this to skip
+    /// clock reads and other span bookkeeping when tracing is idle.
+    #[inline]
+    pub fn active(&self) -> bool {
+        cfg!(feature = "trace") && self.sample_every.load(Ordering::Relaxed) != 0
+    }
+
+    /// Host-clock nanoseconds since tracer creation — capture this
+    /// before a stage to later record it as a span.
+    #[inline]
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record an instant event (dur = 0) at the current time, if sampled.
+    #[inline]
+    pub fn instant(&self, lane: u32, stage: Stage, seq: u64, detail: u64) {
+        if self.sampled(seq) {
+            let ts = self.now_ns();
+            self.push(lane, stage, seq, ts, 0, detail);
+        }
+    }
+
+    /// Record a span that began at `start_ns` (from [`Tracer::now_ns`])
+    /// and ends now, if sampled.
+    #[inline]
+    pub fn span(&self, lane: u32, stage: Stage, seq: u64, start_ns: u64, detail: u64) {
+        if self.sampled(seq) {
+            let now = self.now_ns();
+            self.push(lane, stage, seq, start_ns, now.saturating_sub(start_ns), detail);
+        }
+    }
+
+    /// Record an event with an explicit duration (used for simulated
+    /// durations, e.g. copy cost), if sampled.
+    #[inline]
+    pub fn instant_with_dur(&self, lane: u32, stage: Stage, seq: u64, dur_ns: u64, detail: u64) {
+        if self.sampled(seq) {
+            let ts = self.now_ns();
+            self.push(lane, stage, seq, ts, dur_ns, detail);
+        }
+    }
+
+    fn push(&self, lane: u32, stage: Stage, seq: u64, ts_ns: u64, dur_ns: u64, detail: u64) {
+        let lane_idx = (lane as usize).min(self.lanes.len() - 1);
+        let ev = TraceEvent {
+            ts_ns,
+            dur_ns,
+            lane,
+            stage,
+            seq,
+            detail,
+        };
+        // Uncontended in steady state: each worker owns its lane.
+        self.lanes[lane_idx].lock().unwrap().push(ev);
+    }
+
+    /// Merge every lane into one causally-ordered timeline (sorted by
+    /// start timestamp, ties broken by lane then stage order). Buffers
+    /// are snapshotted, not drained, so repeated collects are additive.
+    pub fn collect(&self) -> Trace {
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        for lane in &self.lanes {
+            let ring = lane.lock().unwrap();
+            events.extend(ring.buf.iter().copied());
+            dropped += ring.dropped;
+        }
+        events.sort_by_key(|e| (e.ts_ns, e.lane, e.stage));
+        Trace { events, dropped }
+    }
+}
+
+/// A merged fleet timeline: the `TraceSink` output.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Events sorted by start timestamp.
+    pub events: Vec<TraceEvent>,
+    /// Events lost to ring overflow across all lanes (oldest-first).
+    pub dropped: u64,
+}
+
+/// Aggregate time attribution for one stage across a [`Trace`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageStats {
+    pub count: u64,
+    pub total_dur_ns: u64,
+    pub max_dur_ns: u64,
+}
+
+impl Trace {
+    /// Per-stage event counts and span-time attribution, in pipeline
+    /// order; stages with no events are omitted.
+    pub fn stage_breakdown(&self) -> Vec<(Stage, StageStats)> {
+        let mut stats = [StageStats::default(); STAGES.len()];
+        for ev in &self.events {
+            let slot = STAGES.iter().position(|&s| s == ev.stage).unwrap();
+            stats[slot].count += 1;
+            stats[slot].total_dur_ns += ev.dur_ns;
+            stats[slot].max_dur_ns = stats[slot].max_dur_ns.max(ev.dur_ns);
+        }
+        STAGES
+            .iter()
+            .zip(stats)
+            .filter(|(_, s)| s.count > 0)
+            .map(|(&st, s)| (st, s))
+            .collect()
+    }
+
+    /// The `n` longest spans of `stage`, slowest first.
+    pub fn slowest(&self, stage: Stage, n: usize) -> Vec<TraceEvent> {
+        let mut evs: Vec<TraceEvent> = self
+            .events
+            .iter()
+            .filter(|e| e.stage == stage)
+            .copied()
+            .collect();
+        evs.sort_by_key(|e| std::cmp::Reverse(e.dur_ns));
+        evs.truncate(n);
+        evs
+    }
+
+    /// Chrome `trace_event` JSON (load in `chrome://tracing` or
+    /// Perfetto): complete (`ph:"X"`) events, µs timestamps, one thread
+    /// row per lane.
+    pub fn to_chrome_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .field("name", e.stage.name())
+                    .field("ph", "X")
+                    .field("ts", e.ts_ns as f64 / 1e3)
+                    .field("dur", e.dur_ns as f64 / 1e3)
+                    .field("pid", 0u64)
+                    .field("tid", e.lane as u64)
+                    .field(
+                        "args",
+                        Json::obj().field("seq", e.seq).field("detail", e.detail),
+                    )
+            })
+            .collect::<Vec<_>>();
+        Json::obj()
+            .field("traceEvents", Json::Arr(events))
+            .field("displayTimeUnit", "ns")
+    }
+
+    /// Trace summary as stable JSON (stage breakdown + slowest waves).
+    pub fn summary_json(&self, top_n: usize) -> Json {
+        let stages = self
+            .stage_breakdown()
+            .into_iter()
+            .map(|(stage, s)| {
+                Json::obj()
+                    .field("stage", stage.name())
+                    .field("count", s.count)
+                    .field("total_dur_ns", s.total_dur_ns)
+                    .field("max_dur_ns", s.max_dur_ns)
+            })
+            .collect::<Vec<_>>();
+        let slowest = self
+            .slowest(Stage::WaveExecute, top_n)
+            .into_iter()
+            .map(|e| {
+                Json::obj()
+                    .field("seq", e.seq)
+                    .field("lane", e.lane as u64)
+                    .field("ts_ns", e.ts_ns)
+                    .field("dur_ns", e.dur_ns)
+                    .field("waves", e.detail)
+            })
+            .collect::<Vec<_>>();
+        Json::obj()
+            .field("events", self.events.len())
+            .field("dropped", self.dropped)
+            .field("stages", Json::Arr(stages))
+            .field("slowest_waves", Json::Arr(slowest))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(lanes: usize, cap: usize) -> Tracer {
+        let t = Tracer::new(lanes, cap);
+        t.set_sampling(1);
+        t
+    }
+
+    #[test]
+    fn overflow_drops_oldest_without_corrupting_events() {
+        let t = mk(1, 8);
+        for seq in 0..20u64 {
+            t.instant(0, Stage::Admit, seq, seq * 10);
+        }
+        let trace = t.collect();
+        if cfg!(feature = "trace") {
+            assert_eq!(trace.events.len(), 8, "ring must stay at capacity");
+            assert_eq!(trace.dropped, 12);
+            // the newest events survive, intact and in order
+            let seqs: Vec<u64> = trace.events.iter().map(|e| e.seq).collect();
+            assert_eq!(seqs, (12..20).collect::<Vec<_>>());
+            for e in &trace.events {
+                assert_eq!(e.detail, e.seq * 10, "payload corrupted: {e:?}");
+                assert_eq!(e.stage, Stage::Admit);
+            }
+        } else {
+            assert!(trace.events.is_empty());
+        }
+    }
+
+    #[test]
+    fn sampling_keys_on_seq_so_spans_stay_coherent() {
+        let t = Tracer::new(2, 64);
+        t.set_sampling(4);
+        for seq in 0..16u64 {
+            // two stages of the same request must sample identically
+            t.instant(1, Stage::Admit, seq, 0);
+            t.instant(0, Stage::WaveExecute, seq, 0);
+        }
+        let trace = t.collect();
+        if cfg!(feature = "trace") {
+            // seqs 0,4,8,12 × 2 stages
+            assert_eq!(trace.events.len(), 8);
+            for e in &trace.events {
+                assert_eq!(e.seq % 4, 0);
+            }
+            let admits = trace.events.iter().filter(|e| e.stage == Stage::Admit).count();
+            assert_eq!(admits, 4);
+        }
+        // sampling off → nothing records, regardless of feature
+        t.set_sampling(0);
+        t.instant(0, Stage::Admit, 0, 0);
+        assert_eq!(t.collect().events.len(), trace.events.len());
+    }
+
+    #[test]
+    fn collect_merges_lanes_in_timestamp_order() {
+        let t = mk(3, 16);
+        for i in 0..12u64 {
+            t.instant((i % 3) as u32, Stage::Drain, i, 0);
+        }
+        let trace = t.collect();
+        if cfg!(feature = "trace") {
+            assert_eq!(trace.events.len(), 12);
+            for w in trace.events.windows(2) {
+                assert!(w[0].ts_ns <= w[1].ts_ns, "timeline out of order");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_breakdown_and_slowest() {
+        let t = mk(1, 32);
+        let s0 = t.now_ns();
+        t.span(0, Stage::WaveExecute, 1, s0, 3);
+        t.instant_with_dur(0, Stage::Copy, 2, 500, 4096);
+        t.instant(0, Stage::Admit, 3, 0);
+        let trace = t.collect();
+        if cfg!(feature = "trace") {
+            let bd = trace.stage_breakdown();
+            let names: Vec<&str> = bd.iter().map(|(s, _)| s.name()).collect();
+            // pipeline order, empty stages omitted
+            assert_eq!(names, vec!["admit", "wave_execute", "copy"]);
+            let copy = bd.iter().find(|(s, _)| *s == Stage::Copy).unwrap().1;
+            assert_eq!(copy.total_dur_ns, 500);
+            let top = trace.slowest(Stage::WaveExecute, 5);
+            assert_eq!(top.len(), 1);
+            assert_eq!(top[0].detail, 3);
+            // chrome export shape
+            let chrome = trace.to_chrome_json();
+            let evs = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+            assert_eq!(evs.len(), 3);
+            assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+            // summary json is parseable and carries the stage table
+            let summary = trace.summary_json(3).to_string_compact();
+            let parsed = super::super::json::Json::parse(&summary).unwrap();
+            assert_eq!(parsed.get("events").unwrap().as_f64(), Some(3.0));
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(2, 8);
+        // sample_every defaults to 0 → off
+        assert!(!t.sampled(0));
+        t.instant(0, Stage::Admit, 0, 0);
+        assert!(t.collect().events.is_empty());
+    }
+}

@@ -2,9 +2,21 @@
 //!
 //! Measures wall time with warm-up, reports mean ± stddev and derived
 //! throughput. Benches run with `cargo bench` via `harness = false` targets.
+//!
+//! [`BenchReport`] is the machine-readable side: every ablation bench
+//! writes a `BENCH_<name>.json` artifact at the repo root (schema below)
+//! so CI can archive a perf trajectory per commit and diff runs without
+//! scraping stdout:
+//!
+//! ```json
+//! {"schema": 1, "bench": "<name>", "config": {...},
+//!  "metrics": {...}, "gates": {"<gate>": true, ...}, "ok": true}
+//! ```
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::obs::Json;
 use crate::util::stats::{fmt_ns, fmt_rate, Summary};
 
 pub struct Bencher {
@@ -90,6 +102,102 @@ impl Bencher {
 /// Simple section header for bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Machine-readable bench artifact: accumulated config, metrics, and gate
+/// verdicts, written as `BENCH_<name>.json` at the repo root.
+///
+/// Gates are the bench's pass/fail assertions recorded *before* the
+/// `assert!` fires, so a failing run still leaves an artifact saying
+/// which gate broke.
+pub struct BenchReport {
+    name: String,
+    config: Vec<(String, Json)>,
+    metrics: Vec<(String, Json)>,
+    gates: Vec<(String, bool)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            config: Vec::new(),
+            metrics: Vec::new(),
+            gates: Vec::new(),
+        }
+    }
+
+    /// Record a workload-configuration value (devices, requests, bits…).
+    pub fn config(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.config.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// Record a measured metric (throughput, makespan, waves saved…).
+    pub fn metric(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        self.metrics.push((key.to_string(), value.into()));
+        self
+    }
+
+    /// Record a [`Measurement`] under `metrics` as a nested object.
+    pub fn measurement(&mut self, m: &Measurement) -> &mut Self {
+        let mut obj = Json::obj()
+            .field("mean_ns", m.mean_ns)
+            .field("stddev_ns", m.stddev_ns)
+            .field("min_ns", m.min_ns);
+        if m.units_per_iter > 0.0 {
+            obj = obj.field("rate_per_sec", m.rate());
+        }
+        self.metrics.push((m.name.clone(), obj));
+        self
+    }
+
+    /// Record a gate verdict. Call with the boolean *before* asserting it
+    /// so the artifact survives a failing run.
+    pub fn gate(&mut self, key: &str, pass: bool) -> &mut Self {
+        self.gates.push((key.to_string(), pass));
+        self
+    }
+
+    /// All recorded gates passed (vacuously true with no gates).
+    pub fn ok(&self) -> bool {
+        self.gates.iter().all(|(_, p)| *p)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let fields =
+            |v: &[(String, Json)]| Json::Obj(v.to_vec());
+        Json::obj()
+            .field("schema", 1u64)
+            .field("bench", self.name.as_str())
+            .field("config", fields(&self.config))
+            .field("metrics", fields(&self.metrics))
+            .field(
+                "gates",
+                Json::Obj(
+                    self.gates
+                        .iter()
+                        .map(|(k, p)| (k.clone(), Json::Bool(*p)))
+                        .collect(),
+                ),
+            )
+            .field("ok", self.ok())
+    }
+
+    /// Repo-root path of this report's artifact (`BENCH_<name>.json`).
+    pub fn path(&self) -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+            .join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the artifact; prints where it went. Panics on I/O failure
+    /// (bench drivers want loud breakage, not silent missing artifacts).
+    pub fn write(&self) {
+        let path = self.path();
+        std::fs::write(&path, self.to_json().to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        println!("\nwrote {}", path.display());
+    }
 }
 
 #[cfg(test)]

@@ -2,8 +2,14 @@
 //! header set, row labels, and row *shape* of the `--locality` and
 //! `--capacity` sweeps so CLI reporting cannot silently drift. Timings
 //! and counters are deliberately NOT pinned — only structure.
+//!
+//! The `--json` exporters get the same treatment: the *schema* (key set
+//! and nesting) of `drim cluster --json` and `drim trace --json` is
+//! pinned; values are not.
 
 use std::process::Command;
+
+use drim::obs::Json;
 
 fn run(args: &[&str]) -> String {
     let out = Command::new(env!("CARGO_BIN_EXE_drim"))
@@ -181,4 +187,128 @@ fn cluster_capacity_table_shape_is_pinned() {
         assert_eq!(r.len(), headers.len(), "ragged capacity row {r:?}:\n{out}");
         assert!(r[7].ends_with("µs"), "makespan cell {r:?} lost its unit");
     }
+}
+
+/// Assert `obj` is a latency-distribution summary: the stable key set
+/// every exporter emits for a histogram.
+fn assert_latency_summary(obj: &Json, ctx: &str) {
+    for key in ["count", "mean", "min", "max", "p50", "p95", "p99"] {
+        assert!(
+            obj.get(key).is_some(),
+            "{ctx}: summary key `{key}` missing in {obj:?}"
+        );
+    }
+    let (p50, p95, p99) = (
+        obj.get("p50").and_then(Json::as_f64).unwrap(),
+        obj.get("p95").and_then(Json::as_f64).unwrap(),
+        obj.get("p99").and_then(Json::as_f64).unwrap(),
+    );
+    assert!(
+        p50 <= p95 && p95 <= p99,
+        "{ctx}: percentiles not monotone: {p50} {p95} {p99}"
+    );
+}
+
+#[test]
+fn cluster_json_schema_is_pinned() {
+    let out = run(&[
+        "cluster", "--devices", "2", "--requests", "8", "--bits", "2048", "--seed",
+        "1", "--json",
+    ]);
+    let doc = Json::parse(&out).expect("cluster --json must emit valid JSON");
+    assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("command").and_then(Json::as_str), Some("cluster"));
+    for key in ["requests", "bits", "steal", "queue_cap"] {
+        assert!(
+            doc.get("config").and_then(|c| c.get(key)).is_some(),
+            "config key `{key}` missing:\n{out}"
+        );
+    }
+    let runs = doc
+        .get("runs")
+        .and_then(Json::as_arr)
+        .expect("runs array");
+    assert_eq!(runs.len(), 1, "plain (non-sweep) run must have one entry");
+    let snap = runs[0].get("snapshot").expect("run snapshot");
+    // fleet-level counters every downstream consumer keys on
+    for key in [
+        "devices",
+        "admitted",
+        "completed",
+        "steals",
+        "copied_bytes",
+        "evictions",
+        "tombstones_compacted",
+        "makespan_ns",
+        "makespan_with_copy_ns",
+    ] {
+        assert!(
+            snap.get(key).is_some(),
+            "snapshot key `{key}` missing:\n{out}"
+        );
+    }
+    // fleet + per-device latency and queue-sojourn distributions
+    assert_latency_summary(
+        snap.get("queue_sojourn_ns").expect("queue_sojourn_ns"),
+        "fleet queue sojourn",
+    );
+    assert_latency_summary(
+        snap.get("fleet")
+            .and_then(|f| f.get("latency_ns"))
+            .expect("fleet.latency_ns"),
+        "fleet latency",
+    );
+    let per_device = snap
+        .get("per_device")
+        .and_then(Json::as_arr)
+        .expect("per_device array");
+    assert_eq!(per_device.len(), 2, "one entry per device");
+    for (i, d) in per_device.iter().enumerate() {
+        assert_eq!(
+            d.get("device").and_then(Json::as_f64),
+            Some(i as f64),
+            "per_device[{i}] mislabelled"
+        );
+        assert_latency_summary(
+            d.get("latency_ns").expect("device latency_ns"),
+            &format!("device {i} latency"),
+        );
+        assert_latency_summary(
+            d.get("queue_sojourn_ns").expect("device queue_sojourn_ns"),
+            &format!("device {i} queue sojourn"),
+        );
+    }
+}
+
+#[test]
+fn trace_json_schema_is_pinned() {
+    let out = run(&[
+        "trace", "--devices", "2", "--requests", "8", "--bits", "2048", "--seed",
+        "1", "--top", "3", "--json",
+    ]);
+    let doc = Json::parse(&out).expect("trace --json must emit valid JSON");
+    assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("command").and_then(Json::as_str), Some("trace"));
+    let trace = doc.get("trace").expect("trace summary");
+    for key in ["events", "dropped", "stages", "slowest_waves"] {
+        assert!(trace.get(key).is_some(), "trace key `{key}` missing:\n{out}");
+    }
+    // stage entries carry the fixed column set (the stage list itself
+    // depends on the workload and the compiled features)
+    for s in trace.get("stages").and_then(Json::as_arr).unwrap() {
+        for key in ["stage", "count", "total_dur_ns", "max_dur_ns"] {
+            assert!(s.get(key).is_some(), "stage key `{key}` missing:\n{out}");
+        }
+    }
+    for w in trace.get("slowest_waves").and_then(Json::as_arr).unwrap() {
+        for key in ["seq", "lane", "ts_ns", "dur_ns", "waves"] {
+            assert!(w.get(key).is_some(), "wave key `{key}` missing:\n{out}");
+        }
+    }
+    // the run's fleet snapshot rides along, same schema as cluster --json
+    let snap = doc.get("snapshot").expect("snapshot");
+    assert_latency_summary(
+        snap.get("queue_sojourn_ns").expect("queue_sojourn_ns"),
+        "trace fleet queue sojourn",
+    );
 }

@@ -513,6 +513,74 @@ fn prop_coalesce_results_byte_exact() {
     });
 }
 
+/// Tracer ring overflow is lossy only at the tail: for any lane count,
+/// capacity, and write volume, each lane keeps exactly its newest
+/// `min(written, cap)` events in write order with payloads intact, and
+/// the fleet drop counter accounts for every displaced event.
+#[test]
+fn prop_tracer_ring_overflow_keeps_newest_events_intact() {
+    use drim::obs::{Stage, Tracer};
+    prop::check("tracer_ring_overflow", 30, |rng| {
+        if !cfg!(feature = "trace") {
+            return Ok(()); // recording is compiled out
+        }
+        let lanes = 1 + rng.below(4) as usize;
+        let cap = 1 + rng.below(64) as usize;
+        let t = Tracer::new(lanes, cap);
+        t.set_sampling(1);
+        let mut lane_seqs: Vec<Vec<u64>> = vec![Vec::new(); lanes];
+        let total = cap as u64 + rng.below(400);
+        for seq in 0..total {
+            let lane = rng.below(lanes as u64) as usize;
+            // payloads derived from seq so corruption is detectable
+            t.instant_with_dur(lane as u32, Stage::Admit, seq, seq * 3 + 1, seq ^ 0xA5);
+            lane_seqs[lane].push(seq);
+        }
+        let trace = t.collect();
+        let expect_dropped: u64 = lane_seqs
+            .iter()
+            .map(|s| (s.len() as u64).saturating_sub(cap as u64))
+            .sum();
+        if trace.dropped != expect_dropped {
+            return Err(format!(
+                "dropped {} != expected {expect_dropped}",
+                trace.dropped
+            ));
+        }
+        let expect_events: usize = lane_seqs.iter().map(|s| s.len().min(cap)).sum();
+        if trace.events.len() != expect_events {
+            return Err(format!(
+                "{} events survived, expected {expect_events}",
+                trace.events.len()
+            ));
+        }
+        for (lane, seqs) in lane_seqs.iter().enumerate() {
+            let survived: Vec<u64> = trace
+                .events
+                .iter()
+                .filter(|e| e.lane == lane as u32)
+                .map(|e| e.seq)
+                .collect();
+            // drop-oldest: exactly the newest min(written, cap), in order
+            let keep = seqs.len().min(cap);
+            if survived[..] != seqs[seqs.len() - keep..] {
+                return Err(format!(
+                    "lane {lane} kept {survived:?}, expected newest {keep} of {seqs:?}"
+                ));
+            }
+        }
+        for e in &trace.events {
+            if e.dur_ns != e.seq * 3 + 1 || e.detail != (e.seq ^ 0xA5) {
+                return Err(format!("span payload corrupted: {e:?}"));
+            }
+            if e.stage != Stage::Admit {
+                return Err(format!("stage corrupted: {e:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// DRA destructiveness: after any DRA, the two source cells and the
 /// destination agree (the array's own write-back invariant).
 #[test]
