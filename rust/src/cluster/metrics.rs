@@ -258,6 +258,52 @@ impl FleetMetrics {
     }
 }
 
+/// Per-tenant admission/shed/sojourn breakdown — the fairness section of
+/// fleet metrics. Recorded by the scenario executor's *virtual clock*
+/// (arrival vtimes + simulated service), so the numbers are deterministic
+/// for a fixed seed and safe to gate in CI, unlike host wall-clock
+/// sojourn.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantBreakdown {
+    pub tenant: String,
+    /// requests the arrival stream generated for this tenant
+    pub offered: u64,
+    /// requests actually submitted (offered − shed)
+    pub admitted: u64,
+    /// requests refused by the tenant's inflight quota
+    pub shed: u64,
+    pub completed: u64,
+    /// requests requeued after an eviction (degrade path)
+    pub requeues: u64,
+    /// mean simulated service time per completed request (coalesced
+    /// groups charge each member its share)
+    pub mean_service_ns: f64,
+    /// mean virtual-clock sojourn: arrival → completion on the device's
+    /// virtual timeline
+    pub mean_sojourn_ns: f64,
+    pub max_sojourn_ns: f64,
+    /// `mean_sojourn / mean_service` — 1.0 means no queueing delay; the
+    /// fairness gates bound this for light tenants sharing the fleet
+    /// with heavy ones
+    pub sojourn_inflation: f64,
+}
+
+impl TenantBreakdown {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("tenant", self.tenant.clone())
+            .field("offered", self.offered)
+            .field("admitted", self.admitted)
+            .field("shed", self.shed)
+            .field("completed", self.completed)
+            .field("requeues", self.requeues)
+            .field("mean_service_ns", self.mean_service_ns)
+            .field("mean_sojourn_ns", self.mean_sojourn_ns)
+            .field("max_sojourn_ns", self.max_sojourn_ns)
+            .field("sojourn_inflation", self.sojourn_inflation)
+    }
+}
+
 /// Point-in-time view of the whole fleet.
 #[derive(Clone, Debug)]
 pub struct FleetSnapshot {
@@ -303,6 +349,9 @@ pub struct FleetSnapshot {
     /// acknowledged eviction tombstones reclaimed by the residency
     /// registry's compaction (see `cluster/residency.rs`)
     pub tombstones_compacted: u64,
+    /// per-tenant fairness breakdown — empty unless a scenario executor
+    /// attached one via [`FleetSnapshot::with_fairness`]
+    pub fairness: Vec<TenantBreakdown>,
 }
 
 impl FleetSnapshot {
@@ -335,6 +384,67 @@ impl FleetSnapshot {
             .unwrap_or(0)
     }
 
+    /// Attach a per-tenant fairness breakdown (the scenario executor's
+    /// virtual-clock accounting) to this snapshot.
+    pub fn with_fairness(mut self, fairness: Vec<TenantBreakdown>) -> Self {
+        self.fairness = fairness;
+        self
+    }
+
+    /// The deterministic subset of [`FleetSnapshot::to_json`]: everything
+    /// derived from the simulated timeline and counters, with every
+    /// host-wall-clock quantity (`wall_ns`, `waited`, queue-sojourn
+    /// distributions) stripped. Two runs of the same seeded scenario must
+    /// produce byte-identical output here — the replay contract the CI
+    /// determinism job diffs.
+    pub fn to_deterministic_json(&self) -> Json {
+        let per_device = self
+            .per_device
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                Json::obj()
+                    .field("device", i)
+                    .field("requests", d.requests)
+                    .field("chunks", d.chunks)
+                    .field("result_bits", d.result_bits)
+                    .field("aaps", d.aaps)
+                    .field("sim_ns", d.sim_ns)
+                    .field("waves", d.waves)
+                    .field("copy_ns", *self.copy_ns_per_device.get(i).unwrap_or(&0))
+            })
+            .collect::<Vec<_>>();
+        let fairness = self
+            .fairness
+            .iter()
+            .map(TenantBreakdown::to_json)
+            .collect::<Vec<_>>();
+        Json::obj()
+            .field("schema", 1u64)
+            .field("devices", self.devices())
+            .field("admitted", self.admitted)
+            .field("shed", self.shed)
+            .field("completed", self.completed)
+            .field("copied_bytes", self.copied_bytes)
+            .field("copy_cycles", self.copy_cycles)
+            .field("resident_hits", self.resident_hits)
+            .field("resident_misses", self.resident_misses)
+            .field("evictions", self.evictions)
+            .field("capacity_refusals", self.capacity_refusals)
+            .field("replications", self.replications)
+            .field("migrations", self.migrations)
+            .field("coalesced_requests", self.coalesced_requests)
+            .field("waves_saved", self.waves_saved)
+            .field("tombstones_compacted", self.tombstones_compacted)
+            .field("makespan_ns", self.merged.sim_ns)
+            .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
+            .field("waves", self.merged.waves)
+            .field("wave_slots_filled", self.merged.wave_slots_filled)
+            .field("wave_slots_total", self.merged.wave_slots_total)
+            .field("fairness", Json::Arr(fairness))
+            .field("per_device", Json::Arr(per_device))
+    }
+
     /// Stable JSON form — the payload behind `drim cluster --json`
     /// (schema: see docs/ARCHITECTURE.md § Observability).
     pub fn to_json(&self) -> Json {
@@ -354,7 +464,7 @@ impl FleetSnapshot {
                     .field("queue_sojourn_ns", sojourn.summary_json())
             })
             .collect::<Vec<_>>();
-        Json::obj()
+        let mut doc = Json::obj()
             .field("schema", 1u64)
             .field("devices", self.devices())
             .field("admitted", self.admitted)
@@ -376,8 +486,16 @@ impl FleetSnapshot {
             .field("makespan_ns", self.merged.sim_ns)
             .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
             .field("queue_sojourn_ns", self.queue_wait.summary_json())
-            .field("fleet", self.merged.to_json())
-            .field("per_device", Json::Arr(per_device))
+            .field("fleet", self.merged.to_json());
+        // fairness rides along only when a scenario executor attached a
+        // breakdown — plain `drim cluster` output keeps its pinned schema
+        if !self.fairness.is_empty() {
+            doc = doc.field(
+                "fairness",
+                Json::Arr(self.fairness.iter().map(TenantBreakdown::to_json).collect()),
+            );
+        }
+        doc.field("per_device", Json::Arr(per_device))
     }
 
     pub fn report(&self) -> String {
@@ -545,6 +663,7 @@ mod tests {
             queue_wait: f.queue_wait_merged(),
             queue_wait_per_device: f.queue_wait_histograms(),
             tombstones_compacted: 5,
+            fairness: Vec::new(),
         };
         let r = snapshot.report();
         assert!(r.contains("shed: 2"), "{r}");

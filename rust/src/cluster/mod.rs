@@ -62,7 +62,9 @@ pub mod worker;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
 pub use coalescer::{CoalesceConfig, Coalescer};
-pub use metrics::{merge_snapshots, FleetMetrics, FleetSnapshot, RegionUse};
+pub use metrics::{
+    merge_snapshots, FleetMetrics, FleetSnapshot, RegionUse, TenantBreakdown,
+};
 pub use residency::{
     CapacityConfig, CapacityError, ClusterRequest, CopyCharge, CopyCostModel,
     EvictOutcome, EvictionPolicy, LocalityModel, OperandRef, Placement,
@@ -789,6 +791,7 @@ impl DrimCluster {
             queue_wait: self.fleet.queue_wait_merged(),
             queue_wait_per_device: self.fleet.queue_wait_histograms(),
             tombstones_compacted: self.registry.tombstones_compacted(),
+            fairness: Vec::new(),
         }
     }
 

@@ -32,6 +32,10 @@
 //!   `trace`, on by default), mergeable latency histograms, and the
 //!   dependency-free JSON exporter behind `drim cluster --json`,
 //!   `drim trace`, and the `BENCH_*.json` trajectory artifacts.
+//! * [`scenario`] — the trace-driven benchmark harness behind
+//!   `drim bench --scenario`: declarative TOML/JSON multi-tenant
+//!   scenarios with deterministic seeded replay, per-tenant fairness
+//!   breakdowns, and CI-gated metric comparisons.
 
 pub mod analog;
 pub mod apps;
@@ -44,5 +48,6 @@ pub mod isa;
 pub mod obs;
 pub mod platforms;
 pub mod runtime;
+pub mod scenario;
 pub mod subarray;
 pub mod util;

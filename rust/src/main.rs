@@ -25,7 +25,9 @@ use drim::isa::program::BulkOp;
 use drim::isa::{assemble, program};
 use drim::obs::Json;
 use drim::platforms::{all_platforms, FIG8_OPS};
+use drim::scenario::{parse_source, run_scenario, ScenarioSpec};
 use drim::subarray::area::AreaBreakdown;
+use drim::util::bench::BenchReport;
 use drim::util::bitrow::BitRow;
 use drim::util::cli::Args;
 use drim::util::rng::Rng;
@@ -45,6 +47,7 @@ fn main() {
         "demo" => cmd_demo(&args),
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
+        "bench" => cmd_bench(&args),
         "trace" => cmd_trace(&args),
         _ => {
             println!("{}", HELP);
@@ -88,6 +91,22 @@ COMMANDS:
                                Zipf(--theta) popularity law;
                                --coalesce ablates fleet-wide wave
                                coalescing of sub-wave requests)
+  bench --scenario FILE|NAME [--param KEY=VALUE]... [--seed S]
+        [--dry-run] [--json] [--out DIR]
+                              trace-driven scenario benchmark: validate a
+                              declarative TOML/JSON scenario, replay its
+                              seeded deterministic arrival stream through
+                              the fleet, evaluate the metric gates, and
+                              write BENCH_<name>.json at the repo root
+                              (NAME resolves to scenarios/NAME.toml;
+                               --param overrides any dotted key, e.g.
+                               --param arrival.requests=256;
+                               --seed overrides the scenario seed;
+                               --dry-run validates and prints the resolved
+                               cases without executing; --json emits the
+                               artifact JSON on stdout and nothing else;
+                               --out DIR keeps an extra timestamped copy;
+                               exit 1 = gate failure, 2 = invalid scenario)
   trace [--devices N] [--requests N] [--bits N] [--seed S] [--sample K]
         [--top N] [--coalesce] [--chrome FILE] [--json]
                               run the fleet workload with the structured
@@ -748,6 +767,236 @@ fn cmd_cluster_capacity(args: &Args) {
          window's traffic amortizes the stream; bounded capacity evicts \
          LRU regions and requeues their requests instead of collapsing"
     );
+}
+
+/// Resolve the `--scenario` argument: a literal path, a bare name looked
+/// up under `scenarios/` in the working directory, or the same relative
+/// to the repo root (so `drim bench --scenario coalesce` works from
+/// anywhere). Falls through to the literal path so the read error names
+/// what the user typed.
+fn resolve_scenario_path(arg: &str) -> std::path::PathBuf {
+    let literal = std::path::PathBuf::from(arg);
+    if literal.exists() {
+        return literal;
+    }
+    let cwd = std::path::PathBuf::from(format!("scenarios/{arg}.toml"));
+    if cwd.exists() {
+        return cwd;
+    }
+    let repo = std::path::PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+        .join(format!("scenarios/{arg}.toml"));
+    if repo.exists() {
+        return repo;
+    }
+    literal
+}
+
+/// Parse a `--param` override value as the narrowest JSON scalar.
+fn param_value(v: &str) -> Json {
+    match v {
+        "true" => return Json::Bool(true),
+        "false" => return Json::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = v.parse::<u64>() {
+        return Json::U64(n);
+    }
+    if let Ok(x) = v.parse::<f64>() {
+        return Json::F64(x);
+    }
+    Json::Str(v.to_string())
+}
+
+/// `drim bench --scenario FILE`: the trace-driven scenario harness.
+/// Validates the declarative scenario, replays its seeded deterministic
+/// arrival stream through the fleet layer case by case, evaluates the
+/// metric gates, and writes the `BENCH_<name>.json` artifact. Exit code 2
+/// on an invalid scenario, 1 on a gate failure.
+fn cmd_bench(args: &Args) {
+    fn fail(msg: String) -> ! {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+    let Some(which) = args.get("scenario") else {
+        fail("bench: --scenario FILE|NAME is required (see `drim help`)".into());
+    };
+    let path = resolve_scenario_path(which);
+    let shown = path.display();
+    let src = std::fs::read_to_string(&path).unwrap_or_else(|e| fail(format!("{shown}: {e}")));
+    let mut doc = parse_source(&src).unwrap_or_else(|e| fail(format!("{shown}: {e}")));
+    for p in args.get_all("param") {
+        let Some((key, value)) = p.split_once('=') else {
+            fail(format!("bench: --param expects KEY=VALUE, got `{p}`"));
+        };
+        doc.set_path(key, param_value(value)).unwrap_or_else(|e| fail(format!("bench: {e}")));
+    }
+    if let Some(seed) = args.get("seed") {
+        let seed: u64 = seed
+            .parse()
+            .unwrap_or_else(|_| fail(format!("bench: --seed expects an integer, got `{seed}`")));
+        doc.set_path("seed", Json::U64(seed)).unwrap_or_else(|e| fail(format!("bench: {e}")));
+    }
+    let spec = ScenarioSpec::from_doc(&doc).unwrap_or_else(|e| fail(format!("{shown}: {e}")));
+
+    if args.has("dry-run") {
+        println!("scenario `{}`: {}", spec.name, spec.description);
+        println!(
+            "  seed {:#x}, {} case(s), {} gate(s)\n",
+            spec.seed,
+            spec.cases.len().max(1),
+            spec.gates.len()
+        );
+        let mut t = Table::new(&[
+            "case",
+            "devices",
+            "requests",
+            "window",
+            "tenants",
+            "wave units",
+            "capacity",
+        ]);
+        for case in spec.resolved_cases() {
+            let quotas = case.tenant_requests();
+            let tenants = case
+                .tenants
+                .iter()
+                .zip(&quotas)
+                .map(|(ten, n)| format!("{}×{}", ten.name, n))
+                .collect::<Vec<_>>()
+                .join(" ");
+            t.row(&[
+                case.name.clone(),
+                format!("{}", case.devices),
+                format!("{}", case.requests),
+                format!("{}", case.window),
+                tenants,
+                format!("{}", case.declared_wave_units()),
+                case.capacity_bits()
+                    .map(|b| format!("{b} bits/dev"))
+                    .unwrap_or_else(|| "unbounded".to_string()),
+            ]);
+        }
+        t.print();
+        return;
+    }
+
+    let outcome = run_scenario(&spec);
+    let mut report = BenchReport::new(&spec.name);
+    report
+        .config("scenario", format!("{shown}"))
+        .config("seed", spec.seed)
+        .config(
+            "cases",
+            Json::Arr(
+                outcome
+                    .cases
+                    .iter()
+                    .map(|c| Json::from(c.name.as_str()))
+                    .collect(),
+            ),
+        );
+    let params = args.get_all("param");
+    if !params.is_empty() {
+        report.config(
+            "params",
+            Json::Arr(params.iter().map(|p| Json::from(*p)).collect()),
+        );
+    }
+    for case in &outcome.cases {
+        for (key, value) in &case.metrics {
+            report.metric(&format!("{}.{key}", case.name), value.clone());
+        }
+    }
+    for gate in &outcome.gates {
+        report.gate(&gate.name, gate.pass);
+    }
+
+    let artifact = report.path();
+    report.write_to(&artifact);
+    if let Some(dir) = args.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)
+            .unwrap_or_else(|e| fail(format!("bench: create {}: {e}", dir.display())));
+        let stamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let copy = dir.join(format!("BENCH_{}_{stamp}.json", spec.name));
+        report.write_to(&copy);
+        if !args.has("json") {
+            println!("wrote {}", copy.display());
+        }
+    }
+
+    if args.has("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        println!("scenario `{}`: {}\n", spec.name, spec.description);
+        let mut t = Table::new(&[
+            "case",
+            "offered",
+            "shed",
+            "completed",
+            "waves",
+            "sim makespan",
+            "throughput",
+        ]);
+        for case in &outcome.cases {
+            let m = |k: &str| case.metric_f64(k).unwrap_or(0.0);
+            t.row(&[
+                case.name.clone(),
+                format!("{}", m("offered") as u64),
+                format!("{}", m("shed") as u64),
+                format!("{}", m("completed") as u64),
+                format!("{}", m("waves") as u64),
+                format!("{:.2} µs", m("sim_makespan_ns") / 1e3),
+                format!("{}bit/s", fmt_rate(m("throughput_bits_per_sec"))),
+            ]);
+        }
+        t.print();
+        for case in &outcome.cases {
+            if case.snapshot.fairness.is_empty() {
+                continue;
+            }
+            println!("\nper-tenant fairness — case `{}`:", case.name);
+            let mut t = Table::new(&[
+                "tenant",
+                "offered",
+                "shed",
+                "completed",
+                "mean sojourn",
+                "max sojourn",
+                "inflation",
+            ]);
+            for b in &case.snapshot.fairness {
+                t.row(&[
+                    b.tenant.clone(),
+                    format!("{}", b.offered),
+                    format!("{}", b.shed),
+                    format!("{}", b.completed),
+                    fmt_ns(b.mean_sojourn_ns),
+                    fmt_ns(b.max_sojourn_ns),
+                    format!("{:.2}x", b.sojourn_inflation),
+                ]);
+            }
+            t.print();
+        }
+        if !outcome.gates.is_empty() {
+            println!("\ngates:");
+            for g in &outcome.gates {
+                println!(
+                    "  {} {}: {}",
+                    if g.pass { "PASS" } else { "FAIL" },
+                    g.name,
+                    g.detail
+                );
+            }
+        }
+        println!("\nwrote {}", artifact.display());
+    }
+    if !outcome.ok() {
+        std::process::exit(1);
+    }
 }
 
 /// `drim trace`: the synthetic fleet workload with the structured tracer

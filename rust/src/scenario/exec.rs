@@ -1,0 +1,530 @@
+//! Scenario executor: drive a [`DrimCluster`] from a pre-materialized
+//! arrival stream and collect deterministic metrics.
+//!
+//! # Determinism contract
+//!
+//! Everything recorded here derives from the simulated timeline: request
+//! payloads and arrival times come from seeded RNG streams, responses are
+//! harvested in FIFO submission order, and per-tenant sojourn is computed
+//! on a **virtual clock** (per-device `max(ready, arrival) + service`)
+//! rather than the host clock. Within the deterministic envelope
+//! (`steal = false`, strict-or-off coalescing, in-flight below the
+//! admission cap) the same `(scenario, seed)` pair produces byte-identical
+//! metrics — the replay contract the CI determinism job diffs. Host
+//! wall-clock quantities never enter scenario metrics.
+//!
+//! # Tenant semantics
+//!
+//! *Carried* tenants stream fresh random operands with every request.
+//! *Resident* tenants pre-register a pool of `regions` ranks (each rank =
+//! `op.arity()` co-resident rows, owner = `rank % devices`), sample ranks
+//! by their Zipf law, and pin every `miss_every`-th request one device
+//! past the owner (a forced locality miss). A request whose rank was
+//! evicted observes [`RouteError::Evicted`] and is requeued —
+//! re-registered and resubmitted, degrading to a carried payload after
+//! repeated evictions or a capacity refusal (degrade, don't collapse:
+//! the same discipline as `DrimCluster::pump_capacity`).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+
+use crate::cluster::{
+    ClusterRequest, ClusterResponse, DeviceId, DrimCluster, FleetSnapshot, RegionId,
+    RouteError, TenantBreakdown,
+};
+use crate::coordinator::{BulkRequest, Payload};
+use crate::obs::Json;
+use crate::util::bitrow::BitRow;
+use crate::util::rng::Rng;
+
+use super::spec::{
+    CoalesceMode, GateOp, GateOperand, GateSpec, PlacementMode, ResolvedCase, ScenarioSpec,
+};
+use super::stream::{self, ArrivalEvent};
+
+/// Seed offset separating the payload RNG from the arrival-stream RNG —
+/// regenerating one stream must not perturb the other.
+const PAYLOAD_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// One executed case: the fleet snapshot (fairness attached) plus the
+/// flat deterministic metric list the gates and `BENCH_*.json` consume.
+#[derive(Clone, Debug)]
+pub struct CaseOutcome {
+    pub name: String,
+    pub snapshot: FleetSnapshot,
+    /// insertion-ordered `metric → value` pairs, deterministic within the
+    /// envelope (see module docs)
+    pub metrics: Vec<(String, Json)>,
+}
+
+impl CaseOutcome {
+    /// Metric value as f64 (gate arithmetic).
+    pub fn metric_f64(&self, key: &str) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_f64())
+    }
+}
+
+/// One evaluated gate.
+#[derive(Clone, Debug)]
+pub struct GateOutcome {
+    pub name: String,
+    pub pass: bool,
+    /// human-readable `left op right` rendering with the observed values
+    pub detail: String,
+}
+
+/// A full scenario run: every case executed in declaration order, every
+/// gate evaluated.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub cases: Vec<CaseOutcome>,
+    pub gates: Vec<GateOutcome>,
+}
+
+impl ScenarioOutcome {
+    pub fn ok(&self) -> bool {
+        self.gates.iter().all(|g| g.pass)
+    }
+}
+
+/// Execute every case of a validated scenario and evaluate its gates.
+pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioOutcome {
+    let cases: Vec<CaseOutcome> = spec.resolved_cases().iter().map(run_case).collect();
+    let gates = spec
+        .gates
+        .iter()
+        .map(|g| evaluate_gate(g, &cases))
+        .collect();
+    ScenarioOutcome { cases, gates }
+}
+
+/// A resident tenant's rank pool: the registered region handles (None
+/// after a capacity refusal or repeated eviction — degraded to carried)
+/// and the operand rows backing them (kept for requeue and degrade).
+struct RankPool {
+    slots: Vec<Option<Vec<RegionId>>>,
+    rows: Vec<Vec<BitRow>>,
+}
+
+struct PendingReq {
+    tenant: usize,
+    arrival_ns: f64,
+    rx: Receiver<ClusterResponse>,
+}
+
+/// Per-tenant accounting on the virtual clock.
+#[derive(Clone, Default)]
+struct TenantAcct {
+    offered: u64,
+    shed: u64,
+    completed: u64,
+    requeues: u64,
+    outstanding: usize,
+    sum_service_ns: f64,
+    sum_sojourn_ns: f64,
+    max_sojourn_ns: f64,
+}
+
+/// Execute one resolved case against a fresh fleet.
+pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
+    let events = stream::generate(case);
+    let cluster = DrimCluster::new(case.cluster_config());
+    let mut payload_rng = Rng::new(case.seed ^ PAYLOAD_SEED_SALT);
+    let coalescing = case.coalesce != CoalesceMode::Off;
+    let policy = case.replication_policy();
+
+    // resident rank pools, registered before any traffic flows (tenant
+    // order, rank order — deterministic registration sequence)
+    let mut pools: Vec<Option<RankPool>> = Vec::with_capacity(case.tenants.len());
+    for t in &case.tenants {
+        if t.placement != PlacementMode::Resident {
+            pools.push(None);
+            continue;
+        }
+        let mut slots = Vec::with_capacity(t.regions);
+        let mut rows = Vec::with_capacity(t.regions);
+        for rank in 0..t.regions {
+            let owner = DeviceId(rank % case.devices);
+            let operands: Vec<BitRow> = (0..t.op.arity())
+                .map(|_| BitRow::random(t.bits, &mut payload_rng))
+                .collect();
+            let ids: Option<Vec<RegionId>> = operands
+                .iter()
+                .map(|row| {
+                    cluster
+                        .try_register_resident(owner, Payload::Bits(row.clone()))
+                        .ok()
+                })
+                .collect();
+            slots.push(ids);
+            rows.push(operands);
+        }
+        pools.push(Some(RankPool { slots, rows }));
+    }
+
+    let mut acct: Vec<TenantAcct> = vec![TenantAcct::default(); case.tenants.len()];
+    let mut vclock: Vec<f64> = vec![0.0; case.devices];
+    let mut pending: VecDeque<PendingReq> = VecDeque::new();
+    let mut digest = Fnv::new();
+    let mut completed_total = 0u64;
+
+    let mut harvest_one = |pending: &mut VecDeque<PendingReq>,
+                           acct: &mut [TenantAcct],
+                           vclock: &mut [f64],
+                           digest: &mut Fnv,
+                           completed_total: &mut u64| {
+        // a strict coalescer may still be holding the response we are
+        // about to block on — flush staged waves before any recv
+        if coalescing {
+            cluster.flush_coalesced();
+        }
+        let p = pending.pop_front().expect("harvest with empty pending");
+        let resp = p.rx.recv().expect("cluster response");
+        let inner = &resp.inner;
+        digest.payload(&inner.result);
+        // virtual-clock sojourn: the executing device serves harvested
+        // requests in order; a coalesced group charges each member its
+        // share of the shared wave set's latency
+        let service = inner.sim_latency_ns / inner.batched_with.max(1) as f64;
+        let dev = resp.device.0;
+        let start = vclock[dev].max(p.arrival_ns);
+        vclock[dev] = start + service;
+        let sojourn = vclock[dev] - p.arrival_ns;
+        let a = &mut acct[p.tenant];
+        a.completed += 1;
+        a.outstanding -= 1;
+        a.sum_service_ns += service;
+        a.sum_sojourn_ns += sojourn;
+        a.max_sojourn_ns = a.max_sojourn_ns.max(sojourn);
+        *completed_total += 1;
+        if case.rebalance_every > 0 && *completed_total % case.rebalance_every as u64 == 0 {
+            cluster.rebalance(&policy);
+        }
+    };
+
+    for ev in &events {
+        let tspec = &case.tenants[ev.tenant];
+        acct[ev.tenant].offered += 1;
+        // per-tenant quota: shed arrivals beyond the inflight budget
+        // (deterministic — the window slides in submission order)
+        if tspec.max_inflight > 0 && acct[ev.tenant].outstanding >= tspec.max_inflight {
+            acct[ev.tenant].shed += 1;
+            continue;
+        }
+        let rx = submit_event(
+            case,
+            &cluster,
+            ev,
+            pools[ev.tenant].as_mut(),
+            &mut payload_rng,
+            &mut acct[ev.tenant].requeues,
+        );
+        acct[ev.tenant].outstanding += 1;
+        pending.push_back(PendingReq {
+            tenant: ev.tenant,
+            arrival_ns: ev.vtime_ns as f64,
+            rx,
+        });
+        if case.window > 0 && pending.len() >= case.window {
+            harvest_one(
+                &mut pending,
+                &mut acct,
+                &mut vclock,
+                &mut digest,
+                &mut completed_total,
+            );
+        }
+    }
+    while !pending.is_empty() {
+        harvest_one(
+            &mut pending,
+            &mut acct,
+            &mut vclock,
+            &mut digest,
+            &mut completed_total,
+        );
+    }
+
+    // capacity-bounded fleets must end the run within budget, with a
+    // coherent registry — an overdraft is a harness/registry bug
+    if let Some(bound) = case.capacity_bits() {
+        for d in 0..case.devices {
+            let resident = cluster.registry().resident_bits_on(DeviceId(d));
+            assert!(
+                resident <= bound,
+                "case `{}`: device {d} resident {resident} bits exceeds the \
+                 {bound}-bit capacity",
+                case.name
+            );
+        }
+        cluster
+            .registry()
+            .check_invariants()
+            .expect("residency registry invariants");
+    }
+
+    let fairness: Vec<TenantBreakdown> = case
+        .tenants
+        .iter()
+        .zip(acct.iter())
+        .map(|(t, a)| TenantBreakdown {
+            tenant: t.name.clone(),
+            offered: a.offered,
+            admitted: a.offered - a.shed,
+            shed: a.shed,
+            completed: a.completed,
+            requeues: a.requeues,
+            mean_service_ns: ratio(a.sum_service_ns, a.completed),
+            mean_sojourn_ns: ratio(a.sum_sojourn_ns, a.completed),
+            max_sojourn_ns: a.max_sojourn_ns,
+            sojourn_inflation: if a.sum_service_ns > 0.0 {
+                a.sum_sojourn_ns / a.sum_service_ns
+            } else {
+                1.0
+            },
+        })
+        .collect();
+
+    let snapshot = cluster.shutdown().with_fairness(fairness);
+    let metrics = flatten_metrics(case, &events, &snapshot, &vclock, digest.finish());
+    CaseOutcome {
+        name: case.name.clone(),
+        snapshot,
+        metrics,
+    }
+}
+
+/// Build and submit one arrival, navigating the resident requeue/degrade
+/// state machine. Returns the response receiver.
+fn submit_event(
+    case: &ResolvedCase,
+    cluster: &DrimCluster,
+    ev: &ArrivalEvent,
+    pool: Option<&mut RankPool>,
+    payload_rng: &mut Rng,
+    requeues: &mut u64,
+) -> Receiver<ClusterResponse> {
+    let tspec = &case.tenants[ev.tenant];
+    let pool = match pool {
+        Some(p) => p,
+        None => {
+            // carried tenant: fresh random operands every request
+            let rows: Vec<BitRow> = (0..tspec.op.arity())
+                .map(|_| BitRow::random(tspec.bits, payload_rng))
+                .collect();
+            let req = ClusterRequest::carried(BulkRequest::bitwise(tspec.op, rows));
+            return cluster
+                .submit_routed_blocking(req)
+                .expect("carried requests always resolve");
+        }
+    };
+    let rank = ev.rank;
+    let owner = DeviceId(rank % case.devices);
+    let mut attempts = 0;
+    loop {
+        match &pool.slots[rank] {
+            Some(ids) if attempts < 3 => {
+                let req = ClusterRequest::resident(tspec.op, ids.clone());
+                let sent = if ev.forced_miss {
+                    let elsewhere = DeviceId((owner.0 + 1) % case.devices);
+                    cluster.submit_routed_blocking_to(elsewhere, req)
+                } else {
+                    cluster.submit_routed_blocking(req)
+                };
+                match sent {
+                    Ok(rx) => return rx,
+                    Err(RouteError::Evicted(_) | RouteError::UnknownRegion(_)) => {
+                        // the defined shed/requeue path: re-register the
+                        // rank's rows and resubmit
+                        *requeues += 1;
+                        attempts += 1;
+                        pool.slots[rank] = pool.rows[rank]
+                            .iter()
+                            .map(|row| {
+                                cluster
+                                    .try_register_resident(owner, Payload::Bits(row.clone()))
+                                    .ok()
+                            })
+                            .collect();
+                    }
+                    Err(RouteError::Admission(_)) => {
+                        unreachable!("blocking routed submit never sheds")
+                    }
+                }
+            }
+            // no resident slot (capacity refused it, or it keeps getting
+            // evicted): degrade to carried payloads of the same rows
+            _ => {
+                let req = ClusterRequest::carried(BulkRequest::bitwise(
+                    tspec.op,
+                    pool.rows[rank].clone(),
+                ));
+                return cluster
+                    .submit_routed_blocking(req)
+                    .expect("carried requests always resolve");
+            }
+        }
+    }
+}
+
+/// The flat metric list: fleet counters + derived quantities + per-tenant
+/// fairness, every value simulated/deterministic (no wall clock).
+fn flatten_metrics(
+    case: &ResolvedCase,
+    events: &[ArrivalEvent],
+    snap: &FleetSnapshot,
+    vclock: &[f64],
+    results_digest: u64,
+) -> Vec<(String, Json)> {
+    let mut m: Vec<(String, Json)> = Vec::new();
+    let mut put = |k: &str, v: Json| m.push((k.to_string(), v));
+    let offered = events.len() as u64;
+    let shed: u64 = snap.fairness.iter().map(|t| t.shed).sum();
+    put("offered", Json::U64(offered));
+    put("admitted", Json::U64(offered - shed));
+    put("shed", Json::U64(shed));
+    put("completed", Json::U64(snap.completed));
+    put(
+        "requeues",
+        Json::U64(snap.fairness.iter().map(|t| t.requeues).sum()),
+    );
+    put(
+        "offered_wave_units",
+        Json::U64(stream::offered_wave_units(case, events)),
+    );
+    put(
+        "declared_wave_units",
+        Json::U64(case.declared_wave_units()),
+    );
+    put("stream_digest", Json::U64(stream::stream_digest(events)));
+    put("results_digest", Json::U64(results_digest));
+    put("sim_makespan_ns", Json::U64(snap.merged.sim_ns));
+    put(
+        "makespan_with_copy_ns",
+        Json::U64(snap.makespan_with_copy_ns()),
+    );
+    put(
+        "throughput_bits_per_sec",
+        Json::F64(snap.sim_throughput_bits_per_sec()),
+    );
+    put(
+        "vclock_makespan_ns",
+        Json::F64(vclock.iter().cloned().fold(0.0, f64::max)),
+    );
+    put("waves", Json::U64(snap.merged.waves));
+    put("slot_occupancy", Json::F64(snap.slot_occupancy()));
+    put("coalesced_requests", Json::U64(snap.coalesced_requests));
+    put("waves_saved", Json::U64(snap.waves_saved));
+    put("steals", Json::U64(snap.steals));
+    put("resident_hits", Json::U64(snap.resident_hits));
+    put("resident_misses", Json::U64(snap.resident_misses));
+    put("copied_bytes", Json::U64(snap.copied_bytes));
+    put("copy_cycles", Json::U64(snap.copy_cycles));
+    put("evictions", Json::U64(snap.evictions));
+    put("capacity_refusals", Json::U64(snap.capacity_refusals));
+    put("replications", Json::U64(snap.replications));
+    put("migrations", Json::U64(snap.migrations));
+    for t in &snap.fairness {
+        let p = format!("tenant.{}", t.tenant);
+        let mut tput = |k: &str, v: Json| m.push((format!("{p}.{k}"), v));
+        tput("offered", Json::U64(t.offered));
+        tput("admitted", Json::U64(t.admitted));
+        tput("shed", Json::U64(t.shed));
+        tput("completed", Json::U64(t.completed));
+        tput("requeues", Json::U64(t.requeues));
+        tput("mean_service_ns", Json::F64(t.mean_service_ns));
+        tput("mean_sojourn_ns", Json::F64(t.mean_sojourn_ns));
+        tput("max_sojourn_ns", Json::F64(t.max_sojourn_ns));
+        tput("sojourn_inflation", Json::F64(t.sojourn_inflation));
+    }
+    m
+}
+
+/// Evaluate one gate against the executed cases.
+pub fn evaluate_gate(gate: &GateSpec, cases: &[CaseOutcome]) -> GateOutcome {
+    let resolve = |r: &str| -> Result<f64, String> {
+        let (case, metric) = r
+            .split_once('.')
+            .ok_or_else(|| format!("bad reference `{r}`"))?;
+        let c = cases
+            .iter()
+            .find(|c| c.name == case)
+            .ok_or_else(|| format!("unknown case `{case}`"))?;
+        c.metric_f64(metric)
+            .ok_or_else(|| format!("unknown metric `{metric}` in case `{case}`"))
+    };
+    let left = resolve(&gate.left);
+    let right = match &gate.right {
+        GateOperand::Metric(r) => resolve(r),
+        GateOperand::Value(v) => Ok(*v),
+    };
+    match (left, right) {
+        (Ok(l), Ok(r)) => {
+            let r = r * gate.scale;
+            let pass = match gate.op {
+                GateOp::Lt => l < r,
+                GateOp::Le => l <= r,
+                GateOp::Gt => l > r,
+                GateOp::Ge => l >= r,
+                GateOp::Eq => (l - r).abs() <= gate.tol,
+                GateOp::Ne => (l - r).abs() > gate.tol,
+            };
+            let detail = format!("{} = {l} {} {r}", gate.left, gate.op.symbol());
+            GateOutcome {
+                name: gate.name.clone(),
+                pass,
+                detail,
+            }
+        }
+        (Err(e), _) | (_, Err(e)) => GateOutcome {
+            name: gate.name.clone(),
+            pass: false,
+            detail: e,
+        },
+    }
+}
+
+fn ratio(sum: f64, n: u64) -> f64 {
+    if n > 0 {
+        sum / n as f64
+    } else {
+        0.0
+    }
+}
+
+/// FNV-1a 64 over result payload words in harvest (= submission) order —
+/// the byte-exactness signal the coalescing gates compare across modes.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn word(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    fn payload(&mut self, p: &Payload) {
+        match p {
+            Payload::Bits(b) => {
+                for &w in b.words() {
+                    self.word(w);
+                }
+            }
+            Payload::U32(v) => {
+                for &x in v {
+                    self.word(x as u64);
+                }
+            }
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}

@@ -1,0 +1,30 @@
+//! Trace-driven scenario harness: declarative multi-tenant fleet
+//! benchmarks with deterministic replay and CI-gated fairness.
+//!
+//! A scenario is a small TOML (or JSON) document describing the device
+//! fleet, the tenant mix (per-tenant op / operand-size / region
+//! distributions, Zipf skew, quotas), the arrival process (sequential
+//! burst, open-loop Poisson, bursty, with diurnal phases), runtime knobs
+//! (coalescing, residency capacity/eviction, the rebalancer), named
+//! cases overriding any axis, and structured metric gates. `drim bench
+//! --scenario <file>` validates it ([`spec`]), materializes a seeded
+//! deterministic arrival stream ([`stream`]), drives a [`DrimCluster`]
+//! through it ([`exec`]), and emits the verdicts as a `BENCH_<name>.json`
+//! artifact via [`crate::util::bench::BenchReport`].
+//!
+//! The checked-in scenarios under `scenarios/` are the repo's canonical
+//! ablation matrix — CI runs all of them and additionally replays one
+//! twice to diff the artifacts byte-for-byte (the determinism contract;
+//! see `docs/ARCHITECTURE.md` § Scenario harness).
+//!
+//! [`DrimCluster`]: crate::cluster::DrimCluster
+
+pub mod exec;
+pub mod spec;
+pub mod stream;
+pub mod toml;
+
+pub use exec::{run_case, run_scenario, CaseOutcome, GateOutcome, ScenarioOutcome};
+pub use spec::{ResolvedCase, ScenarioError, ScenarioSpec};
+pub use stream::{generate, offered_wave_units, stream_digest, ArrivalEvent};
+pub use toml::{parse_source, parse_toml, ScenarioDoc};

@@ -1,0 +1,1214 @@
+//! Scenario schema + validation.
+//!
+//! A scenario describes — declaratively — everything a multi-tenant fleet
+//! benchmark needs: the device fleet and geometry, the tenant mix
+//! (per-tenant op / size / region-popularity distributions and quotas),
+//! the arrival process (sequential burst, open-loop Poisson, bursty, with
+//! optional diurnal phases), runtime knobs (coalescing, residency
+//! capacity/eviction, the rebalancer), named **cases** overriding any of
+//! those axes, and structured **gates** comparing case metrics.
+//!
+//! Validation consumes the [`ScenarioDoc`] tree and rejects unknown keys,
+//! out-of-range values, and dangling references with **line-anchored**
+//! errors (the TOML reader records where each key was defined).
+
+use crate::cluster::{
+    CapacityConfig, ClusterConfig, CoalesceConfig, ReplicationConfig, ReplicationPolicy,
+};
+use crate::coordinator::ServiceConfig;
+use crate::dram::geometry::{DeviceCapacity, DramGeometry};
+use crate::isa::program::BulkOp;
+use crate::obs::Json;
+
+use super::toml::ScenarioDoc;
+
+/// A validation failure, anchored to the source line that caused it when
+/// the document came from TOML.
+#[derive(Debug, Clone)]
+pub struct ScenarioError {
+    /// key path, e.g. `tenants[0].weight`
+    pub path: String,
+    /// 1-based source line, when known
+    pub line: Option<usize>,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.line {
+            Some(n) => write!(f, "line {n}: {}: {}", self.path, self.msg),
+            None => write!(f, "{}: {}", self.path, self.msg),
+        }
+    }
+}
+
+/// How a tenant's operands reach the device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// payloads carried inline with every request (host→device stream)
+    Carried,
+    /// operands pre-registered as resident regions, requests routed to
+    /// their owner
+    Resident,
+}
+
+/// One traffic class in the mix.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// share of the request stream (apportioned exactly, then interleaved
+    /// by stride scheduling — deterministic, not sampled)
+    pub weight: f64,
+    pub op: BulkOp,
+    /// operand bits per request
+    pub bits: usize,
+    pub placement: PlacementMode,
+    /// resident region *ranks* (each rank holds `op.arity()` co-resident
+    /// rows); requests sample a rank from the Zipf law below
+    pub regions: usize,
+    /// Zipf exponent over the rank pool (0 = uniform)
+    pub zipf_theta: f64,
+    /// every k-th request of this tenant is pinned one device past its
+    /// rank's owner — a forced locality miss (0 = never)
+    pub miss_every: usize,
+    /// executor-level quota: arrivals beyond this many outstanding
+    /// requests are shed (0 = unlimited)
+    pub max_inflight: usize,
+}
+
+/// A named alternative tenant mix (cases switch mixes wholesale).
+#[derive(Clone, Debug)]
+pub struct MixSpec {
+    pub name: String,
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Arrival process for the open-loop stream.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// every request arrives at t=0 (the closed burst the ablations use)
+    Sequential,
+    /// exponential inter-arrival gaps at `rate_per_sec` (simulated time)
+    Poisson { rate_per_sec: f64 },
+    /// groups of `size` arrivals separated by `gap_ns`
+    Burst { size: usize, gap_ns: u64 },
+}
+
+/// One diurnal phase: `frac` of the request stream at `rate_scale` × the
+/// base rate.
+#[derive(Clone, Debug)]
+pub struct PhaseSpec {
+    pub frac: f64,
+    pub rate_scale: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrivalSpec {
+    /// total requests generated (before per-tenant quota shedding)
+    pub requests: usize,
+    pub process: ArrivalProcess,
+    /// max outstanding responses before the executor harvests the oldest
+    /// (0 = unbounded: submit everything, then harvest)
+    pub window: usize,
+    pub phases: Vec<PhaseSpec>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoalesceMode {
+    Off,
+    Strict,
+    Opportunistic,
+}
+
+impl CoalesceMode {
+    pub fn config(self, max_hold: u64) -> CoalesceConfig {
+        let hold = if max_hold == 0 { u64::MAX } else { max_hold };
+        match self {
+            CoalesceMode::Off => CoalesceConfig::off(),
+            CoalesceMode::Strict => CoalesceConfig::strict(hold),
+            CoalesceMode::Opportunistic => CoalesceConfig {
+                max_hold_submissions: hold,
+                ..CoalesceConfig::opportunistic()
+            },
+        }
+    }
+}
+
+/// Per-device residency budget.
+#[derive(Clone, Copy, Debug)]
+pub enum CapacitySpec {
+    Unbounded,
+    /// absolute resident bits per device
+    Bits(u64),
+    /// fraction of the per-device share of the declared resident working
+    /// set (1.0 = the working set exactly fits when spread evenly)
+    Share(f64),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionMode {
+    FailFast,
+    Lru,
+    CostAware,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplicationSpec {
+    pub hot_uses: u64,
+    pub amortize_factor: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RuntimeSpec {
+    pub coalesce: CoalesceMode,
+    /// strict-mode hold budget in submissions (0 = unlimited)
+    pub max_hold: u64,
+    pub capacity: CapacitySpec,
+    pub eviction: EvictionMode,
+    /// executor-driven rebalance sweep every N completions (0 = off)
+    pub rebalance_every: usize,
+    pub replication: ReplicationSpec,
+}
+
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub devices: usize,
+    pub workers: usize,
+    pub steal: bool,
+    pub queue_cap: usize,
+    pub geometry: DramGeometry,
+}
+
+/// One named case: the base scenario with any subset of axes overridden.
+#[derive(Clone, Debug, Default)]
+pub struct CaseSpec {
+    pub name: String,
+    pub mix: Option<String>,
+    pub devices: Option<usize>,
+    pub workers: Option<usize>,
+    pub steal: Option<bool>,
+    pub queue_cap: Option<usize>,
+    pub coalesce: Option<CoalesceMode>,
+    pub max_hold: Option<u64>,
+    pub capacity: Option<CapacitySpec>,
+    pub eviction: Option<EvictionMode>,
+    pub rebalance_every: Option<usize>,
+    pub requests: Option<usize>,
+    pub window: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateOp {
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+}
+
+impl GateOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            GateOp::Lt => "<",
+            GateOp::Le => "<=",
+            GateOp::Gt => ">",
+            GateOp::Ge => ">=",
+            GateOp::Eq => "==",
+            GateOp::Ne => "!=",
+        }
+    }
+}
+
+/// Right-hand side of a gate comparison.
+#[derive(Clone, Debug)]
+pub enum GateOperand {
+    /// `case.metric` reference
+    Metric(String),
+    /// literal
+    Value(f64),
+}
+
+/// A CI gate: `left op right × scale` (± `tol` for equality forms).
+#[derive(Clone, Debug)]
+pub struct GateSpec {
+    pub name: String,
+    pub left: String,
+    pub op: GateOp,
+    pub right: GateOperand,
+    pub scale: f64,
+    pub tol: f64,
+}
+
+/// A fully validated scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    pub seed: u64,
+    pub fleet: FleetSpec,
+    pub arrival: ArrivalSpec,
+    pub runtime: RuntimeSpec,
+    /// the default tenant mix
+    pub tenants: Vec<TenantSpec>,
+    /// named alternative mixes cases may select
+    pub mixes: Vec<MixSpec>,
+    /// named cases (empty scenario files get one implicit `default` case)
+    pub cases: Vec<CaseSpec>,
+    pub gates: Vec<GateSpec>,
+}
+
+/// The base scenario with one case's overrides applied — everything the
+/// executor needs to drive a fleet.
+#[derive(Clone, Debug)]
+pub struct ResolvedCase {
+    pub name: String,
+    pub seed: u64,
+    pub devices: usize,
+    pub workers: usize,
+    pub steal: bool,
+    pub queue_cap: usize,
+    pub geometry: DramGeometry,
+    pub coalesce: CoalesceMode,
+    pub max_hold: u64,
+    pub capacity: CapacitySpec,
+    pub eviction: EvictionMode,
+    pub rebalance_every: usize,
+    pub replication: ReplicationSpec,
+    pub requests: usize,
+    pub window: usize,
+    pub process: ArrivalProcess,
+    pub phases: Vec<PhaseSpec>,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl ResolvedCase {
+    /// Declared resident working set in bits: every resident tenant's
+    /// rank pool, all operand rows counted.
+    pub fn declared_resident_bits(&self) -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.placement == PlacementMode::Resident)
+            .map(|t| (t.regions * t.op.arity() * t.bits) as u64)
+            .sum()
+    }
+
+    /// The per-device capacity bound, `None` when unbounded.
+    pub fn capacity_bits(&self) -> Option<u64> {
+        match self.capacity {
+            CapacitySpec::Unbounded => None,
+            CapacitySpec::Bits(b) => Some(b),
+            CapacitySpec::Share(f) => {
+                let share = self.declared_resident_bits() as f64 / self.devices.max(1) as f64;
+                Some((share * f).round() as u64)
+            }
+        }
+    }
+
+    /// Exact per-tenant request counts: largest-remainder apportionment
+    /// of `requests` over tenant weights (deterministic; ties broken by
+    /// tenant order).
+    pub fn tenant_requests(&self) -> Vec<usize> {
+        apportion(
+            &self.tenants.iter().map(|t| t.weight).collect::<Vec<_>>(),
+            self.requests,
+        )
+    }
+
+    /// The scenario's declared offered load in wave units: each tenant's
+    /// apportioned request count × its per-request wave units. The
+    /// executor's measured `offered_wave_units` must equal this exactly
+    /// (the prop_invariants determinism property).
+    pub fn declared_wave_units(&self) -> u64 {
+        let cols = self.geometry.cols;
+        self.tenant_requests()
+            .iter()
+            .zip(self.tenants.iter())
+            .map(|(&n, t)| n as u64 * t.bits.div_ceil(cols) as u64)
+            .sum()
+    }
+
+    /// Build the fleet configuration this case runs under.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        let service = ServiceConfig {
+            geometry: self.geometry.clone(),
+            workers: self.workers,
+            ..ServiceConfig::default()
+        };
+        let capacity = match self.capacity_bits() {
+            None => DeviceCapacity::unbounded(),
+            Some(bits) => DeviceCapacity::of_bits(bits),
+        };
+        let policy = match self.eviction {
+            EvictionMode::FailFast => crate::cluster::EvictionPolicy::FailFast,
+            EvictionMode::Lru => crate::cluster::EvictionPolicy::Lru,
+            EvictionMode::CostAware => crate::cluster::EvictionPolicy::CostAware {
+                rent_ns_per_tick: 2.0,
+            },
+        };
+        let mut cfg = ClusterConfig::uniform(self.devices, service);
+        cfg.steal = self.steal;
+        cfg.admission.max_inflight_per_device = self.queue_cap;
+        cfg.capacity = CapacityConfig { capacity, policy };
+        cfg.coalesce = self.coalesce.config(self.max_hold);
+        cfg
+    }
+
+    /// The replication policy the executor's rebalance sweeps plan with.
+    pub fn replication_policy(&self) -> ReplicationPolicy {
+        ReplicationPolicy::new(ReplicationConfig {
+            hot_uses: self.replication.hot_uses,
+            amortize_factor: self.replication.amortize_factor,
+            ..ReplicationConfig::default()
+        })
+    }
+}
+
+impl ScenarioSpec {
+    /// Parse + validate scenario source (TOML, or JSON when the document
+    /// starts with `{`).
+    pub fn parse_str(src: &str) -> Result<ScenarioSpec, ScenarioError> {
+        let doc = super::toml::parse_source(src).map_err(|msg| ScenarioError {
+            path: String::new(),
+            line: None,
+            msg,
+        })?;
+        Self::from_doc(&doc)
+    }
+
+    /// Validate a parsed document.
+    pub fn from_doc(doc: &ScenarioDoc) -> Result<ScenarioSpec, ScenarioError> {
+        Validator { doc }.scenario()
+    }
+
+    /// Look up a tenant mix by name (`None` = the default mix).
+    pub fn mix(&self, name: Option<&str>) -> &[TenantSpec] {
+        match name {
+            None => &self.tenants,
+            Some(n) => self
+                .mixes
+                .iter()
+                .find(|m| m.name == n)
+                .map(|m| m.tenants.as_slice())
+                .expect("validated mix reference"),
+        }
+    }
+
+    /// Apply one case's overrides to the base scenario.
+    pub fn resolve(&self, case: &CaseSpec) -> ResolvedCase {
+        ResolvedCase {
+            name: case.name.clone(),
+            seed: case.seed.unwrap_or(self.seed),
+            devices: case.devices.unwrap_or(self.fleet.devices),
+            workers: case.workers.unwrap_or(self.fleet.workers),
+            steal: case.steal.unwrap_or(self.fleet.steal),
+            queue_cap: case.queue_cap.unwrap_or(self.fleet.queue_cap),
+            geometry: self.fleet.geometry.clone(),
+            coalesce: case.coalesce.unwrap_or(self.runtime.coalesce),
+            max_hold: case.max_hold.unwrap_or(self.runtime.max_hold),
+            capacity: case.capacity.unwrap_or(self.runtime.capacity),
+            eviction: case.eviction.unwrap_or(self.runtime.eviction),
+            rebalance_every: case.rebalance_every.unwrap_or(self.runtime.rebalance_every),
+            replication: self.runtime.replication.clone(),
+            requests: case.requests.unwrap_or(self.arrival.requests),
+            window: case.window.unwrap_or(self.arrival.window),
+            process: self.arrival.process.clone(),
+            phases: self.arrival.phases.clone(),
+            tenants: self.mix(case.mix.as_deref()).to_vec(),
+        }
+    }
+
+    /// Every case, resolved in declaration order (the implicit `default`
+    /// case when the file declares none).
+    pub fn resolved_cases(&self) -> Vec<ResolvedCase> {
+        if self.cases.is_empty() {
+            vec![self.resolve(&CaseSpec {
+                name: "default".to_string(),
+                ..CaseSpec::default()
+            })]
+        } else {
+            self.cases.iter().map(|c| self.resolve(c)).collect()
+        }
+    }
+
+    /// Declared case names (`default` for case-less scenarios).
+    pub fn case_names(&self) -> Vec<String> {
+        if self.cases.is_empty() {
+            vec!["default".to_string()]
+        } else {
+            self.cases.iter().map(|c| c.name.clone()).collect()
+        }
+    }
+}
+
+/// Largest-remainder apportionment of `total` over `weights` — exact,
+/// deterministic (remainder ties broken by index order).
+pub fn apportion(weights: &[f64], total: usize) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    if weights.is_empty() || sum <= 0.0 {
+        return vec![0; weights.len()];
+    }
+    let mut counts: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut remainders: Vec<(usize, f64)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        let exact = w / sum * total as f64;
+        let floor = exact.floor() as usize;
+        counts.push(floor);
+        assigned += floor;
+        remainders.push((i, exact - floor as f64));
+    }
+    // stable sort: biggest remainder first, ties by index (stable sort
+    // preserves the original order among equals)
+    remainders.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    for (i, _) in remainders.into_iter().take(total - assigned) {
+        counts[i] += 1;
+    }
+    counts
+}
+
+// ---------------------------------------------------------------------------
+// validation
+// ---------------------------------------------------------------------------
+
+struct Validator<'a> {
+    doc: &'a ScenarioDoc,
+}
+
+impl<'a> Validator<'a> {
+    fn err<T>(&self, path: &str, msg: impl Into<String>) -> Result<T, ScenarioError> {
+        Err(ScenarioError {
+            path: path.to_string(),
+            line: self.doc.nearest_line(path),
+            msg: msg.into(),
+        })
+    }
+
+    /// Reject keys the schema does not know (typo protection).
+    fn check_keys(&self, node: &Json, path: &str, allowed: &[&str]) -> Result<(), ScenarioError> {
+        if let Json::Obj(fields) = node {
+            for (k, _) in fields {
+                if !allowed.contains(&k.as_str()) {
+                    let kp = join(path, k);
+                    return self.err(&kp, format!("unknown key `{k}`"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn str_field(
+        &self,
+        node: &Json,
+        path: &str,
+        key: &str,
+        default: Option<&str>,
+    ) -> Result<String, ScenarioError> {
+        match node.get(key) {
+            None => match default {
+                Some(d) => Ok(d.to_string()),
+                None => self.err(&join(path, key), "required string is missing"),
+            },
+            Some(Json::Str(s)) => Ok(s.clone()),
+            Some(_) => self.err(&join(path, key), "expected a string"),
+        }
+    }
+
+    fn f64_field(
+        &self,
+        node: &Json,
+        path: &str,
+        key: &str,
+        default: Option<f64>,
+    ) -> Result<f64, ScenarioError> {
+        match node.get(key) {
+            None => match default {
+                Some(d) => Ok(d),
+                None => self.err(&join(path, key), "required number is missing"),
+            },
+            Some(v) => v
+                .as_f64()
+                .ok_or(())
+                .or_else(|_| self.err(&join(path, key), "expected a number")),
+        }
+    }
+
+    fn u64_field(
+        &self,
+        node: &Json,
+        path: &str,
+        key: &str,
+        default: Option<u64>,
+    ) -> Result<u64, ScenarioError> {
+        match node.get(key) {
+            None => match default {
+                Some(d) => Ok(d),
+                None => self.err(&join(path, key), "required integer is missing"),
+            },
+            Some(Json::U64(u)) => Ok(*u),
+            Some(_) => self.err(&join(path, key), "expected a non-negative integer"),
+        }
+    }
+
+    fn usize_field(
+        &self,
+        node: &Json,
+        path: &str,
+        key: &str,
+        default: Option<usize>,
+    ) -> Result<usize, ScenarioError> {
+        self.u64_field(node, path, key, default.map(|d| d as u64))
+            .map(|u| u as usize)
+    }
+
+    fn bool_field(
+        &self,
+        node: &Json,
+        path: &str,
+        key: &str,
+        default: bool,
+    ) -> Result<bool, ScenarioError> {
+        match node.get(key) {
+            None => Ok(default),
+            Some(Json::Bool(b)) => Ok(*b),
+            Some(_) => self.err(&join(path, key), "expected true or false"),
+        }
+    }
+
+    fn positive(&self, v: f64, path: &str) -> Result<f64, ScenarioError> {
+        if v > 0.0 && v.is_finite() {
+            Ok(v)
+        } else {
+            self.err(path, "must be a positive number")
+        }
+    }
+
+    fn scenario(&self) -> Result<ScenarioSpec, ScenarioError> {
+        let root = &self.doc.root;
+        self.check_keys(
+            root,
+            "",
+            &[
+                "schema",
+                "name",
+                "description",
+                "seed",
+                "fleet",
+                "arrival",
+                "runtime",
+                "tenants",
+                "mixes",
+                "cases",
+                "gates",
+            ],
+        )?;
+        let schema = self.u64_field(root, "", "schema", Some(1))?;
+        if schema != 1 {
+            return self.err("schema", format!("unsupported scenario schema {schema}"));
+        }
+        let name = self.str_field(root, "", "name", None)?;
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return self.err("name", "must be a non-empty [A-Za-z0-9_] identifier");
+        }
+        let description = self.str_field(root, "", "description", Some(""))?;
+        let seed = self.u64_field(root, "", "seed", Some(0))?;
+
+        let fleet = self.fleet(root.get("fleet"))?;
+        let arrival = self.arrival(root.get("arrival"))?;
+        let runtime = self.runtime(root.get("runtime"))?;
+        let tenants = self.tenants(root.get("tenants"), "tenants")?;
+        if tenants.is_empty() {
+            return self.err("tenants", "at least one [[tenants]] entry is required");
+        }
+        let mixes = self.mixes(root.get("mixes"))?;
+        let cases = self.cases(root.get("cases"), &mixes)?;
+        let case_names: Vec<String> = if cases.is_empty() {
+            vec!["default".to_string()]
+        } else {
+            cases.iter().map(|c| c.name.clone()).collect()
+        };
+        let gates = self.gates(root.get("gates"), &case_names)?;
+        Ok(ScenarioSpec {
+            name,
+            description,
+            seed,
+            fleet,
+            arrival,
+            runtime,
+            tenants,
+            mixes,
+            cases,
+            gates,
+        })
+    }
+
+    fn fleet(&self, node: Option<&Json>) -> Result<FleetSpec, ScenarioError> {
+        let empty = Json::obj();
+        let node = node.unwrap_or(&empty);
+        self.check_keys(
+            node,
+            "fleet",
+            &["devices", "workers", "steal", "queue_cap", "geometry"],
+        )?;
+        let devices = self.usize_field(node, "fleet", "devices", Some(1))?;
+        if devices == 0 {
+            return self.err("fleet.devices", "must be >= 1");
+        }
+        let workers = self.usize_field(node, "fleet", "workers", Some(2))?;
+        if workers == 0 {
+            return self.err("fleet.workers", "must be >= 1");
+        }
+        let steal = self.bool_field(node, "fleet", "steal", false)?;
+        let queue_cap = self.usize_field(node, "fleet", "queue_cap", Some(64))?;
+        if queue_cap == 0 {
+            return self.err("fleet.queue_cap", "must be >= 1");
+        }
+        let geometry = self.geometry(node.get("geometry"))?;
+        Ok(FleetSpec {
+            devices,
+            workers,
+            steal,
+            queue_cap,
+            geometry,
+        })
+    }
+
+    fn geometry(&self, node: Option<&Json>) -> Result<DramGeometry, ScenarioError> {
+        let empty = Json::obj();
+        let node = node.unwrap_or(&empty);
+        let p = "fleet.geometry";
+        self.check_keys(
+            node,
+            p,
+            &["banks", "subarrays_per_bank", "cols", "active_subarrays"],
+        )?;
+        let g = DramGeometry {
+            banks: self.usize_field(node, p, "banks", Some(4))?,
+            subarrays_per_bank: self.usize_field(node, p, "subarrays_per_bank", Some(8))?,
+            cols: self.usize_field(node, p, "cols", Some(1024))?,
+            active_subarrays: self.usize_field(node, p, "active_subarrays", Some(4))?,
+        };
+        if g.banks == 0 || g.subarrays_per_bank == 0 || g.cols == 0 || g.active_subarrays == 0 {
+            return self.err(p, "geometry dimensions must all be >= 1");
+        }
+        if g.active_subarrays > g.subarrays_per_bank {
+            return self.err(
+                &join(p, "active_subarrays"),
+                "cannot exceed subarrays_per_bank",
+            );
+        }
+        Ok(g)
+    }
+
+    fn arrival(&self, node: Option<&Json>) -> Result<ArrivalSpec, ScenarioError> {
+        let empty = Json::obj();
+        let node = node.unwrap_or(&empty);
+        let p = "arrival";
+        self.check_keys(
+            node,
+            p,
+            &[
+                "requests",
+                "process",
+                "rate",
+                "burst_size",
+                "burst_gap_ns",
+                "window",
+                "phases",
+            ],
+        )?;
+        let requests = self.usize_field(node, p, "requests", Some(32))?;
+        if requests == 0 {
+            return self.err("arrival.requests", "must be >= 1");
+        }
+        let window = self.usize_field(node, p, "window", Some(0))?;
+        let process = match self.str_field(node, p, "process", Some("sequential"))?.as_str() {
+            "sequential" => {
+                for k in ["rate", "burst_size", "burst_gap_ns"] {
+                    if node.get(k).is_some() {
+                        return self.err(
+                            &join(p, k),
+                            "only meaningful for poisson/burst arrival processes",
+                        );
+                    }
+                }
+                ArrivalProcess::Sequential
+            }
+            "poisson" => {
+                let rate = self.f64_field(node, p, "rate", None)?;
+                self.positive(rate, "arrival.rate")?;
+                ArrivalProcess::Poisson { rate_per_sec: rate }
+            }
+            "burst" => {
+                let size = self.usize_field(node, p, "burst_size", Some(8))?;
+                if size == 0 {
+                    return self.err("arrival.burst_size", "must be >= 1");
+                }
+                let gap_ns = self.u64_field(node, p, "burst_gap_ns", Some(0))?;
+                ArrivalProcess::Burst { size, gap_ns }
+            }
+            other => {
+                return self.err(
+                    "arrival.process",
+                    format!("unknown arrival process `{other}` (sequential|poisson|burst)"),
+                )
+            }
+        };
+        let mut phases = Vec::new();
+        if let Some(arr) = node.get("phases") {
+            let items = match arr.as_arr() {
+                Some(items) => items,
+                None => return self.err("arrival.phases", "expected an array of [[phases]]"),
+            };
+            for (i, ph) in items.iter().enumerate() {
+                let pp = format!("arrival.phases[{i}]");
+                self.check_keys(ph, &pp, &["frac", "rate_scale"])?;
+                let frac = self.f64_field(ph, &pp, "frac", None)?;
+                self.positive(frac, &join(&pp, "frac"))?;
+                let rate_scale = self.f64_field(ph, &pp, "rate_scale", Some(1.0))?;
+                self.positive(rate_scale, &join(&pp, "rate_scale"))?;
+                phases.push(PhaseSpec { frac, rate_scale });
+            }
+        }
+        Ok(ArrivalSpec {
+            requests,
+            process,
+            window,
+            phases,
+        })
+    }
+
+    fn coalesce_mode(&self, s: &str, path: &str) -> Result<CoalesceMode, ScenarioError> {
+        match s {
+            "off" => Ok(CoalesceMode::Off),
+            "strict" => Ok(CoalesceMode::Strict),
+            "opportunistic" => Ok(CoalesceMode::Opportunistic),
+            other => self.err(
+                path,
+                format!("unknown coalesce mode `{other}` (off|strict|opportunistic)"),
+            ),
+        }
+    }
+
+    fn eviction_mode(&self, s: &str, path: &str) -> Result<EvictionMode, ScenarioError> {
+        match s {
+            "fail_fast" => Ok(EvictionMode::FailFast),
+            "lru" => Ok(EvictionMode::Lru),
+            "cost_aware" => Ok(EvictionMode::CostAware),
+            other => self.err(
+                path,
+                format!("unknown eviction policy `{other}` (fail_fast|lru|cost_aware)"),
+            ),
+        }
+    }
+
+    /// `capacity = "unbounded"` | `capacity_bits = N` | `capacity_share = F`
+    fn capacity_of(&self, node: &Json, path: &str) -> Result<Option<CapacitySpec>, ScenarioError> {
+        let named = node.get("capacity").is_some();
+        let bits = node.get("capacity_bits").is_some();
+        let share = node.get("capacity_share").is_some();
+        if (named as u8 + bits as u8 + share as u8) > 1 {
+            return self.err(
+                path,
+                "capacity, capacity_bits, and capacity_share are mutually exclusive",
+            );
+        }
+        if named {
+            let s = self.str_field(node, path, "capacity", None)?;
+            if s != "unbounded" {
+                return self.err(
+                    &join(path, "capacity"),
+                    "only \"unbounded\" is accepted (use capacity_bits / capacity_share)",
+                );
+            }
+            return Ok(Some(CapacitySpec::Unbounded));
+        }
+        if bits {
+            let b = self.u64_field(node, path, "capacity_bits", None)?;
+            if b == 0 {
+                return self.err(&join(path, "capacity_bits"), "must be >= 1");
+            }
+            return Ok(Some(CapacitySpec::Bits(b)));
+        }
+        if share {
+            let f = self.f64_field(node, path, "capacity_share", None)?;
+            self.positive(f, &join(path, "capacity_share"))?;
+            return Ok(Some(CapacitySpec::Share(f)));
+        }
+        Ok(None)
+    }
+
+    fn runtime(&self, node: Option<&Json>) -> Result<RuntimeSpec, ScenarioError> {
+        let empty = Json::obj();
+        let node = node.unwrap_or(&empty);
+        let p = "runtime";
+        self.check_keys(
+            node,
+            p,
+            &[
+                "coalesce",
+                "max_hold",
+                "capacity",
+                "capacity_bits",
+                "capacity_share",
+                "eviction",
+                "rebalance_every",
+                "replication",
+            ],
+        )?;
+        let coalesce = self.coalesce_mode(
+            &self.str_field(node, p, "coalesce", Some("off"))?,
+            "runtime.coalesce",
+        )?;
+        let max_hold = self.u64_field(node, p, "max_hold", Some(0))?;
+        let capacity = self.capacity_of(node, p)?.unwrap_or(CapacitySpec::Unbounded);
+        let eviction = self.eviction_mode(
+            &self.str_field(node, p, "eviction", Some("fail_fast"))?,
+            "runtime.eviction",
+        )?;
+        let rebalance_every = self.usize_field(node, p, "rebalance_every", Some(0))?;
+        let rp = "runtime.replication";
+        let empty_rep = Json::obj();
+        let rep = node.get("replication").unwrap_or(&empty_rep);
+        self.check_keys(rep, rp, &["hot_uses", "amortize_factor"])?;
+        let replication = ReplicationSpec {
+            hot_uses: self.u64_field(rep, rp, "hot_uses", Some(3))?,
+            amortize_factor: self.f64_field(rep, rp, "amortize_factor", Some(1.0))?,
+        };
+        Ok(RuntimeSpec {
+            coalesce,
+            max_hold,
+            capacity,
+            eviction,
+            rebalance_every,
+            replication,
+        })
+    }
+
+    fn tenants(&self, node: Option<&Json>, path: &str) -> Result<Vec<TenantSpec>, ScenarioError> {
+        let items = match node {
+            None => return Ok(Vec::new()),
+            Some(v) => match v.as_arr() {
+                Some(items) => items,
+                None => return self.err(path, "expected an array of [[tenants]]"),
+            },
+        };
+        let mut out = Vec::new();
+        for (i, t) in items.iter().enumerate() {
+            let tp = format!("{path}[{i}]");
+            self.check_keys(
+                t,
+                &tp,
+                &[
+                    "name",
+                    "weight",
+                    "op",
+                    "bits",
+                    "placement",
+                    "regions",
+                    "zipf_theta",
+                    "miss_every",
+                    "max_inflight",
+                ],
+            )?;
+            let name = self.str_field(t, &tp, "name", None)?;
+            if name.is_empty() {
+                return self.err(&join(&tp, "name"), "must be non-empty");
+            }
+            if out.iter().any(|e: &TenantSpec| e.name == name) {
+                return self.err(&join(&tp, "name"), format!("duplicate tenant `{name}`"));
+            }
+            let weight = self.f64_field(t, &tp, "weight", Some(1.0))?;
+            self.positive(weight, &join(&tp, "weight"))?;
+            let op_name = self.str_field(t, &tp, "op", Some("xnor2"))?;
+            let op = match BulkOp::parse(&op_name) {
+                Some(op) if !matches!(op, BulkOp::Add | BulkOp::Sub) => op,
+                Some(_) => {
+                    return self.err(
+                        &join(&tp, "op"),
+                        format!("`{op_name}` is not a bulk bit-wise op"),
+                    )
+                }
+                None => return self.err(&join(&tp, "op"), format!("unknown op `{op_name}`")),
+            };
+            let bits = self.usize_field(t, &tp, "bits", None)?;
+            if bits == 0 {
+                return self.err(&join(&tp, "bits"), "must be >= 1");
+            }
+            let placement = match self.str_field(t, &tp, "placement", Some("carried"))?.as_str() {
+                "carried" => PlacementMode::Carried,
+                "resident" => PlacementMode::Resident,
+                other => {
+                    return self.err(
+                        &join(&tp, "placement"),
+                        format!("unknown placement `{other}` (carried|resident)"),
+                    )
+                }
+            };
+            let regions = self.usize_field(t, &tp, "regions", Some(0))?;
+            if placement == PlacementMode::Resident && regions == 0 {
+                return self.err(&join(&tp, "regions"), "resident tenants need regions >= 1");
+            }
+            let zipf_theta = self.f64_field(t, &tp, "zipf_theta", Some(0.0))?;
+            if zipf_theta < 0.0 {
+                return self.err(&join(&tp, "zipf_theta"), "must be >= 0");
+            }
+            let miss_every = self.usize_field(t, &tp, "miss_every", Some(0))?;
+            if miss_every > 0 && placement != PlacementMode::Resident {
+                return self.err(
+                    &join(&tp, "miss_every"),
+                    "forced misses only apply to resident tenants",
+                );
+            }
+            let max_inflight = self.usize_field(t, &tp, "max_inflight", Some(0))?;
+            out.push(TenantSpec {
+                name,
+                weight,
+                op,
+                bits,
+                placement,
+                regions,
+                zipf_theta,
+                miss_every,
+                max_inflight,
+            });
+        }
+        Ok(out)
+    }
+
+    fn mixes(&self, node: Option<&Json>) -> Result<Vec<MixSpec>, ScenarioError> {
+        let items = match node {
+            None => return Ok(Vec::new()),
+            Some(v) => match v.as_arr() {
+                Some(items) => items,
+                None => return self.err("mixes", "expected an array of [[mixes]]"),
+            },
+        };
+        let mut out: Vec<MixSpec> = Vec::new();
+        for (i, m) in items.iter().enumerate() {
+            let mp = format!("mixes[{i}]");
+            self.check_keys(m, &mp, &["name", "tenants"])?;
+            let name = self.str_field(m, &mp, "name", None)?;
+            if out.iter().any(|e| e.name == name) {
+                return self.err(&join(&mp, "name"), format!("duplicate mix `{name}`"));
+            }
+            let tenants = self.tenants(m.get("tenants"), &join(&mp, "tenants"))?;
+            if tenants.is_empty() {
+                return self.err(
+                    &join(&mp, "tenants"),
+                    "a mix needs at least one [[mixes.tenants]] entry",
+                );
+            }
+            out.push(MixSpec { name, tenants });
+        }
+        Ok(out)
+    }
+
+    fn cases(
+        &self,
+        node: Option<&Json>,
+        mixes: &[MixSpec],
+    ) -> Result<Vec<CaseSpec>, ScenarioError> {
+        let items = match node {
+            None => return Ok(Vec::new()),
+            Some(v) => match v.as_arr() {
+                Some(items) => items,
+                None => return self.err("cases", "expected an array of [[cases]]"),
+            },
+        };
+        let mut out: Vec<CaseSpec> = Vec::new();
+        for (i, c) in items.iter().enumerate() {
+            let cp = format!("cases[{i}]");
+            self.check_keys(
+                c,
+                &cp,
+                &[
+                    "name",
+                    "mix",
+                    "devices",
+                    "workers",
+                    "steal",
+                    "queue_cap",
+                    "coalesce",
+                    "max_hold",
+                    "capacity",
+                    "capacity_bits",
+                    "capacity_share",
+                    "eviction",
+                    "rebalance_every",
+                    "requests",
+                    "window",
+                    "seed",
+                ],
+            )?;
+            let name = self.str_field(c, &cp, "name", None)?;
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return self.err(&join(&cp, "name"), "must be a [A-Za-z0-9_] identifier");
+            }
+            if out.iter().any(|e| e.name == name) {
+                return self.err(&join(&cp, "name"), format!("duplicate case `{name}`"));
+            }
+            let mix = match c.get("mix") {
+                None => None,
+                Some(Json::Str(m)) => {
+                    if !mixes.iter().any(|x| &x.name == m) {
+                        return self.err(
+                            &join(&cp, "mix"),
+                            format!("unknown tenant mix `{m}` (no such [[mixes]] entry)"),
+                        );
+                    }
+                    Some(m.clone())
+                }
+                Some(_) => return self.err(&join(&cp, "mix"), "expected a mix name"),
+            };
+            let opt_usize = |key: &str| -> Result<Option<usize>, ScenarioError> {
+                match c.get(key) {
+                    None => Ok(None),
+                    Some(_) => self.usize_field(c, &cp, key, None).map(Some),
+                }
+            };
+            let devices = opt_usize("devices")?;
+            if devices == Some(0) {
+                return self.err(&join(&cp, "devices"), "must be >= 1");
+            }
+            let requests = opt_usize("requests")?;
+            if requests == Some(0) {
+                return self.err(&join(&cp, "requests"), "must be >= 1");
+            }
+            let coalesce = match c.get("coalesce") {
+                None => None,
+                Some(Json::Str(s)) => Some(self.coalesce_mode(s, &join(&cp, "coalesce"))?),
+                Some(_) => return self.err(&join(&cp, "coalesce"), "expected a coalesce mode"),
+            };
+            let eviction = match c.get("eviction") {
+                None => None,
+                Some(Json::Str(s)) => Some(self.eviction_mode(s, &join(&cp, "eviction"))?),
+                Some(_) => return self.err(&join(&cp, "eviction"), "expected an eviction policy"),
+            };
+            let steal = match c.get("steal") {
+                None => None,
+                Some(Json::Bool(b)) => Some(*b),
+                Some(_) => return self.err(&join(&cp, "steal"), "expected true or false"),
+            };
+            let seed = match c.get("seed") {
+                None => None,
+                Some(_) => Some(self.u64_field(c, &cp, "seed", None)?),
+            };
+            let max_hold = match c.get("max_hold") {
+                None => None,
+                Some(_) => Some(self.u64_field(c, &cp, "max_hold", None)?),
+            };
+            out.push(CaseSpec {
+                name,
+                mix,
+                devices,
+                workers: opt_usize("workers")?,
+                steal,
+                queue_cap: opt_usize("queue_cap")?,
+                coalesce,
+                max_hold,
+                capacity: self.capacity_of(c, &cp)?,
+                eviction,
+                rebalance_every: opt_usize("rebalance_every")?,
+                requests,
+                window: opt_usize("window")?,
+                seed,
+            });
+        }
+        Ok(out)
+    }
+
+    fn gates(
+        &self,
+        node: Option<&Json>,
+        case_names: &[String],
+    ) -> Result<Vec<GateSpec>, ScenarioError> {
+        let items = match node {
+            None => return Ok(Vec::new()),
+            Some(v) => match v.as_arr() {
+                Some(items) => items,
+                None => return self.err("gates", "expected an array of [[gates]]"),
+            },
+        };
+        let check_ref = |vref: &str, path: &str| -> Result<(), ScenarioError> {
+            let case = match vref.split_once('.') {
+                Some((case, metric)) if !metric.is_empty() => case,
+                _ => {
+                    return self.err(
+                        path,
+                        format!("bad metric reference `{vref}` (want `case.metric`)"),
+                    )
+                }
+            };
+            if !case_names.iter().any(|c| c == case) {
+                return self.err(path, format!("unknown case `{case}` in metric reference"));
+            }
+            Ok(())
+        };
+        let mut out: Vec<GateSpec> = Vec::new();
+        for (i, g) in items.iter().enumerate() {
+            let gp = format!("gates[{i}]");
+            self.check_keys(g, &gp, &["name", "left", "op", "right", "scale", "tol"])?;
+            let name = self.str_field(g, &gp, "name", None)?;
+            if out.iter().any(|e| e.name == name) {
+                return self.err(&join(&gp, "name"), format!("duplicate gate `{name}`"));
+            }
+            let left = self.str_field(g, &gp, "left", None)?;
+            check_ref(&left, &join(&gp, "left"))?;
+            let op = match self.str_field(g, &gp, "op", None)?.as_str() {
+                "lt" => GateOp::Lt,
+                "le" => GateOp::Le,
+                "gt" => GateOp::Gt,
+                "ge" => GateOp::Ge,
+                "eq" => GateOp::Eq,
+                "ne" => GateOp::Ne,
+                other => {
+                    return self.err(
+                        &join(&gp, "op"),
+                        format!("unknown gate op `{other}` (lt|le|gt|ge|eq|ne)"),
+                    )
+                }
+            };
+            let right = match g.get("right") {
+                None => return self.err(&join(&gp, "right"), "required operand is missing"),
+                Some(Json::Str(s)) => {
+                    check_ref(s, &join(&gp, "right"))?;
+                    GateOperand::Metric(s.clone())
+                }
+                Some(v) => match v.as_f64() {
+                    Some(x) => GateOperand::Value(x),
+                    None => {
+                        return self.err(
+                            &join(&gp, "right"),
+                            "expected a metric reference or a number",
+                        )
+                    }
+                },
+            };
+            let scale = self.f64_field(g, &gp, "scale", Some(1.0))?;
+            self.positive(scale, &join(&gp, "scale"))?;
+            let tol = self.f64_field(g, &gp, "tol", Some(0.0))?;
+            if tol < 0.0 {
+                return self.err(&join(&gp, "tol"), "must be >= 0");
+            }
+            out.push(GateSpec {
+                name,
+                left,
+                op,
+                right,
+                scale,
+                tol,
+            });
+        }
+        Ok(out)
+    }
+}
+
+fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}

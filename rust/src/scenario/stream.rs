@@ -1,0 +1,153 @@
+//! Deterministic arrival-stream generation.
+//!
+//! A scenario case compiles to a flat, pre-materialized list of
+//! [`ArrivalEvent`]s before anything touches the cluster: tenant
+//! interleaving is **stride scheduling** over exact largest-remainder
+//! quotas (not weighted sampling — offered load matches the declared
+//! load *exactly*), arrival times come from the configured process on a
+//! simulated clock (never the host clock), and resident tenants sample
+//! their region rank from a Zipf law. Everything is driven by one
+//! explicitly seeded [`Rng`], so the same `(scenario, seed)` pair always
+//! yields the same byte-identical stream — the replay contract the
+//! determinism property test and the CI determinism job pin.
+
+use crate::util::rng::{zipf_cdf, Rng};
+
+use super::spec::{ArrivalProcess, PlacementMode, ResolvedCase};
+
+/// One generated request arrival.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrivalEvent {
+    /// position in the stream (submission order)
+    pub index: usize,
+    /// simulated arrival time
+    pub vtime_ns: u64,
+    /// index into the case's tenant list
+    pub tenant: usize,
+    /// this tenant's per-tenant sequence number (0-based)
+    pub tenant_seq: usize,
+    /// resident region rank the request targets (0 for carried tenants)
+    pub rank: usize,
+    /// route to `owner + 1` instead of the rank's owner — a forced
+    /// locality miss (`miss_every`)
+    pub forced_miss: bool,
+}
+
+/// Generate the full arrival stream for one resolved case.
+///
+/// RNG draw order per event is fixed (arrival gap first, then region
+/// rank) so streams are reproducible and insensitive to refactors of the
+/// executor.
+pub fn generate(case: &ResolvedCase) -> Vec<ArrivalEvent> {
+    let counts = case.tenant_requests();
+    let mut remaining = counts;
+    // stride scheduling: every tenant starts at pass 0, each grant
+    // advances its pass by 1/weight; ties resolve to the lowest tenant
+    // index. A 1:7 two-tenant mix therefore yields the classic
+    // every-8th-request minority pattern.
+    let mut pass: Vec<f64> = vec![0.0; case.tenants.len()];
+    let mut seq: Vec<usize> = vec![0; case.tenants.len()];
+    let cdfs: Vec<Option<Vec<f64>>> = case
+        .tenants
+        .iter()
+        .map(|t| {
+            (t.placement == PlacementMode::Resident && t.regions > 0)
+                .then(|| zipf_cdf(t.regions, t.zipf_theta))
+        })
+        .collect();
+
+    let mut rng = Rng::new(case.seed);
+    let mut clock_ns = 0.0f64;
+    let mut events = Vec::with_capacity(case.requests);
+    for index in 0..case.requests {
+        let scale = phase_scale(case, index);
+        match case.process {
+            ArrivalProcess::Sequential => {}
+            ArrivalProcess::Poisson { rate_per_sec } => {
+                // exponential inter-arrival gap at the phase-scaled rate;
+                // 1 - f64() is in (0, 1], so ln() is finite
+                let u = 1.0 - rng.f64();
+                clock_ns += -u.ln() / (rate_per_sec * scale) * 1e9;
+            }
+            ArrivalProcess::Burst { size, gap_ns } => {
+                if index > 0 && index % size == 0 {
+                    clock_ns += gap_ns as f64 / scale;
+                }
+            }
+        }
+
+        // grant the stream slot to the lowest-pass tenant with quota left
+        let tenant = (0..case.tenants.len())
+            .filter(|&t| remaining[t] > 0)
+            .min_by(|&a, &b| pass[a].partial_cmp(&pass[b]).unwrap_or(std::cmp::Ordering::Equal))
+            .expect("stream shorter than total quota");
+        remaining[tenant] -= 1;
+        pass[tenant] += 1.0 / case.tenants[tenant].weight;
+        let tenant_seq = seq[tenant];
+        seq[tenant] += 1;
+
+        let rank = match &cdfs[tenant] {
+            Some(cdf) => rng.sample_cdf(cdf),
+            None => 0,
+        };
+        let k = case.tenants[tenant].miss_every;
+        let forced_miss = k > 0 && tenant_seq % k == k - 1;
+        events.push(ArrivalEvent {
+            index,
+            vtime_ns: clock_ns.round() as u64,
+            tenant,
+            tenant_seq,
+            rank,
+            forced_miss,
+        });
+    }
+    events
+}
+
+/// The diurnal rate multiplier in effect at stream position `index`:
+/// phases partition the request stream by their (normalized) `frac`
+/// weights, each scaling the base rate.
+fn phase_scale(case: &ResolvedCase, index: usize) -> f64 {
+    if case.phases.is_empty() {
+        return 1.0;
+    }
+    let total: f64 = case.phases.iter().map(|p| p.frac).sum();
+    let progress = index as f64 / case.requests as f64;
+    let mut acc = 0.0;
+    for p in &case.phases {
+        acc += p.frac / total;
+        if progress < acc {
+            return p.rate_scale;
+        }
+    }
+    case.phases.last().map(|p| p.rate_scale).unwrap_or(1.0)
+}
+
+/// FNV-1a 64 digest of the stream — two identically-seeded generations
+/// must agree on every field of every event.
+pub fn stream_digest(events: &[ArrivalEvent]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for e in events {
+        mix(e.index as u64);
+        mix(e.vtime_ns);
+        mix(e.tenant as u64);
+        mix(e.tenant_seq as u64);
+        mix(e.rank as u64);
+        mix(e.forced_miss as u64);
+    }
+    h
+}
+
+/// Total offered load of a stream in wave units — must equal
+/// [`ResolvedCase::declared_wave_units`] exactly.
+pub fn offered_wave_units(case: &ResolvedCase, events: &[ArrivalEvent]) -> u64 {
+    let cols = case.geometry.cols;
+    events
+        .iter()
+        .map(|e| case.tenants[e.tenant].bits.div_ceil(cols) as u64)
+        .sum()
+}

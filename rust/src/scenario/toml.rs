@@ -1,0 +1,456 @@
+//! Minimal TOML reader for scenario files (TOML crates are not vendored).
+//!
+//! Parses the subset scenario files use — `[table]` and `[[array-of-table]]`
+//! headers (arbitrarily nested), `key = value` pairs with dotted keys,
+//! strings, integers (decimal / `0x` hex / `_` separators), floats,
+//! booleans, and single-line arrays — into the same [`Json`] tree the rest
+//! of the observability layer speaks, so scenario validation, `--param`
+//! overrides, and the JSON scenario form all share one document model.
+//!
+//! Every parse error is **line-anchored** (`line N: …`), and the returned
+//! [`ScenarioDoc`] keeps a key-path → line map so post-parse *validation*
+//! errors can point at the offending line too (`scenario.toml:12:
+//! tenants[0].weight: must be > 0`).
+
+use std::collections::BTreeMap;
+
+use crate::obs::Json;
+
+/// A parsed scenario document: the value tree plus the source line each
+/// key path was defined on (empty for documents parsed from plain JSON).
+#[derive(Debug, Clone)]
+pub struct ScenarioDoc {
+    pub root: Json,
+    lines: BTreeMap<String, usize>,
+}
+
+impl ScenarioDoc {
+    /// Wrap an already-built JSON tree (no line anchors).
+    pub fn from_json(root: Json) -> Self {
+        ScenarioDoc {
+            root,
+            lines: BTreeMap::new(),
+        }
+    }
+
+    /// Source line (1-based) where `path` (e.g. `tenants[0].weight`) was
+    /// last assigned, if the document came from TOML.
+    pub fn line_of(&self, path: &str) -> Option<usize> {
+        self.lines.get(path).copied()
+    }
+
+    /// Nearest known line for `path`: the path itself, else its closest
+    /// recorded ancestor (so a *missing* required key still anchors to
+    /// the table that should have held it).
+    pub fn nearest_line(&self, path: &str) -> Option<usize> {
+        let mut p = path;
+        loop {
+            if let Some(n) = self.lines.get(p) {
+                return Some(*n);
+            }
+            match p.rfind(['.', '[']) {
+                Some(cut) => p = &p[..cut],
+                None => return None,
+            }
+        }
+    }
+
+    /// Set a (dotted) key path to a scalar value — the `--param key=value`
+    /// override hook. Intermediate objects are created as needed; array
+    /// segments use the `tenants[0]` form and must already exist.
+    pub fn set_path(&mut self, path: &str, value: Json) -> Result<(), String> {
+        let segs = parse_path(path)?;
+        set_in(&mut self.root, &segs, path, value)?;
+        self.lines.remove(path);
+        Ok(())
+    }
+}
+
+#[derive(Debug)]
+enum Seg {
+    Key(String),
+    Index(usize),
+}
+
+fn parse_path(path: &str) -> Result<Vec<Seg>, String> {
+    let mut segs = Vec::new();
+    for part in path.split('.') {
+        if part.is_empty() {
+            return Err(format!("bad override path `{path}`"));
+        }
+        match part.split_once('[') {
+            None => segs.push(Seg::Key(part.to_string())),
+            Some((key, rest)) => {
+                if !key.is_empty() {
+                    segs.push(Seg::Key(key.to_string()));
+                }
+                for idx in rest.split('[') {
+                    let idx = idx
+                        .strip_suffix(']')
+                        .ok_or_else(|| format!("bad override path `{path}`"))?;
+                    let n: usize = idx
+                        .parse()
+                        .map_err(|_| format!("bad override path `{path}`"))?;
+                    segs.push(Seg::Index(n));
+                }
+            }
+        }
+    }
+    Ok(segs)
+}
+
+fn set_in(node: &mut Json, segs: &[Seg], path: &str, value: Json) -> Result<(), String> {
+    match segs {
+        [] => {
+            *node = value;
+            Ok(())
+        }
+        [Seg::Key(k), rest @ ..] => {
+            let obj = match node {
+                Json::Obj(fields) => fields,
+                _ => return Err(format!("override path `{path}`: `{k}` is not a table")),
+            };
+            if !obj.iter().any(|(key, _)| key == k) {
+                obj.push((k.clone(), Json::obj()));
+            }
+            let slot = obj.iter_mut().find(|(key, _)| key == k).unwrap();
+            set_in(&mut slot.1, rest, path, value)
+        }
+        [Seg::Index(i), rest @ ..] => match node {
+            Json::Arr(items) => match items.get_mut(*i) {
+                Some(item) => set_in(item, rest, path, value),
+                None => Err(format!("override path `{path}`: index {i} out of range")),
+            },
+            _ => Err(format!("override path `{path}`: not an array")),
+        },
+    }
+}
+
+/// Parse scenario source: TOML by default, JSON when the document starts
+/// with `{` (the two forms build the same tree).
+pub fn parse_source(src: &str) -> Result<ScenarioDoc, String> {
+    if src.trim_start().starts_with('{') {
+        Json::parse(src).map(ScenarioDoc::from_json)
+    } else {
+        parse_toml(src)
+    }
+}
+
+/// Parse TOML into a [`ScenarioDoc`]. Errors are `line N: …` strings.
+pub fn parse_toml(src: &str) -> Result<ScenarioDoc, String> {
+    let mut doc = ScenarioDoc {
+        root: Json::obj(),
+        lines: BTreeMap::new(),
+    };
+    // current table: path segments + rendered path-string prefix
+    let mut table: Vec<Seg> = Vec::new();
+    let mut table_str = String::new();
+    for (i, raw) in src.lines().enumerate() {
+        let n = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(header) = line.strip_prefix("[[") {
+            let header = header
+                .strip_suffix("]]")
+                .ok_or_else(|| format!("line {n}: unterminated [[table]] header"))?;
+            let keys = header_keys(header, n)?;
+            (table, table_str) = enter_array_of_tables(&mut doc, &keys, n)?;
+        } else if let Some(header) = line.strip_prefix('[') {
+            let header = header
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {n}: unterminated [table] header"))?;
+            let keys = header_keys(header, n)?;
+            (table, table_str) = enter_table(&mut doc, &keys, n)?;
+        } else {
+            let (key, rest) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {n}: expected `key = value`, got `{line}`"))?;
+            let keys = header_keys(key.trim(), n)?;
+            let value = parse_value(rest.trim(), n)?;
+            let mut segs: Vec<Seg> = Vec::new();
+            let mut path = table_str.clone();
+            for k in &keys {
+                push_path(&mut path, k);
+                segs.push(Seg::Key(k.clone()));
+            }
+            let node = navigate(&mut doc.root, &table, n)?;
+            assign(node, &segs, value, &path, n)?;
+            doc.lines.insert(path, n);
+        }
+    }
+    Ok(doc)
+}
+
+/// Cut a `#` comment (respecting string literals).
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn valid_key(k: &str) -> bool {
+    !k.is_empty()
+        && k.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn header_keys(header: &str, n: usize) -> Result<Vec<String>, String> {
+    header
+        .split('.')
+        .map(|k| {
+            let k = k.trim();
+            if valid_key(k) {
+                Ok(k.to_string())
+            } else {
+                Err(format!("line {n}: invalid key `{k}`"))
+            }
+        })
+        .collect()
+}
+
+fn push_path(path: &mut String, key: &str) {
+    if !path.is_empty() {
+        path.push('.');
+    }
+    path.push_str(key);
+}
+
+/// Walk `segs` from the root, creating nothing (segments must exist).
+fn navigate<'a>(root: &'a mut Json, segs: &[Seg], n: usize) -> Result<&'a mut Json, String> {
+    let mut node = root;
+    for seg in segs {
+        node = match seg {
+            Seg::Key(k) => match node {
+                Json::Obj(fields) => {
+                    &mut fields
+                        .iter_mut()
+                        .find(|(key, _)| key == k)
+                        .ok_or_else(|| format!("line {n}: internal: lost table `{k}`"))?
+                        .1
+                }
+                _ => return Err(format!("line {n}: `{k}` is not a table")),
+            },
+            Seg::Index(i) => match node {
+                Json::Arr(items) => items
+                    .get_mut(*i)
+                    .ok_or_else(|| format!("line {n}: internal: lost table index {i}"))?,
+                _ => return Err(format!("line {n}: not an array of tables")),
+            },
+        };
+    }
+    Ok(node)
+}
+
+/// `[a.b]`: create/enter nested tables. Returns the new current-table path.
+fn enter_table(
+    doc: &mut ScenarioDoc,
+    keys: &[String],
+    n: usize,
+) -> Result<(Vec<Seg>, String), String> {
+    let mut segs: Vec<Seg> = Vec::new();
+    let mut path = String::new();
+    for k in keys {
+        let node = navigate(&mut doc.root, &segs, n)?;
+        match node {
+            Json::Obj(fields) => {
+                if !fields.iter().any(|(key, _)| key == k) {
+                    fields.push((k.clone(), Json::obj()));
+                }
+            }
+            _ => return Err(format!("line {n}: `{k}` is not a table")),
+        }
+        push_path(&mut path, k);
+        segs.push(Seg::Key(k.clone()));
+        // an intermediate segment may be an array of tables: descend into
+        // its most recent element
+        let node = navigate(&mut doc.root, &segs, n)?;
+        if let Json::Arr(items) = node {
+            if items.is_empty() {
+                return Err(format!("line {n}: `{k}` is an empty array of tables"));
+            }
+            let idx = items.len() - 1;
+            path.push_str(&format!("[{idx}]"));
+            segs.push(Seg::Index(idx));
+        }
+    }
+    doc.lines.entry(path.clone()).or_insert(n);
+    Ok((segs, path))
+}
+
+/// `[[a.b]]`: append a fresh table to the array at `a.b` (creating it),
+/// entering parent tables/arrays like [`enter_table`] does.
+fn enter_array_of_tables(
+    doc: &mut ScenarioDoc,
+    keys: &[String],
+    n: usize,
+) -> Result<(Vec<Seg>, String), String> {
+    let (parent, last) = keys.split_at(keys.len() - 1);
+    let (mut segs, mut path) = if parent.is_empty() {
+        (Vec::new(), String::new())
+    } else {
+        enter_table(doc, parent, n)?
+    };
+    let k = &last[0];
+    let node = navigate(&mut doc.root, &segs, n)?;
+    let idx = match node {
+        Json::Obj(fields) => {
+            if !fields.iter().any(|(key, _)| key == k) {
+                fields.push((k.clone(), Json::Arr(Vec::new())));
+            }
+            let slot = &mut fields.iter_mut().find(|(key, _)| key == k).unwrap().1;
+            match slot {
+                Json::Arr(items) => {
+                    items.push(Json::obj());
+                    items.len() - 1
+                }
+                _ => return Err(format!("line {n}: `{k}` is not an array of tables")),
+            }
+        }
+        _ => return Err(format!("line {n}: `{k}` is not a table")),
+    };
+    push_path(&mut path, k);
+    path.push_str(&format!("[{idx}]"));
+    segs.push(Seg::Key(k.clone()));
+    segs.push(Seg::Index(idx));
+    doc.lines.insert(path.clone(), n);
+    Ok((segs, path))
+}
+
+/// Assign a (possibly dotted) key inside the current table node.
+fn assign(node: &mut Json, segs: &[Seg], value: Json, path: &str, n: usize) -> Result<(), String> {
+    match segs {
+        [Seg::Key(k)] => match node {
+            Json::Obj(fields) => {
+                if fields.iter().any(|(key, _)| key == k) {
+                    return Err(format!("line {n}: duplicate key `{path}`"));
+                }
+                fields.push((k.clone(), value));
+                Ok(())
+            }
+            _ => Err(format!("line {n}: `{k}` is not assignable")),
+        },
+        [Seg::Key(k), rest @ ..] => match node {
+            Json::Obj(fields) => {
+                if !fields.iter().any(|(key, _)| key == k) {
+                    fields.push((k.clone(), Json::obj()));
+                }
+                let slot = &mut fields.iter_mut().find(|(key, _)| key == k).unwrap().1;
+                assign(slot, rest, value, path, n)
+            }
+            _ => Err(format!("line {n}: `{k}` is not a table")),
+        },
+        _ => Err(format!("line {n}: bad key `{path}`")),
+    }
+}
+
+/// Parse one TOML value (scalar or single-line array).
+fn parse_value(raw: &str, n: usize) -> Result<Json, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(format!("line {n}: missing value"));
+    }
+    if let Some(rest) = raw.strip_prefix('"') {
+        let body = rest
+            .strip_suffix('"')
+            .ok_or_else(|| format!("line {n}: unterminated string"))?;
+        if body.contains('"') {
+            return Err(format!("line {n}: stray quote in string"));
+        }
+        return Ok(Json::Str(unescape(body)));
+    }
+    if raw == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(body) = raw.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| format!("line {n}: unterminated array (arrays must be single-line)"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, n)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    if raw.starts_with('{') {
+        return Err(format!(
+            "line {n}: inline tables are not supported — use a [table] header"
+        ));
+    }
+    parse_number(raw, n)
+}
+
+fn parse_number(raw: &str, n: usize) -> Result<Json, String> {
+    let clean: String = raw.chars().filter(|&c| c != '_').collect();
+    if let Some(hex) = clean.strip_prefix("0x").or_else(|| clean.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16)
+            .map(Json::U64)
+            .map_err(|_| format!("line {n}: bad hex integer `{raw}`"));
+    }
+    if !clean.contains(['.', 'e', 'E']) {
+        if let Ok(u) = clean.parse::<u64>() {
+            return Ok(Json::U64(u));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(Json::F64)
+        .map_err(|_| format!("line {n}: expected a value, got `{raw}`"))
+}
+
+/// Split an array body on top-level commas (not inside nested `[...]` or
+/// strings).
+fn split_top_level(body: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&body[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}

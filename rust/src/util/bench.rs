@@ -128,18 +128,33 @@ impl BenchReport {
     }
 
     /// Record a workload-configuration value (devices, requests, bits…).
+    /// Panics on a duplicate key — a config recorded twice means the
+    /// driver overwrote itself and the artifact would silently lie.
     pub fn config(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        assert!(
+            !self.config.iter().any(|(k, _)| k == key),
+            "BenchReport `{}`: duplicate config key `{key}`",
+            self.name
+        );
         self.config.push((key.to_string(), value.into()));
         self
     }
 
     /// Record a measured metric (throughput, makespan, waves saved…).
+    /// Panics on a duplicate key (same contract as [`Self::config`]: JSON
+    /// objects with repeated keys are ambiguous to every consumer).
     pub fn metric(&mut self, key: &str, value: impl Into<Json>) -> &mut Self {
+        assert!(
+            !self.metrics.iter().any(|(k, _)| k == key),
+            "BenchReport `{}`: duplicate metric key `{key}`",
+            self.name
+        );
         self.metrics.push((key.to_string(), value.into()));
         self
     }
 
-    /// Record a [`Measurement`] under `metrics` as a nested object.
+    /// Record a [`Measurement`] under `metrics` as a nested object
+    /// (duplicate-key checked like [`Self::metric`]).
     pub fn measurement(&mut self, m: &Measurement) -> &mut Self {
         let mut obj = Json::obj()
             .field("mean_ns", m.mean_ns)
@@ -148,8 +163,7 @@ impl BenchReport {
         if m.units_per_iter > 0.0 {
             obj = obj.field("rate_per_sec", m.rate());
         }
-        self.metrics.push((m.name.clone(), obj));
-        self
+        self.metric(&m.name, obj)
     }
 
     /// Record a gate verdict. Call with the boolean *before* asserting it
@@ -194,9 +208,15 @@ impl BenchReport {
     /// (bench drivers want loud breakage, not silent missing artifacts).
     pub fn write(&self) {
         let path = self.path();
-        std::fs::write(&path, self.to_json().to_string_pretty() + "\n")
-            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        self.write_to(&path);
         println!("\nwrote {}", path.display());
+    }
+
+    /// Write the artifact to an explicit path, silently — the variant
+    /// `drim bench --json` uses so stdout stays pure JSON.
+    pub fn write_to(&self, path: &std::path::Path) {
+        std::fs::write(path, self.to_json().to_string_pretty() + "\n")
+            .unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
     }
 }
 
@@ -216,5 +236,44 @@ mod tests {
         });
         assert!(m.mean_ns > 0.0);
         assert!(m.rate() > 0.0);
+    }
+
+    #[test]
+    fn report_round_trips_through_json_parser() {
+        let mut r = BenchReport::new("roundtrip");
+        r.config("devices", 4u64)
+            .config("label", "abc")
+            .metric("throughput", 1.5f64)
+            .metric("waves", 7u64)
+            .gate("fast_enough", true)
+            .gate("no_regression", false);
+        let text = r.to_json().to_string_compact();
+        let parsed = Json::parse(&text).expect("artifact must re-parse");
+        assert_eq!(parsed.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("roundtrip"));
+        let cfg = parsed.get("config").expect("config object");
+        assert_eq!(cfg.get("devices").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(cfg.get("label").and_then(Json::as_str), Some("abc"));
+        let met = parsed.get("metrics").expect("metrics object");
+        assert_eq!(met.get("throughput").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(met.get("waves").and_then(Json::as_f64), Some(7.0));
+        let gates = parsed.get("gates").expect("gates object");
+        assert_eq!(gates.get("fast_enough"), Some(&Json::Bool(true)));
+        assert_eq!(gates.get("no_regression"), Some(&Json::Bool(false)));
+        assert_eq!(parsed.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric key `throughput`")]
+    fn duplicate_metric_key_panics() {
+        let mut r = BenchReport::new("dup");
+        r.metric("throughput", 1.0f64).metric("throughput", 2.0f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate config key `devices`")]
+    fn duplicate_config_key_panics() {
+        let mut r = BenchReport::new("dup");
+        r.config("devices", 1u64).config("devices", 2u64);
     }
 }

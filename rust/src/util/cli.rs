@@ -8,6 +8,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in argv order; `flags` keeps the
+    /// last occurrence for `get()`, this keeps them all for `get_all()`
+    /// (repeatable flags like `bench --param k=v --param k2=v2`).
+    occurrences: Vec<(String, String)>,
 }
 
 impl Args {
@@ -17,7 +21,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.flag(k, v.to_string());
                 } else {
                     // --key value (if next token isn't another flag), else boolean
                     let is_val = it
@@ -25,9 +29,10 @@ impl Args {
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false);
                     if is_val {
-                        out.flags.insert(stripped.to_string(), it.next().unwrap());
+                        let v = it.next().unwrap();
+                        out.flag(stripped, v);
                     } else {
-                        out.flags.insert(stripped.to_string(), "true".to_string());
+                        out.flag(stripped, "true".to_string());
                     }
                 }
             } else {
@@ -35,6 +40,11 @@ impl Args {
             }
         }
         out
+    }
+
+    fn flag(&mut self, key: &str, value: String) {
+        self.flags.insert(key.to_string(), value.clone());
+        self.occurrences.push((key.to_string(), value));
     }
 
     pub fn from_env() -> Self {
@@ -51,6 +61,16 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
+    }
+
+    /// All values given for a repeatable flag, in argv order
+    /// (`--param a=1 --param b=2` → `["a=1", "b=2"]`).
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn usize(&self, key: &str, default: usize) -> usize {
@@ -105,5 +125,13 @@ mod tests {
     fn boolean_flag_at_end() {
         let a = parse(&["--verbose"]);
         assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence() {
+        let a = parse(&["--param", "a=1", "--param=b=2", "--param", "a=3"]);
+        assert_eq!(a.get("param"), Some("a=3")); // last wins for get()
+        assert_eq!(a.get_all("param"), vec!["a=1", "b=2", "a=3"]);
+        assert!(a.get_all("missing").is_empty());
     }
 }

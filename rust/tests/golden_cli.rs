@@ -189,6 +189,157 @@ fn cluster_capacity_table_shape_is_pinned() {
     }
 }
 
+/// Spawn the CLI expecting failure; return (exit code, stderr).
+fn run_fail(args: &[&str]) -> (Option<i32>, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_drim"))
+        .args(args)
+        .output()
+        .expect("spawn drim");
+    assert!(
+        !out.status.success(),
+        "drim {args:?} unexpectedly succeeded:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// Drop a scenario body into the temp dir and return its path.
+fn write_scenario(name: &str, body: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("drim_golden_{name}.toml"));
+    std::fs::write(&p, body).expect("write scenario file");
+    p
+}
+
+/// The scenario loader's diagnostics are part of the CLI contract: a bad
+/// key, a non-positive rate, and a dangling mix reference each produce a
+/// line-anchored, path-anchored message on stderr and exit code 2.
+#[test]
+fn bench_scenario_errors_are_pinned() {
+    const TENANT: &str = "[[tenants]]\nname = \"t\"\nop = \"xnor2\"\nbits = 1_024\n";
+    let badkey = format!("name = \"x\"\nbogus = 1\n\n{TENANT}");
+    let badrate =
+        format!("name = \"x\"\n\n[arrival]\nprocess = \"poisson\"\nrate = -2.0\n\n{TENANT}");
+    let badmix = format!("name = \"x\"\n\n{TENANT}\n[[cases]]\nname = \"c\"\nmix = \"nope\"\n");
+    let cases: [(&str, &str, &str); 3] = [
+        ("badkey", &badkey, "bogus: unknown key `bogus`"),
+        (
+            "badrate",
+            &badrate,
+            "arrival.rate: must be a positive number",
+        ),
+        (
+            "badmix",
+            &badmix,
+            "unknown tenant mix `nope` (no such [[mixes]] entry)",
+        ),
+    ];
+    for (tag, body, want) in cases {
+        let path = write_scenario(tag, body);
+        let (code, stderr) = run_fail(&["bench", "--scenario", path.to_str().unwrap()]);
+        assert_eq!(code, Some(2), "`{tag}` must exit 2:\n{stderr}");
+        assert!(
+            stderr.contains(want),
+            "`{tag}` diagnostic drifted (want `{want}`):\n{stderr}"
+        );
+        assert!(
+            stderr.contains("line "),
+            "`{tag}` diagnostic lost its line anchor:\n{stderr}"
+        );
+        assert!(
+            stderr.contains(path.to_str().unwrap()),
+            "`{tag}` diagnostic lost the file path:\n{stderr}"
+        );
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+#[test]
+fn bench_scenario_json_schema_is_pinned() {
+    let path = write_scenario(
+        "probe",
+        r#"
+name = "golden_probe"
+description = "golden schema probe"
+seed = 1
+
+[fleet]
+devices = 1
+workers = 2
+
+[arrival]
+requests = 8
+
+[[tenants]]
+name = "a"
+op = "xnor2"
+bits = 2_048
+
+[[tenants]]
+name = "b"
+weight = 3.0
+op = "not"
+bits = 2_048
+
+[[gates]]
+name = "all_done"
+left = "default.completed"
+op = "eq"
+right = 8
+"#,
+    );
+    let args = ["bench", "--scenario", path.to_str().unwrap(), "--json"];
+    let out = run(&args);
+    let doc = Json::parse(&out).expect("bench --json must emit valid JSON");
+    assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("golden_probe"));
+    for key in ["scenario", "seed", "cases"] {
+        assert!(
+            doc.get("config").and_then(|c| c.get(key)).is_some(),
+            "config key `{key}` missing:\n{out}"
+        );
+    }
+    let metrics = doc.get("metrics").expect("metrics object");
+    // fleet counters and per-tenant fairness, case-qualified
+    for key in [
+        "default.offered",
+        "default.completed",
+        "default.shed",
+        "default.waves",
+        "default.sim_makespan_ns",
+        "default.stream_digest",
+        "default.results_digest",
+        "default.tenant.a.completed",
+        "default.tenant.a.mean_sojourn_ns",
+        "default.tenant.b.sojourn_inflation",
+    ] {
+        assert!(
+            metrics.get(key).is_some(),
+            "metric key `{key}` missing:\n{out}"
+        );
+    }
+    assert_eq!(
+        metrics.get("default.completed").and_then(Json::as_f64),
+        Some(8.0),
+        "probe workload must complete all 8 requests:\n{out}"
+    );
+    assert_eq!(
+        doc.get("gates").and_then(|g| g.get("all_done")),
+        Some(&Json::Bool(true)),
+        "gate verdict missing or failed:\n{out}"
+    );
+    assert_eq!(doc.get("ok"), Some(&Json::Bool(true)));
+    // same seed, same scenario → byte-identical artifact JSON
+    assert_eq!(run(&args), out, "bench --json not deterministic");
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_golden_probe.json"
+    ));
+}
+
 /// Assert `obj` is a latency-distribution summary: the stable key set
 /// every exporter emits for a histogram.
 fn assert_latency_summary(obj: &Json, ctx: &str) {

@@ -1,0 +1,115 @@
+//! Integration: the scenario harness end to end — a two-tenant fleet
+//! where the heavy tenant offers 10x the light tenant's volume at 4x the
+//! operand size, under open-loop Poisson arrivals with a diurnal second
+//! half. The heavy tenant runs under an inflight quota; the executor must
+//! shed its overload while the light tenant completes everything with
+//! bounded virtual-clock sojourn inflation — and the whole run must be
+//! byte-deterministic.
+
+use drim::scenario::{run_scenario, ScenarioSpec};
+
+const TWO_TENANT: &str = r#"
+name = "it_two_tenant"
+description = "light tenant vs 10x heavy tenant under quota shedding"
+seed = 0x17_FA12
+
+[fleet]
+devices = 2
+workers = 2
+
+[arrival]
+requests = 88
+process = "poisson"
+rate = 1_000_000.0
+window = 16
+
+[[arrival.phases]]
+frac = 0.5
+rate_scale = 1.0
+
+[[arrival.phases]]
+frac = 0.5
+rate_scale = 2.0
+
+[[tenants]]
+name = "light"
+weight = 1.0
+op = "xnor2"
+bits = 65_536
+
+[[tenants]]
+name = "heavy"
+weight = 10.0
+op = "xnor2"
+bits = 262_144
+max_inflight = 8
+"#;
+
+#[test]
+fn two_tenant_quota_protects_the_light_tenant() {
+    let spec = ScenarioSpec::parse_str(TWO_TENANT).expect("scenario parses");
+    let outcome = run_scenario(&spec);
+    assert_eq!(outcome.cases.len(), 1, "implicit default case");
+    let case = &outcome.cases[0];
+
+    let tenant = |name: &str| {
+        case.snapshot
+            .fairness
+            .iter()
+            .find(|b| b.tenant == name)
+            .unwrap_or_else(|| panic!("no `{name}` fairness entry"))
+    };
+    let light = tenant("light");
+    let heavy = tenant("heavy");
+
+    // largest-remainder apportionment of 88 requests at weights 1:10
+    assert_eq!(light.offered, 8, "light share of the stream");
+    assert_eq!(heavy.offered, 80, "heavy share of the stream");
+    assert_eq!(light.offered + heavy.offered, 88);
+
+    // the quota bites only the tenant that owns it
+    assert_eq!(light.shed, 0, "light tenant has no quota and never sheds");
+    assert!(
+        heavy.shed > 0,
+        "heavy tenant must shed against its inflight quota of 8"
+    );
+    assert_eq!(light.completed, 8, "every light request is served");
+    assert_eq!(
+        heavy.admitted, heavy.completed,
+        "admitted heavy requests are never lost"
+    );
+
+    // bounded interference: the light tenant queues behind at most the
+    // quota-bounded heavy backlog, so its mean sojourn stays within two
+    // orders of magnitude of its own service time
+    assert!(
+        light.sojourn_inflation >= 1.0,
+        "inflation below 1.0 is unphysical: {}",
+        light.sojourn_inflation
+    );
+    assert!(
+        light.sojourn_inflation < 100.0,
+        "light tenant starved: inflation {}",
+        light.sojourn_inflation
+    );
+    assert!(
+        light.max_sojourn_ns >= light.mean_sojourn_ns,
+        "max sojourn below the mean"
+    );
+}
+
+#[test]
+fn two_tenant_run_is_byte_deterministic() {
+    let spec = ScenarioSpec::parse_str(TWO_TENANT).expect("scenario parses");
+    let a = run_scenario(&spec);
+    let b = run_scenario(&spec);
+    for (ca, cb) in a.cases.iter().zip(&b.cases) {
+        assert_eq!(
+            ca.snapshot.to_deterministic_json().to_string_compact(),
+            cb.snapshot.to_deterministic_json().to_string_compact(),
+            "case `{}` diverged between identical runs",
+            ca.name
+        );
+        assert_eq!(ca.metrics, cb.metrics, "case `{}` metrics diverged", ca.name);
+    }
+}

@@ -581,6 +581,91 @@ fn prop_tracer_ring_overflow_keeps_newest_events_intact() {
     });
 }
 
+/// Scenario harness determinism: for random specs inside the
+/// deterministic envelope (no stealing, strict-or-off coalescing), the
+/// arrival stream is a pure function of the spec — two generations agree
+/// event-for-event and digest-for-digest, the offered wave-unit load
+/// matches the declared load exactly, and two full executions of the
+/// same case produce byte-identical deterministic fleet snapshots.
+#[test]
+fn prop_scenario_stream_and_execution_deterministic() {
+    use drim::scenario::{
+        generate, offered_wave_units, run_case, stream_digest, ScenarioSpec,
+    };
+    prop::check("scenario_deterministic", 6, |rng| {
+        let seed = rng.next_u64();
+        let devices = 1 + rng.below(3);
+        let requests = 8 + rng.below(32);
+        let process = match rng.below(3) {
+            0 => "process = \"sequential\"".to_string(),
+            1 => "process = \"poisson\"\nrate = 1_000_000.0".to_string(),
+            _ => "process = \"burst\"\nburst_size = 4\nburst_gap_ns = 500".to_string(),
+        };
+        let coalesce = if rng.bool() { "strict" } else { "off" };
+        let src = format!(
+            r#"
+name = "prop_case"
+seed = {seed}
+
+[fleet]
+devices = {devices}
+workers = 2
+
+[arrival]
+requests = {requests}
+{process}
+
+[runtime]
+coalesce = "{coalesce}"
+
+[[tenants]]
+name = "carried"
+op = "xnor2"
+bits = 4_096
+
+[[tenants]]
+name = "resident"
+weight = 2.0
+op = "not"
+bits = 4_096
+placement = "resident"
+regions = 6
+zipf_theta = 1.2
+"#
+        );
+        let spec = ScenarioSpec::parse_str(&src).map_err(|e| format!("parse: {e}"))?;
+        let cases = spec.resolved_cases();
+        let case = &cases[0];
+        let a = generate(case);
+        let b = generate(case);
+        if a != b {
+            return Err("two generations of the same case differ".into());
+        }
+        if stream_digest(&a) != stream_digest(&b) {
+            return Err("stream digests differ".into());
+        }
+        let offered = offered_wave_units(case, &a);
+        if offered != case.declared_wave_units() {
+            return Err(format!(
+                "offered {offered} wave units != declared {}",
+                case.declared_wave_units()
+            ));
+        }
+        let run1 = run_case(case)
+            .snapshot
+            .to_deterministic_json()
+            .to_string_compact();
+        let run2 = run_case(case)
+            .snapshot
+            .to_deterministic_json()
+            .to_string_compact();
+        if run1 != run2 {
+            return Err("identical runs produced different deterministic snapshots".into());
+        }
+        Ok(())
+    });
+}
+
 /// DRA destructiveness: after any DRA, the two source cells and the
 /// destination agree (the array's own write-back invariant).
 #[test]
