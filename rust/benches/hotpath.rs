@@ -1,21 +1,113 @@
 //! L3 hot-path micro-benchmarks: the simulator code the whole Fig. 8 sweep
 //! and the serving loop sit on. Used by the §Perf pass (EXPERIMENTS.md).
 //!
-//! Units: "ops" are bit-operations (bit-lines processed).
+//! Units: "ops" are bit-operations (bit-lines processed), except the fleet
+//! scaling section where units are requests.
+//!
+//! Writes `BENCH_hotpath.json` at the repo root. The fleet section is the
+//! gate for the sharded-residency / zero-alloc submission work: routed
+//! resident submission under weak scaling (fixed requests *per device*,
+//! one submitter thread per device) must reach ≥ 2× the single-device
+//! admission throughput at 8 devices — a fleet whose submit→route→
+//! coalesce path serializes on one registry lock fails this.
 
+use drim::cluster::{
+    ClusterConfig, ClusterRequest, DeviceId, DrimCluster, RegionId,
+};
 use drim::controller::Controller;
 use drim::coordinator::{BulkRequest, DrimService, Payload, ServiceConfig};
 use drim::dram::command::{AapKind, RowId::*};
 use drim::dram::geometry::DramGeometry;
 use drim::isa::program::BulkOp;
 use drim::subarray::SubArray;
-use drim::util::bench::{section, Bencher};
+use drim::util::bench::{section, BenchReport, Bencher};
 use drim::util::bitrow::BitRow;
 use drim::util::rng::Rng;
 
+/// Routed requests per device in the scaling section (weak scaling: total
+/// load grows with the fleet, per-device load is constant).
+const SCALE_REQ_PER_DEVICE: usize = 64;
+/// Resident ranks per device; each rank is one XNOR2 operand pair.
+const SCALE_REGIONS_PER_DEVICE: usize = 4;
+/// Operand size: small enough that the submission pipeline (admission,
+/// routing, residency resolve, coalescer staging) is a visible share of
+/// the request, not drowned by functional simulation.
+const SCALE_BITS: usize = 4096;
+const SEED: u64 = 0xBE6C;
+
+/// Scaling-section device: small geometry, one service worker — device-
+/// internal parallelism is not what this section measures.
+fn scale_service() -> ServiceConfig {
+    ServiceConfig {
+        geometry: DramGeometry {
+            banks: 4,
+            subarrays_per_bank: 8,
+            cols: 1024,
+            active_subarrays: 4,
+        },
+        workers: 1,
+        ..ServiceConfig::default()
+    }
+}
+
+/// One weak-scaling run: fresh fleet of `devices`, resident rank pool
+/// registered round-robin, one submitter thread per device driving
+/// blocking routed submits over the shared registry, then drain.
+fn pump_routed(devices: usize, requests: usize) {
+    let cluster = DrimCluster::new(ClusterConfig {
+        steal: false,
+        ..ClusterConfig::uniform(devices, scale_service())
+    });
+    let mut rng = Rng::new(SEED);
+    let ranks: Vec<Vec<RegionId>> = (0..devices * SCALE_REGIONS_PER_DEVICE)
+        .map(|r| {
+            let owner = DeviceId(r % devices);
+            (0..2)
+                .map(|_| {
+                    cluster.register_resident(
+                        owner,
+                        Payload::Bits(BitRow::random(SCALE_BITS, &mut rng)),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    let per_thread = requests / devices;
+    std::thread::scope(|s| {
+        for t in 0..devices {
+            let cluster = &cluster;
+            let ranks = &ranks;
+            s.spawn(move || {
+                let mut pending = Vec::with_capacity(per_thread);
+                for i in 0..per_thread {
+                    // stride by the fleet size so every submitter sweeps
+                    // the whole rank pool (all registry shards, all homes)
+                    let ids = &ranks[(t + i * devices) % ranks.len()];
+                    let req = ClusterRequest::resident(BulkOp::Xnor2, ids.clone());
+                    pending.push(
+                        cluster
+                            .submit_routed_blocking(req)
+                            .expect("resident ranks always resolve"),
+                    );
+                }
+                for p in pending {
+                    p.recv().expect("cluster response");
+                }
+            });
+        }
+    });
+    cluster.shutdown();
+}
+
 fn main() {
     let b = Bencher::default();
-    let mut rng = Rng::new(0xBE6C);
+    let mut rng = Rng::new(SEED);
+    let mut report = BenchReport::new("hotpath");
+    report
+        .config("scale_req_per_device", SCALE_REQ_PER_DEVICE)
+        .config("scale_regions_per_device", SCALE_REGIONS_PER_DEVICE)
+        .config("scale_bits", SCALE_BITS)
+        .config("seed", SEED);
 
     section("sub-array primitive (8 Kb row)");
     let cols = 8192;
@@ -23,58 +115,98 @@ fn main() {
     sa.write_row(X(1), &BitRow::random(cols, &mut rng));
     sa.write_row(X(2), &BitRow::random(cols, &mut rng));
     sa.write_row(X(3), &BitRow::random(cols, &mut rng));
-    b.run("dra_aap (XNOR, 8192 bits)", cols as f64, || {
+    let m = b.run("dra_aap_xnor_8192", cols as f64, || {
         sa.execute_aap(AapKind::Dra, &[X(1), X(2)], &[Data(0)])
     });
-    b.run("tra_aap (MAJ3, 8192 bits)", cols as f64, || {
+    report.measurement(&m);
+    let m = b.run("tra_aap_maj3_8192", cols as f64, || {
         sa.execute_aap(AapKind::Tra, &[X(1), X(2), X(3)], &[Data(1)])
     });
-    b.run("copy_aap (8192 bits)", cols as f64, || {
+    report.measurement(&m);
+    let m = b.run("copy_aap_8192", cols as f64, || {
         sa.execute_aap(AapKind::Copy, &[Data(1)], &[X(4)])
     });
+    report.measurement(&m);
 
     section("controller sequences (8 Kb row)");
     let mut c = Controller::new(DramGeometry::default());
     c.write_row(0, 0, Data(0), &BitRow::random(cols, &mut rng));
     c.write_row(0, 0, Data(1), &BitRow::random(cols, &mut rng));
-    b.run("xnor2 program (3 AAPs)", cols as f64, || {
+    let m = b.run("xnor2_program_3aap", cols as f64, || {
         c.exec_op(BulkOp::Xnor2, 0, 0, &[Data(0), Data(1)], Data(2))
     });
+    report.measurement(&m);
     let ar: Vec<_> = (0..32).map(|i| Data(10 + i as u16)).collect();
     let br: Vec<_> = (0..32).map(|i| Data(50 + i as u16)).collect();
     let sr: Vec<_> = (0..32).map(|i| Data(100 + i as u16)).collect();
     for r in ar.iter().chain(&br) {
         c.write_row(0, 0, *r, &BitRow::random(cols, &mut rng));
     }
-    b.run("add_planes 32-bit (224 AAPs)", (cols * 32) as f64, || {
+    let m = b.run("add_planes_32bit_224aap", (cols * 32) as f64, || {
         c.add_planes(0, 0, &ar, &br, &sr, Data(200))
     });
+    report.measurement(&m);
 
     section("service end-to-end (functional sim, wall time)");
     let service = DrimService::new(ServiceConfig::default());
     for bits in [1 << 16, 1 << 20, 1 << 23] {
         let a = BitRow::random(bits, &mut rng);
         let bb = BitRow::random(bits, &mut rng);
-        b.run(
-            &format!("service xnor2 {} bits", bits),
-            bits as f64,
-            || {
-                let resp = service.run(BulkRequest::bitwise(
-                    BulkOp::Xnor2,
-                    vec![a.clone(), bb.clone()],
-                ));
-                assert!(matches!(resp.result, Payload::Bits(_)));
-            },
-        );
+        let m = b.run(&format!("service_xnor2_{bits}_bits"), bits as f64, || {
+            let resp = service.run(BulkRequest::bitwise(
+                BulkOp::Xnor2,
+                vec![a.clone(), bb.clone()],
+            ));
+            assert!(matches!(resp.result, Payload::Bits(_)));
+        });
+        report.measurement(&m);
     }
 
+    section("fleet routed-submit scaling (weak scaling, resident operands)");
+    println!(
+        "{SCALE_REQ_PER_DEVICE} requests/device × {SCALE_BITS} bits, \
+         one submitter thread per device, steal off\n"
+    );
+    let scale_b = Bencher {
+        warmup_iters: 1,
+        iters: 5,
+    };
+    let mut base_rate = 0.0f64;
+    let mut top_rate = 0.0f64;
+    for devices in [1usize, 2, 4, 8] {
+        let requests = SCALE_REQ_PER_DEVICE * devices;
+        let m = scale_b.run(
+            &format!("routed_submit_{devices}dev"),
+            requests as f64,
+            || pump_routed(devices, requests),
+        );
+        if devices == 1 {
+            base_rate = m.rate();
+        }
+        top_rate = m.rate();
+        report.measurement(&m);
+    }
+    let scaling = top_rate / base_rate.max(f64::MIN_POSITIVE);
+    report.metric("routed_submit_scaling_8dev_over_1dev", scaling);
+    println!("\nrouted-submit scaling at 8 devices: {scaling:.2}x over 1 device");
+    let pass = scaling >= 2.0;
+    report.gate("routed_submit_scaling_ge_2x_at_8_devices", pass);
+
     section("analog engines");
-    b.run("montecarlo 10k trials ±20%", 120_000.0, || {
+    let m = b.run("montecarlo_10k_pm20", 120_000.0, || {
         drim::analog::montecarlo::run_montecarlo(0.2, 10_000, 3)
     });
-    b.run("transient 4 cases × 1200 steps", 4.0 * 1200.0, || {
+    report.measurement(&m);
+    let m = b.run("transient_4x1200", 4.0 * 1200.0, || {
         drim::analog::transient::all_cases()
     });
+    report.measurement(&m);
 
+    report.write();
+    assert!(
+        pass,
+        "routed-submit admission throughput scaled only {scaling:.2}x at 8 \
+         devices (gate: >= 2x) — the submission hot path is serializing"
+    );
     println!("\nhotpath bench OK");
 }

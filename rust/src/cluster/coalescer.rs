@@ -187,6 +187,23 @@ impl Coalescer {
         chunks: usize,
         flush_home: bool,
     ) -> Vec<ClusterTask> {
+        let mut due = Vec::new();
+        self.push_into(home, item, chunks, flush_home, &mut due);
+        due
+    }
+
+    /// [`Self::push`] appending the due groups to a caller-owned scratch
+    /// vector instead of allocating one — the submission hot path reuses
+    /// the same scratch across pushes, so a steady-state push allocates
+    /// nothing of its own. The scratch is appended to, never cleared.
+    pub fn push_into(
+        &self,
+        home: DeviceId,
+        item: TaskItem,
+        chunks: usize,
+        flush_home: bool,
+        due: &mut Vec<ClusterTask>,
+    ) {
         let slots = self.slots[home.0];
         let co_resident = match &item.placement {
             Some(p) => p.co_resident_on(home),
@@ -196,7 +213,6 @@ impl Coalescer {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let now = inner.tick;
-        let mut due = Vec::new();
         if !eligible {
             due.push(ClusterTask::single(home, item));
         } else {
@@ -215,7 +231,7 @@ impl Coalescer {
             }
         }
         if flush_home {
-            Self::flush_device_locked(&mut inner, home, &mut due);
+            Self::flush_device_locked(&mut inner, home, due);
         }
         // hold horizon: no bucket may hold an item older than the bound
         let horizon = self.cfg.max_hold_submissions;
@@ -224,7 +240,6 @@ impl Coalescer {
                 due.push(Self::seal(DeviceId(dev), bucket));
             }
         }
-        due
     }
 
     /// Flush every bucket staged for `device` (the worker's idle leg).

@@ -275,6 +275,11 @@ pub struct TenantBreakdown {
     pub completed: u64,
     /// requests requeued after an eviction (degrade path)
     pub requeues: u64,
+    /// requests that completed via the degrade-to-carried fallback after
+    /// their resident region was evicted mid-stream (a subset of
+    /// `completed`; conservation: `offered == admitted + shed` and
+    /// `admitted == completed` with `degraded <= completed`)
+    pub degraded: u64,
     /// mean simulated service time per completed request (coalesced
     /// groups charge each member its share)
     pub mean_service_ns: f64,
@@ -297,6 +302,7 @@ impl TenantBreakdown {
             .field("shed", self.shed)
             .field("completed", self.completed)
             .field("requeues", self.requeues)
+            .field("degraded", self.degraded)
             .field("mean_service_ns", self.mean_service_ns)
             .field("mean_sojourn_ns", self.mean_sojourn_ns)
             .field("max_sojourn_ns", self.max_sojourn_ns)

@@ -77,6 +77,7 @@ pub use worker::{ClusterResponse, ClusterTask, TaskItem};
 
 pub use crate::dram::geometry::DeviceCapacity;
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
@@ -401,9 +402,22 @@ impl DrimCluster {
             let chunks = item.req.wave_units(cols);
             self.tracer.instant(lane, Stage::Coalesce, seq, chunks as u64);
             let flush_home = self.admission.is_saturated(home);
-            for task in self.coalescer.push(home, item, chunks, flush_home) {
-                self.sched.submit(task.home.0, task);
+            // Submission runs on the caller's thread, so the dispatch
+            // scratch is thread-local: a steady-state submitter reuses
+            // one buffer's capacity instead of allocating a Vec per
+            // request for the (usually empty) due-task list.
+            thread_local! {
+                static DUE: RefCell<Vec<ClusterTask>> =
+                    const { RefCell::new(Vec::new()) };
             }
+            DUE.with(|due| {
+                let mut due = due.borrow_mut();
+                self.coalescer
+                    .push_into(home, item, chunks, flush_home, &mut due);
+                for task in due.drain(..) {
+                    self.sched.submit(task.home.0, task);
+                }
+            });
             // Eager queue-depth trigger, checked AFTER the item is staged:
             // checking before the push races the worker's drain-dry flush
             // (the worker could drain, flush an empty coalescer, and park

@@ -53,7 +53,7 @@
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::obs::trace::{Stage, Tracer};
 
@@ -348,14 +348,27 @@ struct Region {
     /// devices holding a replica; never empty, `homes[0]` is the primary
     homes: Vec<DeviceId>,
     payload: Payload,
-    /// logical clock value at the last routed use (or registration)
-    last_hit: u64,
+    /// logical clock value at the last routed use (or registration);
+    /// atomic so the routed-hit path bumps it under a shard *read* lock
+    last_hit: AtomicU64,
     /// routed uses since registration
-    hits: u64,
+    hits: AtomicU64,
     /// resolved requests referencing this region that are still queued or
     /// executing (admission-aware eviction refuses such victims; the
     /// executing worker releases the pin on completion)
-    queued: u64,
+    queued: AtomicU64,
+}
+
+impl Region {
+    fn new(homes: Vec<DeviceId>, payload: Payload, now: u64) -> Self {
+        Region {
+            homes,
+            payload,
+            last_hit: AtomicU64::new(now),
+            hits: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Tombstones kept in the registry before a self-compaction sweep runs.
@@ -364,17 +377,24 @@ struct Region {
 /// calls reclaim earlier).
 const TOMBSTONE_COMPACT_THRESHOLD: usize = 256;
 
+/// Number of independently locked shards the region map is split across.
+/// Power of two so [`shard_of`] is a mask. Sixteen comfortably exceeds
+/// the worker counts the fleet spawns, so concurrent writers touching
+/// different regions almost never contend on the same lock.
+const RESIDENCY_SHARDS: usize = 16;
+
+/// Which shard holds region `id`. Ids are dense (a single atomic
+/// counter), so consecutive registrations round-robin across shards.
+fn shard_of(id: u64) -> usize {
+    (id as usize) & (RESIDENCY_SHARDS - 1)
+}
+
+/// One shard of the region map. Everything a mutator needs for a single
+/// region lives in the owning shard; per-region hit bookkeeping is atomic
+/// so the hot read paths never upgrade to a write lock.
 #[derive(Default)]
-struct Inner {
+struct Shard {
     regions: HashMap<u64, Region>,
-    /// resident bits per device (index = `DeviceId`); maintained in
-    /// lock-step with `regions` so capacity checks never rescan the map
-    footprint: Vec<u64>,
-    /// ids evicted by the capacity policy (never reused), so a racing
-    /// lookup gets the defined `Evicted` error instead of `UnknownRegion`.
-    /// The value records acknowledgement: `true` once some lookup has
-    /// observed the tombstone, making it safe to compact away.
-    evicted: HashMap<u64, bool>,
 }
 
 /// Registry mapping operand regions to the devices holding their replicas,
@@ -385,12 +405,41 @@ struct Inner {
 /// wherever it lands; on real hardware the payload would be the row range
 /// and only the coordinates would live here.
 ///
-/// All bookkeeping (footprint counters, eviction, tombstones) happens
-/// under one write lock, so "footprint ≤ capacity on every device" holds
-/// at every instant, not just between operations — the concurrency stress
-/// suite polls it mid-flight.
+/// # Locking discipline (sharded)
+///
+/// The region map is split across [`RESIDENCY_SHARDS`] independently
+/// locked shards keyed by [`shard_of`]. Per-region hit bookkeeping
+/// (`last_hit`, `hits`, `queued`) is atomic, so the routed-hit path —
+/// [`Self::resolve`], [`Self::placement_of`], [`Self::release_queued`] —
+/// takes only shard *read* locks: concurrent hits never serialize on a
+/// writer, and hits on different shards share nothing at all. Per-device
+/// footprints are atomics reserved by compare-and-swap, so "footprint ≤
+/// capacity on every device" still holds at every instant, not just
+/// between operations — the concurrency stress suite polls it mid-flight.
+///
+/// Writers come in two tiers. Fast paths (registration with room to
+/// spare, replication, migration onto free space, explicit eviction,
+/// removal) lock exactly one shard. Slow paths that must survey the whole
+/// fleet to pick eviction victims (registration/migration into a full
+/// device) take every shard's write lock in ascending index order. The
+/// lock order is shards (ascending) → footprint → tombstones; fast paths
+/// hold at most one shard lock and never acquire a second, so the tiers
+/// cannot deadlock. Every footprint mutation happens while at least one
+/// shard write lock is held, which is what makes the all-shards read view
+/// of [`Self::check_invariants`] a consistent snapshot.
 pub struct ResidencyRegistry {
-    inner: RwLock<Inner>,
+    /// the region map, sharded by [`shard_of`]
+    shards: Vec<RwLock<Shard>>,
+    /// resident bits per device (index = `DeviceId`), maintained in
+    /// lock-step with the shards so capacity checks never rescan a map;
+    /// the outer lock only guards growth for unbounded registries —
+    /// mutation is CAS on the atomics under a read lock
+    footprint: RwLock<Vec<AtomicU64>>,
+    /// ids evicted by the capacity policy (never reused), so a racing
+    /// lookup gets the defined `Evicted` error instead of `UnknownRegion`.
+    /// The value records acknowledgement: `true` once some lookup has
+    /// observed the tombstone, making it safe to compact away.
+    tombstones: Mutex<HashMap<u64, bool>>,
     next: AtomicU64,
     /// devices this registry may reference (`None` = standalone/unbounded)
     bound: Option<usize>,
@@ -411,7 +460,11 @@ pub struct ResidencyRegistry {
 impl Default for ResidencyRegistry {
     fn default() -> Self {
         ResidencyRegistry {
-            inner: RwLock::new(Inner::default()),
+            shards: (0..RESIDENCY_SHARDS)
+                .map(|_| RwLock::new(Shard::default()))
+                .collect(),
+            footprint: RwLock::new(Vec::new()),
+            tombstones: Mutex::new(HashMap::new()),
             next: AtomicU64::new(0),
             bound: None,
             capacity: DeviceCapacity::unbounded(),
@@ -440,10 +493,7 @@ impl ResidencyRegistry {
     pub fn for_fleet(devices: usize) -> Self {
         ResidencyRegistry {
             bound: Some(devices),
-            inner: RwLock::new(Inner {
-                footprint: vec![0; devices],
-                ..Inner::default()
-            }),
+            footprint: RwLock::new((0..devices).map(|_| AtomicU64::new(0)).collect()),
             ..ResidencyRegistry::default()
         }
     }
@@ -457,10 +507,7 @@ impl ResidencyRegistry {
             capacity: cfg.capacity,
             policy: cfg.policy,
             cost,
-            inner: RwLock::new(Inner {
-                footprint: vec![0; devices],
-                ..Inner::default()
-            }),
+            footprint: RwLock::new((0..devices).map(|_| AtomicU64::new(0)).collect()),
             ..ResidencyRegistry::default()
         }
     }
@@ -505,24 +552,29 @@ impl ResidencyRegistry {
     /// dropped. Unacknowledged tombstones always survive, so a racing
     /// lookup still gets the defined `Evicted` signal at least once.
     pub fn compact_tombstones(&self) -> usize {
-        let mut inner = self.inner.write().unwrap();
-        self.compact_tombstones_locked(&mut inner)
+        let mut tombs = self.tombstones.lock().unwrap();
+        self.compact_tombstones_locked(&mut tombs)
     }
 
-    /// Mark `id`'s tombstone as observed by the routing layer (needs the
-    /// write lock — read-path lookups drop their read lock and call this
-    /// before returning `Evicted`).
-    fn ack_tombstone(&self, id: u64) {
-        let mut inner = self.inner.write().unwrap();
-        if let Some(acked) = inner.evicted.get_mut(&id) {
-            *acked = true;
+    /// Mark `id`'s tombstone as observed by the routing layer. Returns
+    /// whether a tombstone existed — the lookup paths use this to pick
+    /// between `Evicted` (tombstoned) and `UnknownRegion` (never issued,
+    /// removed, or compacted away).
+    fn ack_tombstone(&self, id: u64) -> bool {
+        let mut tombs = self.tombstones.lock().unwrap();
+        match tombs.get_mut(&id) {
+            Some(acked) => {
+                *acked = true;
+                true
+            }
+            None => false,
         }
     }
 
-    fn compact_tombstones_locked(&self, inner: &mut Inner) -> usize {
-        let before = inner.evicted.len();
-        inner.evicted.retain(|_, acked| !*acked);
-        let dropped = before - inner.evicted.len();
+    fn compact_tombstones_locked(&self, tombs: &mut HashMap<u64, bool>) -> usize {
+        let before = tombs.len();
+        tombs.retain(|_, acked| !*acked);
+        let dropped = before - tombs.len();
         if dropped > 0 {
             self.tombstones_compacted
                 .fetch_add(dropped as u64, Ordering::Relaxed);
@@ -540,10 +592,55 @@ impl ResidencyRegistry {
         self.clock.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    fn grow(inner: &mut Inner, device: DeviceId) {
-        if inner.footprint.len() <= device.0 {
-            inner.footprint.resize(device.0 + 1, 0);
+    /// Ensure the footprint vector covers `device`. Fleet-bounded
+    /// registries are pre-sized; only unbounded (standalone) registries
+    /// ever grow, and growth is the sole writer of the outer lock.
+    fn grow(&self, device: DeviceId) {
+        if self.footprint.read().unwrap().len() > device.0 {
+            return;
         }
+        let mut fp = self.footprint.write().unwrap();
+        while fp.len() <= device.0 {
+            fp.push(AtomicU64::new(0));
+        }
+    }
+
+    /// Atomically reserve `bits` of residency on `device` iff they fit
+    /// under the capacity — a CAS loop, so the bound holds at every
+    /// instant without a global lock. Call only while holding a shard
+    /// write lock (see the locking discipline on the struct); `device`
+    /// must already be covered by [`Self::grow`].
+    fn try_reserve(&self, device: DeviceId, bits: u64) -> bool {
+        let cap = self.capacity.resident_bits;
+        let fp = self.footprint.read().unwrap();
+        fp[device.0]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |used| {
+                if bits <= cap.saturating_sub(used) {
+                    Some(used + bits)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Return `bits` of residency on `device`. Call only while holding a
+    /// shard write lock (same discipline as [`Self::try_reserve`]).
+    fn footprint_sub(&self, device: DeviceId, bits: u64) {
+        let fp = self.footprint.read().unwrap();
+        fp[device.0].fetch_sub(bits, Ordering::Relaxed);
+    }
+
+    /// Write-lock every shard in ascending index order — the slow paths'
+    /// whole-registry view. Deadlock-free against the fast paths, which
+    /// hold at most one shard lock and never acquire a second.
+    fn lock_all(&self) -> Vec<RwLockWriteGuard<'_, Shard>> {
+        self.shards.iter().map(|s| s.write().unwrap()).collect()
+    }
+
+    /// Read-lock every shard in ascending index order (invariant checks).
+    fn read_all(&self) -> Vec<RwLockReadGuard<'_, Shard>> {
+        self.shards.iter().map(|s| s.read().unwrap()).collect()
     }
 
     /// Pick the policy's eviction victim among regions resident on
@@ -558,33 +655,43 @@ impl ResidencyRegistry {
     /// than the scheduler's per-device queue depths: it pins exactly the
     /// regions the queued work references, not everything on a busy
     /// device.
-    fn pick_victim(&self, inner: &Inner, device: DeviceId, exclude: Option<u64>) -> Option<u64> {
+    fn pick_victim(
+        &self,
+        guards: &[RwLockWriteGuard<'_, Shard>],
+        device: DeviceId,
+        exclude: Option<u64>,
+    ) -> Option<u64> {
         let now = self.clock.load(Ordering::Relaxed);
-        inner
-            .regions
+        guards
             .iter()
+            .flat_map(|g| g.regions.iter())
             .filter(|(id, r)| {
-                if Some(**id) == exclude || !r.homes.contains(&device) || r.queued > 0 {
+                if Some(**id) == exclude
+                    || !r.homes.contains(&device)
+                    || r.queued.load(Ordering::Relaxed) > 0
+                {
                     return false;
                 }
                 match self.policy {
                     EvictionPolicy::FailFast => false,
                     EvictionPolicy::Lru => true,
                     EvictionPolicy::CostAware { rent_ns_per_tick } => {
-                        let idle = now.saturating_sub(r.last_hit) as f64;
+                        let idle =
+                            now.saturating_sub(r.last_hit.load(Ordering::Relaxed)) as f64;
                         let recopy = self.cost.host_to_device_ns(r.payload.bits() as u64);
                         recopy <= idle * rent_ns_per_tick
                     }
                 }
             })
-            .min_by_key(|(id, r)| (r.last_hit, **id))
+            .min_by_key(|(id, r)| (r.last_hit.load(Ordering::Relaxed), **id))
             .map(|(id, _)| *id)
     }
 
-    /// Drop `id`'s replica on `from`, tombstoning the region if that was
-    /// its last replica. Counts one eviction event.
-    fn evict_locked(&self, inner: &mut Inner, id: u64, from: DeviceId) {
-        let Some(r) = inner.regions.get_mut(&id) else {
+    /// Drop `id`'s replica on `from` within its write-locked shard,
+    /// tombstoning the region if that was its last replica. Counts one
+    /// eviction event.
+    fn evict_in(&self, shard: &mut Shard, id: u64, from: DeviceId) {
+        let Some(r) = shard.regions.get_mut(&id) else {
             return;
         };
         let Some(pos) = r.homes.iter().position(|&h| h == from) else {
@@ -593,12 +700,13 @@ impl ResidencyRegistry {
         r.homes.remove(pos);
         let bits = r.payload.bits() as u64;
         let emptied = r.homes.is_empty();
-        inner.footprint[from.0] -= bits;
+        self.footprint_sub(from, bits);
         if emptied {
-            inner.regions.remove(&id);
-            inner.evicted.insert(id, false);
-            if inner.evicted.len() > TOMBSTONE_COMPACT_THRESHOLD {
-                self.compact_tombstones_locked(inner);
+            shard.regions.remove(&id);
+            let mut tombs = self.tombstones.lock().unwrap();
+            tombs.insert(id, false);
+            if tombs.len() > TOMBSTONE_COMPACT_THRESHOLD {
+                self.compact_tombstones_locked(&mut tombs);
             }
         }
         self.evictions.fetch_add(1, Ordering::Relaxed);
@@ -607,11 +715,13 @@ impl ResidencyRegistry {
         }
     }
 
-    /// Ensure `bits` fit on `device`, evicting under the policy. The
+    /// Reserve `bits` on `device`, evicting under the policy until they
+    /// fit. Requires the whole-registry write view from
+    /// [`Self::lock_all`] — victim selection must see every shard. The
     /// region `exclude` (the one being placed) is never a victim.
-    fn make_room(
+    fn make_room_all(
         &self,
-        inner: &mut Inner,
+        guards: &mut [RwLockWriteGuard<'_, Shard>],
         device: DeviceId,
         bits: u64,
         exclude: Option<u64>,
@@ -626,12 +736,13 @@ impl ResidencyRegistry {
             });
         }
         loop {
-            let used = inner.footprint.get(device.0).copied().unwrap_or(0);
-            if bits <= cap.saturating_sub(used) {
+            if self.try_reserve(device, bits) {
                 return Ok(());
             }
-            match self.pick_victim(inner, device, exclude) {
-                Some(victim) => self.evict_locked(inner, victim, device),
+            match self.pick_victim(guards, device, exclude) {
+                Some(victim) => {
+                    self.evict_in(&mut guards[shard_of(victim)], victim, device)
+                }
                 None => {
                     self.capacity_refusals.fetch_add(1, Ordering::Relaxed);
                     return Err(CapacityError::DeviceFull {
@@ -648,6 +759,10 @@ impl ResidencyRegistry {
     /// policy if the device is full; returns its handle or the capacity
     /// refusal. Panics if `device` is outside a fleet-bounded registry's
     /// range.
+    ///
+    /// Fast path (room available): one shard write lock plus a CAS
+    /// footprint reservation. Only when the device is actually full does
+    /// registration escalate to the whole-registry view to run eviction.
     pub fn try_register(
         &self,
         device: DeviceId,
@@ -655,22 +770,25 @@ impl ResidencyRegistry {
     ) -> Result<RegionId, CapacityError> {
         self.check(device);
         let bits = payload.bits() as u64;
-        let mut inner = self.inner.write().unwrap();
-        Self::grow(&mut inner, device);
-        self.make_room(&mut inner, device, bits, None)?;
+        self.grow(device);
         let id = self.next.fetch_add(1, Ordering::Relaxed);
-        inner.footprint[device.0] += bits;
+        {
+            let mut shard = self.shards[shard_of(id)].write().unwrap();
+            if self.try_reserve(device, bits) {
+                let now = self.tick();
+                shard
+                    .regions
+                    .insert(id, Region::new(vec![device], payload, now));
+                return Ok(RegionId(id));
+            }
+        }
+        // slow path: the device is full — survey every shard for victims
+        let mut guards = self.lock_all();
+        self.make_room_all(&mut guards, device, bits, None)?;
         let now = self.tick();
-        inner.regions.insert(
-            id,
-            Region {
-                homes: vec![device],
-                payload,
-                last_hit: now,
-                hits: 0,
-                queued: 0,
-            },
-        );
+        guards[shard_of(id)]
+            .regions
+            .insert(id, Region::new(vec![device], payload, now));
         Ok(RegionId(id))
     }
 
@@ -683,7 +801,7 @@ impl ResidencyRegistry {
 
     /// Primary owner of a region (its first replica), if registered.
     pub fn owner(&self, region: RegionId) -> Option<DeviceId> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
@@ -693,7 +811,7 @@ impl ResidencyRegistry {
 
     /// Every device holding a replica of `region`, if registered.
     pub fn replicas(&self, region: RegionId) -> Option<Vec<DeviceId>> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
@@ -703,7 +821,7 @@ impl ResidencyRegistry {
 
     /// Payload size of a region in bits, if registered.
     pub fn bits(&self, region: RegionId) -> Option<usize> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
@@ -714,41 +832,49 @@ impl ResidencyRegistry {
     /// Routed uses and last-use clock of a region (LRU inputs), if
     /// registered.
     pub fn hit_stats(&self, region: RegionId) -> Option<(u64, u64)> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
             .get(&region.0)
-            .map(|r| (r.hits, r.last_hit))
+            .map(|r| {
+                (
+                    r.hits.load(Ordering::Relaxed),
+                    r.last_hit.load(Ordering::Relaxed),
+                )
+            })
     }
 
     /// Resolved-but-not-yet-executed requests referencing `region` (the
     /// admission-aware eviction pin), if registered.
     pub fn queued_requests(&self, region: RegionId) -> Option<u64> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
             .get(&region.0)
-            .map(|r| r.queued)
+            .map(|r| r.queued.load(Ordering::Relaxed))
     }
 
     /// Release the queued-request pins a successful [`Self::resolve`]
     /// placed on `placement`'s resident regions. Fleet workers call this
     /// once the request has executed; a region evicted or removed in the
-    /// meantime is skipped (its pin died with it).
+    /// meantime is skipped (its pin died with it). Shard read locks only —
+    /// the pin is an atomic, so completion never contends with writers.
     pub fn release_queued(&self, placement: &Placement) {
-        let mut inner = self.inner.write().unwrap();
         for span in &placement.resident {
-            if let Some(r) = inner.regions.get_mut(&span.region.0) {
-                r.queued = r.queued.saturating_sub(1);
+            let shard = self.shards[shard_of(span.region.0)].read().unwrap();
+            if let Some(r) = shard.regions.get(&span.region.0) {
+                let _ = r.queued.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |q| {
+                    Some(q.saturating_sub(1))
+                });
             }
         }
     }
 
     /// Primary owner and a copy of the payload, if registered.
     pub fn lookup(&self, region: RegionId) -> Option<(DeviceId, Payload)> {
-        self.inner
+        self.shards[shard_of(region.0)]
             .read()
             .unwrap()
             .regions
@@ -765,32 +891,24 @@ impl ResidencyRegistry {
     /// range.
     pub fn replicate(&self, region: RegionId, to: DeviceId) -> Result<bool, CapacityError> {
         self.check(to);
-        let mut inner = self.inner.write().unwrap();
-        let (bits, already) = match inner.regions.get(&region.0) {
-            None => return Ok(false),
-            Some(r) => (r.payload.bits() as u64, r.homes.contains(&to)),
+        self.grow(to);
+        let mut shard = self.shards[shard_of(region.0)].write().unwrap();
+        let Some(r) = shard.regions.get_mut(&region.0) else {
+            return Ok(false);
         };
-        if already {
+        if r.homes.contains(&to) {
             return Ok(true);
         }
-        Self::grow(&mut inner, to);
-        let cap = self.capacity.resident_bits;
-        let used = inner.footprint[to.0];
-        if bits > cap.saturating_sub(used) {
+        let bits = r.payload.bits() as u64;
+        if !self.try_reserve(to, bits) {
             self.capacity_refusals.fetch_add(1, Ordering::Relaxed);
             return Err(CapacityError::DeviceFull {
                 device: to,
                 needed_bits: bits,
-                capacity_bits: cap,
+                capacity_bits: self.capacity.resident_bits,
             });
         }
-        inner.footprint[to.0] += bits;
-        inner
-            .regions
-            .get_mut(&region.0)
-            .expect("excluded from eviction")
-            .homes
-            .push(to);
+        r.homes.push(to);
         Ok(true)
     }
 
@@ -802,41 +920,61 @@ impl ResidencyRegistry {
     /// range.
     pub fn migrate(&self, region: RegionId, to: DeviceId) -> Result<bool, CapacityError> {
         self.check(to);
-        let mut inner = self.inner.write().unwrap();
-        let (bits, homes) = match inner.regions.get(&region.0) {
-            None => return Ok(false),
-            Some(r) => (r.payload.bits() as u64, r.homes.clone()),
-        };
-        if !homes.contains(&to) {
-            Self::grow(&mut inner, to);
-            self.make_room(&mut inner, to, bits, Some(region.0))?;
-            inner.footprint[to.0] += bits;
-        }
-        for h in &homes {
-            if *h != to {
-                inner.footprint[h.0] -= bits;
+        self.grow(to);
+        // fast path: already a holder, or `to` has free space — the
+        // collapse happens under the region's own shard lock alone
+        {
+            let mut shard = self.shards[shard_of(region.0)].write().unwrap();
+            let Some(r) = shard.regions.get_mut(&region.0) else {
+                return Ok(false);
+            };
+            let bits = r.payload.bits() as u64;
+            if r.homes.contains(&to) || self.try_reserve(to, bits) {
+                let homes = std::mem::take(&mut r.homes);
+                for h in &homes {
+                    if *h != to {
+                        self.footprint_sub(*h, bits);
+                    }
+                }
+                r.homes = vec![to];
+                return Ok(true);
             }
         }
-        inner
+        // slow path: `to` is full — whole-registry view to run eviction
+        let mut guards = self.lock_all();
+        let (bits, already) = match guards[shard_of(region.0)].regions.get(&region.0) {
+            None => return Ok(false),
+            Some(r) => (r.payload.bits() as u64, r.homes.contains(&to)),
+        };
+        if !already {
+            self.make_room_all(&mut guards, to, bits, Some(region.0))?;
+        }
+        let r = guards[shard_of(region.0)]
             .regions
             .get_mut(&region.0)
-            .expect("excluded from eviction")
-            .homes = vec![to];
+            .expect("excluded from eviction");
+        let homes = std::mem::take(&mut r.homes);
+        r.homes = vec![to];
+        for h in &homes {
+            if *h != to {
+                self.footprint_sub(*h, bits);
+            }
+        }
         Ok(true)
     }
 
     /// Explicitly drop `region`'s replica on `from` (policy engines and
     /// tests; the capacity path evicts through the same bookkeeping).
     pub fn evict_from(&self, region: RegionId, from: DeviceId) -> EvictOutcome {
-        let mut inner = self.inner.write().unwrap();
-        let (present, last) = match inner.regions.get(&region.0) {
+        let mut shard = self.shards[shard_of(region.0)].write().unwrap();
+        let (present, last) = match shard.regions.get(&region.0) {
             None => return EvictOutcome::NotResident,
             Some(r) => (r.homes.contains(&from), r.homes.len() == 1),
         };
         if !present {
             return EvictOutcome::NotResident;
         }
-        self.evict_locked(&mut inner, region.0, from);
+        self.evict_in(&mut shard, region.0, from);
         if last {
             EvictOutcome::RegionEvicted
         } else {
@@ -848,17 +986,22 @@ impl ResidencyRegistry {
     /// registered. An owner-initiated drop is *not* an eviction: later
     /// lookups see [`RouteError::UnknownRegion`].
     pub fn remove(&self, region: RegionId) -> Option<Payload> {
-        let mut inner = self.inner.write().unwrap();
-        let r = inner.regions.remove(&region.0)?;
+        let mut shard = self.shards[shard_of(region.0)].write().unwrap();
+        let r = shard.regions.remove(&region.0)?;
+        let bits = r.payload.bits() as u64;
         for h in &r.homes {
-            inner.footprint[h.0] -= r.payload.bits() as u64;
+            self.footprint_sub(*h, bits);
         }
         Some(r.payload)
     }
 
-    /// Number of registered regions.
+    /// Number of registered regions (sums the shards; a point-in-time
+    /// figure under concurrent mutation).
     pub fn len(&self) -> usize {
-        self.inner.read().unwrap().regions.len()
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().regions.len())
+            .sum()
     }
 
     /// True when no region is registered.
@@ -867,27 +1010,32 @@ impl ResidencyRegistry {
     }
 
     /// Total bits resident on one device (capacity/balance reporting).
-    /// O(1): reads the maintained footprint counter.
+    /// O(1): one atomic load of the maintained footprint counter.
     pub fn resident_bits_on(&self, device: DeviceId) -> u64 {
-        self.inner
+        self.footprint
             .read()
             .unwrap()
-            .footprint
             .get(device.0)
-            .copied()
+            .map(|a| a.load(Ordering::Relaxed))
             .unwrap_or(0)
     }
 
     /// `(region, bits, replica count)` for every region with a replica on
     /// `device`, sorted by id (deterministic input for policy decisions).
+    /// Visits shards one at a time, so concurrent mutators on other
+    /// shards are never blocked for the whole sweep.
     pub fn regions_on(&self, device: DeviceId) -> Vec<(RegionId, u64, usize)> {
-        let inner = self.inner.read().unwrap();
-        let mut out: Vec<(RegionId, u64, usize)> = inner
-            .regions
-            .iter()
-            .filter(|(_, r)| r.homes.contains(&device))
-            .map(|(id, r)| (RegionId(*id), r.payload.bits() as u64, r.homes.len()))
-            .collect();
+        let mut out: Vec<(RegionId, u64, usize)> = Vec::new();
+        for s in &self.shards {
+            let shard = s.read().unwrap();
+            out.extend(
+                shard
+                    .regions
+                    .iter()
+                    .filter(|(_, r)| r.homes.contains(&device))
+                    .map(|(id, r)| (RegionId(*id), r.payload.bits() as u64, r.homes.len())),
+            );
+        }
         out.sort_by_key(|&(id, _, _)| id);
         out
     }
@@ -898,35 +1046,46 @@ impl ResidencyRegistry {
     /// tombstoned, and no device exceeds its capacity. Returns the first
     /// violation. Debug aid for the concurrency and property suites.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let inner = self.inner.read().unwrap();
+        // all shard read locks (ascending) block every footprint mutator
+        // — each one holds a shard write lock — so the counters, region
+        // maps, and tombstones below are one consistent snapshot
+        let guards = self.read_all();
+        let fp = self.footprint.read().unwrap();
+        let tombs = self.tombstones.lock().unwrap();
         let cap = self.capacity.resident_bits;
-        let mut recomputed = vec![0u64; inner.footprint.len()];
-        for (id, r) in &inner.regions {
-            if r.homes.is_empty() {
-                return Err(format!("region{id} has no replica"));
-            }
-            let mut seen = r.homes.clone();
-            seen.sort();
-            seen.dedup();
-            if seen.len() != r.homes.len() {
-                return Err(format!("region{id} lists a device twice: {:?}", r.homes));
-            }
-            if inner.evicted.contains_key(id) {
-                return Err(format!("region{id} both live and tombstoned"));
-            }
-            for h in &r.homes {
-                if let Some(n) = self.bound {
-                    if h.0 >= n {
-                        return Err(format!("region{id} on out-of-fleet {h}"));
+        let mut recomputed = vec![0u64; fp.len()];
+        for g in &guards {
+            for (id, r) in &g.regions {
+                if r.homes.is_empty() {
+                    return Err(format!("region{id} has no replica"));
+                }
+                let mut seen = r.homes.clone();
+                seen.sort();
+                seen.dedup();
+                if seen.len() != r.homes.len() {
+                    return Err(format!("region{id} lists a device twice: {:?}", r.homes));
+                }
+                if tombs.contains_key(id) {
+                    return Err(format!("region{id} both live and tombstoned"));
+                }
+                for h in &r.homes {
+                    if let Some(n) = self.bound {
+                        if h.0 >= n {
+                            return Err(format!("region{id} on out-of-fleet {h}"));
+                        }
                     }
+                    if h.0 >= recomputed.len() {
+                        return Err(format!("region{id} on {h} beyond the footprint vector"));
+                    }
+                    recomputed[h.0] += r.payload.bits() as u64;
                 }
-                if h.0 >= recomputed.len() {
-                    return Err(format!("region{id} on {h} beyond the footprint vector"));
-                }
-                recomputed[h.0] += r.payload.bits() as u64;
             }
         }
-        for (d, (&want, &have)) in recomputed.iter().zip(inner.footprint.iter()).enumerate() {
+        for (d, (&want, have)) in recomputed
+            .iter()
+            .zip(fp.iter().map(|a| a.load(Ordering::Relaxed)))
+            .enumerate()
+        {
             if want != have {
                 return Err(format!("dev{d} footprint {have} != recomputed {want}"));
             }
@@ -942,28 +1101,30 @@ impl ResidencyRegistry {
     /// use [`Self::resolve`] when the request is actually submitted).
     pub fn placement_of(&self, req: &ClusterRequest) -> Result<Placement, RouteError> {
         let mut placement = Placement::default();
-        let inner = self.inner.read().unwrap();
         for o in &req.operands {
             match o {
                 OperandRef::Inline(p) => placement.inline_bits += p.bits() as u64,
                 OperandRef::Resident(r) => {
-                    if inner.evicted.contains_key(&r.0) {
-                        // acknowledging needs the write lock; the routing
-                        // layer has now observed the eviction, so the
-                        // tombstone becomes compactable
-                        drop(inner);
-                        self.ack_tombstone(r.0);
-                        return Err(RouteError::Evicted(*r));
+                    let shard = self.shards[shard_of(r.0)].read().unwrap();
+                    match shard.regions.get(&r.0) {
+                        Some(region) => placement.add_resident(
+                            *r,
+                            region.payload.bits() as u64,
+                            region.homes.clone(),
+                        ),
+                        None => {
+                            // a live region is never tombstoned, so
+                            // region-then-tombstone is race-free; the
+                            // routing layer has now observed the
+                            // eviction, making the tombstone compactable
+                            drop(shard);
+                            return Err(if self.ack_tombstone(r.0) {
+                                RouteError::Evicted(*r)
+                            } else {
+                                RouteError::UnknownRegion(*r)
+                            });
+                        }
                     }
-                    let region = inner
-                        .regions
-                        .get(&r.0)
-                        .ok_or(RouteError::UnknownRegion(*r))?;
-                    placement.add_resident(
-                        *r,
-                        region.payload.bits() as u64,
-                        region.homes.clone(),
-                    );
                 }
             }
         }
@@ -988,7 +1149,6 @@ impl ResidencyRegistry {
     pub fn resolve(&self, req: &ClusterRequest) -> Result<(BulkRequest, Placement), RouteError> {
         let mut operands = Vec::with_capacity(req.operands.len());
         let mut placement = Placement::default();
-        let mut inner = self.inner.write().unwrap();
         let now = self.tick();
         for o in &req.operands {
             match o {
@@ -997,36 +1157,35 @@ impl ResidencyRegistry {
                     operands.push(p.clone());
                 }
                 OperandRef::Resident(r) => {
-                    if let Some(acked) = inner.evicted.get_mut(&r.0) {
-                        // already under the write lock: acknowledge the
-                        // tombstone inline so it becomes compactable
-                        *acked = true;
-                        return Err(RouteError::Evicted(*r));
+                    let shard = self.shards[shard_of(r.0)].read().unwrap();
+                    match shard.regions.get(&r.0) {
+                        Some(region) => {
+                            region.last_hit.store(now, Ordering::Relaxed);
+                            region.hits.fetch_add(1, Ordering::Relaxed);
+                            // pin as we go; unwound below if a later
+                            // operand fails, so a half-resolved request
+                            // never leaves regions pinned forever
+                            region.queued.fetch_add(1, Ordering::Relaxed);
+                            placement.add_resident(
+                                *r,
+                                region.payload.bits() as u64,
+                                region.homes.clone(),
+                            );
+                            operands.push(region.payload.clone());
+                        }
+                        None => {
+                            drop(shard);
+                            self.release_queued(&placement);
+                            return Err(if self.ack_tombstone(r.0) {
+                                RouteError::Evicted(*r)
+                            } else {
+                                RouteError::UnknownRegion(*r)
+                            });
+                        }
                     }
-                    let region = inner
-                        .regions
-                        .get_mut(&r.0)
-                        .ok_or(RouteError::UnknownRegion(*r))?;
-                    region.last_hit = now;
-                    region.hits += 1;
-                    placement.add_resident(
-                        *r,
-                        region.payload.bits() as u64,
-                        region.homes.clone(),
-                    );
-                    operands.push(region.payload.clone());
                 }
             }
         }
-        // Commit the queued-request pins only now that every operand
-        // resolved: an Evicted/Unknown error mid-loop must not leave the
-        // earlier regions pinned forever.
-        for span in &placement.resident {
-            if let Some(r) = inner.regions.get_mut(&span.region.0) {
-                r.queued += 1;
-            }
-        }
-        drop(inner);
         if let Some(first) = operands.first() {
             let bits = first.bits();
             assert!(

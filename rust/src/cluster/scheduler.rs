@@ -192,19 +192,40 @@ impl<T> Scheduler<T> {
     where
         F: Fn(&T) -> usize,
     {
-        let mut q = self.shards[shard].queue.lock().unwrap();
         let mut out = Vec::new();
+        self.drain_budgeted_into(shard, max, budget, cost, &mut out);
+        out
+    }
+
+    /// [`Self::drain_budgeted`] appending into a caller-owned buffer —
+    /// the fleet workers keep one drain buffer per thread and reuse its
+    /// capacity across acquisitions, so the steady-state drain path
+    /// allocates nothing. Drained tasks are appended after whatever the
+    /// buffer already holds (workers clear it between acquisitions); the
+    /// `max`/`budget` bounds apply to the newly drained tasks only.
+    pub fn drain_budgeted_into<F>(
+        &self,
+        shard: usize,
+        max: usize,
+        budget: usize,
+        cost: F,
+        out: &mut Vec<T>,
+    ) where
+        F: Fn(&T) -> usize,
+    {
+        let mut q = self.shards[shard].queue.lock().unwrap();
         let mut spent = 0usize;
-        while out.len() < max {
+        let mut taken = 0usize;
+        while taken < max {
             let Some(front) = q.front() else { break };
             let c = cost(front);
-            if !out.is_empty() && spent + c > budget {
+            if taken > 0 && spent + c > budget {
                 break;
             }
             spent += c;
+            taken += 1;
             out.push(q.pop_front().expect("front() just succeeded"));
         }
-        out
     }
 
     /// `Running → Idle`, re-enqueueing the shard if tasks arrived after the

@@ -134,6 +134,14 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
     let shares_waves = device.service_config().policy == BatchPolicy::Coalesce;
     let cols = geom.cols;
     let slots = (geom.banks * geom.active_subarrays).max(1);
+    // Per-worker scratch, reused across acquisitions: once these reach
+    // steady-state capacity the drain → submit → reassemble cycle
+    // allocates nothing of its own (the per-group request/meta vectors
+    // are the exception — ownership moves into the device with them).
+    let mut batch: Vec<ClusterTask> = Vec::with_capacity(DRAIN_BATCH);
+    let mut inflight = Vec::with_capacity(DRAIN_BATCH);
+    let mut counts: Vec<usize> = Vec::new();
+    let mut responses: Vec<BulkResponse> = Vec::new();
     while let Some(shard) = ctx.sched.acquire(me.0, ctx.steal) {
         if shard != me.0 {
             ctx.fleet.record_steal();
@@ -145,11 +153,13 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
         // parallelism). Collecting in drain order keeps per-queue FIFO
         // responses.
         let t_drain = if ctx.tracer.active() { ctx.tracer.now_ns() } else { 0 };
-        let batch = ctx.sched.drain_budgeted(
+        batch.clear();
+        ctx.sched.drain_budgeted_into(
             shard,
             DRAIN_BATCH,
             DRAIN_WAVE_BUDGET * slots,
             |t: &ClusterTask| t.wave_units(cols),
+            &mut batch,
         );
         if let Some(first) = batch.first().and_then(|t| t.items.first()) {
             // the drain span is correlated with its first member so it
@@ -157,14 +167,13 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
             ctx.tracer
                 .span(me.0 as u32, Stage::Drain, first.seq, t_drain, batch.len() as u64);
         }
-        let mut inflight = Vec::with_capacity(batch.len());
-        for task in batch {
+        for task in batch.drain(..) {
             if shares_waves && task.items.len() > 1 {
                 // the group shares one wave set on *this* executor:
                 // account the waves its members' private round-ups
                 // would have burned
-                let counts: Vec<usize> =
-                    task.items.iter().map(|i| i.req.wave_units(cols)).collect();
+                counts.clear();
+                counts.extend(task.items.iter().map(|i| i.req.wave_units(cols)));
                 let separate: u64 =
                     counts.iter().map(|&c| c.div_ceil(slots) as u64).sum();
                 let packed = counts.iter().sum::<usize>().div_ceil(slots) as u64;
@@ -216,19 +225,19 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
             let rxs = device.submit_batch(reqs);
             inflight.push((home, metas, rxs, t_submit, group_seq, group_waves));
         }
-        for (home, metas, rxs, t_submit, group_seq, group_waves) in inflight {
+        for (home, metas, rxs, t_submit, group_seq, group_waves) in inflight.drain(..) {
             // collect the whole group before forwarding, so the
             // wave-execute span ends at the group's last response and the
             // reassemble span covers only the forwarding work
             let members = metas.len();
-            let mut responses = Vec::with_capacity(members);
+            responses.clear();
             for rx in rxs {
                 responses.push(rx.recv().expect("device dropped mid-request"));
             }
             ctx.tracer
                 .span(me.0 as u32, Stage::WaveExecute, group_seq, t_submit, group_waves);
             let t_reassemble = if ctx.tracer.active() { ctx.tracer.now_ns() } else { 0 };
-            for ((seq, placement, reply), inner) in metas.into_iter().zip(responses) {
+            for ((seq, placement, reply), inner) in metas.into_iter().zip(responses.drain(..)) {
                 if let Some(p) = &placement {
                     // the request no longer pins its resident regions
                     // against admission-aware eviction

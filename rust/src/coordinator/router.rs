@@ -124,16 +124,23 @@ impl Router {
 
     /// Cut a payload into row chunks.
     pub fn shard(&self, req_id: u64, payload_bits: usize) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        self.shard_into(req_id, payload_bits, &mut out);
+        out
+    }
+
+    /// [`Self::shard`] appending into a caller-owned buffer, so the
+    /// service hot path can reuse one chunk buffer's capacity across
+    /// requests instead of allocating per submission.
+    pub fn shard_into(&self, req_id: u64, payload_bits: usize, out: &mut Vec<Chunk>) {
         let cols = self.cfg.geometry.cols;
         let n = payload_bits.div_ceil(cols);
-        (0..n)
-            .map(|i| Chunk {
-                req_id,
-                chunk_idx: i,
-                bit_offset: i * cols,
-                bits: cols.min(payload_bits - i * cols),
-            })
-            .collect()
+        out.extend((0..n).map(|i| Chunk {
+            req_id,
+            chunk_idx: i,
+            bit_offset: i * cols,
+            bits: cols.min(payload_bits - i * cols),
+        }));
     }
 
     /// Wave-packing plan for a queue of chunk counts under the configured

@@ -122,6 +122,10 @@ struct TenantAcct {
     shed: u64,
     completed: u64,
     requeues: u64,
+    /// submissions that fell through to the degrade-to-carried arm (their
+    /// resident slot was capacity-refused or kept getting evicted); the
+    /// request still completes, so `degraded <= completed`
+    degraded: u64,
     outstanding: usize,
     sum_service_ns: f64,
     sum_sojourn_ns: f64,
@@ -220,7 +224,7 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
             ev,
             pools[ev.tenant].as_mut(),
             &mut payload_rng,
-            &mut acct[ev.tenant].requeues,
+            &mut acct[ev.tenant],
         );
         acct[ev.tenant].outstanding += 1;
         pending.push_back(PendingReq {
@@ -277,6 +281,7 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
             shed: a.shed,
             completed: a.completed,
             requeues: a.requeues,
+            degraded: a.degraded,
             mean_service_ns: ratio(a.sum_service_ns, a.completed),
             mean_sojourn_ns: ratio(a.sum_sojourn_ns, a.completed),
             max_sojourn_ns: a.max_sojourn_ns,
@@ -305,7 +310,7 @@ fn submit_event(
     ev: &ArrivalEvent,
     pool: Option<&mut RankPool>,
     payload_rng: &mut Rng,
-    requeues: &mut u64,
+    acct: &mut TenantAcct,
 ) -> Receiver<ClusterResponse> {
     let tspec = &case.tenants[ev.tenant];
     let pool = match pool {
@@ -339,7 +344,7 @@ fn submit_event(
                     Err(RouteError::Evicted(_) | RouteError::UnknownRegion(_)) => {
                         // the defined shed/requeue path: re-register the
                         // rank's rows and resubmit
-                        *requeues += 1;
+                        acct.requeues += 1;
                         attempts += 1;
                         pool.slots[rank] = pool.rows[rank]
                             .iter()
@@ -358,6 +363,7 @@ fn submit_event(
             // no resident slot (capacity refused it, or it keeps getting
             // evicted): degrade to carried payloads of the same rows
             _ => {
+                acct.degraded += 1;
                 let req = ClusterRequest::carried(BulkRequest::bitwise(
                     tspec.op,
                     pool.rows[rank].clone(),
@@ -390,6 +396,10 @@ fn flatten_metrics(
     put(
         "requeues",
         Json::U64(snap.fairness.iter().map(|t| t.requeues).sum()),
+    );
+    put(
+        "degraded",
+        Json::U64(snap.fairness.iter().map(|t| t.degraded).sum()),
     );
     put(
         "offered_wave_units",
@@ -435,6 +445,7 @@ fn flatten_metrics(
         tput("shed", Json::U64(t.shed));
         tput("completed", Json::U64(t.completed));
         tput("requeues", Json::U64(t.requeues));
+        tput("degraded", Json::U64(t.degraded));
         tput("mean_service_ns", Json::F64(t.mean_service_ns));
         tput("mean_sojourn_ns", Json::F64(t.mean_sojourn_ns));
         tput("max_sojourn_ns", Json::F64(t.max_sojourn_ns));

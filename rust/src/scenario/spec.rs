@@ -725,7 +725,7 @@ impl<'a> Validator<'a> {
         let window = self.usize_field(node, p, "window", Some(0))?;
         let process = match self.str_field(node, p, "process", Some("sequential"))?.as_str() {
             "sequential" => {
-                for k in ["rate", "burst_size", "burst_gap_ns"] {
+                for k in ["rate", "burst_size", "burst_gap_ns", "phases"] {
                     if node.get(k).is_some() {
                         return self.err(
                             &join(p, k),
@@ -761,6 +761,16 @@ impl<'a> Validator<'a> {
                 Some(items) => items,
                 None => return self.err("arrival.phases", "expected an array of [[phases]]"),
             };
+            // an explicitly empty `phases = []` is a spec mistake, not
+            // "no phases": the author wrote the key expecting diurnal
+            // scaling, so silently behaving like an unscaled stream would
+            // hide the error
+            if items.is_empty() {
+                return self.err(
+                    "arrival.phases",
+                    "must contain at least one [[arrival.phases]] entry (omit the key for an unscaled stream)",
+                );
+            }
             for (i, ph) in items.iter().enumerate() {
                 let pp = format!("arrival.phases[{i}]");
                 self.check_keys(ph, &pp, &["frac", "rate_scale"])?;

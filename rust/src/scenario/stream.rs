@@ -65,9 +65,20 @@ pub fn generate(case: &ResolvedCase) -> Vec<ArrivalEvent> {
             ArrivalProcess::Sequential => {}
             ArrivalProcess::Poisson { rate_per_sec } => {
                 // exponential inter-arrival gap at the phase-scaled rate;
-                // 1 - f64() is in (0, 1], so ln() is finite
+                // 1 - f64() is in (0, 1], so ln() is finite. The spec
+                // layer rejects non-positive rates and phase scales, so a
+                // zero/NaN effective rate here is a bug upstream — assert
+                // rather than let the virtual clock go infinite/NaN and
+                // spin the open-loop pacer forever.
+                let eff = rate_per_sec * scale;
+                assert!(
+                    eff > 0.0 && eff.is_finite(),
+                    "non-positive effective poisson rate {eff} \
+                     (rate_per_sec={rate_per_sec}, phase scale={scale}); \
+                     scenario validation should have rejected this spec"
+                );
                 let u = 1.0 - rng.f64();
-                clock_ns += -u.ln() / (rate_per_sec * scale) * 1e9;
+                clock_ns += -u.ln() / eff * 1e9;
             }
             ArrivalProcess::Burst { size, gap_ns } => {
                 if index > 0 && index % size == 0 {

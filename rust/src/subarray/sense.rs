@@ -94,8 +94,10 @@ impl SenseAmp {
     pub fn latch_tra(&mut self, a: &BitRow, b: &BitRow, c: &BitRow) {
         self.bl
             .apply3(a, b, c, |x, y, z| (x & y) | (x & z) | (y & z));
-        let bl = self.bl.clone();
-        self.blbar.not_from(&bl);
+        // BL̄ is ¬MAJ3 computed directly from the operands — no clone of
+        // the freshly latched BL row on this hot path
+        self.blbar
+            .apply3(a, b, c, |x, y, z| !((x & y) | (x & z) | (y & z)));
     }
 }
 

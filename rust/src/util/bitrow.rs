@@ -47,13 +47,23 @@ impl BitRow {
         r
     }
 
-    /// Build from bools (tests / small examples).
+    /// Build from bools (tests / small examples). Word-wise: each chunk
+    /// of 64 bools folds into one word, so construction costs one store
+    /// per word instead of a read-modify-write per bit.
     pub fn from_bits(bits: &[bool]) -> Self {
-        let mut r = Self::zeros(bits.len());
-        for (i, &b) in bits.iter().enumerate() {
-            r.set(i, b);
+        let words = bits
+            .chunks(64)
+            .map(|chunk| {
+                chunk
+                    .iter()
+                    .enumerate()
+                    .fold(0u64, |w, (i, &b)| w | ((b as u64) << i))
+            })
+            .collect();
+        BitRow {
+            bits: bits.len(),
+            words,
         }
-        r
     }
 
     /// Zero the unused tail of the last word so Eq/popcount stay exact.
@@ -274,5 +284,55 @@ mod tests {
         let r = BitRow::from_bits(&[true, false, true, true]);
         assert_eq!(r.len(), 4);
         assert!(r.get(0) && !r.get(1) && r.get(2) && r.get(3));
+    }
+
+    #[test]
+    fn from_bits_matches_per_bit_set() {
+        // word-wise construction must agree with the per-bit reference at
+        // every word-boundary-straddling length
+        let mut rng = Rng::new(7);
+        for bits in [0usize, 1, 63, 64, 65, 127, 128, 129, 191] {
+            let v: Vec<bool> = (0..bits).map(|_| rng.next_u64() & 1 == 1).collect();
+            let fast = BitRow::from_bits(&v);
+            let mut slow = BitRow::zeros(bits);
+            for (i, &b) in v.iter().enumerate() {
+                slow.set(i, b);
+            }
+            assert_eq!(fast, slow, "bits={bits}");
+            assert_eq!(fast.words().len(), bits.div_ceil(64), "bits={bits}");
+        }
+    }
+
+    /// Property: u32-lane pack/unpack round-trips at ragged lengths where
+    /// the final u64 word is only partially covered by lanes — the half-
+    /// word tail cases (bits % 64 in 33..=63) exercise the `i % 2 == 1`
+    /// high-half extraction against a partially masked word.
+    #[test]
+    fn u32_lane_roundtrip_ragged_tails() {
+        let mut rng = Rng::new(11);
+        for &bits in &[33usize, 41, 47, 63, 97, 111, 127, 161, 8191] {
+            for seed_extra in 0..8u64 {
+                let mut r2 = Rng::new(11 + bits as u64 * 31 + seed_extra);
+                let r = BitRow::random(bits, &mut r2);
+                let lanes = r.to_u32_lanes();
+                assert_eq!(lanes.len(), bits.div_ceil(32), "bits={bits}");
+                let back = BitRow::from_u32_lanes(bits, &lanes);
+                assert_eq!(r, back, "bits={bits} seed_extra={seed_extra}");
+                // every bit beyond `bits` in the last lane must be zero:
+                // to_u32_lanes reads from a tail-masked word
+                let tail = bits % 32;
+                if tail != 0 {
+                    let last = *lanes.last().unwrap();
+                    assert_eq!(last >> tail, 0, "bits={bits}");
+                }
+            }
+        }
+        // and a straight sweep of every tail in 33..=63 at one word + tail
+        for tail in 33usize..=63 {
+            let bits = 64 + tail;
+            let r = BitRow::random(bits, &mut rng);
+            let back = BitRow::from_u32_lanes(bits, &r.to_u32_lanes());
+            assert_eq!(r, back, "bits={bits}");
+        }
     }
 }

@@ -38,12 +38,26 @@ impl Summary {
         self.mean
     }
 
+    /// Smallest sample, or `0.0` before any [`Self::add`]. An empty
+    /// summary previously leaked the `+INFINITY` sentinel, which JSON
+    /// cannot represent (`serde_json`-free writers emit `inf`, breaking
+    /// downstream parsers) — zero-count summaries report 0.
     pub fn min(&self) -> f64 {
-        self.min
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
     }
 
+    /// Largest sample, or `0.0` before any [`Self::add`] (see
+    /// [`Self::min`] for why the `-INFINITY` sentinel must not escape).
     pub fn max(&self) -> f64 {
-        self.max
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
     }
 
     pub fn stddev(&self) -> f64 {
@@ -107,6 +121,26 @@ mod tests {
         assert!((s.stddev() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
+    }
+
+    /// Golden: a zero-count summary serializes as finite zeros, never the
+    /// ±INFINITY accumulator sentinels (which are unrepresentable in JSON
+    /// and previously leaked into empty-metric reports).
+    #[test]
+    fn empty_summary_is_finite_zero() {
+        let s = Summary::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert!(s.min().is_finite() && s.max().is_finite());
+        // one sample restores real extrema (the sentinel still works
+        // internally)
+        let mut s = Summary::new();
+        s.add(-3.5);
+        assert_eq!(s.min(), -3.5);
+        assert_eq!(s.max(), -3.5);
     }
 
     #[test]

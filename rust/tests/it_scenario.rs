@@ -98,6 +98,75 @@ fn two_tenant_quota_protects_the_light_tenant() {
     );
 }
 
+/// Validation edge cases that used to slip through to the stream
+/// generator: a zero Poisson rate divides the virtual clock by zero, and
+/// an explicitly empty `phases = []` silently behaves like an unscaled
+/// stream. Both must die at parse time with a line-anchored error.
+#[test]
+fn spec_rejects_degenerate_arrival_configs() {
+    let zero_rate = r#"
+name = "bad"
+[arrival]
+process = "poisson"
+rate = 0.0
+"#;
+    let err = ScenarioSpec::parse_str(zero_rate).expect_err("rate 0 must fail");
+    assert!(
+        err.to_string().contains("arrival.rate"),
+        "error should anchor the offending key: {err}"
+    );
+
+    let negative_rate = r#"
+name = "bad"
+[arrival]
+process = "poisson"
+rate = -5.0
+"#;
+    ScenarioSpec::parse_str(negative_rate).expect_err("negative rate must fail");
+
+    let empty_phases = r#"
+name = "bad"
+[arrival]
+process = "poisson"
+rate = 100.0
+phases = []
+"#;
+    let err = ScenarioSpec::parse_str(empty_phases).expect_err("phases = [] must fail");
+    assert!(
+        err.to_string().contains("arrival.phases"),
+        "error should anchor the offending key: {err}"
+    );
+
+    // phases scale an arrival *rate*; sequential has none, so the key is
+    // rejected like the other rate-family knobs
+    let sequential_phases = r#"
+name = "bad"
+[arrival]
+process = "sequential"
+
+[[arrival.phases]]
+frac = 1.0
+"#;
+    let err =
+        ScenarioSpec::parse_str(sequential_phases).expect_err("sequential + phases must fail");
+    assert!(
+        err.to_string().contains("arrival.phases"),
+        "error should anchor the offending key: {err}"
+    );
+
+    let zero_scale = r#"
+name = "bad"
+[arrival]
+process = "poisson"
+rate = 100.0
+
+[[arrival.phases]]
+frac = 0.5
+rate_scale = 0.0
+"#;
+    ScenarioSpec::parse_str(zero_scale).expect_err("rate_scale 0 must fail");
+}
+
 #[test]
 fn two_tenant_run_is_byte_deterministic() {
     let spec = ScenarioSpec::parse_str(TWO_TENANT).expect("scenario parses");
