@@ -172,11 +172,18 @@ impl AdmissionController {
         self.try_admit_prefer_any(&[device])
     }
 
-    /// Claim a slot on the least-loaded of `candidates` (ties toward the
-    /// lowest id), or `None` when every candidate is saturated.
-    fn claim_least_loaded(&self, candidates: &[DeviceId]) -> Option<DeviceId> {
+    /// Claim a slot on the least-loaded of `candidates`, or `None` when
+    /// every candidate is saturated. Ties on in-flight count break toward
+    /// the *fullest* staged coalescer bucket (`fill`, higher = closer to
+    /// dispatching a full wave — landing there finishes a wave instead of
+    /// opening a new one), then toward the lowest id.
+    fn claim_least_loaded(
+        &self,
+        candidates: &[DeviceId],
+        fill: &dyn Fn(DeviceId) -> usize,
+    ) -> Option<DeviceId> {
         let mut order: Vec<DeviceId> = candidates.to_vec();
-        order.sort_by_key(|d| (self.inflight(*d), d.0));
+        order.sort_by_key(|d| (self.inflight(*d), std::cmp::Reverse(fill(*d)), d.0));
         order.into_iter().find(|d| self.claim(d.0))
     }
 
@@ -189,7 +196,19 @@ impl AdmissionController {
         &self,
         candidates: &[DeviceId],
     ) -> Result<DeviceId, AdmissionError> {
-        if let Some(d) = self.claim_least_loaded(candidates) {
+        self.try_admit_prefer_any_with(candidates, &|_| 0)
+    }
+
+    /// [`Self::try_admit_prefer_any`] with a coalescer-awareness probe:
+    /// `fill(d)` is how many wave units device `d` has staged for the
+    /// request's op, and equal queue depth breaks toward the bucket
+    /// closest to a full wave.
+    pub fn try_admit_prefer_any_with(
+        &self,
+        candidates: &[DeviceId],
+        fill: &dyn Fn(DeviceId) -> usize,
+    ) -> Result<DeviceId, AdmissionError> {
+        if let Some(d) = self.claim_least_loaded(candidates, fill) {
             self.admitted.fetch_add(1, Ordering::Relaxed);
             return Ok(d);
         }
@@ -201,15 +220,25 @@ impl AdmissionController {
     /// non-candidate — the caller picked them because executing anywhere
     /// else pays a copy).
     pub fn admit_wait_any(&self, candidates: &[DeviceId]) -> DeviceId {
+        self.admit_wait_any_with(candidates, &|_| 0)
+    }
+
+    /// [`Self::admit_wait_any`] with the coalescer-awareness probe of
+    /// [`Self::try_admit_prefer_any_with`].
+    pub fn admit_wait_any_with(
+        &self,
+        candidates: &[DeviceId],
+        fill: &dyn Fn(DeviceId) -> usize,
+    ) -> DeviceId {
         assert!(!candidates.is_empty(), "admit_wait_any needs a candidate");
-        if let Some(d) = self.claim_least_loaded(candidates) {
+        if let Some(d) = self.claim_least_loaded(candidates, fill) {
             self.admitted.fetch_add(1, Ordering::Relaxed);
             return d;
         }
         self.waited.fetch_add(1, Ordering::Relaxed);
         let mut g = self.gate.lock().unwrap();
         loop {
-            if let Some(d) = self.claim_least_loaded(candidates) {
+            if let Some(d) = self.claim_least_loaded(candidates, fill) {
                 self.admitted.fetch_add(1, Ordering::Relaxed);
                 return d;
             }
@@ -448,6 +477,29 @@ mod tests {
         // candidates full → falls back to the rest of the fleet
         assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(2));
         assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(1));
+        assert_eq!(a.shed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn bucket_fill_breaks_equal_depth_ties_toward_the_fuller_wave() {
+        let a = AdmissionController::new(
+            3,
+            AdmissionConfig {
+                max_inflight_per_device: 2,
+            },
+        );
+        let cands = [DeviceId(0), DeviceId(2)];
+        // equal (zero) in-flight everywhere: dev2's staged bucket is one
+        // chunk from a full wave, so it wins over the lower id
+        let fill = |d: DeviceId| if d == DeviceId(2) { 3 } else { 1 };
+        assert_eq!(a.try_admit_prefer_any_with(&cands, &fill).unwrap(), DeviceId(2));
+        // load is still the primary key: dev2 now carries 1 in-flight,
+        // so the emptier dev0 wins despite its emptier bucket
+        assert_eq!(a.try_admit_prefer_any_with(&cands, &fill).unwrap(), DeviceId(0));
+        // the zero-fill probe preserves the legacy lowest-id tiebreak
+        assert_eq!(a.try_admit_prefer_any(&cands).unwrap(), DeviceId(0));
+        // blocking analogue sees the same ordering
+        assert_eq!(a.admit_wait_any_with(&cands, &fill), DeviceId(2));
         assert_eq!(a.shed.load(Ordering::Relaxed), 0);
     }
 

@@ -263,6 +263,23 @@ impl Coalescer {
         due
     }
 
+    /// Wave units currently staged in `device`'s bucket for `op` (0 when
+    /// nothing is staged or coalescing is off). The routed-admission
+    /// tiebreak probes this: among replica holders at equal queue depth,
+    /// landing a request where its op's bucket is closest to a full wave
+    /// finishes that wave instead of opening another one elsewhere.
+    pub fn bucket_fill(&self, device: DeviceId, op: BulkOp) -> usize {
+        if !self.cfg.enabled {
+            return 0;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner
+            .buckets
+            .get(&(device.0, op))
+            .map(|b| b.chunks)
+            .unwrap_or(0)
+    }
+
     /// Items currently staged (diagnostics and the property suite).
     pub fn held(&self) -> usize {
         let inner = self.inner.lock().unwrap();
@@ -447,6 +464,23 @@ mod tests {
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].requests(), 2);
         assert_eq!(c.held(), 0);
+    }
+
+    #[test]
+    fn bucket_fill_tracks_staged_chunks_per_device_and_op() {
+        let c = coalescer(CoalesceConfig::strict(64), 2);
+        assert_eq!(c.bucket_fill(DeviceId(0), BulkOp::Not), 0);
+        c.push(DeviceId(0), item_op(1, 2, BulkOp::Not), 2, false);
+        c.push(DeviceId(0), item_op(2, 1, BulkOp::Xnor2), 1, false);
+        assert_eq!(c.bucket_fill(DeviceId(0), BulkOp::Not), 2);
+        assert_eq!(c.bucket_fill(DeviceId(0), BulkOp::Xnor2), 1);
+        assert_eq!(c.bucket_fill(DeviceId(1), BulkOp::Not), 0, "per-device");
+        // sealing the bucket resets its fill
+        c.flush_device(DeviceId(0));
+        assert_eq!(c.bucket_fill(DeviceId(0), BulkOp::Not), 0);
+        // a disabled coalescer always probes as empty
+        let off = coalescer(CoalesceConfig::off(), 1);
+        assert_eq!(off.bucket_fill(DeviceId(0), BulkOp::Not), 0);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::coordinator::MetricsSnapshot;
+use crate::dram::timing::{MovementTier, MOVEMENT_TIERS};
 use crate::obs::json::Json;
 use crate::obs::Histogram;
 use crate::util::stats::{fmt_ns, fmt_rate};
@@ -117,6 +118,19 @@ pub struct FleetMetrics {
     /// waves the coalescer's packing saved vs. per-request round-ups,
     /// evaluated against the executing device's wave slots
     pub waves_saved: AtomicU64,
+    /// movement events per tier (`MOVEMENT_TIERS` order): operand pulls
+    /// and placement streams count as `CrossDevice`, landing hops count at
+    /// their pricing tier — so the tier decomposition always sums to the
+    /// fleet totals
+    tier_moves: [AtomicU64; 4],
+    /// operand bytes moved per tier (`MOVEMENT_TIERS` order)
+    tier_copied_bytes: [AtomicU64; 4],
+    /// DDR bus clock cycles occupied per tier (in-DRAM tiers are always 0)
+    tier_copy_cycles: [AtomicU64; 4],
+    /// landing-hop nanoseconds hidden behind execution by the movement
+    /// fabric's prefetch overlap (never charged to any device's visible
+    /// copy time)
+    prefetch_hidden_ns: AtomicU64,
     /// simulated copy nanoseconds charged to each device (index = DeviceId)
     copy_ns: Vec<AtomicU64>,
     /// host-side admission→pickup sojourn per *home* device (index =
@@ -140,6 +154,10 @@ impl FleetMetrics {
             migrations: AtomicU64::new(0),
             coalesced_requests: AtomicU64::new(0),
             waves_saved: AtomicU64::new(0),
+            tier_moves: Default::default(),
+            tier_copied_bytes: Default::default(),
+            tier_copy_cycles: Default::default(),
+            prefetch_hidden_ns: AtomicU64::new(0),
             copy_ns: (0..devices).map(|_| AtomicU64::new(0)).collect(),
             queue_wait: (0..devices.max(1))
                 .map(|_| Mutex::new(Histogram::new()))
@@ -170,6 +188,7 @@ impl FleetMetrics {
             self.resident_hits.fetch_add(1, Ordering::Relaxed);
         } else {
             self.resident_misses.fetch_add(1, Ordering::Relaxed);
+            self.tier_account(MovementTier::CrossDevice, charge);
             self.copied_bytes.fetch_add(charge.bytes, Ordering::Relaxed);
             self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
             self.copy_ns[device].fetch_add(charge.ns.round() as u64, Ordering::Relaxed);
@@ -184,9 +203,62 @@ impl FleetMetrics {
         if charge.is_free() {
             return;
         }
+        self.tier_account(MovementTier::CrossDevice, charge);
         self.copied_bytes.fetch_add(charge.bytes, Ordering::Relaxed);
         self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
         self.copy_ns[device].fetch_add(charge.ns.round() as u64, Ordering::Relaxed);
+    }
+
+    /// Bump the per-tier movement decomposition for one charged movement.
+    fn tier_account(&self, tier: MovementTier, charge: &CopyCharge) {
+        let i = tier.index();
+        self.tier_moves[i].fetch_add(1, Ordering::Relaxed);
+        self.tier_copied_bytes[i].fetch_add(charge.bytes, Ordering::Relaxed);
+        self.tier_copy_cycles[i].fetch_add(charge.cycles, Ordering::Relaxed);
+    }
+
+    /// Account one movement-fabric landing hop against the *owning*
+    /// destination device at its pricing `tier`. A `hidden` hop (prefetch
+    /// overlap) banks its nanoseconds in the fleet-wide hidden counter
+    /// instead of the device's visible copy time — bytes and bus cycles
+    /// are real traffic either way and always count.
+    pub fn record_movement(
+        &self,
+        device: usize,
+        tier: MovementTier,
+        charge: &CopyCharge,
+        hidden: bool,
+    ) {
+        if charge.is_free() {
+            return;
+        }
+        self.tier_account(tier, charge);
+        self.copied_bytes.fetch_add(charge.bytes, Ordering::Relaxed);
+        self.copy_cycles.fetch_add(charge.cycles, Ordering::Relaxed);
+        let ns = charge.ns.round() as u64;
+        if hidden {
+            self.prefetch_hidden_ns.fetch_add(ns, Ordering::Relaxed);
+        } else {
+            self.copy_ns[device].fetch_add(ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time per-tier movement decomposition.
+    pub fn movement_snapshot(&self) -> MovementSnapshot {
+        let load = |a: &[AtomicU64; 4]| {
+            [
+                a[0].load(Ordering::Relaxed),
+                a[1].load(Ordering::Relaxed),
+                a[2].load(Ordering::Relaxed),
+                a[3].load(Ordering::Relaxed),
+            ]
+        };
+        MovementSnapshot {
+            moves: load(&self.tier_moves),
+            copied_bytes: load(&self.tier_copied_bytes),
+            copy_cycles: load(&self.tier_copy_cycles),
+            prefetch_hidden_ns: self.prefetch_hidden_ns.load(Ordering::Relaxed),
+        }
     }
 
     /// Count one routed use of `region` by its executing device (`hit` =
@@ -255,6 +327,67 @@ impl FleetMetrics {
 
     pub fn mean_queue_wait_ns(&self) -> f64 {
         self.queue_wait_merged().mean()
+    }
+}
+
+/// Per-tier decomposition of the fleet's movement traffic, in
+/// [`MOVEMENT_TIERS`] order (same-subarray, same-bank, same-device,
+/// cross-device). Operand pulls and placement streams land in the
+/// cross-device bucket; movement-fabric landing hops land at their pricing
+/// tier — so each array sums to the corresponding fleet total.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MovementSnapshot {
+    /// charged movement events per tier
+    pub moves: [u64; 4],
+    /// operand bytes moved per tier
+    pub copied_bytes: [u64; 4],
+    /// DDR bus clock cycles occupied per tier (always 0 for in-DRAM tiers)
+    pub copy_cycles: [u64; 4],
+    /// landing-hop nanoseconds hidden behind execution by prefetch overlap
+    pub prefetch_hidden_ns: u64,
+}
+
+impl MovementSnapshot {
+    /// Movements priced by the in-DRAM tiers (everything but cross-device).
+    pub fn in_dram_moves(&self) -> u64 {
+        MOVEMENT_TIERS
+            .iter()
+            .filter(|t| t.is_in_dram())
+            .map(|t| self.moves[t.index()])
+            .sum()
+    }
+
+    /// Bytes moved by the in-DRAM tiers.
+    pub fn in_dram_bytes(&self) -> u64 {
+        MOVEMENT_TIERS
+            .iter()
+            .filter(|t| t.is_in_dram())
+            .map(|t| self.copied_bytes[t.index()])
+            .sum()
+    }
+
+    /// Charged movement events across every tier.
+    pub fn total_moves(&self) -> u64 {
+        self.moves.iter().sum()
+    }
+
+    /// Stable JSON form: `prefetch_hidden_ns` plus one object per tier in
+    /// [`MOVEMENT_TIERS`] order.
+    pub fn to_json(&self) -> Json {
+        let tiers = MOVEMENT_TIERS
+            .iter()
+            .map(|t| {
+                let i = t.index();
+                Json::obj()
+                    .field("tier", t.name())
+                    .field("moves", self.moves[i])
+                    .field("copied_bytes", self.copied_bytes[i])
+                    .field("copy_cycles", self.copy_cycles[i])
+            })
+            .collect::<Vec<_>>();
+        Json::obj()
+            .field("prefetch_hidden_ns", self.prefetch_hidden_ns)
+            .field("tiers", Json::Arr(tiers))
     }
 }
 
@@ -342,6 +475,8 @@ pub struct FleetSnapshot {
     pub coalesced_requests: u64,
     /// waves the coalescer's packing saved vs. per-request round-ups
     pub waves_saved: u64,
+    /// per-tier movement decomposition (the in-DRAM movement fabric)
+    pub movement: MovementSnapshot,
     /// simulated copy nanoseconds charged per device (index = DeviceId)
     pub copy_ns_per_device: Vec<u64>,
     /// host-side wait between admission and a worker picking the task up
@@ -441,6 +576,7 @@ impl FleetSnapshot {
             .field("migrations", self.migrations)
             .field("coalesced_requests", self.coalesced_requests)
             .field("waves_saved", self.waves_saved)
+            .field("movement", self.movement.to_json())
             .field("tombstones_compacted", self.tombstones_compacted)
             .field("makespan_ns", self.merged.sim_ns)
             .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
@@ -488,6 +624,7 @@ impl FleetSnapshot {
             .field("migrations", self.migrations)
             .field("coalesced_requests", self.coalesced_requests)
             .field("waves_saved", self.waves_saved)
+            .field("movement", self.movement.to_json())
             .field("tombstones_compacted", self.tombstones_compacted)
             .field("makespan_ns", self.merged.sim_ns)
             .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
@@ -514,6 +651,8 @@ impl FleetSnapshot {
              misses: {}  makespan incl copy: {}\n\
              residency: evictions: {}  refusals: {}  replications: {}  \
              migrations: {}  tombstones compacted: {}\n\
+             movement: {} in-DRAM moves ({} B) of {} total  \
+             prefetch hidden: {}\n\
              waves: {}  slot occupancy: {:.1}%  coalesced requests: {}  \
              waves saved: {}\n",
             self.devices(),
@@ -536,6 +675,10 @@ impl FleetSnapshot {
             self.replications,
             self.migrations,
             self.tombstones_compacted,
+            self.movement.in_dram_moves(),
+            self.movement.in_dram_bytes(),
+            self.movement.total_moves(),
+            fmt_ns(self.movement.prefetch_hidden_ns as f64),
             self.merged.waves,
             100.0 * self.slot_occupancy(),
             self.coalesced_requests,
@@ -664,6 +807,12 @@ mod tests {
             migrations: 1,
             coalesced_requests: 4,
             waves_saved: 3,
+            movement: MovementSnapshot {
+                moves: [2, 1, 0, 1],
+                copied_bytes: [16, 8, 0, 40],
+                copy_cycles: [0, 0, 0, 8],
+                prefetch_hidden_ns: 270,
+            },
             copy_ns_per_device: vec![30],
             mean_queue_wait_ns: 1000.0,
             queue_wait: f.queue_wait_merged(),
@@ -681,6 +830,7 @@ mod tests {
         assert!(r.contains("waves saved: 3"), "{r}");
         assert!(r.contains("queue sojourn p50"), "{r}");
         assert!(r.contains("tombstones compacted: 5"), "{r}");
+        assert!(r.contains("movement: 3 in-DRAM moves (24 B) of 4 total"), "{r}");
         // makespan incl copy = sim 10 + copy 30
         assert_eq!(snapshot.makespan_with_copy_ns(), 40);
 
@@ -689,6 +839,17 @@ mod tests {
         assert_eq!(doc.get("schema").unwrap().as_f64(), Some(1.0));
         assert_eq!(doc.get("devices").unwrap().as_f64(), Some(1.0));
         assert_eq!(doc.get("tombstones_compacted").unwrap().as_f64(), Some(5.0));
+        let movement = doc.get("movement").unwrap();
+        assert_eq!(
+            movement.get("prefetch_hidden_ns").unwrap().as_f64(),
+            Some(270.0)
+        );
+        let tiers = movement.get("tiers").unwrap().as_arr().unwrap();
+        assert_eq!(tiers.len(), 4);
+        assert_eq!(tiers[0].get("tier").unwrap().as_str(), Some("same_subarray"));
+        assert_eq!(tiers[0].get("moves").unwrap().as_f64(), Some(2.0));
+        assert_eq!(tiers[3].get("tier").unwrap().as_str(), Some("cross_device"));
+        assert_eq!(tiers[3].get("copy_cycles").unwrap().as_f64(), Some(8.0));
         let sojourn = doc.get("queue_sojourn_ns").unwrap();
         assert_eq!(sojourn.get("count").unwrap().as_f64(), Some(2.0));
         assert!(sojourn.get("p99").unwrap().as_f64().unwrap() >= 500.0);
@@ -759,6 +920,63 @@ mod tests {
         assert_eq!(f.copy_ns_per_device(), vec![0, 15]);
         assert_eq!(f.resident_hits.load(Ordering::Relaxed), 0);
         assert_eq!(f.resident_misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn movements_split_visible_vs_hidden_and_decompose_by_tier() {
+        let f = FleetMetrics::new(2);
+        // synchronous landing hop: visible copy time on the owning device
+        f.record_movement(
+            1,
+            MovementTier::SameBank,
+            &CopyCharge {
+                bytes: 64,
+                ns: 180.0,
+                cycles: 0,
+            },
+            false,
+        );
+        // prefetch landing hop: traffic counts, ns hidden fleet-wide
+        f.record_movement(
+            0,
+            MovementTier::SameSubarray,
+            &CopyCharge {
+                bytes: 32,
+                ns: 90.0,
+                cycles: 0,
+            },
+            true,
+        );
+        // a free charge records nothing
+        f.record_movement(0, MovementTier::SameDevice, &CopyCharge::free(), true);
+        // an operand pull decomposes into the cross-device bucket
+        f.record_copy(
+            0,
+            &CopyCharge {
+                bytes: 128,
+                ns: 15.0,
+                cycles: 16,
+            },
+        );
+        let m = f.movement_snapshot();
+        assert_eq!(m.moves, [1, 1, 0, 1]);
+        assert_eq!(m.copied_bytes, [32, 64, 0, 128]);
+        assert_eq!(m.copy_cycles, [0, 0, 0, 16]);
+        assert_eq!(m.prefetch_hidden_ns, 90);
+        assert_eq!(m.in_dram_moves(), 2);
+        assert_eq!(m.in_dram_bytes(), 96);
+        assert_eq!(m.total_moves(), 3);
+        // the tier decomposition sums to the fleet totals
+        assert_eq!(
+            m.copied_bytes.iter().sum::<u64>(),
+            f.copied_bytes.load(Ordering::Relaxed)
+        );
+        assert_eq!(
+            m.copy_cycles.iter().sum::<u64>(),
+            f.copy_cycles.load(Ordering::Relaxed)
+        );
+        // visible ns went to dev1 only; hidden ns to neither device
+        assert_eq!(f.copy_ns_per_device(), vec![15, 180]);
     }
 
     #[test]

@@ -55,6 +55,7 @@
 pub mod admission;
 pub mod coalescer;
 pub mod metrics;
+pub mod movement;
 pub mod residency;
 pub mod scheduler;
 pub mod topology;
@@ -63,19 +64,22 @@ pub mod worker;
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionError};
 pub use coalescer::{CoalesceConfig, Coalescer};
 pub use metrics::{
-    merge_snapshots, FleetMetrics, FleetSnapshot, RegionUse, TenantBreakdown,
+    merge_snapshots, FleetMetrics, FleetSnapshot, MovementSnapshot, RegionUse,
+    TenantBreakdown,
 };
+pub use movement::{MovementConfig, MovementFabric, MovementKind, PendingMovement};
 pub use residency::{
     CapacityConfig, CapacityError, ClusterRequest, CopyCharge, CopyCostModel,
     EvictOutcome, EvictionPolicy, LocalityModel, OperandRef, Placement,
     PlacementAction, RegionId, ReplicationConfig, ReplicationPolicy,
-    ResidencyRegistry, ResidentSpan, RouteError,
+    ResidencyRegistry, ResidentSpan, RouteError, RowCoord,
 };
 pub use scheduler::{Scheduler, ShardState};
 pub use topology::{DeviceDesc, DeviceId, Topology};
 pub use worker::{ClusterResponse, ClusterTask, TaskItem};
 
 pub use crate::dram::geometry::DeviceCapacity;
+pub use crate::dram::timing::MovementTier;
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -117,6 +121,10 @@ pub struct ClusterConfig {
     /// [`DrimCluster::rebalance`] on an epoch/queue-depth trigger instead
     /// of caller-driven pumping. Off (`None`) by default.
     pub rebalance: Option<RebalanceConfig>,
+    /// The in-DRAM movement fabric: how the landing hop of placement
+    /// movement (replication, migration, eviction re-staging) is priced
+    /// and scheduled. Off by default — the pre-fabric cost model.
+    pub movement: MovementConfig,
     /// Allow idle workers to drain other devices' queues. On by default;
     /// the scaling ablation turns it off to measure pure sharding.
     pub steal: bool,
@@ -131,6 +139,7 @@ impl ClusterConfig {
             capacity: CapacityConfig::default(),
             coalesce: CoalesceConfig::off(),
             rebalance: None,
+            movement: MovementConfig::Off,
             steal: true,
         }
     }
@@ -177,6 +186,7 @@ pub struct DrimCluster {
     registry: Arc<ResidencyRegistry>,
     locality: Arc<LocalityModel>,
     coalescer: Arc<Coalescer>,
+    fabric: Arc<MovementFabric>,
     tracer: Arc<Tracer>,
     /// per-device metrics handles (outlive the devices themselves)
     device_metrics: Vec<Arc<Metrics>>,
@@ -216,11 +226,22 @@ impl DrimCluster {
         let sched = Arc::new(Scheduler::new(n));
         let admission = Arc::new(AdmissionController::new(n, cfg.admission));
         let fleet = Arc::new(FleetMetrics::new(n));
-        let registry = Arc::new(ResidencyRegistry::with_capacity(
-            n,
-            cfg.capacity,
-            CopyCostModel::new(TimingParams::default()),
-        ));
+        // pin slots decode against the fleet's device geometry, so the
+        // movement fabric's tier pricing sees the simulated row size
+        let geometry = cfg
+            .topology
+            .devices
+            .first()
+            .map(|d| d.service.geometry.clone())
+            .unwrap_or_default();
+        let registry = Arc::new(
+            ResidencyRegistry::with_capacity(
+                n,
+                cfg.capacity,
+                CopyCostModel::new(TimingParams::default()),
+            )
+            .with_geometry(geometry),
+        );
         let locality = Arc::new(LocalityModel::from_topology(
             &cfg.topology,
             TimingParams::default(),
@@ -233,6 +254,7 @@ impl DrimCluster {
                 .map(|d| d.service.geometry.banks * d.service.geometry.active_subarrays)
                 .collect(),
         ));
+        let fabric = Arc::new(MovementFabric::new(n));
         let tracer = Arc::new(Tracer::new(n + 1, TRACE_LANE_CAPACITY));
         registry.set_tracer(Arc::clone(&tracer));
         let device_metrics: Vec<Arc<Metrics>> =
@@ -248,6 +270,7 @@ impl DrimCluster {
                     locality: Arc::clone(&locality),
                     registry: Arc::clone(&registry),
                     coalescer: Arc::clone(&coalescer),
+                    fabric: Arc::clone(&fabric),
                     tracer: Arc::clone(&tracer),
                     steal: cfg.steal,
                 };
@@ -261,7 +284,9 @@ impl DrimCluster {
             let sched = Arc::clone(&sched);
             let registry = Arc::clone(&registry);
             let locality = Arc::clone(&locality);
+            let fabric = Arc::clone(&fabric);
             let tracer = Arc::clone(&tracer);
+            let movement = cfg.movement;
             std::thread::spawn(move || {
                 let (lock, cv) = &*stop;
                 loop {
@@ -284,7 +309,10 @@ impl DrimCluster {
                     if depths.iter().copied().max().unwrap_or(0) < rb.min_queue_depth {
                         continue;
                     }
-                    rebalance_parts(&fleet, &sched, &registry, &locality, &tracer, &rb.policy);
+                    rebalance_parts(
+                        &fleet, &sched, &registry, &locality, &fabric, &tracer, movement,
+                        &rb.policy,
+                    );
                 }
             })
         });
@@ -296,6 +324,7 @@ impl DrimCluster {
             registry,
             locality,
             coalescer,
+            fabric,
             tracer,
             device_metrics,
             workers,
@@ -372,6 +401,36 @@ impl DrimCluster {
         payload: Payload,
     ) -> Result<RegionId, CapacityError> {
         self.registry.try_register(device, payload)
+    }
+
+    /// Capacity-checked *re*-registration on the `Evicted` → requeue
+    /// path: like [`Self::try_register_resident`], but the landing hop —
+    /// moving the rows from the device's staging row into the region's
+    /// pinned row — goes through the movement fabric, so an enabled
+    /// [`MovementConfig`] prices it (and, under prefetch, overlaps it
+    /// with execution) instead of treating the re-stage as free.
+    pub fn try_restage_resident(
+        &self,
+        device: DeviceId,
+        payload: Payload,
+    ) -> Result<RegionId, CapacityError> {
+        let region = self.registry.try_register(device, payload)?;
+        issue_landing(
+            &self.fleet,
+            &self.registry,
+            &self.fabric,
+            &self.tracer,
+            self.cfg.movement,
+            region,
+            device,
+            MovementKind::Restage,
+        );
+        Ok(region)
+    }
+
+    /// The fleet's movement fabric (pending prefetch landing hops).
+    pub fn movement_fabric(&self) -> &MovementFabric {
+        &self.fabric
     }
 
     /// Stage 2+3 of the submission pipeline: wrap the admitted request as
@@ -513,7 +572,13 @@ impl DrimCluster {
         let home = if candidates.is_empty() {
             self.admission.try_admit()?
         } else {
-            self.admission.try_admit_prefer_any(&candidates)?
+            // coalescer-aware tiebreak: replica holders at equal queue
+            // depth resolve toward the device whose staged bucket for
+            // this op is closest to dispatching a full wave
+            self.admission
+                .try_admit_prefer_any_with(&candidates, &|d| {
+                    self.coalescer.bucket_fill(d, req.op)
+                })?
         };
         let (bulk, placement) = self.resolve_admitted(home, &req)?;
         Ok(self.enqueue(home, bulk, Some(placement)))
@@ -545,7 +610,9 @@ impl DrimCluster {
         let home = if candidates.is_empty() {
             self.admission.admit_wait()
         } else {
-            self.admission.admit_wait_any(&candidates)
+            self.admission.admit_wait_any_with(&candidates, &|d| {
+                self.coalescer.bucket_fill(d, req.op)
+            })
         };
         let (bulk, placement) = self.resolve_admitted(home, &req)?;
         Ok(self.enqueue(home, bulk, Some(placement)))
@@ -667,7 +734,9 @@ impl DrimCluster {
             &self.sched,
             &self.registry,
             &self.locality,
+            &self.fabric,
             &self.tracer,
+            self.cfg.movement,
             policy,
         )
     }
@@ -739,8 +808,7 @@ impl DrimCluster {
                                     requeues += 1;
                                     attempts += 1;
                                     slots[rank] = self
-                                        .registry
-                                        .try_register(
+                                        .try_restage_resident(
                                             DeviceId(rank % devices),
                                             Payload::Bits(values[rank].clone()),
                                         )
@@ -800,6 +868,7 @@ impl DrimCluster {
             migrations: self.fleet.migrations.load(Ordering::Relaxed),
             coalesced_requests: self.fleet.coalesced_requests.load(Ordering::Relaxed),
             waves_saved: self.fleet.waves_saved.load(Ordering::Relaxed),
+            movement: self.fleet.movement_snapshot(),
             copy_ns_per_device: self.fleet.copy_ns_per_device(),
             mean_queue_wait_ns: self.fleet.mean_queue_wait_ns(),
             queue_wait: self.fleet.queue_wait_merged(),
@@ -836,6 +905,20 @@ impl DrimCluster {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // settle prefetch landing hops that never overlapped a drain —
+        // still hidden (the fabric's copy engine finished them off the
+        // critical path), still attributed to their destination device
+        for m in self.fabric.drain_all() {
+            self.fleet
+                .record_movement(m.dest.0, m.tier, &m.charge, true);
+            self.tracer.instant_with_dur(
+                m.dest.0 as u32,
+                Stage::Copy,
+                m.region.0,
+                m.charge.ns.round() as u64,
+                m.charge.bytes,
+            );
+        }
     }
 }
 
@@ -849,12 +932,15 @@ impl Drop for DrimCluster {
 /// caller-driven [`DrimCluster::rebalance`] and the background
 /// maintenance thread (which holds only the `Arc`ed parts, not the
 /// cluster itself).
+#[allow(clippy::too_many_arguments)]
 fn rebalance_parts(
     fleet: &FleetMetrics,
     sched: &Scheduler<ClusterTask>,
     registry: &ResidencyRegistry,
     locality: &LocalityModel,
+    fabric: &MovementFabric,
     tracer: &Tracer,
+    movement: MovementConfig,
     policy: &ReplicationPolicy,
 ) -> Vec<PlacementAction> {
     let window = fleet.take_region_window();
@@ -888,6 +974,16 @@ fn rebalance_parts(
                         charge.ns.round() as u64,
                         to.0 as u64,
                     );
+                    issue_landing(
+                        fleet,
+                        registry,
+                        fabric,
+                        tracer,
+                        movement,
+                        region,
+                        to,
+                        MovementKind::Replicate,
+                    );
                 }
             }
             PlacementAction::Migrate { region, to } => {
@@ -907,11 +1003,87 @@ fn rebalance_parts(
                         charge.ns.round() as u64,
                         to.0 as u64,
                     );
+                    issue_landing(
+                        fleet,
+                        registry,
+                        fabric,
+                        tracer,
+                        movement,
+                        region,
+                        to,
+                        MovementKind::Migrate,
+                    );
                 }
             }
         }
     }
     actions
+}
+
+/// Issue the landing hop of a placement movement: the rows arriving on
+/// `dest` (off the inter-device stream or the eviction requeue path) must
+/// still move from the device's staging row into the region's pinned row.
+/// [`MovementConfig::Off`] models no hop (the pre-fabric behaviour);
+/// external pricing charges a bus read-out + write-in round trip;
+/// in-DRAM pricing charges the RowClone tier of the pinned coordinate at
+/// zero bus cycles; prefetch enqueues the hop on the fabric so the worker
+/// that next drains `dest` settles it behind execution.
+#[allow(clippy::too_many_arguments)]
+fn issue_landing(
+    fleet: &FleetMetrics,
+    registry: &ResidencyRegistry,
+    fabric: &MovementFabric,
+    tracer: &Tracer,
+    movement: MovementConfig,
+    region: RegionId,
+    dest: DeviceId,
+    kind: MovementKind,
+) {
+    if !movement.enabled() {
+        return;
+    }
+    let Some(bits) = registry.bits(region) else {
+        // the region vanished between the placement move and here (a
+        // concurrent remove/evict): nothing is left to land
+        return;
+    };
+    let bits = bits as u64;
+    let (tier, charge) = if movement.in_dram() {
+        // the hop is priced by where the pin landed; a pin racing an
+        // eviction falls back to the conservative external tier
+        let tier = registry
+            .pin_of(region, dest)
+            .map(|c| c.landing_tier())
+            .unwrap_or(MovementTier::CrossDevice);
+        let row_bits = registry.geometry().cols as u64;
+        (
+            tier,
+            registry.cost_model().in_dram_landing(bits, tier, row_bits),
+        )
+    } else {
+        (
+            MovementTier::CrossDevice,
+            registry.cost_model().external_landing(bits),
+        )
+    };
+    if movement.prefetch() {
+        fabric.enqueue(PendingMovement {
+            region,
+            dest,
+            tier,
+            charge,
+            kind,
+        });
+    } else {
+        fleet.record_movement(dest.0, tier, &charge, false);
+        tracer.instant_with_dur(
+            dest.0 as u32,
+            Stage::Copy,
+            region.0,
+            charge.ns.round() as u64,
+            charge.bytes,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -1206,5 +1378,116 @@ mod tests {
         assert!(snap.evictions > 0, "3 regions per 1-region device must evict");
         // requeues are the defined recovery path, not an error
         let _ = requeues;
+    }
+
+    #[test]
+    fn external_restage_charges_the_owning_device_synchronously() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            movement: MovementConfig::External,
+            ..ClusterConfig::tiny(2)
+        });
+        let mut rng = Rng::new(101);
+        let a = BitRow::random(2048, &mut rng);
+        c.try_restage_resident(DeviceId(1), Payload::Bits(a))
+            .expect("unbounded fleet admits the restage");
+        let snap = c.shutdown();
+        assert_eq!(snap.movement.total_moves(), 1);
+        assert_eq!(snap.movement.in_dram_moves(), 0, "external is off-chip");
+        // the bus round trip lands on the device that owns the rows, and
+        // it is visible copy time (nothing is hidden off-chip)
+        assert_eq!(snap.copy_ns_per_device[0], 0);
+        assert!(snap.copy_ns_per_device[1] > 0);
+        assert!(snap.copy_cycles > 0, "off-chip hops burn bus cycles");
+        assert_eq!(snap.movement.prefetch_hidden_ns, 0);
+    }
+
+    #[test]
+    fn rebalancer_landing_hops_charge_the_destination_not_the_coordinator() {
+        // Mirror of the worker-side copy-charging gate: the rebalance
+        // round runs on the *coordinator* thread, but every nanosecond of
+        // the landing hop must appear on the destination device's copy
+        // clock — never on the region's old home, never on lane 0.
+        let c = DrimCluster::new(ClusterConfig {
+            steal: false,
+            movement: MovementConfig::External,
+            ..ClusterConfig::tiny(4)
+        });
+        let mut rng = Rng::new(102);
+        let a = BitRow::random(2048, &mut rng);
+        let r = c.register_resident(DeviceId(0), Payload::Bits(a));
+        // routed hits on the owner are free, so device 0's copy clock
+        // stays exactly zero unless attribution leaks
+        for _ in 0..4 {
+            c.run_routed(ClusterRequest::resident(BulkOp::Not, vec![r]))
+                .unwrap();
+        }
+        let policy = ReplicationPolicy::new(ReplicationConfig {
+            hot_uses: 3,
+            amortize_factor: 1.0,
+            ..ReplicationConfig::default()
+        });
+        let actions = c.rebalance(&policy);
+        assert!(
+            actions
+                .iter()
+                .any(|x| matches!(x, PlacementAction::Replicate { region, .. } if *region == r)),
+            "{actions:?}"
+        );
+        let dest = *c
+            .registry()
+            .replicas(r)
+            .unwrap()
+            .iter()
+            .find(|d| **d != DeviceId(0))
+            .expect("replica landed somewhere else");
+        let snap = c.shutdown();
+        assert_eq!(snap.movement.total_moves(), 1, "one landing hop");
+        for (d, ns) in snap.copy_ns_per_device.iter().enumerate() {
+            if d == dest.0 {
+                assert!(*ns > 0, "stream + landing charge the destination");
+            } else {
+                assert_eq!(*ns, 0, "device {d} executed nothing chargeable");
+            }
+        }
+    }
+
+    #[test]
+    fn prefetched_restage_settles_hidden_and_never_burns_the_bus() {
+        let c = DrimCluster::new(ClusterConfig {
+            steal: true,
+            movement: MovementConfig::Prefetch,
+            ..ClusterConfig::tiny(2)
+        });
+        let mut rng = Rng::new(103);
+        let a = BitRow::random(2048, &mut rng);
+        let r = c
+            .try_restage_resident(DeviceId(1), Payload::Bits(a.clone()))
+            .expect("unbounded fleet admits the restage");
+        // the hop was enqueued before this submit, so whichever worker
+        // acquires device 1's queue (its own or a thief) settles the
+        // warm-up before executing — correct attribution under stealing
+        let resp = c
+            .run_routed(ClusterRequest::resident(BulkOp::Not, vec![r]))
+            .unwrap();
+        let mut want = BitRow::zeros(2048);
+        want.not_from(&a);
+        match resp.inner.result {
+            Payload::Bits(got) => assert_eq!(got, want),
+            _ => panic!("wrong payload kind"),
+        }
+        assert_eq!(
+            c.movement_fabric().pending(),
+            0,
+            "draining device 1's queue settles its pending hop"
+        );
+        let snap = c.shutdown();
+        assert_eq!(snap.movement.total_moves(), 1);
+        assert_eq!(snap.movement.in_dram_moves(), 1, "pinned row => in-DRAM tier");
+        assert!(snap.movement.prefetch_hidden_ns > 0);
+        // the warm-up is hidden and in-DRAM: zero bus cycles on every
+        // movement tier (a stolen execution may still charge its own
+        // operand pull, so only the movement decomposition is pinned)
+        assert_eq!(snap.movement.copy_cycles, [0, 0, 0, 0]);
     }
 }

@@ -1,0 +1,224 @@
+//! The in-DRAM movement fabric: how bulk placement movement (replication,
+//! migration, eviction re-staging) is priced and when it is charged.
+//!
+//! The RowClone/Ambit line showed that bulk row copy inside DRAM costs
+//! roughly one activation pair when source and destination share a
+//! sub-array, and never touches the external bus — yet a fleet that prices
+//! every movement as a DDR burst stream pays von-Neumann prices for data
+//! that never left the chip. This module adds two orthogonal switches on
+//! top of the tier model in `dram::timing`:
+//!
+//! * **Pricing** ([`MovementConfig::in_dram`]): the landing hop of a
+//!   placement movement (staging row → the region's pinned row, see
+//!   `ResidencyRegistry` pins) is priced either as an external read-out +
+//!   write-in round trip over the bus, or by the RowClone tier of its
+//!   pinned coordinate at zero bus cycles.
+//! * **Overlap** ([`MovementConfig::prefetch`]): landing hops are either
+//!   charged synchronously where they are issued, or enqueued on the
+//!   [`MovementFabric`] and settled later by the worker that next drains
+//!   the destination device's queue — modelling a copy engine that warms
+//!   rows up behind execution. Settled hops attribute their traffic to the
+//!   *owning* device (the queue drained, not the thread draining it — the
+//!   same discipline worker-side copy charging uses under stealing) and
+//!   their nanoseconds to a fleet-wide hidden-prefetch counter instead of
+//!   any device's visible copy time.
+//!
+//! Everything is off by default: with [`MovementConfig::Off`] no landing
+//! hop is issued at all and the fleet behaves bit-identically to the
+//! pre-fabric cost model.
+
+use std::sync::Mutex;
+
+use crate::dram::timing::MovementTier;
+
+use super::residency::{CopyCharge, RegionId};
+use super::topology::DeviceId;
+
+/// How the movement fabric prices and schedules placement movement.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MovementConfig {
+    /// No landing hops are modeled at all — the pre-fabric behaviour
+    /// (movement is priced by the inbound stream alone).
+    #[default]
+    Off,
+    /// Landing hops are modeled and priced as external bus round trips,
+    /// charged synchronously — the von-Neumann baseline the ablation
+    /// compares against.
+    External,
+    /// Landing hops are priced by the RowClone tier of the destination
+    /// pin (zero bus cycles), still charged synchronously.
+    InDram,
+    /// In-DRAM pricing, and hops overlap execution: enqueued on the
+    /// [`MovementFabric`], settled by workers, nanoseconds hidden behind
+    /// compute.
+    Prefetch,
+}
+
+impl MovementConfig {
+    /// Whether landing hops are modeled at all.
+    pub fn enabled(self) -> bool {
+        self != MovementConfig::Off
+    }
+
+    /// Whether hops are priced by the in-DRAM tiers (vs the external bus).
+    pub fn in_dram(self) -> bool {
+        matches!(self, MovementConfig::InDram | MovementConfig::Prefetch)
+    }
+
+    /// Whether hops overlap execution via the [`MovementFabric`].
+    pub fn prefetch(self) -> bool {
+        self == MovementConfig::Prefetch
+    }
+
+    /// Stable lowercase label (scenario knob values, JSON reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            MovementConfig::Off => "off",
+            MovementConfig::External => "external",
+            MovementConfig::InDram => "in_dram",
+            MovementConfig::Prefetch => "prefetch",
+        }
+    }
+}
+
+/// Why a landing hop was issued (trace detail / debugging).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MovementKind {
+    /// The `Evicted` → requeue path re-staged an operand region.
+    Restage,
+    /// The rebalancer added a replica.
+    Replicate,
+    /// The rebalancer re-homed a region.
+    Migrate,
+}
+
+/// One landing hop waiting to be settled by the destination device's next
+/// worker drain.
+#[derive(Clone, Debug)]
+pub struct PendingMovement {
+    /// region whose rows are being landed
+    pub region: RegionId,
+    /// device the rows land on (traffic is attributed here)
+    pub dest: DeviceId,
+    /// pricing tier the hop was charged at
+    pub tier: MovementTier,
+    /// the priced charge (bytes, ns, bus cycles)
+    pub charge: CopyCharge,
+    /// which placement path issued the hop
+    pub kind: MovementKind,
+}
+
+/// Per-device queues of landing hops issued ahead of execution
+/// ([`MovementConfig::Prefetch`] only). Issue sites enqueue; the worker
+/// that next drains a device's task queue settles that device's hops (so
+/// attribution follows the owning device even when the drain was a steal),
+/// and shutdown settles whatever never overlapped.
+pub struct MovementFabric {
+    queues: Mutex<Vec<Vec<PendingMovement>>>,
+}
+
+impl MovementFabric {
+    /// Fabric for a `devices`-wide fleet.
+    pub fn new(devices: usize) -> Self {
+        MovementFabric {
+            queues: Mutex::new((0..devices).map(|_| Vec::new()).collect()),
+        }
+    }
+
+    /// Queue a landing hop for its destination device.
+    pub fn enqueue(&self, movement: PendingMovement) {
+        let mut q = self.queues.lock().unwrap();
+        let dest = movement.dest.0;
+        q[dest].push(movement);
+    }
+
+    /// Take every hop queued for `device` (the worker settle path).
+    /// Allocation-free when the queue is empty.
+    pub fn drain_for(&self, device: DeviceId) -> Vec<PendingMovement> {
+        let mut q = self.queues.lock().unwrap();
+        if q[device.0].is_empty() {
+            return Vec::new();
+        }
+        std::mem::take(&mut q[device.0])
+    }
+
+    /// Take every queued hop, in device order (shutdown settle).
+    pub fn drain_all(&self) -> Vec<PendingMovement> {
+        let mut q = self.queues.lock().unwrap();
+        let mut out = Vec::new();
+        for queue in q.iter_mut() {
+            out.append(queue);
+        }
+        out
+    }
+
+    /// Hops issued but not yet settled, fleet-wide.
+    pub fn pending(&self) -> usize {
+        self.queues.lock().unwrap().iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hop(region: u64, dest: usize) -> PendingMovement {
+        PendingMovement {
+            region: RegionId(region),
+            dest: DeviceId(dest),
+            tier: MovementTier::SameBank,
+            charge: CopyCharge {
+                bytes: 8,
+                ns: 180.0,
+                cycles: 0,
+            },
+            kind: MovementKind::Restage,
+        }
+    }
+
+    #[test]
+    fn config_switches_compose() {
+        assert_eq!(MovementConfig::default(), MovementConfig::Off);
+        assert!(!MovementConfig::Off.enabled());
+        assert!(MovementConfig::External.enabled());
+        assert!(!MovementConfig::External.in_dram());
+        assert!(MovementConfig::InDram.in_dram());
+        assert!(!MovementConfig::InDram.prefetch());
+        assert!(MovementConfig::Prefetch.in_dram());
+        assert!(MovementConfig::Prefetch.prefetch());
+        let names: Vec<&str> = [
+            MovementConfig::Off,
+            MovementConfig::External,
+            MovementConfig::InDram,
+            MovementConfig::Prefetch,
+        ]
+        .iter()
+        .map(|m| m.name())
+        .collect();
+        assert_eq!(names, ["off", "external", "in_dram", "prefetch"]);
+    }
+
+    #[test]
+    fn fabric_drains_per_device_and_counts_pending() {
+        let fabric = MovementFabric::new(3);
+        assert_eq!(fabric.pending(), 0);
+        fabric.enqueue(hop(1, 0));
+        fabric.enqueue(hop(2, 2));
+        fabric.enqueue(hop(3, 2));
+        assert_eq!(fabric.pending(), 3);
+
+        let d2 = fabric.drain_for(DeviceId(2));
+        assert_eq!(d2.len(), 2);
+        assert!(d2.iter().all(|m| m.dest == DeviceId(2)));
+        assert_eq!(fabric.pending(), 1);
+        assert!(fabric.drain_for(DeviceId(2)).is_empty());
+
+        fabric.enqueue(hop(4, 1));
+        let rest = fabric.drain_all();
+        assert_eq!(rest.len(), 2);
+        // device order: dev0's hop before dev1's
+        assert_eq!(rest[0].dest, DeviceId(0));
+        assert_eq!(rest[1].dest, DeviceId(1));
+        assert_eq!(fabric.pending(), 0);
+    }
+}

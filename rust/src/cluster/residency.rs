@@ -58,8 +58,8 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard}
 use crate::obs::trace::{Stage, Tracer};
 
 use crate::coordinator::{BulkRequest, Payload};
-use crate::dram::geometry::DeviceCapacity;
-use crate::dram::timing::TimingParams;
+use crate::dram::geometry::{DeviceCapacity, DramGeometry};
+use crate::dram::timing::{MovementTier, TimingParams};
 use crate::isa::program::BulkOp;
 
 use super::admission::AdmissionError;
@@ -344,9 +344,67 @@ impl Placement {
     }
 }
 
+/// Pinned physical row coordinate of one replica on its device — where
+/// the region's rows actually sit in the DRAM geometry. The movement
+/// fabric prices a landing hop (staging row → pinned row) by the tier of
+/// this coordinate relative to the device's staging row at bank 0,
+/// sub-array 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct RowCoord {
+    /// bank index within the device
+    pub bank: usize,
+    /// sub-array index within the bank
+    pub subarray: usize,
+    /// starting row index within the sub-array
+    pub row: usize,
+}
+
+impl RowCoord {
+    /// Movement tier of the hop from the device's staging row (bank 0,
+    /// sub-array 0 — where inbound streams land) into this coordinate.
+    pub fn landing_tier(self) -> MovementTier {
+        if self.bank == 0 && self.subarray == 0 {
+            MovementTier::SameSubarray
+        } else if self.bank == 0 {
+            MovementTier::SameBank
+        } else {
+            MovementTier::SameDevice
+        }
+    }
+}
+
+/// Per-device allocator of pinned row slots. Slots are dense integers
+/// decoded into [`RowCoord`]s bank-first (consecutive allocations spread
+/// across banks, then sub-arrays, then rows — the interleave a real
+/// allocator would use to keep compute sub-arrays busy). Freed slots are
+/// recycled LIFO, so allocation is deterministic for a deterministic
+/// operation order.
+#[derive(Default)]
+struct PinAllocator {
+    free: Vec<u64>,
+    next: u64,
+}
+
+impl PinAllocator {
+    fn alloc(&mut self) -> u64 {
+        self.free.pop().unwrap_or_else(|| {
+            let slot = self.next;
+            self.next += 1;
+            slot
+        })
+    }
+
+    fn release(&mut self, slot: u64) {
+        self.free.push(slot);
+    }
+}
+
 struct Region {
     /// devices holding a replica; never empty, `homes[0]` is the primary
     homes: Vec<DeviceId>,
+    /// pinned row slot per replica, in lock-step with `homes` (decode via
+    /// the registry geometry)
+    pins: Vec<u64>,
     payload: Payload,
     /// logical clock value at the last routed use (or registration);
     /// atomic so the routed-hit path bumps it under a shard *read* lock
@@ -360,9 +418,11 @@ struct Region {
 }
 
 impl Region {
-    fn new(homes: Vec<DeviceId>, payload: Payload, now: u64) -> Self {
+    fn new(homes: Vec<DeviceId>, pins: Vec<u64>, payload: Payload, now: u64) -> Self {
+        debug_assert_eq!(homes.len(), pins.len());
         Region {
             homes,
+            pins,
             payload,
             last_hit: AtomicU64::new(now),
             hits: AtomicU64::new(0),
@@ -435,6 +495,14 @@ pub struct ResidencyRegistry {
     /// the outer lock only guards growth for unbounded registries —
     /// mutation is CAS on the atomics under a read lock
     footprint: RwLock<Vec<AtomicU64>>,
+    /// per-device pinned-row slot allocators (index = `DeviceId`), in the
+    /// lock order after `footprint` and before `tombstones`; every
+    /// mutation happens while a shard write lock is held, so pin sets and
+    /// replica sets move in lock-step
+    pins: Mutex<Vec<PinAllocator>>,
+    /// DRAM geometry pin slots decode against (banks / sub-arrays / row
+    /// bits) — also the movement fabric's row size for tier pricing
+    geometry: DramGeometry,
     /// ids evicted by the capacity policy (never reused), so a racing
     /// lookup gets the defined `Evicted` error instead of `UnknownRegion`.
     /// The value records acknowledgement: `true` once some lookup has
@@ -464,6 +532,8 @@ impl Default for ResidencyRegistry {
                 .map(|_| RwLock::new(Shard::default()))
                 .collect(),
             footprint: RwLock::new(Vec::new()),
+            pins: Mutex::new(Vec::new()),
+            geometry: DramGeometry::default(),
             tombstones: Mutex::new(HashMap::new()),
             next: AtomicU64::new(0),
             bound: None,
@@ -494,6 +564,7 @@ impl ResidencyRegistry {
         ResidencyRegistry {
             bound: Some(devices),
             footprint: RwLock::new((0..devices).map(|_| AtomicU64::new(0)).collect()),
+            pins: Mutex::new((0..devices).map(|_| PinAllocator::default()).collect()),
             ..ResidencyRegistry::default()
         }
     }
@@ -508,8 +579,28 @@ impl ResidencyRegistry {
             policy: cfg.policy,
             cost,
             footprint: RwLock::new((0..devices).map(|_| AtomicU64::new(0)).collect()),
+            pins: Mutex::new((0..devices).map(|_| PinAllocator::default()).collect()),
             ..ResidencyRegistry::default()
         }
+    }
+
+    /// Replace the DRAM geometry pin slots decode against (builder style;
+    /// fleets pass their device geometry so pinned coordinates and the
+    /// movement fabric's row size match the simulated hardware).
+    pub fn with_geometry(mut self, geometry: DramGeometry) -> Self {
+        self.geometry = geometry;
+        self
+    }
+
+    /// The DRAM geometry pin slots decode against.
+    pub fn geometry(&self) -> &DramGeometry {
+        &self.geometry
+    }
+
+    /// The copy-cost model this registry prices movement with (eviction
+    /// re-copy weighing and the movement fabric's landing hops).
+    pub fn cost_model(&self) -> &CopyCostModel {
+        &self.cost
     }
 
     /// The per-device capacity this registry enforces.
@@ -602,6 +693,34 @@ impl ResidencyRegistry {
         let mut fp = self.footprint.write().unwrap();
         while fp.len() <= device.0 {
             fp.push(AtomicU64::new(0));
+        }
+        let mut pins = self.pins.lock().unwrap();
+        while pins.len() <= device.0 {
+            pins.push(PinAllocator::default());
+        }
+    }
+
+    /// Allocate a pinned row slot on `device`. Call only while holding a
+    /// shard write lock (same discipline as [`Self::try_reserve`]).
+    fn pin_alloc(&self, device: DeviceId) -> u64 {
+        self.pins.lock().unwrap()[device.0].alloc()
+    }
+
+    /// Return a pinned row slot to `device`'s allocator (same discipline).
+    fn pin_release(&self, device: DeviceId, slot: u64) {
+        self.pins.lock().unwrap()[device.0].release(slot);
+    }
+
+    /// Decode a pin slot into a physical row coordinate under the
+    /// registry geometry: consecutive slots spread across banks first,
+    /// then sub-arrays, then rows.
+    fn coord_of(&self, slot: u64) -> RowCoord {
+        let banks = self.geometry.banks.max(1) as u64;
+        let subs = self.geometry.subarrays_per_bank.max(1) as u64;
+        RowCoord {
+            bank: (slot % banks) as usize,
+            subarray: ((slot / banks) % subs) as usize,
+            row: (slot / (banks * subs)) as usize,
         }
     }
 
@@ -698,9 +817,11 @@ impl ResidencyRegistry {
             return;
         };
         r.homes.remove(pos);
+        let pin = r.pins.remove(pos);
         let bits = r.payload.bits() as u64;
         let emptied = r.homes.is_empty();
         self.footprint_sub(from, bits);
+        self.pin_release(from, pin);
         if emptied {
             shard.regions.remove(&id);
             let mut tombs = self.tombstones.lock().unwrap();
@@ -776,9 +897,10 @@ impl ResidencyRegistry {
             let mut shard = self.shards[shard_of(id)].write().unwrap();
             if self.try_reserve(device, bits) {
                 let now = self.tick();
+                let pin = self.pin_alloc(device);
                 shard
                     .regions
-                    .insert(id, Region::new(vec![device], payload, now));
+                    .insert(id, Region::new(vec![device], vec![pin], payload, now));
                 return Ok(RegionId(id));
             }
         }
@@ -786,9 +908,10 @@ impl ResidencyRegistry {
         let mut guards = self.lock_all();
         self.make_room_all(&mut guards, device, bits, None)?;
         let now = self.tick();
+        let pin = self.pin_alloc(device);
         guards[shard_of(id)]
             .regions
-            .insert(id, Region::new(vec![device], payload, now));
+            .insert(id, Region::new(vec![device], vec![pin], payload, now));
         Ok(RegionId(id))
     }
 
@@ -817,6 +940,40 @@ impl ResidencyRegistry {
             .regions
             .get(&region.0)
             .map(|r| r.homes.clone())
+    }
+
+    /// Pinned row coordinate of `region`'s replica on `device`, if it
+    /// holds one — the physical landing target the movement fabric prices
+    /// hops against.
+    pub fn pin_of(&self, region: RegionId, device: DeviceId) -> Option<RowCoord> {
+        self.shards[shard_of(region.0)]
+            .read()
+            .unwrap()
+            .regions
+            .get(&region.0)
+            .and_then(|r| {
+                r.homes
+                    .iter()
+                    .position(|&h| h == device)
+                    .map(|pos| self.coord_of(r.pins[pos]))
+            })
+    }
+
+    /// Every pinned coordinate on `device`, sorted by region id — the
+    /// uniqueness surface the property suite checks (no two live regions
+    /// may share a (bank, sub-array, row) on one device).
+    pub fn pins_on(&self, device: DeviceId) -> Vec<(RegionId, RowCoord)> {
+        let mut out: Vec<(RegionId, RowCoord)> = Vec::new();
+        for s in &self.shards {
+            let shard = s.read().unwrap();
+            for (id, r) in &shard.regions {
+                if let Some(pos) = r.homes.iter().position(|&h| h == device) {
+                    out.push((RegionId(*id), self.coord_of(r.pins[pos])));
+                }
+            }
+        }
+        out.sort_by_key(|&(id, _)| id);
+        out
     }
 
     /// Payload size of a region in bits, if registered.
@@ -909,6 +1066,7 @@ impl ResidencyRegistry {
             });
         }
         r.homes.push(to);
+        r.pins.push(self.pin_alloc(to));
         Ok(true)
     }
 
@@ -930,13 +1088,7 @@ impl ResidencyRegistry {
             };
             let bits = r.payload.bits() as u64;
             if r.homes.contains(&to) || self.try_reserve(to, bits) {
-                let homes = std::mem::take(&mut r.homes);
-                for h in &homes {
-                    if *h != to {
-                        self.footprint_sub(*h, bits);
-                    }
-                }
-                r.homes = vec![to];
+                self.collapse_onto(r, to, bits);
                 return Ok(true);
             }
         }
@@ -953,14 +1105,30 @@ impl ResidencyRegistry {
             .regions
             .get_mut(&region.0)
             .expect("excluded from eviction");
+        self.collapse_onto(r, to, bits);
+        Ok(true)
+    }
+
+    /// Collapse `r`'s replica set onto `to` alone, returning footprint and
+    /// pins of every dropped replica. `to`'s existing pin (if it was
+    /// already a holder) is kept — the region does not move on `to`;
+    /// otherwise a fresh pin is allocated there. Call with `r`'s shard
+    /// write-locked and `to`'s footprint already reserved when `to` was
+    /// not a holder.
+    fn collapse_onto(&self, r: &mut Region, to: DeviceId, bits: u64) {
         let homes = std::mem::take(&mut r.homes);
-        r.homes = vec![to];
-        for h in &homes {
-            if *h != to {
-                self.footprint_sub(*h, bits);
+        let pins = std::mem::take(&mut r.pins);
+        let mut kept = None;
+        for (h, pin) in homes.into_iter().zip(pins) {
+            if h == to && kept.is_none() {
+                kept = Some(pin);
+            } else {
+                self.footprint_sub(h, bits);
+                self.pin_release(h, pin);
             }
         }
-        Ok(true)
+        r.homes = vec![to];
+        r.pins = vec![kept.unwrap_or_else(|| self.pin_alloc(to))];
     }
 
     /// Explicitly drop `region`'s replica on `from` (policy engines and
@@ -989,8 +1157,9 @@ impl ResidencyRegistry {
         let mut shard = self.shards[shard_of(region.0)].write().unwrap();
         let r = shard.regions.remove(&region.0)?;
         let bits = r.payload.bits() as u64;
-        for h in &r.homes {
+        for (h, pin) in r.homes.iter().zip(&r.pins) {
             self.footprint_sub(*h, bits);
+            self.pin_release(*h, *pin);
         }
         Some(r.payload)
     }
@@ -1054,6 +1223,7 @@ impl ResidencyRegistry {
         let tombs = self.tombstones.lock().unwrap();
         let cap = self.capacity.resident_bits;
         let mut recomputed = vec![0u64; fp.len()];
+        let mut live_pins: HashSet<(usize, u64)> = HashSet::new();
         for g in &guards {
             for (id, r) in &g.regions {
                 if r.homes.is_empty() {
@@ -1064,6 +1234,22 @@ impl ResidencyRegistry {
                 seen.dedup();
                 if seen.len() != r.homes.len() {
                     return Err(format!("region{id} lists a device twice: {:?}", r.homes));
+                }
+                if r.pins.len() != r.homes.len() {
+                    return Err(format!(
+                        "region{id} pin/replica mismatch: {} pins for {} homes",
+                        r.pins.len(),
+                        r.homes.len()
+                    ));
+                }
+                for (h, pin) in r.homes.iter().zip(&r.pins) {
+                    if !live_pins.insert((h.0, *pin)) {
+                        let c = self.coord_of(*pin);
+                        return Err(format!(
+                            "region{id} pin collides on {h}: bank {} sub-array {} row {}",
+                            c.bank, c.subarray, c.row
+                        ));
+                    }
                 }
                 if tombs.contains_key(id) {
                     return Err(format!("region{id} both live and tombstoned"));
@@ -1243,6 +1429,34 @@ impl CopyCostModel {
     /// Bus clock cycles corresponding to `ns` of copy time.
     pub fn cycles_for(&self, ns: f64) -> u64 {
         self.timing.cycles_for_ns(ns)
+    }
+
+    /// Landing hop priced the von-Neumann way: after an inbound stream
+    /// parks `bits` in the device's staging row, moving them into their
+    /// pinned rows costs a full read-out + write-in over the external bus
+    /// (2× the stream, and the bus is occupied the whole time). This is
+    /// what every replication/migration/re-stage pays with the movement
+    /// fabric's in-DRAM tiers disabled.
+    pub fn external_landing(&self, bits: u64) -> CopyCharge {
+        let ns = 2.0 * self.timing.stream_ns(bits);
+        CopyCharge {
+            bytes: bits.div_ceil(8),
+            ns,
+            cycles: self.timing.cycles_for_ns(ns),
+        }
+    }
+
+    /// Landing hop priced by the RowClone in-DRAM tiers: the staging→pin
+    /// move happens inside the device at `tier`'s activation cost
+    /// (`row_bits` bits per row) and occupies **zero** external bus
+    /// cycles.
+    pub fn in_dram_landing(&self, bits: u64, tier: MovementTier, row_bits: u64) -> CopyCharge {
+        let (ns, cycles) = self.timing.tier_copy(tier, bits, row_bits);
+        CopyCharge {
+            bytes: bits.div_ceil(8),
+            ns,
+            cycles,
+        }
     }
 }
 
@@ -2043,6 +2257,61 @@ mod tests {
         assert!((m.device_to_device_ns(2048, true) - 30.0).abs() < 1e-9);
         // cross-channel overlaps
         assert!((m.device_to_device_ns(2048, false) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn landing_charges_follow_the_tier_model() {
+        let m = CopyCostModel::default();
+        // external landing: a full staging→pin round trip over the bus
+        let ext = m.external_landing(2048);
+        assert_eq!(ext.bytes, 256);
+        assert!((ext.ns - 30.0).abs() < 1e-9);
+        assert_eq!(ext.cycles, 32);
+        // in-DRAM landing never occupies the bus, whatever the tier
+        for tier in [
+            MovementTier::SameSubarray,
+            MovementTier::SameBank,
+            MovementTier::SameDevice,
+        ] {
+            let c = m.in_dram_landing(2048, tier, 1024);
+            assert_eq!(c.bytes, 256, "{tier:?}");
+            assert_eq!(c.cycles, 0, "{tier:?}");
+            assert!(c.ns > 0.0, "{tier:?}");
+        }
+        // FPM calibration: 2 rows at 1024 bits/row = 2 AAPs = 180 ns
+        let fpm = m.in_dram_landing(2048, MovementTier::SameSubarray, 1024);
+        assert!((fpm.ns - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pins_are_unique_and_recycled_across_the_lifecycle() {
+        let reg = ResidencyRegistry::for_fleet(2)
+            .with_geometry(crate::dram::geometry::DramGeometry::tiny());
+        let a = reg.register(DeviceId(0), payload(64));
+        let b = reg.register(DeviceId(0), payload(64));
+        let pa = reg.pin_of(a, DeviceId(0)).unwrap();
+        let pb = reg.pin_of(b, DeviceId(0)).unwrap();
+        assert_ne!(pa, pb, "two live regions share a pinned row");
+        assert_eq!(reg.pin_of(a, DeviceId(1)), None);
+        // the first slot on a device is the staging sub-array itself
+        assert_eq!(pa.landing_tier(), MovementTier::SameSubarray);
+        // tiny geometry has 2 banks: the second slot lands in bank 1
+        assert_eq!(pb.landing_tier(), MovementTier::SameDevice);
+
+        // replication pins on the new device; migration re-pins
+        assert!(reg.replicate(a, DeviceId(1)).unwrap());
+        let p1 = reg.pin_of(a, DeviceId(1)).unwrap();
+        assert!(reg.migrate(b, DeviceId(1)).unwrap());
+        assert_ne!(reg.pin_of(b, DeviceId(1)).unwrap(), p1);
+        assert_eq!(reg.pin_of(b, DeviceId(0)), None);
+        reg.check_invariants().unwrap();
+
+        // a freed slot is recycled by the next allocation on that device
+        assert!(reg.remove(a).is_some());
+        let c = reg.register(DeviceId(0), payload(64));
+        assert_eq!(reg.pin_of(c, DeviceId(0)).unwrap(), pa);
+        assert_eq!(reg.pins_on(DeviceId(0)), vec![(c, pa)]);
+        reg.check_invariants().unwrap();
     }
 
     #[test]

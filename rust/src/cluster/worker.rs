@@ -35,6 +35,7 @@ use crate::obs::trace::{Stage, Tracer};
 use super::admission::AdmissionController;
 use super::coalescer::Coalescer;
 use super::metrics::FleetMetrics;
+use super::movement::MovementFabric;
 use super::residency::{LocalityModel, Placement, ResidencyRegistry};
 use super::scheduler::Scheduler;
 use super::topology::DeviceId;
@@ -121,6 +122,7 @@ pub(crate) struct WorkerCtx {
     pub locality: Arc<LocalityModel>,
     pub registry: Arc<ResidencyRegistry>,
     pub coalescer: Arc<Coalescer>,
+    pub fabric: Arc<MovementFabric>,
     pub tracer: Arc<Tracer>,
     pub steal: bool,
 }
@@ -145,6 +147,22 @@ pub(crate) fn worker_loop<D: Device>(me: DeviceId, mut device: D, ctx: WorkerCtx
     while let Some(shard) = ctx.sched.acquire(me.0, ctx.steal) {
         if shard != me.0 {
             ctx.fleet.record_steal();
+        }
+        // Settle prefetched landing hops queued for the device whose
+        // queue is being drained: the copy engine finished warming its
+        // rows up behind execution, so the nanoseconds stay hidden, and
+        // the traffic is attributed to the *owning* device — the shard
+        // drained, not the thread draining it — exactly the discipline
+        // copy charging uses under stealing.
+        for m in ctx.fabric.drain_for(DeviceId(shard)) {
+            ctx.fleet.record_movement(shard, m.tier, &m.charge, true);
+            ctx.tracer.instant_with_dur(
+                shard as u32,
+                Stage::Copy,
+                m.region.0,
+                m.charge.ns.round() as u64,
+                m.charge.bytes,
+            );
         }
         // Submit every drained group before collecting: the device sees
         // the whole drain in flight at once, so its internal workers

@@ -16,4 +16,4 @@ pub mod timing;
 pub use bank::Bank;
 pub use command::{AapKind, DramCommand, RowId};
 pub use geometry::{DramGeometry, PhysAddr};
-pub use timing::TimingParams;
+pub use timing::{MovementTier, TimingParams, MOVEMENT_TIERS};

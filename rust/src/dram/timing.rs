@@ -14,6 +14,61 @@
 /// streamed in.
 pub const BURST_BITS: u64 = 512;
 
+/// Endpoint tier of a bulk data movement inside the fleet, ordered from
+/// cheapest to most expensive. The intra-device tiers model the
+/// RowClone/Ambit in-DRAM copy primitives: when source and destination rows
+/// share a sub-array the copy is a single AAP (FPM, ~90 ns per row) and
+/// never touches the data bus; crossing a bank or the chip boundary adds
+/// activations and (for `SameDevice`) half-rate internal streaming, but the
+/// external DDR bus stays free. Only `CrossDevice` pays bus occupancy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum MovementTier {
+    /// Source and destination rows share a sub-array: RowClone-FPM, one AAP
+    /// per row.
+    SameSubarray,
+    /// Same bank, different sub-array: two AAPs per row through the bank's
+    /// shared sense amplifiers (RowClone-PSM within the bank).
+    SameBank,
+    /// Same device, different bank: two AAPs per row plus a half-rate hop
+    /// over the chip's internal global bus.
+    SameDevice,
+    /// Different devices: the full external DDR burst stream (the only tier
+    /// that occupies channel bus cycles).
+    CrossDevice,
+}
+
+/// All movement tiers, cheapest first — the iteration order metrics and
+/// JSON reports use.
+pub const MOVEMENT_TIERS: [MovementTier; 4] = [
+    MovementTier::SameSubarray,
+    MovementTier::SameBank,
+    MovementTier::SameDevice,
+    MovementTier::CrossDevice,
+];
+
+impl MovementTier {
+    /// Stable lowercase label used in JSON reports and traces.
+    pub fn name(self) -> &'static str {
+        match self {
+            MovementTier::SameSubarray => "same_subarray",
+            MovementTier::SameBank => "same_bank",
+            MovementTier::SameDevice => "same_device",
+            MovementTier::CrossDevice => "cross_device",
+        }
+    }
+
+    /// Dense index into per-tier counter arrays (`MOVEMENT_TIERS` order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Whether the tier is priced by the in-DRAM copy primitives (no
+    /// external bus occupancy).
+    pub fn is_in_dram(self) -> bool {
+        self != MovementTier::CrossDevice
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct TimingParams {
     pub t_rcd_ns: f64,
@@ -71,6 +126,42 @@ impl TimingParams {
     pub fn cycles_for_ns(&self, ns: f64) -> u64 {
         (ns / self.t_ck_ns).round() as u64
     }
+
+    /// Rows a `bits`-sized region spans at `row_bits` bits per DRAM row.
+    pub fn rows(bits: u64, row_bits: u64) -> u64 {
+        bits.div_ceil(row_bits.max(1))
+    }
+
+    /// RowClone-FPM copy: source and destination share a sub-array, one AAP
+    /// per row, zero bus occupancy.
+    pub fn subarray_copy_ns(&self, bits: u64, row_bits: u64) -> f64 {
+        Self::rows(bits, row_bits) as f64 * self.t_aap_ns
+    }
+
+    /// Same-bank, cross-sub-array copy: two AAPs per row (copy to the bank's
+    /// sense amplifiers, then to the destination row), zero bus occupancy.
+    pub fn bank_copy_ns(&self, bits: u64, row_bits: u64) -> f64 {
+        Self::rows(bits, row_bits) as f64 * 2.0 * self.t_aap_ns
+    }
+
+    /// Same-device, cross-bank copy: two AAPs per row plus a half-rate hop
+    /// over the chip's internal global bus; the external channel stays idle.
+    pub fn device_copy_ns(&self, bits: u64, row_bits: u64) -> f64 {
+        self.bank_copy_ns(bits, row_bits) + self.stream_ns(bits) / 2.0
+    }
+
+    /// Price a movement by its endpoint tier. Intra-device tiers come from
+    /// the RowClone primitives above and occupy zero channel bus cycles;
+    /// `CrossDevice` is the full external stream (ns and bus cycles).
+    /// Returns `(ns, bus_cycles)`.
+    pub fn tier_copy(&self, tier: MovementTier, bits: u64, row_bits: u64) -> (f64, u64) {
+        match tier {
+            MovementTier::SameSubarray => (self.subarray_copy_ns(bits, row_bits), 0),
+            MovementTier::SameBank => (self.bank_copy_ns(bits, row_bits), 0),
+            MovementTier::SameDevice => (self.device_copy_ns(bits, row_bits), 0),
+            MovementTier::CrossDevice => (self.stream_ns(bits), self.stream_cycles(bits)),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +200,57 @@ mod tests {
         assert!((t.stream_ns(2048) - 15.0).abs() < 1e-9);
         assert_eq!(t.stream_cycles(2048), 16);
         assert_eq!(t.stream_cycles(0), 0);
+    }
+
+    #[test]
+    fn rowclone_fpm_copy_is_one_aap_per_row() {
+        let t = TimingParams::default();
+        // One full 65536-bit (8 KiB) row copies in a single AAP ≈ 90 ns —
+        // the RowClone-FPM calibration point.
+        assert_eq!(t.subarray_copy_ns(65_536, 65_536), 90.0);
+        assert_eq!(t.subarray_copy_ns(3 * 65_536, 65_536), 270.0);
+        // Partial rows round up to whole-row activations.
+        assert_eq!(TimingParams::rows(1, 65_536), 1);
+        assert_eq!(TimingParams::rows(65_537, 65_536), 2);
+    }
+
+    #[test]
+    fn movement_tiers_are_ns_monotone_for_full_rows() {
+        let t = TimingParams::default();
+        let (bits, row) = (65_536, 65_536);
+        let sub = t.tier_copy(MovementTier::SameSubarray, bits, row).0;
+        let bank = t.tier_copy(MovementTier::SameBank, bits, row).0;
+        let dev = t.tier_copy(MovementTier::SameDevice, bits, row).0;
+        let cross = t.tier_copy(MovementTier::CrossDevice, bits, row).0;
+        assert!(sub < bank, "{sub} !< {bank}");
+        assert!(bank < dev, "{bank} !< {dev}");
+        assert!(dev < cross, "{dev} !< {cross}");
+    }
+
+    #[test]
+    fn intra_device_tiers_never_occupy_the_bus() {
+        let t = TimingParams::default();
+        for tier in [
+            MovementTier::SameSubarray,
+            MovementTier::SameBank,
+            MovementTier::SameDevice,
+        ] {
+            assert!(tier.is_in_dram());
+            assert_eq!(t.tier_copy(tier, 65_536, 8192).1, 0, "{tier:?}");
+        }
+        assert!(!MovementTier::CrossDevice.is_in_dram());
+        assert!(t.tier_copy(MovementTier::CrossDevice, 65_536, 8192).1 > 0);
+    }
+
+    #[test]
+    fn tier_labels_and_indices_are_stable() {
+        let names: Vec<&str> = MOVEMENT_TIERS.iter().map(|t| t.name()).collect();
+        assert_eq!(
+            names,
+            ["same_subarray", "same_bank", "same_device", "cross_device"]
+        );
+        for (i, tier) in MOVEMENT_TIERS.iter().enumerate() {
+            assert_eq!(tier.index(), i);
+        }
     }
 }

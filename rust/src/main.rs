@@ -16,7 +16,8 @@ use drim::analog::params as aparams;
 use drim::analog::transient as rtransient;
 use drim::cluster::{
     AdmissionConfig, CapacityConfig, ClusterConfig, CoalesceConfig, DeviceCapacity,
-    DrimCluster, EvictionPolicy, FleetSnapshot, ReplicationPolicy, Topology,
+    DrimCluster, EvictionPolicy, FleetSnapshot, MovementConfig, ReplicationPolicy,
+    Topology,
 };
 use drim::controller::enables;
 use drim::coordinator::{BatchPolicy, BulkRequest, DrimService, Payload, ServiceConfig};
@@ -77,7 +78,7 @@ COMMANDS:
                               (--devices > 1 routes through the fleet layer;
                                the fleet honors --queue-cap / --no-steal)
   cluster [--devices N] [--requests N] [--bits N] [--seed S] [--queue-cap N]
-          [--no-steal] [--sweep] [--json] [--locality]
+          [--no-steal] [--movement MODE] [--sweep] [--json] [--locality]
           [--capacity] [--regions N] [--theta X] [--coalesce]
                               multi-device scale-out workload + fleet
                               metrics (--sweep ablates 1/2/4/8 devices;
@@ -90,7 +91,10 @@ COMMANDS:
                                eviction and hot-region replication under a
                                Zipf(--theta) popularity law;
                                --coalesce ablates fleet-wide wave
-                               coalescing of sub-wave requests)
+                               coalescing of sub-wave requests;
+                               --movement off|external|in_dram|prefetch
+                               prices placement landing hops through the
+                               in-DRAM movement fabric)
   bench --scenario FILE|NAME [--param KEY=VALUE]... [--seed S]
         [--dry-run] [--json] [--out DIR]
                               trace-driven scenario benchmark: validate a
@@ -430,10 +434,22 @@ fn synth_workload(n: usize, bits: usize, rng: &mut Rng) -> Vec<BulkRequest> {
         .collect()
 }
 
+/// The `--movement MODE` flag: how placement landing hops are priced
+/// (mirrors the scenario schema's `movement` knob).
+fn movement_mode(args: &Args) -> MovementConfig {
+    match args.get_or("movement", "off") {
+        "off" => MovementConfig::Off,
+        "external" => MovementConfig::External,
+        "in_dram" => MovementConfig::InDram,
+        "prefetch" => MovementConfig::Prefetch,
+        other => panic!("--movement expects off|external|in_dram|prefetch, got {other:?}"),
+    }
+}
+
 /// Build a fleet from the shared CLI flags (`--queue-cap`, `--no-steal`,
-/// `--seed`), pump the synthetic workload through it, and return the host
-/// wall time plus the final fleet snapshot. Shared by `serve --devices N`
-/// and `cluster` so the two paths cannot drift.
+/// `--movement`, `--seed`), pump the synthetic workload through it, and
+/// return the host wall time plus the final fleet snapshot. Shared by
+/// `serve --devices N` and `cluster` so the two paths cannot drift.
 fn pump_fleet(
     args: &Args,
     devices: usize,
@@ -446,6 +462,7 @@ fn pump_fleet(
             max_inflight_per_device: args.usize("queue-cap", 64),
         },
         steal: !args.has("no-steal"),
+        movement: movement_mode(args),
         ..ClusterConfig::uniform(devices, per_device)
     });
     let mut rng = Rng::new(args.u64("seed", 3));
@@ -529,7 +546,8 @@ fn cmd_cluster(args: &Args) {
                     .field("requests", requests as u64)
                     .field("bits", bits as u64)
                     .field("steal", !args.has("no-steal"))
-                    .field("queue_cap", args.usize("queue-cap", 64) as u64),
+                    .field("queue_cap", args.usize("queue-cap", 64) as u64)
+                    .field("movement", movement_mode(args).name()),
             )
             .field("runs", Json::Arr(entries));
         println!("{}", out.to_string_pretty());

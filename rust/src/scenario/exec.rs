@@ -346,11 +346,15 @@ fn submit_event(
                         // rank's rows and resubmit
                         acct.requeues += 1;
                         attempts += 1;
+                        // restage (not plain register): the movement
+                        // fabric prices the landing hop back into the
+                        // rank's pinned rows — warm-up the prefetch mode
+                        // overlaps with execution
                         pool.slots[rank] = pool.rows[rank]
                             .iter()
                             .map(|row| {
                                 cluster
-                                    .try_register_resident(owner, Payload::Bits(row.clone()))
+                                    .try_restage_resident(owner, Payload::Bits(row.clone()))
                                     .ok()
                             })
                             .collect();
@@ -437,6 +441,19 @@ fn flatten_metrics(
     put("capacity_refusals", Json::U64(snap.capacity_refusals));
     put("replications", Json::U64(snap.replications));
     put("migrations", Json::U64(snap.migrations));
+    put("movement_moves", Json::U64(snap.movement.total_moves()));
+    put(
+        "movement_in_dram_moves",
+        Json::U64(snap.movement.in_dram_moves()),
+    );
+    put(
+        "movement_in_dram_bytes",
+        Json::U64(snap.movement.in_dram_bytes()),
+    );
+    put(
+        "prefetch_hidden_ns",
+        Json::U64(snap.movement.prefetch_hidden_ns),
+    );
     for t in &snap.fairness {
         let p = format!("tenant.{}", t.tenant);
         let mut tput = |k: &str, v: Json| m.push((format!("{p}.{k}"), v));

@@ -13,7 +13,8 @@
 //! errors (the TOML reader records where each key was defined).
 
 use crate::cluster::{
-    CapacityConfig, ClusterConfig, CoalesceConfig, ReplicationConfig, ReplicationPolicy,
+    CapacityConfig, ClusterConfig, CoalesceConfig, MovementConfig, ReplicationConfig,
+    ReplicationPolicy,
 };
 use crate::coordinator::ServiceConfig;
 use crate::dram::geometry::{DeviceCapacity, DramGeometry};
@@ -168,6 +169,9 @@ pub struct RuntimeSpec {
     /// executor-driven rebalance sweep every N completions (0 = off)
     pub rebalance_every: usize,
     pub replication: ReplicationSpec,
+    /// how placement movement's landing hops are priced and scheduled
+    /// (`off` | `external` | `in_dram` | `prefetch`)
+    pub movement: MovementConfig,
 }
 
 #[derive(Clone, Debug)]
@@ -193,6 +197,7 @@ pub struct CaseSpec {
     pub capacity: Option<CapacitySpec>,
     pub eviction: Option<EvictionMode>,
     pub rebalance_every: Option<usize>,
+    pub movement: Option<MovementConfig>,
     pub requests: Option<usize>,
     pub window: Option<usize>,
     pub seed: Option<u64>,
@@ -276,6 +281,7 @@ pub struct ResolvedCase {
     pub eviction: EvictionMode,
     pub rebalance_every: usize,
     pub replication: ReplicationSpec,
+    pub movement: MovementConfig,
     pub requests: usize,
     pub window: usize,
     pub process: ArrivalProcess,
@@ -352,6 +358,7 @@ impl ResolvedCase {
         cfg.admission.max_inflight_per_device = self.queue_cap;
         cfg.capacity = CapacityConfig { capacity, policy };
         cfg.coalesce = self.coalesce.config(self.max_hold);
+        cfg.movement = self.movement;
         cfg
     }
 
@@ -411,6 +418,7 @@ impl ScenarioSpec {
             eviction: case.eviction.unwrap_or(self.runtime.eviction),
             rebalance_every: case.rebalance_every.unwrap_or(self.runtime.rebalance_every),
             replication: self.runtime.replication.clone(),
+            movement: case.movement.unwrap_or(self.runtime.movement),
             requests: case.requests.unwrap_or(self.arrival.requests),
             window: case.window.unwrap_or(self.arrival.window),
             process: self.arrival.process.clone(),
@@ -801,6 +809,19 @@ impl<'a> Validator<'a> {
         }
     }
 
+    fn movement_mode(&self, s: &str, path: &str) -> Result<MovementConfig, ScenarioError> {
+        match s {
+            "off" => Ok(MovementConfig::Off),
+            "external" => Ok(MovementConfig::External),
+            "in_dram" => Ok(MovementConfig::InDram),
+            "prefetch" => Ok(MovementConfig::Prefetch),
+            other => self.err(
+                path,
+                format!("unknown movement mode `{other}` (off|external|in_dram|prefetch)"),
+            ),
+        }
+    }
+
     fn eviction_mode(&self, s: &str, path: &str) -> Result<EvictionMode, ScenarioError> {
         match s {
             "fail_fast" => Ok(EvictionMode::FailFast),
@@ -865,6 +886,7 @@ impl<'a> Validator<'a> {
                 "eviction",
                 "rebalance_every",
                 "replication",
+                "movement",
             ],
         )?;
         let coalesce = self.coalesce_mode(
@@ -878,6 +900,10 @@ impl<'a> Validator<'a> {
             "runtime.eviction",
         )?;
         let rebalance_every = self.usize_field(node, p, "rebalance_every", Some(0))?;
+        let movement = self.movement_mode(
+            &self.str_field(node, p, "movement", Some("off"))?,
+            "runtime.movement",
+        )?;
         let rp = "runtime.replication";
         let empty_rep = Json::obj();
         let rep = node.get("replication").unwrap_or(&empty_rep);
@@ -893,6 +919,7 @@ impl<'a> Validator<'a> {
             eviction,
             rebalance_every,
             replication,
+            movement,
         })
     }
 
@@ -1047,6 +1074,7 @@ impl<'a> Validator<'a> {
                     "capacity_share",
                     "eviction",
                     "rebalance_every",
+                    "movement",
                     "requests",
                     "window",
                     "seed",
@@ -1096,6 +1124,11 @@ impl<'a> Validator<'a> {
                 Some(Json::Str(s)) => Some(self.eviction_mode(s, &join(&cp, "eviction"))?),
                 Some(_) => return self.err(&join(&cp, "eviction"), "expected an eviction policy"),
             };
+            let movement = match c.get("movement") {
+                None => None,
+                Some(Json::Str(s)) => Some(self.movement_mode(s, &join(&cp, "movement"))?),
+                Some(_) => return self.err(&join(&cp, "movement"), "expected a movement mode"),
+            };
             let steal = match c.get("steal") {
                 None => None,
                 Some(Json::Bool(b)) => Some(*b),
@@ -1121,6 +1154,7 @@ impl<'a> Validator<'a> {
                 capacity: self.capacity_of(c, &cp)?,
                 eviction,
                 rebalance_every: opt_usize("rebalance_every")?,
+                movement,
                 requests,
                 window: opt_usize("window")?,
                 seed,

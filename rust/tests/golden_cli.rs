@@ -360,6 +360,38 @@ fn assert_latency_summary(obj: &Json, ctx: &str) {
     );
 }
 
+/// Assert `snap` carries the movement-fabric decomposition: the
+/// `prefetch_hidden_ns` total plus one counter object per copy tier, in
+/// the stable `MOVEMENT_TIERS` order.
+fn assert_movement_schema(snap: &Json, ctx: &str) {
+    let movement = snap.get("movement").expect("movement object");
+    assert!(
+        movement.get("prefetch_hidden_ns").is_some(),
+        "{ctx}: movement.prefetch_hidden_ns missing"
+    );
+    let tiers = movement
+        .get("tiers")
+        .and_then(Json::as_arr)
+        .expect("movement.tiers array");
+    let labels: Vec<&str> = tiers
+        .iter()
+        .map(|t| t.get("tier").and_then(Json::as_str).expect("tier label"))
+        .collect();
+    assert_eq!(
+        labels,
+        vec!["same_subarray", "same_bank", "same_device", "cross_device"],
+        "{ctx}: movement tier order drifted"
+    );
+    for t in tiers {
+        for key in ["moves", "copied_bytes", "copy_cycles"] {
+            assert!(
+                t.get(key).is_some(),
+                "{ctx}: movement tier key `{key}` missing in {t:?}"
+            );
+        }
+    }
+}
+
 #[test]
 fn cluster_json_schema_is_pinned() {
     let out = run(&[
@@ -398,6 +430,8 @@ fn cluster_json_schema_is_pinned() {
             "snapshot key `{key}` missing:\n{out}"
         );
     }
+    // per-tier movement counters ride on every snapshot export
+    assert_movement_schema(snap, "cluster snapshot");
     // fleet + per-device latency and queue-sojourn distributions
     assert_latency_summary(
         snap.get("queue_sojourn_ns").expect("queue_sojourn_ns"),
@@ -458,6 +492,7 @@ fn trace_json_schema_is_pinned() {
     }
     // the run's fleet snapshot rides along, same schema as cluster --json
     let snap = doc.get("snapshot").expect("snapshot");
+    assert_movement_schema(snap, "trace snapshot");
     assert_latency_summary(
         snap.get("queue_sojourn_ns").expect("queue_sojourn_ns"),
         "trace fleet queue sojourn",

@@ -367,6 +367,112 @@ fn prop_evicted_handles_stay_defined() {
     });
 }
 
+/// Movement-fabric pin discipline under concurrent churn: three threads
+/// hammer a capacity-bounded registry with register / replicate /
+/// migrate / evict / remove, and afterwards (a) `check_invariants` holds
+/// (footprint counters equal the recomputed per-region sum, pins stay
+/// unique), (b) no two resident rows on a device share a pinned
+/// (bank, sub-array, row) coordinate, (c) every surviving replica holds
+/// a pinned row on its device, and (d) no device overdrafts capacity.
+#[test]
+fn prop_pin_coordinates_unique_and_footprint_conserved_under_churn() {
+    use std::sync::Arc;
+    prop::check_seeds("movement_pins", &[0x1DEA, 0xBEEF, 0xC0A1], |rng| {
+        let devices = 3usize;
+        let cap = DeviceCapacity::of_bits(4096);
+        let reg = Arc::new(
+            ResidencyRegistry::with_capacity(
+                devices,
+                CapacityConfig {
+                    capacity: cap,
+                    policy: EvictionPolicy::Lru,
+                },
+                CopyCostModel::default(),
+            )
+            .with_geometry(DramGeometry::tiny()),
+        );
+        let mut handles = Vec::new();
+        for t in 0..3u64 {
+            let reg = Arc::clone(&reg);
+            let mut trng = Rng::new(rng.next_u64() ^ (t << 32));
+            handles.push(std::thread::spawn(move || -> Vec<RegionId> {
+                let mut live: Vec<RegionId> = Vec::new();
+                for _ in 0..80 {
+                    let dev = DeviceId(trng.below(3) as usize);
+                    match trng.below(6) {
+                        0 | 1 => {
+                            let bits = 64 * (1 + trng.below(8)) as usize;
+                            // under concurrent eviction pressure a
+                            // refusal is a defined outcome, not a bug
+                            if let Ok(r) =
+                                reg.try_register(dev, Payload::Bits(BitRow::zeros(bits)))
+                            {
+                                live.push(r);
+                            }
+                        }
+                        2 if !live.is_empty() => {
+                            let r = live[trng.below(live.len() as u64) as usize];
+                            // another thread's register may have evicted
+                            // `r` already — Evicted is a defined outcome
+                            let _ = reg.migrate(r, dev);
+                        }
+                        3 if !live.is_empty() => {
+                            let r = live[trng.below(live.len() as u64) as usize];
+                            let _ = reg.replicate(r, dev);
+                        }
+                        4 if !live.is_empty() => {
+                            let r = live[trng.below(live.len() as u64) as usize];
+                            let _ = reg.evict_from(r, dev);
+                        }
+                        5 if !live.is_empty() => {
+                            let r =
+                                live.swap_remove(trng.below(live.len() as u64) as usize);
+                            let _ = reg.remove(r);
+                        }
+                        _ => {}
+                    }
+                }
+                live
+            }));
+        }
+        let mut live: Vec<RegionId> = Vec::new();
+        for h in handles {
+            live.extend(h.join().expect("churn thread panicked"));
+        }
+        reg.check_invariants()
+            .map_err(|e| format!("after churn: {e}"))?;
+        for d in 0..devices {
+            let dev = DeviceId(d);
+            let pins = reg.pins_on(dev);
+            let mut seen = std::collections::HashSet::new();
+            for (r, c) in &pins {
+                if !seen.insert((c.bank, c.subarray, c.row)) {
+                    return Err(format!(
+                        "device {d}: {r} pinned to an occupied row {c:?}"
+                    ));
+                }
+            }
+            let bits = reg.resident_bits_on(dev);
+            if bits > cap.resident_bits {
+                return Err(format!("device {d} over capacity ({bits} bits)"));
+            }
+        }
+        // homes and pins stay parallel: every surviving replica owns a row
+        for &r in &live {
+            if let Some(devs) = reg.replicas(r) {
+                for dev in devs {
+                    if reg.pin_of(r, dev).is_none() {
+                        return Err(format!(
+                            "{r} resident on {dev} without a pinned row"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// What one coalescer push recorded, keyed by the item's fleet sequence
 /// number (the coalescer packing properties replay groups against it).
 type PushedMap = std::collections::HashMap<u64, (usize, BulkOp, usize)>;
