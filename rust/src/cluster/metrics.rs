@@ -24,7 +24,7 @@ use std::sync::Mutex;
 use crate::coordinator::MetricsSnapshot;
 use crate::dram::timing::{MovementTier, MOVEMENT_TIERS};
 use crate::obs::json::Json;
-use crate::obs::Histogram;
+use crate::obs::{Histogram, TelemetrySummary};
 use crate::util::stats::{fmt_ns, fmt_rate};
 
 use super::residency::{CopyCharge, RegionId};
@@ -493,6 +493,10 @@ pub struct FleetSnapshot {
     /// per-tenant fairness breakdown — empty unless a scenario executor
     /// attached one via [`FleetSnapshot::with_fairness`]
     pub fairness: Vec<TenantBreakdown>,
+    /// continuous-telemetry summary — all-zero/disabled unless a scenario
+    /// executor attached its recorder via
+    /// [`FleetSnapshot::with_telemetry`]
+    pub telemetry: TelemetrySummary,
 }
 
 impl FleetSnapshot {
@@ -529,6 +533,13 @@ impl FleetSnapshot {
     /// virtual-clock accounting) to this snapshot.
     pub fn with_fairness(mut self, fairness: Vec<TenantBreakdown>) -> Self {
         self.fairness = fairness;
+        self
+    }
+
+    /// Attach a continuous-telemetry summary (the scenario executor's
+    /// virtual-clock time-series recorder) to this snapshot.
+    pub fn with_telemetry(mut self, telemetry: TelemetrySummary) -> Self {
+        self.telemetry = telemetry;
         self
     }
 
@@ -583,6 +594,7 @@ impl FleetSnapshot {
             .field("waves", self.merged.waves)
             .field("wave_slots_filled", self.merged.wave_slots_filled)
             .field("wave_slots_total", self.merged.wave_slots_total)
+            .field("telemetry", self.telemetry.to_json())
             .field("fairness", Json::Arr(fairness))
             .field("per_device", Json::Arr(per_device))
     }
@@ -629,6 +641,7 @@ impl FleetSnapshot {
             .field("makespan_ns", self.merged.sim_ns)
             .field("makespan_with_copy_ns", self.makespan_with_copy_ns())
             .field("queue_sojourn_ns", self.queue_wait.summary_json())
+            .field("telemetry", self.telemetry.to_json())
             .field("fleet", self.merged.to_json());
         // fairness rides along only when a scenario executor attached a
         // breakdown — plain `drim cluster` output keeps its pinned schema
@@ -819,6 +832,7 @@ mod tests {
             queue_wait_per_device: f.queue_wait_histograms(),
             tombstones_compacted: 5,
             fairness: Vec::new(),
+            telemetry: TelemetrySummary::default(),
         };
         let r = snapshot.report();
         assert!(r.contains("shed: 2"), "{r}");
@@ -853,6 +867,13 @@ mod tests {
         let sojourn = doc.get("queue_sojourn_ns").unwrap();
         assert_eq!(sojourn.get("count").unwrap().as_f64(), Some(2.0));
         assert!(sojourn.get("p99").unwrap().as_f64().unwrap() >= 500.0);
+        // the telemetry block is always present; plain cluster snapshots
+        // carry the disabled all-zero form
+        let telemetry = doc.get("telemetry").unwrap();
+        assert!(matches!(telemetry.get("enabled"), Some(Json::Bool(false))));
+        assert_eq!(telemetry.get("samples").unwrap().as_f64(), Some(0.0));
+        assert_eq!(telemetry.get("interval_ns").unwrap().as_f64(), Some(0.0));
+        assert_eq!(telemetry.get("last_sample_ns").unwrap().as_f64(), Some(0.0));
         let devs = doc.get("per_device").unwrap().as_arr().unwrap();
         assert_eq!(devs.len(), 1);
         assert!(devs[0].get("latency_ns").unwrap().get("p50").is_some());

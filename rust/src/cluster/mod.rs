@@ -875,6 +875,7 @@ impl DrimCluster {
             queue_wait_per_device: self.fleet.queue_wait_histograms(),
             tombstones_compacted: self.registry.tombstones_compacted(),
             fairness: Vec::new(),
+            telemetry: Default::default(),
         }
     }
 

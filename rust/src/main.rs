@@ -49,6 +49,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "cluster" => cmd_cluster(&args),
         "bench" => cmd_bench(&args),
+        "perf" => cmd_perf(&args),
         "trace" => cmd_trace(&args),
         _ => {
             println!("{}", HELP);
@@ -111,6 +112,21 @@ COMMANDS:
                                artifact JSON on stdout and nothing else;
                                --out DIR keeps an extra timestamped copy;
                                exit 1 = gate failure, 2 = invalid scenario)
+  perf list [DIR]             list the BENCH_*.json artifacts in DIR
+                              (default: the repo root, where benches and
+                               `bench --scenario` write them)
+  perf diff BASELINE CURRENT [--tolerance PCT | --tolerance KEY=PCT]...
+                              render per-metric deltas between two
+                              artifacts; direction-aware (slower wall
+                              time / lower throughput = regression);
+                              exit 1 if any delta breaches tolerance or
+                              a gate went pass→fail (default 10%;
+                              KEY=PCT overrides keys containing KEY)
+  perf check --baseline DIR [--dir DIR] [--tolerance ...]
+                              compare every baseline artifact against
+                              the current artifact of the same name in
+                              --dir (default: repo root); exit 1 on any
+                              regression — the CI perf-trajectory gate
   trace [--devices N] [--requests N] [--bits N] [--seed S] [--sample K]
         [--top N] [--coalesce] [--chrome FILE] [--json]
                               run the fleet workload with the structured
@@ -1014,6 +1030,245 @@ fn cmd_bench(args: &Args) {
     }
     if !outcome.ok() {
         std::process::exit(1);
+    }
+}
+
+/// `drim perf`: the perf-trajectory toolkit over `BENCH_*.json`
+/// artifacts. `list` inventories a directory, `diff` renders the
+/// direction-aware per-metric deltas between two artifacts, and `check`
+/// compares every checked-in baseline against the current artifact of
+/// the same name — the CI regression gate. Exit 1 = regression beyond
+/// tolerance, 2 = usage or I/O error.
+fn cmd_perf(args: &Args) {
+    use drim::util::bench::{
+        compare_artifacts, PerfArtifact, PerfComparison, Tolerance,
+    };
+    use std::path::{Path, PathBuf};
+
+    fn fail(msg: String) -> ! {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+
+    fn repo_root() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+    }
+
+    fn load(path: &Path) -> PerfArtifact {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| fail(format!("perf: {}: {e}", path.display())));
+        PerfArtifact::parse(&text)
+            .unwrap_or_else(|e| fail(format!("perf: {}: {e}", path.display())))
+    }
+
+    /// The `BENCH_*.json` files directly under `dir`, sorted by name so
+    /// every listing and check runs in a stable order.
+    fn artifacts_in(dir: &Path) -> Vec<PathBuf> {
+        let entries = std::fs::read_dir(dir)
+            .unwrap_or_else(|e| fail(format!("perf: {}: {e}", dir.display())));
+        let mut out: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// `--tolerance PCT` sets the default; `--tolerance KEY=PCT` adds a
+    /// substring override. Repeatable, applied in argv order.
+    fn tolerance_from(args: &Args) -> Tolerance {
+        let mut tol = Tolerance::default();
+        for t in args.get_all("tolerance") {
+            if let Some((pat, pct)) = t.split_once('=') {
+                let pct: f64 = pct.parse().unwrap_or_else(|_| {
+                    fail(format!("perf: --tolerance {t}: `{pct}` is not a number"))
+                });
+                tol.overrides.push((pat.to_string(), pct));
+            } else {
+                tol.default_pct = t.parse().unwrap_or_else(|_| {
+                    fail(format!("perf: --tolerance expects PCT or KEY=PCT, got `{t}`"))
+                });
+            }
+        }
+        tol
+    }
+
+    /// Compact value rendering across nine orders of magnitude.
+    fn fmt_val(v: f64) -> String {
+        if v == 0.0 {
+            "0".to_string()
+        } else if v.abs() >= 1e6 || v.abs() < 1e-3 {
+            format!("{v:.3e}")
+        } else {
+            format!("{v:.3}")
+        }
+    }
+
+    fn fmt_pct(pct: f64) -> String {
+        if pct.is_infinite() {
+            (if pct > 0.0 { "new" } else { "-new" }).to_string()
+        } else {
+            format!("{pct:+.2}%")
+        }
+    }
+
+    /// Print one comparison's regressions and drift; returns its verdict.
+    fn verdict(name: &str, cmp: &PerfComparison, tol: &Tolerance) -> bool {
+        let ok = cmp.ok();
+        println!(
+            "{} {name}: {} metric(s), {} regression(s), {} gate regression(s)",
+            if ok { "PASS" } else { "FAIL" },
+            cmp.deltas.len(),
+            cmp.regressions().count(),
+            cmp.gate_regressions.len(),
+        );
+        for d in cmp.regressions() {
+            println!(
+                "    {} {}  {} → {}  ({}, tolerance {}%)",
+                d.direction.glyph(),
+                d.key,
+                fmt_val(d.baseline),
+                fmt_val(d.current),
+                fmt_pct(d.change_pct),
+                tol.pct_for(&d.key),
+            );
+        }
+        for g in &cmp.gate_regressions {
+            println!("    gate {g}");
+        }
+        if !cmp.missing.is_empty() {
+            println!("    note: {} baseline metric(s) missing now", cmp.missing.len());
+        }
+        if !cmp.added.is_empty() {
+            println!("    note: {} new metric(s) not in baseline", cmp.added.len());
+        }
+        ok
+    }
+
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "list" => {
+            let dir = args
+                .positional
+                .get(2)
+                .map(PathBuf::from)
+                .unwrap_or_else(repo_root);
+            let paths = artifacts_in(&dir);
+            if paths.is_empty() {
+                println!("no BENCH_*.json artifacts in {}", dir.display());
+                return;
+            }
+            let mut t = Table::new(&["artifact", "bench", "metrics", "gates", "ok"]);
+            for p in &paths {
+                let a = load(p);
+                let passed = a.gates.iter().filter(|(_, ok)| *ok).count();
+                t.row(&[
+                    p.file_name().unwrap().to_string_lossy().into_owned(),
+                    a.bench.clone(),
+                    format!("{}", a.metrics.len()),
+                    format!("{passed}/{}", a.gates.len()),
+                    format!("{}", passed == a.gates.len()),
+                ]);
+            }
+            t.print();
+        }
+        "diff" => {
+            let (Some(base_path), Some(cur_path)) =
+                (args.positional.get(2), args.positional.get(3))
+            else {
+                fail("perf diff: expects BASELINE and CURRENT artifact paths".into());
+            };
+            let tol = tolerance_from(args);
+            let base = load(Path::new(base_path));
+            let cur = load(Path::new(cur_path));
+            let cmp = compare_artifacts(&base, &cur, &tol);
+            println!(
+                "perf diff `{}`: {} vs {}\n",
+                base.bench, base_path, cur_path
+            );
+            let mut t = Table::new(&["metric", "dir", "baseline", "current", "change", "verdict"]);
+            for d in &cmp.deltas {
+                t.row(&[
+                    d.key.clone(),
+                    d.direction.glyph().to_string(),
+                    fmt_val(d.baseline),
+                    fmt_val(d.current),
+                    fmt_pct(d.change_pct),
+                    if d.regressed { "REGRESSED" } else { "ok" }.to_string(),
+                ]);
+            }
+            t.print();
+            for key in &cmp.missing {
+                println!("missing in current: {key}");
+            }
+            for key in &cmp.added {
+                println!("new in current: {key}");
+            }
+            for g in &cmp.gate_regressions {
+                println!("gate regression: {g}");
+            }
+            println!();
+            if !verdict(&base.bench, &cmp, &tol) {
+                std::process::exit(1);
+            }
+        }
+        "check" => {
+            let Some(bdir) = args.get("baseline") else {
+                fail("perf check: --baseline DIR is required".into());
+            };
+            let bdir = Path::new(bdir);
+            let cdir = args
+                .get("dir")
+                .map(PathBuf::from)
+                .unwrap_or_else(repo_root);
+            let tol = tolerance_from(args);
+            let baselines = artifacts_in(bdir);
+            if baselines.is_empty() {
+                fail(format!("perf check: no BENCH_*.json baselines in {}", bdir.display()));
+            }
+            println!(
+                "perf check: {} baseline(s) from {} vs {} (default tolerance {}%)\n",
+                baselines.len(),
+                bdir.display(),
+                cdir.display(),
+                tol.default_pct,
+            );
+            let mut failed = false;
+            for bpath in &baselines {
+                let name = bpath.file_name().unwrap().to_string_lossy();
+                let cpath = cdir.join(name.as_ref());
+                if !cpath.exists() {
+                    println!("SKIP {name}: no current artifact at {}", cpath.display());
+                    continue;
+                }
+                let base = load(bpath);
+                let cur = load(&cpath);
+                if base.bench != cur.bench {
+                    fail(format!(
+                        "perf check: {name}: baseline bench `{}` vs current `{}`",
+                        base.bench, cur.bench
+                    ));
+                }
+                let cmp = compare_artifacts(&base, &cur, &tol);
+                if !verdict(&base.bench, &cmp, &tol) {
+                    failed = true;
+                }
+            }
+            if failed {
+                std::process::exit(1);
+            }
+        }
+        other => {
+            fail(format!(
+                "perf: expects a subcommand `list`, `diff A B` or `check --baseline DIR`, got `{other}` (see `drim help`)"
+            ));
+        }
     }
 }
 

@@ -163,6 +163,23 @@ impl Histogram {
         self.max as f64
     }
 
+    /// Number of recorded values at or above `threshold`, resolved at
+    /// bucket granularity: the whole bucket containing `threshold` is
+    /// counted, so the result may overcount by up to one bucket's
+    /// population (≤12.5% threshold error) but never undercounts, and it
+    /// is monotone non-increasing in `threshold`. Exact at the extremes
+    /// (`threshold ≤ min` and `threshold > max`). Backs the SLO engine's
+    /// deterministic violation counting.
+    pub fn count_ge(&self, threshold: u64) -> u64 {
+        if self.count == 0 || threshold > self.max {
+            return 0;
+        }
+        if threshold <= self.min {
+            return self.count;
+        }
+        self.counts.iter().skip(bucket_index(threshold)).sum()
+    }
+
     /// The standard report triple.
     pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
         (
@@ -315,6 +332,33 @@ mod tests {
         assert!(prev <= h.max() as f64 + 0.5);
         let (p50, p95, p99) = h.p50_p95_p99();
         assert!(p50 <= p95 && p95 <= p99 && p99 <= h.max() as f64);
+    }
+
+    #[test]
+    fn count_ge_is_monotone_and_exact_at_extremes() {
+        let mut h = Histogram::new();
+        for v in [3u64, 7, 100, 1_000, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count_ge(0), 5);
+        assert_eq!(h.count_ge(3), 5);
+        assert_eq!(h.count_ge(1_000_001), 0);
+        assert_eq!(h.count_ge(u64::MAX), 0);
+        // exact where buckets are exact (values < SUBS)
+        assert_eq!(h.count_ge(4), 4);
+        // never undercounts, monotone non-increasing
+        let mut prev = u64::MAX;
+        for t in 0..2_000u64 {
+            let c = h.count_ge(t);
+            let exact = [3u64, 7, 100, 1_000, 1_000_000]
+                .iter()
+                .filter(|&&v| v >= t)
+                .count() as u64;
+            assert!(c >= exact, "t={t}: count_ge={c} < exact {exact}");
+            assert!(c <= prev, "t={t}: not monotone");
+            prev = c;
+        }
+        assert_eq!(Histogram::new().count_ge(0), 0);
     }
 
     #[test]

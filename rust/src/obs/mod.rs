@@ -18,14 +18,26 @@
 //!   key order (writer + strict parser), used by `drim cluster --json`,
 //!   `drim trace`, and the `BENCH_*.json` trajectory artifacts written
 //!   by [`crate::util::bench::BenchReport`].
+//! - [`timeseries::TimeSeriesRecorder`] — bounded virtual-clock interval
+//!   rings the scenario executor feeds (utilization, queue depth,
+//!   admission/shed rate, sojourn histogram deltas), byte-deterministic
+//!   under a fixed seed because no wall clock or live atomic is read.
+//! - [`slo::SloConfig`] / [`slo::evaluate`] — declarative SLO specs
+//!   (`[[slo]]` blocks in scenario TOML) evaluated as error-budget
+//!   burn rates over the recorded series, reported as first-class gates
+//!   by `drim bench --scenario`.
 //!
-//! See `docs/ARCHITECTURE.md` § Observability for the event taxonomy and
-//! the JSON schemas.
+//! See `docs/ARCHITECTURE.md` § Observability and § Continuous telemetry
+//! & SLOs for the event taxonomy and the JSON schemas.
 
 pub mod hist;
 pub mod json;
+pub mod slo;
+pub mod timeseries;
 pub mod trace;
 
 pub use hist::Histogram;
 pub use json::Json;
+pub use slo::{SloConfig, SloKind, SloOutcome};
+pub use timeseries::{TelemetrySummary, TimeSeriesRecorder};
 pub use trace::{Stage, StageStats, Trace, TraceEvent, Tracer};

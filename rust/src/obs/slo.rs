@@ -1,0 +1,303 @@
+//! Declarative SLO evaluation with error-budget burn rates over a
+//! recorded [`TimeSeriesRecorder`] series.
+//!
+//! An SLO here is SRE-shaped: an *objective* ("`objective_pct`% of units
+//! must be good"), a per-unit goodness predicate ([`SloKind`]), and a
+//! *burn-rate* gate. The allowed error budget is the complement of the
+//! objective (`p99` ⇒ 1% of units may be bad); over every sliding window
+//! of `window` consecutive samples the engine computes
+//!
+//! ```text
+//! burn = (bad units in window / total units in window) / allowed_fraction
+//! ```
+//!
+//! so `burn = 1.0` means the window consumed its budget exactly as fast
+//! as the objective permits, and `burn = 14` is the classic "page now"
+//! fast-burn signal. The SLO **passes** iff the worst window's burn rate
+//! stays at or below `max_burn`.
+//!
+//! Everything is computed from the virtual-clock series, so evaluation is
+//! deterministic and replayable: the same `(scenario, seed)` pair yields
+//! byte-identical SLO outcomes in `BENCH_*.json`.
+//!
+//! Sojourn violation counts come from [`Histogram::count_ge`], which
+//! resolves at bucket granularity (≤12.5% threshold error, never an
+//! undercount) — budgets are latency *envelopes*, not exact cutoffs.
+
+use super::hist::Histogram;
+use super::timeseries::{Sample, TimeSeriesRecorder};
+
+/// What a unit is and when it is good.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SloKind {
+    /// Units are completed requests; a unit is bad when its virtual
+    /// sojourn exceeds `budget_ns`. `lane = None` evaluates the
+    /// fleet-wide merge, `Some(name)` a single recorder lane (tenant).
+    Sojourn {
+        budget_ns: u64,
+        lane: Option<String>,
+    },
+    /// Units are sample intervals; an interval is bad when its admission
+    /// throughput (`d_admitted / interval`) falls below `min_per_sec`.
+    /// Leading/trailing idle intervals (no offered traffic) are skipped —
+    /// a throughput floor constrains the fleet while load exists, not the
+    /// silence around it.
+    AdmissionRate { min_per_sec: f64 },
+}
+
+/// One declarative SLO (a `[[slo]]` block in scenario TOML, minus the
+/// case binding which the scenario layer owns).
+#[derive(Clone, Debug)]
+pub struct SloConfig {
+    pub name: String,
+    pub kind: SloKind,
+    /// objective: this percentage of units must be good (0 < pct < 100)
+    pub objective_pct: f64,
+    /// burn-rate window in samples (clamped to the series length)
+    pub window: usize,
+    /// gate: worst sliding-window burn rate must stay ≤ this
+    pub max_burn: f64,
+}
+
+/// One evaluated SLO — rendered as a first-class gate by
+/// `drim bench --scenario`.
+#[derive(Clone, Debug)]
+pub struct SloOutcome {
+    pub name: String,
+    pub pass: bool,
+    /// human-readable objective/burn rendering
+    pub detail: String,
+    /// worst sliding-window burn rate
+    pub max_burn: f64,
+    /// whole-series burn rate
+    pub overall_burn: f64,
+    /// bad units over the whole series
+    pub bad: u64,
+    /// total units over the whole series
+    pub total: u64,
+    /// sliding windows evaluated
+    pub windows: usize,
+}
+
+/// Per-sample (bad, total) unit counts for one SLO kind.
+fn sample_units(kind: &SloKind, s: &Sample, interval_ns: u64, lanes: &[String]) -> (u64, u64) {
+    match kind {
+        SloKind::Sojourn { budget_ns, lane } => {
+            let hist: Histogram = match lane {
+                None => s.sojourn_merged(),
+                Some(name) => match lanes.iter().position(|l| l == name) {
+                    Some(i) => s.sojourn[i].clone(),
+                    None => Histogram::new(),
+                },
+            };
+            // violation = sojourn strictly above the budget
+            (hist.count_ge(budget_ns.saturating_add(1)), hist.count())
+        }
+        SloKind::AdmissionRate { min_per_sec } => {
+            if s.d_offered == 0 {
+                return (0, 0); // idle interval: not a unit
+            }
+            let rate = s.d_admitted as f64 * 1e9 / interval_ns as f64;
+            ((rate < *min_per_sec) as u64, 1)
+        }
+    }
+}
+
+/// Evaluate one SLO against a recorded series.
+pub fn evaluate(slo: &SloConfig, rec: &TimeSeriesRecorder) -> SloOutcome {
+    let samples = rec.samples();
+    let units: Vec<(u64, u64)> = samples
+        .iter()
+        .map(|s| sample_units(&slo.kind, s, rec.interval_ns(), rec.lanes()))
+        .collect();
+    // the complement of the objective, floored so a 100% objective yields
+    // an astronomically-finite burn instead of ∞ (JSON-safe)
+    let allowed = ((100.0 - slo.objective_pct) / 100.0).max(1e-12);
+
+    let bad: u64 = units.iter().map(|u| u.0).sum();
+    let total: u64 = units.iter().map(|u| u.1).sum();
+    let overall_burn = if total == 0 {
+        0.0
+    } else {
+        (bad as f64 / total as f64) / allowed
+    };
+
+    let window = slo.window.max(1).min(units.len().max(1));
+    let mut max_burn = 0.0f64;
+    let mut windows = 0usize;
+    if !units.is_empty() {
+        for w in units.windows(window) {
+            let wbad: u64 = w.iter().map(|u| u.0).sum();
+            let wtotal: u64 = w.iter().map(|u| u.1).sum();
+            if wtotal == 0 {
+                continue; // no units in view — nothing to burn
+            }
+            windows += 1;
+            let burn = (wbad as f64 / wtotal as f64) / allowed;
+            max_burn = max_burn.max(burn);
+        }
+    }
+
+    let pass = max_burn <= slo.max_burn;
+    let what = match &slo.kind {
+        SloKind::Sojourn { budget_ns, lane } => match lane {
+            Some(l) => format!("sojourn[{l}] <= {budget_ns}ns"),
+            None => format!("sojourn <= {budget_ns}ns"),
+        },
+        SloKind::AdmissionRate { min_per_sec } => {
+            format!("admission_rate >= {min_per_sec}/s")
+        }
+    };
+    let detail = format!(
+        "{what} for {}% of units: bad {bad}/{total}, max burn {:.3} (limit {}, \
+         window {window} of {} samples)",
+        slo.objective_pct,
+        max_burn,
+        slo.max_burn,
+        samples.len(),
+    );
+    SloOutcome {
+        name: slo.name.clone(),
+        pass,
+        detail,
+        max_burn,
+        overall_burn,
+        bad,
+        total,
+        windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeseries::TimeSeriesRecorder;
+
+    fn recorder_with_sojourns(per_bucket: &[&[u64]]) -> TimeSeriesRecorder {
+        let mut r = TimeSeriesRecorder::new(100, 64, 1, vec!["t".into()]);
+        for (i, bucket) in per_bucket.iter().enumerate() {
+            let t = i as u64 * 100 + 1;
+            for &sj in *bucket {
+                r.record_completion(t, 0, sj, 10);
+            }
+        }
+        r
+    }
+
+    fn sojourn_slo(budget: u64, pct: f64, window: usize, max_burn: f64) -> SloConfig {
+        SloConfig {
+            name: "s".into(),
+            kind: SloKind::Sojourn {
+                budget_ns: budget,
+                lane: None,
+            },
+            objective_pct: pct,
+            window,
+            max_burn,
+        }
+    }
+
+    #[test]
+    fn perfect_compliance_burns_nothing() {
+        let r = recorder_with_sojourns(&[&[10, 20], &[30], &[40, 50]]);
+        let o = evaluate(&sojourn_slo(1_000, 99.0, 2, 1.0), &r);
+        assert!(o.pass);
+        assert_eq!((o.bad, o.total), (0, 5));
+        assert_eq!(o.max_burn, 0.0);
+        assert_eq!(o.overall_burn, 0.0);
+    }
+
+    #[test]
+    fn total_violation_burns_fast_and_fails() {
+        let r = recorder_with_sojourns(&[&[10_000], &[20_000]]);
+        let o = evaluate(&sojourn_slo(100, 99.0, 1, 10.0), &r);
+        assert!(!o.pass);
+        assert_eq!((o.bad, o.total), (2, 2));
+        // every unit bad: burn = 1.0 / 0.01 = 100
+        assert!((o.max_burn - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burn_localizes_to_the_bad_window() {
+        // 9 good buckets of 10 fast requests, one bucket fully violating
+        let good: Vec<u64> = vec![50; 10];
+        let mut buckets: Vec<&[u64]> = vec![&good; 9];
+        let bad = [5_000u64; 10];
+        buckets.push(&bad);
+        let r = recorder_with_sojourns(&buckets);
+        // objective 90% → allowed 10%; worst window (the bad bucket alone)
+        // is 100% bad → burn 10; overall is 10% bad → burn 1
+        let o = evaluate(&sojourn_slo(1_000, 90.0, 1, 5.0), &r);
+        assert!(!o.pass);
+        assert!((o.max_burn - 10.0).abs() < 1e-9);
+        assert!((o.overall_burn - 1.0).abs() < 1e-9);
+        // a window spanning the whole series dilutes back to burn 1
+        let o2 = evaluate(&sojourn_slo(1_000, 90.0, 10, 5.0), &r);
+        assert!(o2.pass, "{}", o2.detail);
+        assert!((o2.max_burn - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_filter_scopes_the_objective() {
+        let mut r = TimeSeriesRecorder::new(100, 16, 1, vec!["fast".into(), "slow".into()]);
+        r.record_completion(10, 0, 50, 5);
+        r.record_completion(20, 1, 9_999, 5);
+        let mut slo = sojourn_slo(1_000, 50.0, 1, 1.0);
+        slo.kind = SloKind::Sojourn {
+            budget_ns: 1_000,
+            lane: Some("fast".into()),
+        };
+        let o = evaluate(&slo, &r);
+        assert!(o.pass);
+        assert_eq!((o.bad, o.total), (0, 1));
+        slo.kind = SloKind::Sojourn {
+            budget_ns: 1_000,
+            lane: Some("slow".into()),
+        };
+        let o = evaluate(&slo, &r);
+        assert!(!o.pass);
+        assert_eq!((o.bad, o.total), (1, 1));
+    }
+
+    #[test]
+    fn admission_floor_skips_idle_intervals() {
+        let mut r = TimeSeriesRecorder::new(1_000, 16, 1, vec!["t".into()]);
+        // bucket 0: 5 admitted (5e6/s) · bucket 1 idle · bucket 2: 1
+        // admitted + 3 shed (1e6/s)
+        for _ in 0..5 {
+            r.record_arrival(10, true);
+        }
+        r.record_arrival(2_100, true);
+        for _ in 0..3 {
+            r.record_arrival(2_200, false);
+        }
+        let slo = SloConfig {
+            name: "floor".into(),
+            kind: SloKind::AdmissionRate {
+                min_per_sec: 2_000_000.0,
+            },
+            objective_pct: 60.0,
+            window: 1,
+            max_burn: 1.0,
+        };
+        let o = evaluate(&slo, &r);
+        // 2 non-idle intervals, 1 below floor → 50% bad / 40% allowed
+        assert_eq!((o.bad, o.total), (1, 2));
+        assert!(!o.pass);
+        assert!((o.max_burn - 2.5).abs() < 1e-9);
+
+        let relaxed = SloConfig {
+            max_burn: 3.0,
+            ..slo.clone()
+        };
+        assert!(evaluate(&relaxed, &r).pass);
+    }
+
+    #[test]
+    fn empty_series_passes_vacuously() {
+        let r = TimeSeriesRecorder::new(100, 4, 1, vec!["t".into()]);
+        let o = evaluate(&sojourn_slo(1, 99.9, 4, 0.5), &r);
+        assert!(o.pass);
+        assert_eq!((o.bad, o.total, o.windows), (0, 0, 0));
+    }
+}

@@ -1,0 +1,483 @@
+//! Virtual-clock time-series telemetry: bounded interval rings over the
+//! scenario executor's simulated timeline.
+//!
+//! The end-of-run aggregates in [`crate::cluster::FleetSnapshot`] answer
+//! *how the run finished*; they cannot answer *when* the fleet saturated,
+//! started shedding, or burned its latency budget. The
+//! [`TimeSeriesRecorder`] closes that gap: the scenario executor feeds it
+//! every arrival, completion, and queue-depth observation stamped with a
+//! **virtual-clock** timestamp, and the recorder folds them into
+//! fixed-width interval buckets held in a bounded, pre-allocated ring.
+//!
+//! # Determinism contract
+//!
+//! The recorder never reads a wall clock and never samples live fleet
+//! atomics (worker threads mutate those at host-dependent instants). Every
+//! observation carries a timestamp computed by the executor on the
+//! simulated timeline, so the same `(scenario, seed)` pair produces a
+//! byte-identical series — the same replay contract the CI determinism
+//! job diffs on `BENCH_*.json`.
+//!
+//! # Order independence
+//!
+//! Virtual timestamps do not arrive monotonically (an arrival at `t=5µs`
+//! can be observed after a completion stamped `t=9µs` on another device's
+//! virtual clock), so every per-bucket aggregate is **commutative**:
+//! counters add, gauges take the max, and sojourn distributions are
+//! mergeable [`Histogram`]s. Two recorders fed interleaved slices of the
+//! same observation stream therefore [`TimeSeriesRecorder::merge`] into
+//! the same series in either order — pinned by a property test.
+//!
+//! # Bounded memory
+//!
+//! The ring holds at most `capacity` buckets. When the simulated timeline
+//! outruns it, the oldest buckets are folded into an *evicted prefix*
+//! (keeping the cumulative counters of later samples exact) and counted
+//! in [`TimeSeriesRecorder::dropped`], so a runaway scenario costs memory
+//! proportional to `capacity`, never to its duration — the obs-overhead
+//! gate prices exactly this.
+
+use std::collections::VecDeque;
+
+use super::hist::Histogram;
+use super::json::Json;
+
+/// Default sampling interval (virtual nanoseconds) when a scenario
+/// enables telemetry without an explicit `interval_ns`.
+pub const DEFAULT_INTERVAL_NS: u64 = 50_000;
+
+/// Default ring capacity (buckets) when a scenario enables telemetry
+/// without an explicit `capacity`.
+pub const DEFAULT_CAPACITY: usize = 256;
+
+/// One interval bucket. Every field is a commutative aggregate (sum, max,
+/// or histogram merge) so bucket folding is observation-order-free.
+#[derive(Clone, Debug)]
+struct Bucket {
+    offered: u64,
+    admitted: u64,
+    shed: u64,
+    completed: u64,
+    /// virtual busy nanoseconds attributed to this interval (service time
+    /// of completions stamped inside it, summed over devices)
+    busy_ns: u64,
+    /// high-water queue depth observed inside the interval
+    queue_depth_max: u64,
+    /// per-lane sojourn distribution of completions stamped inside the
+    /// interval (a *delta* histogram, not cumulative)
+    sojourn: Vec<Histogram>,
+}
+
+impl Bucket {
+    fn empty(lanes: usize) -> Self {
+        Bucket {
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            completed: 0,
+            busy_ns: 0,
+            queue_depth_max: 0,
+            sojourn: vec![Histogram::new(); lanes],
+        }
+    }
+
+    fn absorb(&mut self, other: &Bucket) {
+        self.offered += other.offered;
+        self.admitted += other.admitted;
+        self.shed += other.shed;
+        self.completed += other.completed;
+        self.busy_ns += other.busy_ns;
+        self.queue_depth_max = self.queue_depth_max.max(other.queue_depth_max);
+        for (dst, src) in self.sojourn.iter_mut().zip(other.sojourn.iter()) {
+            dst.merge(src);
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.offered == 0
+            && self.completed == 0
+            && self.shed == 0
+            && self.busy_ns == 0
+            && self.queue_depth_max == 0
+    }
+}
+
+/// One materialized sample: cumulative counters at the end boundary of an
+/// interval, plus the interval's deltas and distributions.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    /// end boundary of the interval on the virtual clock
+    pub t_ns: u64,
+    /// cumulative counters at `t_ns` (evicted prefix included)
+    pub offered: u64,
+    pub admitted: u64,
+    pub shed: u64,
+    pub completed: u64,
+    /// interval deltas
+    pub d_offered: u64,
+    pub d_admitted: u64,
+    pub d_shed: u64,
+    pub d_completed: u64,
+    /// high-water queue depth inside the interval
+    pub queue_depth_max: u64,
+    /// busy-time fraction of the interval: `Σ service_ns / (devices ×
+    /// interval_ns)`, may exceed 1.0 when completions of long requests
+    /// cluster at one boundary
+    pub utilization: f64,
+    /// per-lane sojourn delta histograms (lane order =
+    /// [`TimeSeriesRecorder::lanes`])
+    pub sojourn: Vec<Histogram>,
+}
+
+impl Sample {
+    /// Fleet-wide sojourn distribution for this interval: the merge of
+    /// every lane's delta histogram.
+    pub fn sojourn_merged(&self) -> Histogram {
+        let mut all = Histogram::new();
+        for h in &self.sojourn {
+            all.merge(h);
+        }
+        all
+    }
+}
+
+/// Compact description of a recorder for snapshot/trace JSON exports —
+/// the `telemetry` block golden tests pin.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySummary {
+    /// false when the run had no recorder (plain `drim cluster` paths)
+    pub enabled: bool,
+    /// materialized samples still in the ring
+    pub samples: u64,
+    /// buckets evicted to keep the ring bounded
+    pub dropped: u64,
+    /// sampling interval (virtual ns); 0 when disabled
+    pub interval_ns: u64,
+    /// end boundary of the newest materialized sample (virtual ns)
+    pub last_sample_ns: u64,
+}
+
+impl TelemetrySummary {
+    /// Stable JSON schema: `enabled`, `samples`, `dropped`,
+    /// `interval_ns`, `last_sample_ns`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("enabled", self.enabled)
+            .field("samples", self.samples)
+            .field("dropped", self.dropped)
+            .field("interval_ns", self.interval_ns)
+            .field("last_sample_ns", self.last_sample_ns)
+    }
+}
+
+/// Bounded virtual-clock time-series recorder (see module docs).
+#[derive(Clone, Debug)]
+pub struct TimeSeriesRecorder {
+    interval_ns: u64,
+    capacity: usize,
+    devices: usize,
+    lanes: Vec<String>,
+    /// buckets for absolute indices `first_index ..
+    /// first_index + ring.len()`
+    ring: VecDeque<Bucket>,
+    first_index: u64,
+    /// commutative fold of every evicted bucket — keeps the cumulative
+    /// counters of surviving samples exact
+    evicted: Bucket,
+    evicted_buckets: u64,
+}
+
+impl TimeSeriesRecorder {
+    /// New recorder sampling every `interval_ns` virtual nanoseconds into
+    /// at most `capacity` buckets. `lanes` name the per-lane sojourn
+    /// streams (scenario tenants); `devices` scales utilization.
+    ///
+    /// # Panics
+    /// If `interval_ns` or `capacity` is zero.
+    pub fn new(interval_ns: u64, capacity: usize, devices: usize, lanes: Vec<String>) -> Self {
+        assert!(interval_ns > 0, "telemetry interval must be positive");
+        assert!(capacity > 0, "telemetry capacity must be positive");
+        let n = lanes.len();
+        TimeSeriesRecorder {
+            interval_ns,
+            capacity,
+            devices: devices.max(1),
+            lanes,
+            ring: VecDeque::with_capacity(capacity),
+            first_index: 0,
+            evicted: Bucket::empty(n),
+            evicted_buckets: 0,
+        }
+    }
+
+    pub fn interval_ns(&self) -> u64 {
+        self.interval_ns
+    }
+
+    pub fn lanes(&self) -> &[String] {
+        &self.lanes
+    }
+
+    /// Buckets evicted so far to keep the ring within `capacity`.
+    pub fn dropped(&self) -> u64 {
+        self.evicted_buckets
+    }
+
+    /// Materialized samples currently in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// An arrival stamped `t_ns` on the virtual clock; `admitted = false`
+    /// means it was shed at admission (per-tenant quota or fleet cap).
+    pub fn record_arrival(&mut self, t_ns: u64, admitted: bool) {
+        let b = self.bucket_mut(t_ns);
+        b.offered += 1;
+        if admitted {
+            b.admitted += 1;
+        } else {
+            b.shed += 1;
+        }
+    }
+
+    /// A completion stamped `t_ns` (the executing device's virtual clock
+    /// after service): records the request's virtual sojourn into lane
+    /// `lane` and attributes `busy_ns` of device busy time to the
+    /// interval. Out-of-range lanes fold into lane 0.
+    pub fn record_completion(&mut self, t_ns: u64, lane: usize, sojourn_ns: u64, busy_ns: u64) {
+        let lane = if lane < self.lanes.len() { lane } else { 0 };
+        let b = self.bucket_mut(t_ns);
+        b.completed += 1;
+        b.busy_ns += busy_ns;
+        if let Some(h) = b.sojourn.get_mut(lane) {
+            h.record(sojourn_ns);
+        }
+    }
+
+    /// A queue-depth observation (submitted-but-unharvested requests) at
+    /// `t_ns`; buckets keep the interval high-water mark.
+    pub fn record_queue_depth(&mut self, t_ns: u64, depth: usize) {
+        let b = self.bucket_mut(t_ns);
+        b.queue_depth_max = b.queue_depth_max.max(depth as u64);
+    }
+
+    /// The bucket covering `t_ns`, materializing (and evicting, if the
+    /// ring is full) as needed. Observations older than the evicted
+    /// horizon fold into the evicted prefix.
+    fn bucket_mut(&mut self, t_ns: u64) -> &mut Bucket {
+        let idx = t_ns / self.interval_ns;
+        if idx < self.first_index {
+            // late observation for an already-evicted interval: keep the
+            // cumulative totals exact, charge it to the prefix
+            return &mut self.evicted;
+        }
+        while self.first_index + self.ring.len() as u64 <= idx {
+            if self.ring.len() == self.capacity {
+                let front = self.ring.pop_front().expect("non-empty full ring");
+                self.evicted.absorb(&front);
+                self.evicted_buckets += 1;
+                self.first_index += 1;
+            }
+            self.ring.push_back(Bucket::empty(self.lanes.len()));
+        }
+        &mut self.ring[(idx - self.first_index) as usize]
+    }
+
+    /// Fold another recorder into this one, aligning buckets by absolute
+    /// interval index. Commutative up to ring eviction: with enough
+    /// capacity, `a.merge(b)` and `b.merge(a)` produce identical series
+    /// (pinned by a property test).
+    ///
+    /// # Panics
+    /// If the recorders disagree on interval or lane layout.
+    pub fn merge(&mut self, other: &TimeSeriesRecorder) {
+        assert_eq!(
+            self.interval_ns, other.interval_ns,
+            "cannot merge recorders with different intervals"
+        );
+        assert_eq!(
+            self.lanes, other.lanes,
+            "cannot merge recorders with different lanes"
+        );
+        self.evicted.absorb(&other.evicted);
+        self.evicted_buckets += other.evicted_buckets;
+        self.devices = self.devices.max(other.devices);
+        for (i, bucket) in other.ring.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let t_ns = (other.first_index + i as u64) * self.interval_ns;
+            self.bucket_mut(t_ns).absorb(bucket);
+        }
+    }
+
+    /// The materialized series: one [`Sample`] per ring bucket in
+    /// timeline order, cumulative counters seeded from the evicted
+    /// prefix. Trailing never-touched buckets are materialized too (they
+    /// were paid for), so the series tiles `[first, last]` gaplessly.
+    pub fn samples(&self) -> Vec<Sample> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        let mut offered = self.evicted.offered;
+        let mut admitted = self.evicted.admitted;
+        let mut shed = self.evicted.shed;
+        let mut completed = self.evicted.completed;
+        let span = (self.devices as u64 * self.interval_ns) as f64;
+        for (i, b) in self.ring.iter().enumerate() {
+            offered += b.offered;
+            admitted += b.admitted;
+            shed += b.shed;
+            completed += b.completed;
+            out.push(Sample {
+                t_ns: (self.first_index + i as u64 + 1) * self.interval_ns,
+                offered,
+                admitted,
+                shed,
+                completed,
+                d_offered: b.offered,
+                d_admitted: b.admitted,
+                d_shed: b.shed,
+                d_completed: b.completed,
+                queue_depth_max: b.queue_depth_max,
+                utilization: b.busy_ns as f64 / span,
+                sojourn: b.sojourn.clone(),
+            });
+        }
+        out
+    }
+
+    /// The compact summary exported as the `telemetry` block in snapshot
+    /// and trace JSON.
+    pub fn summary(&self) -> TelemetrySummary {
+        TelemetrySummary {
+            enabled: true,
+            samples: self.ring.len() as u64,
+            dropped: self.evicted_buckets,
+            interval_ns: self.interval_ns,
+            last_sample_ns: (self.first_index + self.ring.len() as u64) * self.interval_ns,
+        }
+    }
+
+    /// Full series JSON (summary + per-sample points with fleet-merged
+    /// sojourn summaries). Deterministic; used by tests and exporters.
+    pub fn to_json(&self) -> Json {
+        let points: Vec<Json> = self
+            .samples()
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .field("t_ns", s.t_ns)
+                    .field("offered", s.offered)
+                    .field("admitted", s.admitted)
+                    .field("shed", s.shed)
+                    .field("completed", s.completed)
+                    .field("queue_depth_max", s.queue_depth_max)
+                    .field("utilization", s.utilization)
+                    .field("sojourn_ns", s.sojourn_merged().summary_json())
+            })
+            .collect();
+        Json::obj()
+            .field("interval_ns", self.interval_ns)
+            .field("dropped", self.evicted_buckets)
+            .field(
+                "lanes",
+                Json::Arr(self.lanes.iter().map(|l| Json::from(l.as_str())).collect()),
+            )
+            .field("points", Json::Arr(points))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(interval: u64, cap: usize) -> TimeSeriesRecorder {
+        TimeSeriesRecorder::new(interval, cap, 2, vec!["a".into(), "b".into()])
+    }
+
+    #[test]
+    fn buckets_by_interval_and_accumulates() {
+        let mut r = rec(100, 16);
+        r.record_arrival(10, true);
+        r.record_arrival(110, true);
+        r.record_arrival(120, false);
+        r.record_completion(150, 0, 140, 40);
+        r.record_completion(250, 1, 200, 60);
+        r.record_queue_depth(55, 3);
+        r.record_queue_depth(60, 1); // lower: max sticks at 3
+
+        let s = r.samples();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].t_ns, 100);
+        assert_eq!((s[0].offered, s[0].admitted, s[0].shed), (1, 1, 0));
+        assert_eq!(s[0].queue_depth_max, 3);
+        assert_eq!((s[1].offered, s[1].admitted, s[1].shed), (3, 2, 1));
+        assert_eq!(s[1].d_offered, 2);
+        assert_eq!(s[1].completed, 1);
+        // utilization: 40 busy ns over 2 devices × 100 ns = 0.2
+        assert!((s[0].utilization - 0.2).abs() < 1e-12);
+        assert_eq!(s[2].completed, 2);
+        assert_eq!(s[2].sojourn[1].count(), 1);
+        assert_eq!(r.summary().samples, 3);
+        assert_eq!(r.summary().last_sample_ns, 300);
+        assert_eq!(r.summary().dropped, 0);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_keeps_cumulative_exact() {
+        let mut r = rec(10, 4);
+        for i in 0..12u64 {
+            r.record_arrival(i * 10, true);
+        }
+        // 12 buckets touched, capacity 4 → 8 evicted
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 8);
+        let s = r.samples();
+        assert_eq!(s.first().unwrap().t_ns, 90);
+        // cumulative offered at the last sample still counts everything
+        assert_eq!(s.last().unwrap().offered, 12);
+        // late observation behind the horizon folds into the prefix
+        r.record_arrival(0, true);
+        assert_eq!(r.samples().last().unwrap().offered, 13);
+        assert_eq!(r.dropped(), 8);
+    }
+
+    #[test]
+    fn merge_aligns_absolute_indices_in_either_order() {
+        let obs: Vec<(u64, bool)> = (0..40u64).map(|i| (i * 7, i % 3 != 0)).collect();
+        let mut a = rec(50, 64);
+        let mut b = rec(50, 64);
+        let mut whole = rec(50, 64);
+        for (i, &(t, adm)) in obs.iter().enumerate() {
+            whole.record_arrival(t, adm);
+            whole.record_completion(t + 30, i % 2, 30 + t, 11);
+            if i % 2 == 0 {
+                a.record_arrival(t, adm);
+                a.record_completion(t + 30, i % 2, 30 + t, 11);
+            } else {
+                b.record_arrival(t, adm);
+                b.record_completion(t + 30, i % 2, 30 + t, 11);
+            }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let whole_json = whole.to_json().to_string_compact();
+        assert_eq!(ab.to_json().to_string_compact(), whole_json);
+        assert_eq!(ba.to_json().to_string_compact(), whole_json);
+    }
+
+    #[test]
+    fn disabled_summary_is_all_zero() {
+        let s = TelemetrySummary::default();
+        assert!(!s.enabled);
+        assert_eq!(
+            s.to_json().to_string_compact(),
+            r#"{"enabled":false,"samples":0,"dropped":0,"interval_ns":0,"last_sample_ns":0}"#
+        );
+    }
+}

@@ -243,7 +243,11 @@ impl Tracer {
             dropped += ring.dropped;
         }
         events.sort_by_key(|e| (e.ts_ns, e.lane, e.stage));
-        Trace { events, dropped }
+        Trace {
+            events,
+            dropped,
+            telemetry: Default::default(),
+        }
     }
 }
 
@@ -254,6 +258,11 @@ pub struct Trace {
     pub events: Vec<TraceEvent>,
     /// Events lost to ring overflow across all lanes (oldest-first).
     pub dropped: u64,
+    /// Continuous-telemetry summary — disabled/all-zero unless a
+    /// scenario-driven time-series recorder was attached via
+    /// [`Trace::with_telemetry`] (tracer-only collections have no
+    /// virtual-clock series).
+    pub telemetry: super::TelemetrySummary,
 }
 
 /// Aggregate time attribution for one stage across a [`Trace`].
@@ -265,6 +274,13 @@ pub struct StageStats {
 }
 
 impl Trace {
+    /// Attach a continuous-telemetry summary to this trace (the scenario
+    /// executor's recorder; see [`crate::obs::timeseries`]).
+    pub fn with_telemetry(mut self, telemetry: super::TelemetrySummary) -> Self {
+        self.telemetry = telemetry;
+        self
+    }
+
     /// Per-stage event counts and span-time attribution, in pipeline
     /// order; stages with no events are omitted.
     pub fn stage_breakdown(&self) -> Vec<(Stage, StageStats)> {
@@ -352,6 +368,7 @@ impl Trace {
             .field("dropped", self.dropped)
             .field("stages", Json::Arr(stages))
             .field("slowest_waves", Json::Arr(slowest))
+            .field("telemetry", self.telemetry.to_json())
     }
 }
 

@@ -33,6 +33,8 @@ use crate::cluster::{
     RouteError, TenantBreakdown,
 };
 use crate::coordinator::{BulkRequest, Payload};
+use crate::obs::slo::{self, SloOutcome};
+use crate::obs::timeseries::TimeSeriesRecorder;
 use crate::obs::Json;
 use crate::util::bitrow::BitRow;
 use crate::util::rng::Rng;
@@ -55,6 +57,10 @@ pub struct CaseOutcome {
     /// insertion-ordered `metric → value` pairs, deterministic within the
     /// envelope (see module docs)
     pub metrics: Vec<(String, Json)>,
+    /// SLOs bound to this case, evaluated over the recorded virtual-clock
+    /// series (empty when the scenario declares none); `run_scenario`
+    /// surfaces these as first-class gates
+    pub slos: Vec<SloOutcome>,
 }
 
 impl CaseOutcome {
@@ -91,13 +97,24 @@ impl ScenarioOutcome {
 }
 
 /// Execute every case of a validated scenario and evaluate its gates.
+/// Evaluated SLOs join the gate list as `slo.<name>` entries — an SLO
+/// burn-rate breach fails the scenario exactly like a metric gate.
 pub fn run_scenario(spec: &ScenarioSpec) -> ScenarioOutcome {
     let cases: Vec<CaseOutcome> = spec.resolved_cases().iter().map(run_case).collect();
-    let gates = spec
+    let mut gates: Vec<GateOutcome> = spec
         .gates
         .iter()
         .map(|g| evaluate_gate(g, &cases))
         .collect();
+    for case in &cases {
+        for o in &case.slos {
+            gates.push(GateOutcome {
+                name: format!("slo.{}", o.name),
+                pass: o.pass,
+                detail: format!("case {}: {}", case.name, o.detail),
+            });
+        }
+    }
     ScenarioOutcome { cases, gates }
 }
 
@@ -174,12 +191,24 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
     let mut pending: VecDeque<PendingReq> = VecDeque::new();
     let mut digest = Fnv::new();
     let mut completed_total = 0u64;
+    // continuous telemetry: one lane per tenant, every observation
+    // stamped on the virtual clock (see obs::timeseries module docs for
+    // the determinism contract)
+    let mut recorder: Option<TimeSeriesRecorder> = case.telemetry.map(|t| {
+        TimeSeriesRecorder::new(
+            t.interval_ns,
+            t.capacity,
+            case.devices,
+            case.tenants.iter().map(|t| t.name.clone()).collect(),
+        )
+    });
 
     let mut harvest_one = |pending: &mut VecDeque<PendingReq>,
                            acct: &mut [TenantAcct],
                            vclock: &mut [f64],
                            digest: &mut Fnv,
-                           completed_total: &mut u64| {
+                           completed_total: &mut u64,
+                           recorder: &mut Option<TimeSeriesRecorder>| {
         // a strict coalescer may still be holding the response we are
         // about to block on — flush staged waves before any recv
         if coalescing {
@@ -203,6 +232,11 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
         a.sum_service_ns += service;
         a.sum_sojourn_ns += sojourn;
         a.max_sojourn_ns = a.max_sojourn_ns.max(sojourn);
+        if let Some(rec) = recorder.as_mut() {
+            let now = vclock[dev] as u64;
+            rec.record_completion(now, p.tenant, sojourn as u64, service as u64);
+            rec.record_queue_depth(now, pending.len());
+        }
         *completed_total += 1;
         if case.rebalance_every > 0 && *completed_total % case.rebalance_every as u64 == 0 {
             cluster.rebalance(&policy);
@@ -216,6 +250,9 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
         // (deterministic — the window slides in submission order)
         if tspec.max_inflight > 0 && acct[ev.tenant].outstanding >= tspec.max_inflight {
             acct[ev.tenant].shed += 1;
+            if let Some(rec) = recorder.as_mut() {
+                rec.record_arrival(ev.vtime_ns, false);
+            }
             continue;
         }
         let rx = submit_event(
@@ -232,6 +269,10 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
             arrival_ns: ev.vtime_ns as f64,
             rx,
         });
+        if let Some(rec) = recorder.as_mut() {
+            rec.record_arrival(ev.vtime_ns, true);
+            rec.record_queue_depth(ev.vtime_ns, pending.len());
+        }
         if case.window > 0 && pending.len() >= case.window {
             harvest_one(
                 &mut pending,
@@ -239,6 +280,7 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
                 &mut vclock,
                 &mut digest,
                 &mut completed_total,
+                &mut recorder,
             );
         }
     }
@@ -249,6 +291,7 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
             &mut vclock,
             &mut digest,
             &mut completed_total,
+            &mut recorder,
         );
     }
 
@@ -293,12 +336,36 @@ pub fn run_case(case: &ResolvedCase) -> CaseOutcome {
         })
         .collect();
 
-    let snapshot = cluster.shutdown().with_fairness(fairness);
-    let metrics = flatten_metrics(case, &events, &snapshot, &vclock, digest.finish());
+    let telemetry = recorder
+        .as_ref()
+        .map(|r| r.summary())
+        .unwrap_or_default();
+    let snapshot = cluster
+        .shutdown()
+        .with_fairness(fairness)
+        .with_telemetry(telemetry);
+    let mut metrics = flatten_metrics(case, &events, &snapshot, &vclock, digest.finish());
+
+    // SLO verdicts, evaluated over the recorded series (deterministic:
+    // both the series and the evaluation are virtual-clock-only)
+    let slos: Vec<SloOutcome> = match recorder.as_ref() {
+        Some(rec) => case.slos.iter().map(|s| slo::evaluate(s, rec)).collect(),
+        None => Vec::new(),
+    };
+    for o in &slos {
+        let p = format!("slo.{}", o.name);
+        metrics.push((format!("{p}.pass"), Json::U64(o.pass as u64)));
+        metrics.push((format!("{p}.max_burn"), Json::F64(o.max_burn)));
+        metrics.push((format!("{p}.overall_burn"), Json::F64(o.overall_burn)));
+        metrics.push((format!("{p}.bad"), Json::U64(o.bad)));
+        metrics.push((format!("{p}.total"), Json::U64(o.total)));
+    }
+
     CaseOutcome {
         name: case.name.clone(),
         snapshot,
         metrics,
+        slos,
     }
 }
 
@@ -453,6 +520,16 @@ fn flatten_metrics(
     put(
         "prefetch_hidden_ns",
         Json::U64(snap.movement.prefetch_hidden_ns),
+    );
+    put("telemetry.samples", Json::U64(snap.telemetry.samples));
+    put("telemetry.dropped", Json::U64(snap.telemetry.dropped));
+    put(
+        "telemetry.interval_ns",
+        Json::U64(snap.telemetry.interval_ns),
+    );
+    put(
+        "telemetry.last_sample_ns",
+        Json::U64(snap.telemetry.last_sample_ns),
     );
     for t in &snap.fairness {
         let p = format!("tenant.{}", t.tenant);

@@ -25,6 +25,6 @@ pub mod stream;
 pub mod toml;
 
 pub use exec::{run_case, run_scenario, CaseOutcome, GateOutcome, ScenarioOutcome};
-pub use spec::{ResolvedCase, ScenarioError, ScenarioSpec};
+pub use spec::{ResolvedCase, ScenarioError, ScenarioSpec, SloSpec, TelemetrySpec};
 pub use stream::{generate, offered_wave_units, stream_digest, ArrivalEvent};
 pub use toml::{parse_source, parse_toml, ScenarioDoc};

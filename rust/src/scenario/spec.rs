@@ -19,6 +19,8 @@ use crate::cluster::{
 use crate::coordinator::ServiceConfig;
 use crate::dram::geometry::{DeviceCapacity, DramGeometry};
 use crate::isa::program::BulkOp;
+use crate::obs::slo::{SloConfig, SloKind};
+use crate::obs::timeseries;
 use crate::obs::Json;
 
 use super::toml::ScenarioDoc;
@@ -246,6 +248,37 @@ pub struct GateSpec {
     pub tol: f64,
 }
 
+/// Continuous-telemetry knobs (`[telemetry]` block): the virtual-clock
+/// sampling interval and the bounded ring capacity the executor's
+/// [`crate::obs::TimeSeriesRecorder`] runs with.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetrySpec {
+    /// sampling interval in virtual nanoseconds
+    pub interval_ns: u64,
+    /// ring capacity in samples (oldest buckets fold into an evicted
+    /// prefix beyond this)
+    pub capacity: usize,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> Self {
+        TelemetrySpec {
+            interval_ns: timeseries::DEFAULT_INTERVAL_NS,
+            capacity: timeseries::DEFAULT_CAPACITY,
+        }
+    }
+}
+
+/// One `[[slo]]` block: a declarative SLO bound to a case, evaluated by
+/// [`crate::obs::slo::evaluate`] over the recorded time-series and
+/// reported as a first-class gate.
+#[derive(Clone, Debug)]
+pub struct SloSpec {
+    /// the case whose series this SLO is evaluated against
+    pub case: String,
+    pub config: SloConfig,
+}
+
 /// A fully validated scenario.
 #[derive(Clone, Debug)]
 pub struct ScenarioSpec {
@@ -262,6 +295,11 @@ pub struct ScenarioSpec {
     /// named cases (empty scenario files get one implicit `default` case)
     pub cases: Vec<CaseSpec>,
     pub gates: Vec<GateSpec>,
+    /// continuous-telemetry knobs; `None` still records when `slos` is
+    /// non-empty (defaults apply), otherwise telemetry stays off
+    pub telemetry: Option<TelemetrySpec>,
+    /// declarative SLOs evaluated over the recorded series
+    pub slos: Vec<SloSpec>,
 }
 
 /// The base scenario with one case's overrides applied — everything the
@@ -287,6 +325,12 @@ pub struct ResolvedCase {
     pub process: ArrivalProcess,
     pub phases: Vec<PhaseSpec>,
     pub tenants: Vec<TenantSpec>,
+    /// telemetry knobs when recording is on for this case (`Some`
+    /// whenever the scenario declares `[telemetry]` or any SLO binds to
+    /// this case)
+    pub telemetry: Option<TelemetrySpec>,
+    /// SLOs bound to this case, evaluated after execution
+    pub slos: Vec<SloConfig>,
 }
 
 impl ResolvedCase {
@@ -404,6 +448,19 @@ impl ScenarioSpec {
 
     /// Apply one case's overrides to the base scenario.
     pub fn resolve(&self, case: &CaseSpec) -> ResolvedCase {
+        let slos: Vec<SloConfig> = self
+            .slos
+            .iter()
+            .filter(|s| s.case == case.name)
+            .map(|s| s.config.clone())
+            .collect();
+        // an SLO binding implies recording even without a [telemetry]
+        // block — the defaults apply
+        let telemetry = match (self.telemetry, slos.is_empty()) {
+            (Some(t), _) => Some(t),
+            (None, false) => Some(TelemetrySpec::default()),
+            (None, true) => None,
+        };
         ResolvedCase {
             name: case.name.clone(),
             seed: case.seed.unwrap_or(self.seed),
@@ -424,6 +481,8 @@ impl ScenarioSpec {
             process: self.arrival.process.clone(),
             phases: self.arrival.phases.clone(),
             tenants: self.mix(case.mix.as_deref()).to_vec(),
+            telemetry,
+            slos,
         }
     }
 
@@ -609,6 +668,8 @@ impl<'a> Validator<'a> {
                 "mixes",
                 "cases",
                 "gates",
+                "telemetry",
+                "slo",
             ],
         )?;
         let schema = self.u64_field(root, "", "schema", Some(1))?;
@@ -637,6 +698,8 @@ impl<'a> Validator<'a> {
             cases.iter().map(|c| c.name.clone()).collect()
         };
         let gates = self.gates(root.get("gates"), &case_names)?;
+        let telemetry = self.telemetry(root.get("telemetry"))?;
+        let slos = self.slos(root.get("slo"), &case_names, &tenants, &mixes, &cases)?;
         Ok(ScenarioSpec {
             name,
             description,
@@ -648,7 +711,164 @@ impl<'a> Validator<'a> {
             mixes,
             cases,
             gates,
+            telemetry,
+            slos,
         })
+    }
+
+    fn telemetry(&self, node: Option<&Json>) -> Result<Option<TelemetrySpec>, ScenarioError> {
+        let node = match node {
+            None => return Ok(None),
+            Some(n) => n,
+        };
+        let p = "telemetry";
+        self.check_keys(node, p, &["interval_ns", "capacity"])?;
+        let interval_ns =
+            self.u64_field(node, p, "interval_ns", Some(timeseries::DEFAULT_INTERVAL_NS))?;
+        if interval_ns == 0 {
+            return self.err(&join(p, "interval_ns"), "must be >= 1");
+        }
+        let capacity = self.usize_field(node, p, "capacity", Some(timeseries::DEFAULT_CAPACITY))?;
+        if capacity == 0 {
+            return self.err(&join(p, "capacity"), "must be >= 1");
+        }
+        Ok(Some(TelemetrySpec {
+            interval_ns,
+            capacity,
+        }))
+    }
+
+    fn slos(
+        &self,
+        node: Option<&Json>,
+        case_names: &[String],
+        tenants: &[TenantSpec],
+        mixes: &[MixSpec],
+        cases: &[CaseSpec],
+    ) -> Result<Vec<SloSpec>, ScenarioError> {
+        let items = match node {
+            None => return Ok(Vec::new()),
+            Some(v) => match v.as_arr() {
+                Some(items) => items,
+                None => return self.err("slo", "expected an array of [[slo]]"),
+            },
+        };
+        // the tenant mix a case's series records lanes for (case overrides
+        // pick a [[mixes]] entry; the implicit `default` case keeps the
+        // base mix)
+        let mix_of = |case_name: &str| -> &[TenantSpec] {
+            cases
+                .iter()
+                .find(|c| c.name == case_name)
+                .and_then(|c| c.mix.as_deref())
+                .and_then(|m| mixes.iter().find(|x| x.name == m))
+                .map(|m| m.tenants.as_slice())
+                .unwrap_or(tenants)
+        };
+        let mut out: Vec<SloSpec> = Vec::new();
+        for (i, s) in items.iter().enumerate() {
+            let sp = format!("slo[{i}]");
+            self.check_keys(
+                s,
+                &sp,
+                &[
+                    "name",
+                    "case",
+                    "metric",
+                    "tenant",
+                    "percentile",
+                    "budget_ns",
+                    "min_per_sec",
+                    "window",
+                    "max_burn",
+                ],
+            )?;
+            let name = self.str_field(s, &sp, "name", None)?;
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return self.err(&join(&sp, "name"), "must be a [A-Za-z0-9_] identifier");
+            }
+            if out.iter().any(|e| e.config.name == name) {
+                return self.err(&join(&sp, "name"), format!("duplicate slo `{name}`"));
+            }
+            let case = self.str_field(s, &sp, "case", Some("default"))?;
+            if !case_names.iter().any(|c| c == &case) {
+                return self.err(&join(&sp, "case"), format!("unknown case `{case}`"));
+            }
+            let percentile = self.f64_field(s, &sp, "percentile", Some(99.0))?;
+            if !(percentile > 0.0 && percentile < 100.0) {
+                return self.err(
+                    &join(&sp, "percentile"),
+                    "must be strictly between 0 and 100",
+                );
+            }
+            let window = self.usize_field(s, &sp, "window", Some(4))?;
+            if window == 0 {
+                return self.err(&join(&sp, "window"), "must be >= 1");
+            }
+            let max_burn = self.f64_field(s, &sp, "max_burn", Some(1.0))?;
+            if !(max_burn >= 0.0 && max_burn.is_finite()) {
+                return self.err(&join(&sp, "max_burn"), "must be a non-negative number");
+            }
+            let metric = self.str_field(s, &sp, "metric", Some("sojourn"))?;
+            let kind = match metric.as_str() {
+                "sojourn" => {
+                    let budget_ns = self.u64_field(s, &sp, "budget_ns", None)?;
+                    if budget_ns == 0 {
+                        return self.err(&join(&sp, "budget_ns"), "must be >= 1");
+                    }
+                    let lane = match s.get("tenant") {
+                        None => None,
+                        Some(Json::Str(t)) => {
+                            if !mix_of(&case).iter().any(|x| &x.name == t) {
+                                return self.err(
+                                    &join(&sp, "tenant"),
+                                    format!("unknown tenant `{t}` in case `{case}`'s mix"),
+                                );
+                            }
+                            Some(t.clone())
+                        }
+                        Some(_) => {
+                            return self.err(&join(&sp, "tenant"), "expected a tenant name")
+                        }
+                    };
+                    if s.get("min_per_sec").is_some() {
+                        return self.err(
+                            &join(&sp, "min_per_sec"),
+                            "only valid for metric = \"admission_rate\"",
+                        );
+                    }
+                    SloKind::Sojourn { budget_ns, lane }
+                }
+                "admission_rate" => {
+                    let min_per_sec = self.f64_field(s, &sp, "min_per_sec", None)?;
+                    self.positive(min_per_sec, &join(&sp, "min_per_sec"))?;
+                    if s.get("budget_ns").is_some() || s.get("tenant").is_some() {
+                        return self.err(
+                            &sp,
+                            "budget_ns/tenant are only valid for metric = \"sojourn\"",
+                        );
+                    }
+                    SloKind::AdmissionRate { min_per_sec }
+                }
+                other => {
+                    return self.err(
+                        &join(&sp, "metric"),
+                        format!("unknown slo metric `{other}` (sojourn|admission_rate)"),
+                    )
+                }
+            };
+            out.push(SloSpec {
+                case,
+                config: SloConfig {
+                    name,
+                    kind,
+                    objective_pct: percentile,
+                    window,
+                    max_burn,
+                },
+            });
+        }
+        Ok(out)
     }
 
     fn fleet(&self, node: Option<&Json>) -> Result<FleetSpec, ScenarioError> {

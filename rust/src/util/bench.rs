@@ -220,6 +220,252 @@ impl BenchReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Perf trajectory: parsing and diffing BENCH_*.json artifacts (`drim perf`)
+// ---------------------------------------------------------------------------
+
+/// Which way a metric regresses, inferred from its (dotted) key.
+/// Wall-time-style keys regress upward, throughput-style keys regress
+/// downward; everything else is informational — rendered in diffs but
+/// never gated (counts, digests-as-numbers, schema constants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricDirection {
+    LowerIsBetter,
+    HigherIsBetter,
+    Informational,
+}
+
+impl MetricDirection {
+    /// Short arrow label for tables (`↓`, `↑`, `·`).
+    pub fn glyph(self) -> &'static str {
+        match self {
+            MetricDirection::LowerIsBetter => "↓",
+            MetricDirection::HigherIsBetter => "↑",
+            MetricDirection::Informational => "·",
+        }
+    }
+}
+
+/// Classify a flattened metric key. Lower-is-better patterns are checked
+/// first so compound names like `shed_rate` resolve to the harm they
+/// measure, not the unit they carry.
+pub fn metric_direction(key: &str) -> MetricDirection {
+    let k = key.to_ascii_lowercase();
+    let any = |pats: &[&str]| pats.iter().any(|p| k.contains(p));
+    if k.ends_with("_ns")
+        || any(&["makespan", "latency", "sojourn", "ratio", "shed", "dropped", "burn"])
+    {
+        MetricDirection::LowerIsBetter
+    } else if any(&["throughput", "per_sec", "rate"]) {
+        MetricDirection::HigherIsBetter
+    } else {
+        MetricDirection::Informational
+    }
+}
+
+/// A `BENCH_*.json` artifact reduced to the perf-trajectory view: numeric
+/// metrics flattened to dotted keys, plus the gate verdicts. `stddev_ns`
+/// leaves are dropped — they measure run noise, not trajectory.
+#[derive(Clone, Debug)]
+pub struct PerfArtifact {
+    pub bench: String,
+    pub metrics: Vec<(String, f64)>,
+    pub gates: Vec<(String, bool)>,
+}
+
+impl PerfArtifact {
+    /// Parse artifact JSON text (strict: must carry a `bench` name).
+    pub fn parse(text: &str) -> Result<PerfArtifact, String> {
+        let doc = Json::parse(text)?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "artifact has no `bench` name".to_string())?
+            .to_string();
+        let mut metrics = Vec::new();
+        if let Some(m) = doc.get("metrics") {
+            flatten_numeric("", m, &mut metrics);
+        }
+        let mut gates = Vec::new();
+        if let Some(Json::Obj(fields)) = doc.get("gates") {
+            for (k, v) in fields {
+                if let Json::Bool(p) = v {
+                    gates.push((k.clone(), *p));
+                }
+            }
+        }
+        Ok(PerfArtifact {
+            bench,
+            metrics,
+            gates,
+        })
+    }
+
+    /// Value of one flattened metric key.
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Flatten nested metric objects to dotted keys, keeping numeric leaves
+/// only (strings — digests, labels — and booleans are not a trajectory).
+fn flatten_numeric(prefix: &str, node: &Json, out: &mut Vec<(String, f64)>) {
+    match node {
+        Json::Obj(fields) => {
+            for (k, v) in fields {
+                let key = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten_numeric(&key, v, out);
+            }
+        }
+        _ => {
+            if prefix.ends_with("stddev_ns") {
+                return;
+            }
+            if let Some(x) = node.as_f64() {
+                out.push((prefix.to_string(), x));
+            }
+        }
+    }
+}
+
+/// Per-metric regression tolerance: a default percentage plus substring
+/// overrides (`--tolerance 25 --tolerance ratio=2` → 2% for keys
+/// containing "ratio", 25% otherwise). First matching override wins.
+#[derive(Clone, Debug)]
+pub struct Tolerance {
+    pub default_pct: f64,
+    pub overrides: Vec<(String, f64)>,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance {
+            default_pct: 10.0,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl Tolerance {
+    /// The allowed harmful movement, in percent, for `key`.
+    pub fn pct_for(&self, key: &str) -> f64 {
+        self.overrides
+            .iter()
+            .find(|(pat, _)| key.contains(pat.as_str()))
+            .map(|(_, pct)| *pct)
+            .unwrap_or(self.default_pct)
+    }
+}
+
+/// One metric's movement between a baseline artifact and a current one.
+#[derive(Clone, Debug)]
+pub struct PerfDelta {
+    pub key: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed relative change in percent ((current−baseline)/|baseline|);
+    /// ±∞ when the baseline is zero and the value moved.
+    pub change_pct: f64,
+    pub direction: MetricDirection,
+    /// Movement exceeds the tolerance in the harmful direction.
+    pub regressed: bool,
+}
+
+/// The diff of two artifacts: per-metric deltas (baseline key order),
+/// key-set drift, and gate-verdict regressions.
+#[derive(Clone, Debug, Default)]
+pub struct PerfComparison {
+    pub deltas: Vec<PerfDelta>,
+    /// Baseline metrics with no counterpart in the current run.
+    pub missing: Vec<String>,
+    /// Current metrics the baseline doesn't know about.
+    pub added: Vec<String>,
+    /// Gates that passed in the baseline and fail (or vanished) now.
+    pub gate_regressions: Vec<String>,
+}
+
+impl PerfComparison {
+    /// The deltas that breached tolerance.
+    pub fn regressions(&self) -> impl Iterator<Item = &PerfDelta> {
+        self.deltas.iter().filter(|d| d.regressed)
+    }
+
+    /// No metric breached tolerance and no gate went from pass to fail.
+    /// Key-set drift alone (missing/added) does not fail a comparison —
+    /// metrics get renamed; the gates are the contract.
+    pub fn ok(&self) -> bool {
+        self.gate_regressions.is_empty() && self.deltas.iter().all(|d| !d.regressed)
+    }
+}
+
+/// Diff `current` against `baseline` under a per-metric [`Tolerance`].
+/// Direction-aware: a faster wall time or higher throughput never
+/// regresses no matter how large the swing.
+pub fn compare_artifacts(
+    baseline: &PerfArtifact,
+    current: &PerfArtifact,
+    tol: &Tolerance,
+) -> PerfComparison {
+    let mut cmp = PerfComparison::default();
+    for (key, base) in &baseline.metrics {
+        let Some(cur) = current.metric(key) else {
+            cmp.missing.push(key.clone());
+            continue;
+        };
+        let change_pct = if *base != 0.0 {
+            (cur - *base) / base.abs() * 100.0
+        } else if cur == 0.0 {
+            0.0
+        } else if cur > 0.0 {
+            f64::INFINITY
+        } else {
+            f64::NEG_INFINITY
+        };
+        let direction = metric_direction(key);
+        let allowed = tol.pct_for(key);
+        let regressed = match direction {
+            MetricDirection::LowerIsBetter => change_pct > allowed,
+            MetricDirection::HigherIsBetter => change_pct < -allowed,
+            MetricDirection::Informational => false,
+        };
+        cmp.deltas.push(PerfDelta {
+            key: key.clone(),
+            baseline: *base,
+            current: cur,
+            change_pct,
+            direction,
+            regressed,
+        });
+    }
+    for (key, _) in &current.metrics {
+        if baseline.metric(key).is_none() {
+            cmp.added.push(key.clone());
+        }
+    }
+    for (gate, passed) in &baseline.gates {
+        if !passed {
+            continue; // a baseline that already failed can't regress
+        }
+        match current.gates.iter().find(|(g, _)| g == gate) {
+            Some((_, true)) => {}
+            Some((_, false)) => cmp
+                .gate_regressions
+                .push(format!("{gate}: passed in baseline, fails now")),
+            None => cmp
+                .gate_regressions
+                .push(format!("{gate}: passed in baseline, missing now")),
+        }
+    }
+    cmp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,5 +521,139 @@ mod tests {
     fn duplicate_config_key_panics() {
         let mut r = BenchReport::new("dup");
         r.config("devices", 1u64).config("devices", 2u64);
+    }
+
+    #[test]
+    fn direction_heuristic_is_pinned() {
+        use MetricDirection::*;
+        for (key, want) in [
+            ("pump_idle.mean_ns", LowerIsBetter),
+            ("default.sim_makespan_ns", LowerIsBetter),
+            ("default.tenant.a.mean_sojourn_ns", LowerIsBetter),
+            ("sampled_over_idle_ratio", LowerIsBetter),
+            ("default.shed", LowerIsBetter),
+            ("telemetry.dropped", LowerIsBetter),
+            ("slo.floor.max_burn", LowerIsBetter),
+            ("default.throughput_bits_per_sec", HigherIsBetter),
+            ("pump_idle.rate_per_sec", HigherIsBetter),
+            ("default.completed", Informational),
+            ("routed_submit_scaling_8dev_over_1dev", Informational),
+        ] {
+            assert_eq!(metric_direction(key), want, "key `{key}`");
+        }
+    }
+
+    /// Build a minimal artifact through BenchReport so the parser is
+    /// exercised against exactly what the writer emits.
+    fn artifact(mean_ns: f64, rate: f64, gate: bool) -> PerfArtifact {
+        let mut r = BenchReport::new("probe");
+        r.measurement(&Measurement {
+            name: "work".into(),
+            mean_ns,
+            stddev_ns: 17.0,
+            min_ns: mean_ns * 0.9,
+            units_per_iter: 0.0,
+        })
+        .metric("throughput_bits_per_sec", rate)
+        .metric("digest", "0xabc") // non-numeric leaf: not a trajectory
+        .gate("fast_enough", gate);
+        PerfArtifact::parse(&r.to_json().to_string_compact()).unwrap()
+    }
+
+    #[test]
+    fn parse_flattens_and_drops_noise() {
+        let a = artifact(1000.0, 5.0e6, true);
+        assert_eq!(a.bench, "probe");
+        assert_eq!(a.metric("work.mean_ns"), Some(1000.0));
+        assert_eq!(a.metric("work.min_ns"), Some(900.0));
+        assert_eq!(a.metric("work.stddev_ns"), None, "stddev is noise");
+        assert_eq!(a.metric("digest"), None, "strings are not metrics");
+        assert_eq!(a.gates, vec![("fast_enough".to_string(), true)]);
+    }
+
+    #[test]
+    fn identical_artifacts_compare_clean() {
+        let a = artifact(1000.0, 5.0e6, true);
+        let cmp = compare_artifacts(&a, &a, &Tolerance::default());
+        assert!(cmp.ok());
+        assert_eq!(cmp.regressions().count(), 0);
+        assert!(cmp.missing.is_empty() && cmp.added.is_empty());
+        assert!(cmp.deltas.iter().all(|d| d.change_pct == 0.0));
+    }
+
+    #[test]
+    fn regression_is_direction_aware() {
+        let base = artifact(1000.0, 5.0e6, true);
+        let tol = Tolerance::default(); // 10%
+        // 50% slower wall time: regression on mean_ns (lower-is-better)
+        let slow = artifact(1500.0, 5.0e6, true);
+        let cmp = compare_artifacts(&base, &slow, &tol);
+        assert!(!cmp.ok());
+        let keys: Vec<&str> = cmp.regressions().map(|d| d.key.as_str()).collect();
+        assert!(keys.contains(&"work.mean_ns"), "{keys:?}");
+        // 50% *faster* is an improvement, never a regression
+        let fast = artifact(500.0, 5.0e6, true);
+        assert!(compare_artifacts(&base, &fast, &tol).ok());
+        // throughput collapse: regression on the higher-is-better key
+        let starved = artifact(1000.0, 1.0e6, true);
+        let cmp = compare_artifacts(&base, &starved, &tol);
+        let keys: Vec<&str> = cmp.regressions().map(|d| d.key.as_str()).collect();
+        assert_eq!(keys, vec!["throughput_bits_per_sec"]);
+        // ...and a throughput gain is fine
+        assert!(compare_artifacts(&base, &artifact(1000.0, 9.0e6, true), &tol).ok());
+    }
+
+    #[test]
+    fn tolerance_overrides_match_by_substring() {
+        let base = artifact(1000.0, 5.0e6, true);
+        let slow = artifact(1080.0, 5.0e6, true); // +8%
+        let loose = Tolerance {
+            default_pct: 10.0,
+            overrides: Vec::new(),
+        };
+        assert!(compare_artifacts(&base, &slow, &loose).ok());
+        let tight = Tolerance {
+            default_pct: 10.0,
+            overrides: vec![("mean_ns".to_string(), 5.0)],
+        };
+        assert!(!compare_artifacts(&base, &slow, &tight).ok());
+        assert_eq!(tight.pct_for("work.mean_ns"), 5.0);
+        assert_eq!(tight.pct_for("work.min_ns"), 10.0);
+    }
+
+    #[test]
+    fn newly_failing_gate_regresses_even_with_flat_metrics() {
+        let base = artifact(1000.0, 5.0e6, true);
+        let broken = artifact(1000.0, 5.0e6, false);
+        let cmp = compare_artifacts(&base, &broken, &Tolerance::default());
+        assert!(!cmp.ok());
+        assert_eq!(cmp.gate_regressions.len(), 1);
+        assert!(cmp.gate_regressions[0].contains("fast_enough"));
+        // the reverse — a failing baseline — can't regress further
+        assert!(compare_artifacts(&broken, &base, &Tolerance::default()).ok());
+    }
+
+    #[test]
+    fn key_set_drift_is_reported_but_not_fatal() {
+        let base = artifact(1000.0, 5.0e6, true);
+        let mut r = BenchReport::new("probe");
+        r.metric("brand_new_ns", 1.0f64).gate("fast_enough", true);
+        let renamed = PerfArtifact::parse(&r.to_json().to_string_compact()).unwrap();
+        let cmp = compare_artifacts(&base, &renamed, &Tolerance::default());
+        assert!(cmp.ok(), "drift alone must not fail the comparison");
+        assert_eq!(cmp.missing.len(), base.metrics.len());
+        assert_eq!(cmp.added, vec!["brand_new_ns".to_string()]);
+    }
+
+    #[test]
+    fn zero_baseline_movement_is_flagged_when_harmful() {
+        let mk = |shed: u64| {
+            let mut r = BenchReport::new("z");
+            r.metric("default.shed", shed);
+            PerfArtifact::parse(&r.to_json().to_string_compact()).unwrap()
+        };
+        let cmp = compare_artifacts(&mk(0), &mk(3), &Tolerance::default());
+        assert!(!cmp.ok(), "0 → 3 on a lower-is-better key is a regression");
+        assert!(compare_artifacts(&mk(0), &mk(0), &Tolerance::default()).ok());
     }
 }

@@ -272,6 +272,9 @@ workers = 2
 [arrival]
 requests = 8
 
+[telemetry]
+interval_ns = 10_000
+
 [[tenants]]
 name = "a"
 op = "xnor2"
@@ -288,6 +291,13 @@ name = "all_done"
 left = "default.completed"
 op = "eq"
 right = 8
+
+[[slo]]
+name = "sojourn_budget"
+metric = "sojourn"
+budget_ns = 1_000_000_000
+percentile = 95.0
+window = 2
 "#,
     );
     let args = ["bench", "--scenario", path.to_str().unwrap(), "--json"];
@@ -314,12 +324,46 @@ right = 8
         "default.tenant.a.completed",
         "default.tenant.a.mean_sojourn_ns",
         "default.tenant.b.sojourn_inflation",
+        // continuous telemetry + SLO verdict metrics ride the artifact
+        "default.telemetry.samples",
+        "default.telemetry.dropped",
+        "default.telemetry.interval_ns",
+        "default.telemetry.last_sample_ns",
+        "default.slo.sojourn_budget.pass",
+        "default.slo.sojourn_budget.max_burn",
+        "default.slo.sojourn_budget.bad",
+        "default.slo.sojourn_budget.total",
     ] {
         assert!(
             metrics.get(key).is_some(),
             "metric key `{key}` missing:\n{out}"
         );
     }
+    assert_eq!(
+        metrics.get("default.telemetry.interval_ns").and_then(Json::as_f64),
+        Some(10_000.0),
+        "telemetry interval must echo the scenario:\n{out}"
+    );
+    assert!(
+        metrics
+            .get("default.telemetry.samples")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            >= 1.0,
+        "recorder must have sampled at least one interval:\n{out}"
+    );
+    // a 1s sojourn budget is unreachable by an 8-request probe → SLO pass,
+    // surfaced both as a metric and as a first-class gate
+    assert_eq!(
+        metrics.get("default.slo.sojourn_budget.pass").and_then(Json::as_f64),
+        Some(1.0),
+        "probe SLO must pass:\n{out}"
+    );
+    assert_eq!(
+        doc.get("gates").and_then(|g| g.get("slo.sojourn_budget")),
+        Some(&Json::Bool(true)),
+        "SLO gate verdict missing or failed:\n{out}"
+    );
     assert_eq!(
         metrics.get("default.completed").and_then(Json::as_f64),
         Some(8.0),
@@ -424,10 +468,18 @@ fn cluster_json_schema_is_pinned() {
         "tombstones_compacted",
         "makespan_ns",
         "makespan_with_copy_ns",
+        "telemetry",
     ] {
         assert!(
             snap.get(key).is_some(),
             "snapshot key `{key}` missing:\n{out}"
+        );
+    }
+    // no scenario executor behind `drim cluster` → telemetry disabled
+    for key in ["enabled", "samples", "dropped", "interval_ns", "last_sample_ns"] {
+        assert!(
+            snap.get("telemetry").and_then(|t| t.get(key)).is_some(),
+            "telemetry key `{key}` missing:\n{out}"
         );
     }
     // per-tier movement counters ride on every snapshot export
@@ -475,8 +527,23 @@ fn trace_json_schema_is_pinned() {
     assert_eq!(doc.get("schema").and_then(Json::as_f64), Some(1.0));
     assert_eq!(doc.get("command").and_then(Json::as_str), Some("trace"));
     let trace = doc.get("trace").expect("trace summary");
-    for key in ["events", "dropped", "stages", "slowest_waves"] {
+    for key in ["events", "dropped", "stages", "slowest_waves", "telemetry"] {
         assert!(trace.get(key).is_some(), "trace key `{key}` missing:\n{out}");
+    }
+    // `drim trace` has no virtual clock, so its summary carries the
+    // disabled all-zero telemetry block — schema present, recorder off
+    let telemetry = trace.get("telemetry").unwrap();
+    assert_eq!(
+        telemetry.get("enabled"),
+        Some(&Json::Bool(false)),
+        "trace telemetry must be disabled:\n{out}"
+    );
+    for key in ["samples", "dropped", "interval_ns", "last_sample_ns"] {
+        assert_eq!(
+            telemetry.get(key).and_then(Json::as_f64),
+            Some(0.0),
+            "trace telemetry `{key}` must be zero:\n{out}"
+        );
     }
     // stage entries carry the fixed column set (the stage list itself
     // depends on the workload and the compiled features)

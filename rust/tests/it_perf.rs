@@ -1,0 +1,175 @@
+//! End-to-end tests for `drim perf` — the perf-trajectory toolkit over
+//! `BENCH_*.json` artifacts. Pins the CI contract: `check` exits 0 when
+//! the current artifacts match the baselines, 1 when a metric regresses
+//! beyond tolerance or a gate goes pass→fail, 2 on usage errors.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// A plausible bench artifact (the exact shape `BenchReport` writes).
+/// `mean_ns` and `gate` are the injection points for the regression
+/// tests; everything else stays fixed between baseline and current.
+fn artifact(mean_ns: f64, gate: bool) -> String {
+    format!(
+        r#"{{
+  "schema": 1,
+  "bench": "trajectory_probe",
+  "config": {{"devices": 2}},
+  "metrics": {{
+    "work": {{"mean_ns": {mean_ns}, "stddev_ns": 40.0, "min_ns": 950.0, "rate_per_sec": 1000000.0}},
+    "sim_makespan_ns": 5000,
+    "throughput_bits_per_sec": 2000000000.0
+  }},
+  "gates": {{"fast_enough": {gate}}},
+  "ok": {gate}
+}}
+"#
+    )
+}
+
+/// Fresh per-test scratch directory under the system temp dir.
+fn fresh_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("drim_perf_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create scratch dir");
+    d
+}
+
+fn write_artifact(dir: &Path, body: &str) -> PathBuf {
+    let p = dir.join("BENCH_trajectory_probe.json");
+    std::fs::write(&p, body).expect("write artifact");
+    p
+}
+
+/// Run `drim perf ...`; return (exit code, stdout, stderr).
+fn perf(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_drim"))
+        .arg("perf")
+        .args(args)
+        .output()
+        .expect("spawn drim");
+    (
+        out.status.code().expect("exit code"),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn check_passes_on_identical_artifacts() {
+    let bdir = fresh_dir("ident_base");
+    let cdir = fresh_dir("ident_cur");
+    write_artifact(&bdir, &artifact(1000.0, true));
+    write_artifact(&cdir, &artifact(1000.0, true));
+    let (code, stdout, stderr) = perf(&[
+        "check",
+        "--baseline",
+        bdir.to_str().unwrap(),
+        "--dir",
+        cdir.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "identical artifacts must pass:\n{stdout}\n{stderr}");
+    assert!(
+        stdout.contains("PASS trajectory_probe"),
+        "verdict line missing:\n{stdout}"
+    );
+}
+
+#[test]
+fn check_fails_on_injected_wall_time_regression() {
+    let bdir = fresh_dir("regress_base");
+    let cdir = fresh_dir("regress_cur");
+    write_artifact(&bdir, &artifact(1000.0, true));
+    // +50% mean wall time: far beyond the 10% default tolerance
+    write_artifact(&cdir, &artifact(1500.0, true));
+    let (code, stdout, _) = perf(&[
+        "check",
+        "--baseline",
+        bdir.to_str().unwrap(),
+        "--dir",
+        cdir.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 1, "regression must exit 1:\n{stdout}");
+    assert!(
+        stdout.contains("FAIL trajectory_probe"),
+        "verdict line missing:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("work.mean_ns"),
+        "regressed key must be named:\n{stdout}"
+    );
+    // the same delta passes under an explicit generous tolerance
+    let (code, stdout, _) = perf(&[
+        "check",
+        "--baseline",
+        bdir.to_str().unwrap(),
+        "--dir",
+        cdir.to_str().unwrap(),
+        "--tolerance",
+        "60",
+    ]);
+    assert_eq!(code, 0, "60% tolerance must absorb +50%:\n{stdout}");
+}
+
+#[test]
+fn check_fails_on_gate_regression_alone() {
+    let bdir = fresh_dir("gate_base");
+    let cdir = fresh_dir("gate_cur");
+    write_artifact(&bdir, &artifact(1000.0, true));
+    write_artifact(&cdir, &artifact(1000.0, false)); // metrics flat, gate broken
+    let (code, stdout, _) = perf(&[
+        "check",
+        "--baseline",
+        bdir.to_str().unwrap(),
+        "--dir",
+        cdir.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 1, "pass→fail gate must exit 1:\n{stdout}");
+    assert!(stdout.contains("fast_enough"), "gate must be named:\n{stdout}");
+}
+
+#[test]
+fn diff_renders_deltas_and_exits_by_verdict() {
+    let dir = fresh_dir("diff");
+    let base = dir.join("BENCH_a.json");
+    let cur = dir.join("BENCH_b.json");
+    std::fs::write(&base, artifact(1000.0, true)).unwrap();
+    std::fs::write(&cur, artifact(1000.0, true)).unwrap();
+    let (code, stdout, _) = perf(&["diff", base.to_str().unwrap(), cur.to_str().unwrap()]);
+    assert_eq!(code, 0, "identical diff must exit 0:\n{stdout}");
+    for key in ["work.mean_ns", "sim_makespan_ns", "throughput_bits_per_sec"] {
+        assert!(stdout.contains(key), "delta row `{key}` missing:\n{stdout}");
+    }
+    assert!(
+        !stdout.contains("work.stddev_ns"),
+        "stddev is noise and must not be a trajectory row:\n{stdout}"
+    );
+    std::fs::write(&cur, artifact(1500.0, true)).unwrap();
+    let (code, stdout, _) = perf(&["diff", base.to_str().unwrap(), cur.to_str().unwrap()]);
+    assert_eq!(code, 1, "regressed diff must exit 1:\n{stdout}");
+    assert!(stdout.contains("REGRESSED"), "verdict column missing:\n{stdout}");
+}
+
+#[test]
+fn list_inventories_a_directory() {
+    let dir = fresh_dir("list");
+    write_artifact(&dir, &artifact(1000.0, true));
+    let (code, stdout, _) = perf(&["list", dir.to_str().unwrap()]);
+    assert_eq!(code, 0, "{stdout}");
+    assert!(
+        stdout.contains("BENCH_trajectory_probe.json") && stdout.contains("trajectory_probe"),
+        "artifact row missing:\n{stdout}"
+    );
+}
+
+#[test]
+fn usage_errors_exit_2() {
+    let (code, _, stderr) = perf(&["check"]); // no --baseline
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--baseline"), "{stderr}");
+    let (code, _, stderr) = perf(&["frobnicate"]);
+    assert_eq!(code, 2, "{stderr}");
+    let empty = fresh_dir("empty");
+    let (code, _, stderr) = perf(&["check", "--baseline", empty.to_str().unwrap()]);
+    assert_eq!(code, 2, "empty baseline dir is a setup error:\n{stderr}");
+}

@@ -887,6 +887,123 @@ capacity_share = 0.1
     );
 }
 
+/// Continuous-telemetry merge commutativity: a random virtual-clock
+/// observation stream split across two recorders folds back into the
+/// identical series regardless of merge order, and matches a single
+/// recorder that saw the whole stream — byte-for-byte on the serialized
+/// series (the same JSON the exporters emit).
+#[test]
+fn prop_timeseries_merge_order_independent() {
+    use drim::obs::TimeSeriesRecorder;
+    prop::check("timeseries_merge", 30, |rng| {
+        let interval = 1 + rng.below(5_000);
+        let lanes = vec!["a".to_string(), "b".to_string()];
+        // capacity large enough that no split evicts: order independence
+        // is exact below the eviction horizon
+        let mk = || TimeSeriesRecorder::new(interval, 512, 2, lanes.clone());
+        let (mut a, mut b, mut whole) = (mk(), mk(), mk());
+        let n = 50 + rng.below(200);
+        for _ in 0..n {
+            // stay within 256 buckets of t=0 so capacity 512 never evicts
+            let t = rng.below(interval * 256);
+            let split = rng.bool();
+            let kind = rng.below(3);
+            let lane = rng.below(2) as usize;
+            let sojourn = rng.below(1_000_000);
+            let busy = rng.below(interval);
+            let depth = rng.below(48) as usize;
+            let admitted = rng.bool();
+            for rec in [if split { &mut a } else { &mut b }, &mut whole] {
+                match kind {
+                    0 => rec.record_arrival(t, admitted),
+                    1 => rec.record_completion(t, lane, sojourn, busy),
+                    _ => rec.record_queue_depth(t, depth),
+                }
+            }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let whole_json = whole.to_json().to_string_compact();
+        if ab.to_json().to_string_compact() != whole_json {
+            return Err("merge(a,b) differs from the unsplit recorder".into());
+        }
+        if ba.to_json().to_string_compact() != whole_json {
+            return Err("merge(b,a) differs from the unsplit recorder".into());
+        }
+        Ok(())
+    });
+}
+
+/// Telemetry percentile sanity across merged samples: in every interval
+/// of a merged series, the fleet-merged sojourn percentile curve is
+/// monotone in p, bounded by the interval's min/max, and the cumulative
+/// counters are monotone along the timeline with conserved deltas
+/// (offered == admitted + shed).
+#[test]
+fn prop_timeseries_percentiles_monotone_across_merge() {
+    use drim::obs::TimeSeriesRecorder;
+    prop::check("timeseries_percentiles", 25, |rng| {
+        let interval = 1_000u64;
+        let lanes = vec!["a".to_string(), "b".to_string()];
+        let mk = || TimeSeriesRecorder::new(interval, 256, 2, lanes.clone());
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..(100 + rng.below(200)) {
+            let rec = if rng.bool() { &mut a } else { &mut b };
+            let t = rng.below(interval * 64);
+            rec.record_arrival(t, rng.bool());
+            rec.record_completion(
+                t,
+                rng.below(2) as usize,
+                rng.below(5_000_000),
+                rng.below(interval),
+            );
+        }
+        a.merge(&b);
+        let samples = a.samples();
+        let mut prev_offered = 0u64;
+        let mut prev_completed = 0u64;
+        for s in &samples {
+            if s.offered < prev_offered || s.completed < prev_completed {
+                return Err(format!("cumulative counter went backwards at t={}", s.t_ns));
+            }
+            prev_offered = s.offered;
+            prev_completed = s.completed;
+            if s.d_offered != s.d_admitted + s.d_shed {
+                return Err(format!(
+                    "t={}: offered delta {} != admitted {} + shed {}",
+                    s.t_ns, s.d_offered, s.d_admitted, s.d_shed
+                ));
+            }
+            let h = s.sojourn_merged();
+            if h.is_empty() {
+                continue;
+            }
+            let mut prev = 0.0f64;
+            for p in [1.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9] {
+                let v = h.percentile(p);
+                if v + 1e-9 < prev {
+                    return Err(format!(
+                        "t={}: percentile curve dipped at p{p}: {v} < {prev}",
+                        s.t_ns
+                    ));
+                }
+                prev = v;
+            }
+            if (h.percentile(99.9) as u64) > h.max().saturating_mul(2) {
+                return Err(format!(
+                    "t={}: p99.9 {} implausibly above max {}",
+                    s.t_ns,
+                    h.percentile(99.9),
+                    h.max()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// DRA destructiveness: after any DRA, the two source cells and the
 /// destination agree (the array's own write-back invariant).
 #[test]
